@@ -1,0 +1,48 @@
+//! Adaptive-length code generation (the paper's §4.2 "Adaptive termination",
+//! Table 3): on code tasks the useful output is much shorter than the
+//! generation budget; stopping at `<eos>` while far-field pruning keeps the
+//! dead tail out of every forward pass yields the paper's largest speedups
+//! (up to 99× at budget 1024).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example adaptive_codegen
+//! ```
+
+use window_diffusion::coordinator::GenRequest;
+use window_diffusion::eval::{self, grade};
+use window_diffusion::runtime::{Engine, Manifest};
+use window_diffusion::strategies::{Strategy, WindowDiffusion};
+use window_diffusion::tokenizer::Tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&Manifest::default_root())?;
+    let engine = Engine::load(&manifest, "dream-sim-instruct")?;
+    let tok = Tokenizer::load(&manifest.vocab_file)?;
+    let instances = eval::load_task(&manifest.tasks_dir, "synth-mbpp", "instruct")?;
+    let wd = WindowDiffusion::default();
+
+    println!("budget  variant    latency   tokens  graded  output");
+    println!("{}", "-".repeat(100));
+    for budget in [64usize, 128, 224] {
+        for adaptive in [false, true] {
+            let inst = &instances[0];
+            let mut req = GenRequest::new(tok.encode(&inst.prompt), budget, 256);
+            req.adaptive = adaptive;
+            req.tokens_per_step = 1;
+            let r = wd.generate(&engine, &req)?;
+            let text = tok.decode(&r.generated());
+            let ok = grade(&inst.task, &text, &inst.answer);
+            println!(
+                "{:>6}  {:<9} {:>7.2}s  {:>6}  {:>6}  {}",
+                budget,
+                if adaptive { "adaptive" } else { "static" },
+                r.wall.as_secs_f64(),
+                r.tokens_generated(),
+                ok,
+                &text[..text.len().min(60)]
+            );
+        }
+    }
+    println!("\n(adaptive latency should stay ~flat as the budget grows; static grows linearly+)");
+    Ok(())
+}

@@ -1,0 +1,319 @@
+"""AOT pipeline: train sim models, lower step executables to HLO text, emit
+the artifact manifest the rust runtime consumes.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``::
+
+  manifest.json                 models, arch, ladders, executables, weights index
+  vocab.json                    tokenizer vocab + golden encode vectors
+  tasks/<task>_<fmt>.json       held-out eval instances (rust eval harness)
+  weights_<model>.bin           flat little-endian f32 parameter bank
+  <model>/<exec>.hlo.txt        one HLO module per (variant, bucket)
+  golden.json                   end-to-end numeric goldens for rust integration
+
+Shape buckets: window capacities `c` are multiples of the kernel's BC=64 and
+compute-slot counts `r` multiples of BR=16 (DESIGN.md §3.1). The rust
+coordinator pads into the smallest bucket that fits.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import (Arch, flatten_params, full_step, fwd_cached, fwd_window,
+                    param_shapes, unflatten_params)
+from .tokenizer import EOS, MASK, PAD, Tokenizer
+from .train import train_model
+
+try:
+    from jax._src.lib import xla_client as xc
+except ImportError:  # pragma: no cover
+    xc = None
+
+VOCAB_SIZE = 512
+GOLDEN_TEXTS = [
+    "q : compute : ( 3 + 4 ) * 2 = ? a :",
+    "user : tom has 5 apples . assistant :",
+    "def f ( x ) : return x + 7",
+]
+
+# ---------------------------------------------------------------------------
+# model zoo
+# ---------------------------------------------------------------------------
+
+def model_zoo() -> dict[str, dict]:
+    """Name -> {arch, fmt, seq_sets}. Two Dream-sims (Base/Instruct) + LLaDA-sim.
+
+    Sizes are calibrated to the build substrate (single CPU core): large enough
+    to learn the synthetic task formats and show the paper's locality dynamics,
+    small enough that `make artifacts` trains all three in a few minutes.
+    """
+    dream = dict(d=96, n_layers=3, n_heads=4, dh=24, ffn=192,
+                 vocab=VOCAB_SIZE, max_seq=256)
+    llada = dict(d=64, n_layers=2, n_heads=4, dh=16, ffn=128,
+                 vocab=VOCAB_SIZE, max_seq=256)
+    return {
+        "dream-sim-base": {"arch": Arch(**dream), "fmt": "base", "seqs": [256]},
+        "dream-sim-instruct": {"arch": Arch(**dream), "fmt": "instruct",
+                               "seqs": [256, 512]},
+        "llada-sim-base": {"arch": Arch(**llada), "fmt": "base", "seqs": [256]},
+    }
+
+
+def ladders(s: int) -> tuple[list[int], list[int]]:
+    """(c_ladder, r_ladder) for a max sequence length s."""
+    if s <= 256:
+        cs = [64, 128, 192, 256]
+    else:
+        cs = [64, 128, 192, 256, 384, 512]
+    rs = [16, 32, 48, 64, 128, 256]
+    return [c for c in cs if c <= s], [r for r in rs if r <= s]
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_of(sds) -> dict:
+    return {"dtype": "f32" if sds.dtype == jnp.float32 else "i32",
+            "shape": list(sds.shape)}
+
+
+def lower_exec(fn, step_specs: list[tuple[str, object]],
+               weight_specs: list[tuple[str, object]], out_names: list[str],
+               path: str) -> dict:
+    """Lower fn(*step, *weights) to HLO text at `path`; return manifest entry."""
+    args = [s for _, s in step_specs] + [s for _, s in weight_specs]
+    # keep_unused: the rust runtime binds inputs positionally from the
+    # manifest; jax must not DCE params the compute happens not to read
+    # (e.g. rvalid, whose validity is enforced via the drop-scatter).
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = lowered.out_info
+    flat_out = jax.tree_util.tree_leaves(out_avals)
+    return {
+        "file": os.path.relpath(path, os.path.dirname(os.path.dirname(path))),
+        "inputs": [dict(name=n, **spec_of(s)) for n, s in step_specs],
+        "weights_appended": True,
+        "outputs": [
+            {"name": out_names[i], "dtype": "f32", "shape": list(flat_out[i].shape)}
+            for i in range(len(flat_out))
+        ],
+    }
+
+
+def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
+                      out_dir: str, attn: str, log=print) -> list[dict]:
+    """Lower the full/window/cached executable matrix for one model."""
+    use_pallas = attn == "pallas"
+    names, flat_w = flatten_params(params)
+    weight_specs = [(n, f32(params[n].shape)) for n in names]
+    l, h, dh = arch.n_layers, arch.n_heads, arch.dh
+    os.makedirs(os.path.join(out_dir, name), exist_ok=True)
+    entries = []
+
+    def add(exec_name, fn, step_specs, out_names):
+        t0 = time.time()
+        path = os.path.join(out_dir, name, f"{exec_name}.hlo.txt")
+        e = lower_exec(fn, step_specs, weight_specs, out_names, path)
+        e["name"] = exec_name
+        entries.append(e)
+        log(f"  [aot] {name}/{exec_name} ({time.time() - t0:.1f}s)")
+
+    for s in seqs:
+        c_ladder, r_ladder = ladders(s)
+
+        def mk_full(s_):
+            def fn(ids, valid, *flat):
+                p = unflatten_params(names, flat)
+                return (full_step(p, arch, ids, valid, use_pallas),)
+            return fn
+
+        add(f"full_step_s{s}", mk_full(s),
+            [("ids", i32((s,))), ("valid", f32((s,)))], ["logits"])
+
+        for c in c_ladder:
+            def mk_win(c_):
+                def fn(ids, pos, valid, *flat):
+                    p = unflatten_params(names, flat)
+                    return fwd_window(p, arch, ids, pos, valid, use_pallas)
+                return fn
+
+            add(f"fwd_window_s{s}_c{c}", mk_win(c),
+                [("ids", i32((c,))), ("pos", i32((c,))), ("valid", f32((c,)))],
+                ["logits", "kcache", "vcache"])
+
+            for r in [r for r in r_ladder if r <= c]:
+                def mk_cached(c_, r_):
+                    def fn(ids_r, pos_r, slot_idx, rvalid, cvalid, kc, vc, *flat):
+                        p = unflatten_params(names, flat)
+                        return fwd_cached(p, arch, ids_r, pos_r, slot_idx,
+                                          rvalid, cvalid, kc, vc, use_pallas)
+                    return fn
+
+                add(f"fwd_cached_s{s}_c{c}_r{r}", mk_cached(c, r),
+                    [("ids_r", i32((r,))), ("pos_r", i32((r,))),
+                     ("slot_idx", i32((r,))), ("rvalid", f32((r,))),
+                     ("cvalid", f32((c,))),
+                     ("kcache", f32((l, c, h, dh))),
+                     ("vcache", f32((l, c, h, dh)))],
+                    ["logits", "kcache", "vcache"])
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# weights + goldens
+# ---------------------------------------------------------------------------
+
+def write_weights(params: dict, path: str) -> list[dict]:
+    names, flat = flatten_params(params)
+    index, off = [], 0
+    with open(path, "wb") as f:
+        for n, arr in zip(names, flat):
+            a = np.asarray(arr, np.float32)
+            f.write(a.tobytes())
+            index.append({"name": n, "shape": list(a.shape), "offset": off,
+                          "size": int(a.size)})
+            off += a.size * 4
+    return index
+
+
+def write_golden(tok: Tokenizer, zoo: dict, trained: dict, out_dir: str) -> None:
+    """Numeric goldens for the rust integration tests (dream-sim-base)."""
+    name = "dream-sim-base"
+    arch: Arch = zoo[name]["arch"]
+    params = trained[name]
+    prompt = tok.encode("q : compute : ( 3 + 4 ) * 2 = ? a :")
+    s = arch.max_seq
+    ids = np.full((s,), MASK, np.int32)
+    ids[: len(prompt)] = prompt
+    gen_len = 64
+    valid = np.zeros((s,), np.float32)
+    valid[: len(prompt) + gen_len] = 1.0
+    logits = np.asarray(full_step(params, arch, jnp.asarray(ids),
+                                  jnp.asarray(valid), use_pallas=True))
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    conf = np.asarray(jnp.max(probs, axis=-1))
+    arg = np.asarray(jnp.argmax(jnp.asarray(logits), axis=-1))
+    undecoded = list(range(len(prompt), len(prompt) + gen_len))
+    payload = {
+        "model": name,
+        "prompt_ids": [int(x) for x in prompt],
+        "gen_len": gen_len,
+        "argmax": [int(arg[i]) for i in undecoded[:16]],
+        "confidence": [round(float(conf[i]), 6) for i in undecoded[:16]],
+        "logit_row0": [round(float(x), 5) for x in logits[undecoded[0]][:8]],
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(payload, f)
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--attn", choices=["pallas", "ref"], default="pallas",
+                    help="attention implementation lowered into the HLO")
+    ap.add_argument("--train-steps", type=int, default=350)
+    ap.add_argument("--retrain", action="store_true",
+                    help="retrain even if cached weights exist")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    zoo = model_zoo()
+    wanted = list(zoo) if args.models == "all" else args.models.split(",")
+
+    # 1. vocabulary (+ golden encode vectors for the rust tokenizer parity test)
+    tok = Tokenizer().fit(corpus.all_surface_texts())
+    if len(tok) > VOCAB_SIZE:
+        raise RuntimeError(f"vocab {len(tok)} exceeds budget {VOCAB_SIZE}")
+    tok.save(os.path.join(out_dir, "vocab.json"), golden=GOLDEN_TEXTS)
+    print(f"[aot] vocab: {len(tok)} tokens (budget {VOCAB_SIZE})")
+
+    # 2. eval task suites
+    corpus.write_tasks(os.path.join(out_dir, "tasks"))
+
+    # 3. per-model: train (or reuse), export weights, lower executables
+    manifest: dict = {"vocab_file": "vocab.json", "tasks_dir": "tasks",
+                      "attn": args.attn,
+                      "special": {"pad": PAD, "mask": MASK, "eos": EOS},
+                      "models": {}}
+    trained: dict = {}
+    for name in wanted:
+        info = zoo[name]
+        arch: Arch = info["arch"]
+        wpath = os.path.join(out_dir, f"weights_{name}.bin")
+        npz = os.path.join(out_dir, f"weights_{name}.npz")
+        if os.path.exists(npz) and not args.retrain:
+            print(f"[aot] {name}: reusing cached weights")
+            loaded = np.load(npz)
+            params = {k: jnp.asarray(loaded[k]) for k in loaded.files}
+        else:
+            params = train_model(tok, arch, info["fmt"], mask_id=MASK,
+                                 steps=args.train_steps)
+            np.savez(npz, **{k: np.asarray(v) for k, v in params.items()})
+        assert set(params) == set(param_shapes(arch)), "weight/arch mismatch"
+        trained[name] = params
+        windex = write_weights(params, wpath)
+        execs = build_executables(name, arch, params, info["seqs"], out_dir,
+                                  args.attn)
+        c_l, r_l = ladders(max(info["seqs"]))
+        manifest["models"][name] = {
+            "arch": arch.to_dict(),
+            "format": info["fmt"],
+            "seqs": info["seqs"],
+            "c_ladder": c_l,
+            "r_ladder": r_l,
+            "weights_file": os.path.basename(wpath),
+            "weights": windex,
+            "weight_order": sorted(params),
+            "executables": execs,
+        }
+
+    # 4. goldens + manifest
+    if "dream-sim-base" in trained:
+        write_golden(tok, zoo, trained, out_dir)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written to {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,202 @@
+"""Synthetic corpus + task suites standing in for GSM8K / MATH / HumanEval / MBPP.
+
+The paper evaluates Window-Diffusion on four real benchmarks with 7B models.
+We have neither the models nor the benchmark harnesses (repro band 0), so per
+the substitution rule we build the closest synthetic equivalents that exercise
+the same code paths:
+
+* ``synth-gsm``  — two-step arithmetic word problems, `#### <answer>` format;
+* ``synth-math`` — bracketed expression evaluation;
+* ``synth-he``   — tiny function synthesis ("HumanEval-like");
+* ``synth-mbpp`` — short program tasks with a docstring-style prompt
+  ("MBPP-like", the longest generations, used for adaptive-length runs).
+
+Each suite has a *generator* (used both for the training corpus and for held-out
+eval instances) and a canonical answer the rust grader checks. Train and eval
+instances are drawn from disjoint seed ranges so eval is held out.
+
+Two prompt formats mirror the paper's Base vs Instruct models:
+``base``     -> "q : ... a : ..." few-shot style documents;
+``instruct`` -> "user : ... assistant : ..." dialogues.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+from dataclasses import dataclass
+
+NAMES = ["tom", "amy", "sam", "lily", "max", "eva", "ben", "ana"]
+ITEMS = ["apples", "pens", "books", "coins", "cards", "stars", "cups", "keys"]
+VERBS_ADD = ["buys", "finds", "gets", "wins"]
+VERBS_SUB = ["loses", "gives away", "drops", "sells"]
+
+TASKS = ["synth-gsm", "synth-math", "synth-he", "synth-mbpp"]
+
+
+@dataclass
+class Instance:
+    task: str
+    prompt: str   # question text WITHOUT format wrapping
+    target: str   # canonical completion text (what the model should emit)
+    answer: str   # graded payload (digits joined by space, or canonical code)
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+def _digits(n: int) -> str:
+    """Render an integer the way the tokenizer sees it (digit per token)."""
+    return " ".join(str(n))
+
+
+def gen_gsm(rng: random.Random) -> Instance:
+    name = rng.choice(NAMES)
+    item = rng.choice(ITEMS)
+    a = rng.randint(2, 9)
+    b = rng.randint(1, 9)
+    if rng.random() < 0.5:
+        verb = rng.choice(VERBS_ADD)
+        res = a + b
+        op = "+"
+    else:
+        verb = rng.choice(VERBS_SUB)
+        a = max(a, b + 1)
+        res = a - b
+        op = "-"
+    q = (f"{name} has {_digits(a)} {item} . {name} {verb} {_digits(b)} more ."
+         if op == "+" else
+         f"{name} has {_digits(a)} {item} . {name} {verb} {_digits(b)} of them .")
+    q += f" how many {item} does {name} have ?"
+    t = f"{name} has {_digits(a)} {op} {_digits(b)} = {_digits(res)} {item} . #### {_digits(res)}"
+    return Instance("synth-gsm", q, t, _digits(res))
+
+
+def gen_math(rng: random.Random) -> Instance:
+    a, b, c = rng.randint(1, 9), rng.randint(1, 9), rng.randint(1, 4)
+    form = rng.randrange(3)
+    if form == 0:
+        expr, res = f"( {_digits(a)} + {_digits(b)} ) * {_digits(c)}", (a + b) * c
+    elif form == 1:
+        expr, res = f"{_digits(a)} * {_digits(c)} + {_digits(b)}", a * c + b
+    else:
+        a = max(a, b + 1)
+        expr, res = f"( {_digits(a)} - {_digits(b)} ) * {_digits(c)}", (a - b) * c
+    q = f"compute : {expr} = ?"
+    t = f"the value is {_digits(res)} . #### {_digits(res)}"
+    return Instance("synth-math", q, t, _digits(res))
+
+
+HE_OPS = [
+    ("add", "+"), ("sub", "-"), ("mul", "*"),
+]
+
+
+def gen_he(rng: random.Random) -> Instance:
+    opname, op = rng.choice(HE_OPS)
+    k = rng.randint(1, 9)
+    q = f"write a function that returns x {op} {_digits(k)}"
+    code = f"def f ( x ) : return x {op} {_digits(k)}"
+    return Instance("synth-he", q, code, code)
+
+
+MBPP_BODIES = [
+    ("return the double of x then add K", "def f ( x ) : y = x * 2 ; return y + {k}"),
+    ("return x squared minus K", "def f ( x ) : y = x * x ; return y - {k}"),
+    ("return the sum of x and y times K", "def f ( x , y ) : z = x + y ; return z * {k}"),
+    ("return K if x is zero else x", "def f ( x ) : return {k} if x == 0 else x"),
+]
+
+
+def gen_mbpp(rng: random.Random) -> Instance:
+    desc, body = rng.choice(MBPP_BODIES)
+    k = rng.randint(1, 9)
+    q = f"task : {desc.replace('K', _digits(k))}"
+    code = body.format(k=_digits(k))
+    return Instance("synth-mbpp", q, code, code)
+
+
+GENERATORS = {
+    "synth-gsm": gen_gsm,
+    "synth-math": gen_math,
+    "synth-he": gen_he,
+    "synth-mbpp": gen_mbpp,
+}
+
+
+# ---------------------------------------------------------------------------
+# formatting (Base few-shot vs Instruct)
+# ---------------------------------------------------------------------------
+
+def wrap(inst: Instance, fmt: str) -> tuple[str, str]:
+    """Return (prompt_text, completion_text) in the given format."""
+    if fmt == "base":
+        return f"q : {inst.prompt} a :", f" {inst.target}"
+    return f"user : {inst.prompt} assistant :", f" {inst.target}"
+
+
+def render_document(rng: random.Random, fmt: str, max_pairs: int = 4) -> list[tuple[str, str]]:
+    """A training document: several wrapped (prompt, completion) pairs.
+
+    The trainer joins pairs with the real ``<eos>`` token id (the tokenizer has
+    no textual surface form for specials), so documents are returned as pair
+    lists rather than flat text.
+    """
+    parts = []
+    for _ in range(rng.randint(2, max_pairs)):
+        task = rng.choice(TASKS)
+        inst = GENERATORS[task](rng)
+        parts.append(wrap(inst, fmt))
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# corpus + eval emission
+# ---------------------------------------------------------------------------
+
+def training_documents(fmt: str, n_docs: int, seed: int = 17) -> list[list[tuple[str, str]]]:
+    rng = random.Random(seed)
+    return [render_document(rng, fmt) for _ in range(n_docs)]
+
+
+def eval_instances(task: str, fmt: str, n: int, seed: int = 9_000_000) -> list[dict]:
+    """Held-out instances: seeds disjoint from the training range."""
+    rng = random.Random(seed + hash(task) % 1000)
+    out = []
+    for i in range(n):
+        inst = GENERATORS[task](rng)
+        prompt, _ = wrap(inst, fmt)
+        out.append({
+            "id": f"{task}-{fmt}-{i}",
+            "task": task,
+            "format": fmt,
+            "prompt": prompt,
+            "answer": inst.answer,
+            "reference": inst.target,
+        })
+    return out
+
+
+def write_tasks(out_dir: str, n_per_task: int = 64) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for fmt in ("base", "instruct"):
+        for task in TASKS:
+            path = os.path.join(out_dir, f"{task}_{fmt}.json")
+            with open(path, "w") as f:
+                json.dump(eval_instances(task, fmt, n_per_task), f)
+
+
+def all_surface_texts() -> list[str]:
+    """Every text the vocabulary must cover (for Tokenizer.fit)."""
+    texts = []
+    for fmt, seed in (("base", 17), ("instruct", 18)):
+        for doc in training_documents(fmt, 200, seed=seed):
+            for p, t in doc:
+                texts.append(p + t)
+    for fmt in ("base", "instruct"):
+        for task in TASKS:
+            for inst in eval_instances(task, fmt, 64):
+                texts.append(inst["prompt"] + " " + inst["reference"])
+    return texts

@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .ref import swiglu_ref, windowed_attention_ref  # noqa: F401
+from .windowed_attn import windowed_attention  # noqa: F401

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: simple, obviously-right dense
+implementations that pytest/hypothesis compare the kernels against, and that
+the trainer uses on its (speed-insensitive) build path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def windowed_attention_ref(q, k, v, kvalid, scale=None):
+    """Dense masked attention.
+
+    Args:
+      q:      [r, H, Dh] queries (the compute tokens of this step).
+      k, v:   [c, H, Dh] key/value window (cached + freshly scattered).
+      kvalid: [c] bool/float — False keys are masked out (padding, far-field).
+      scale:  optional softmax scale, default 1/sqrt(Dh).
+
+    Returns:
+      [r, H, Dh] attention output.
+    """
+    dh = q.shape[-1]
+    if scale is None:
+        scale = dh ** -0.5
+    # [H, r, c]
+    s = jnp.einsum("rhd,chd->hrc", q, k) * scale
+    s = jnp.where(kvalid[None, None, :].astype(bool), s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("hrc,chd->rhd", p, v)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: (silu(x Wg) * (x Wu)) Wd — [n, d] -> [n, d]."""
+    g = x @ w_gate
+    u = x @ w_up
+    return (g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u) @ w_down

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: windowed online-softmax attention.
+
+This is the paper's compute hot-spot restated for the TPU programming model
+(DESIGN.md §Hardware-Adaptation): the CUDA implementation gathers window
+tokens and runs dense attention per threadblock; here the same computation is
+a Pallas grid over (head, query-block) whose body streams the KV window
+through VMEM-sized blocks with a running (max, sum, accumulator) — i.e.
+flash-attention over the *window layout* rather than the full sequence.
+
+Shapes (all static at AOT time — the rust coordinator picks a bucket):
+  q       [r, H, Dh]   compute tokens of this step (active ∪ phase-decoded)
+  k, v    [c, H, Dh]   KV window (cache with fresh rows already scattered in)
+  kvalid  [c] f32      1.0 for live slots, 0.0 for padding/far-field
+
+Kernel must be lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers the body to plain HLO
+(while-loops + dynamic slices) that the rust runtime executes directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# Block sizes. Every ladder capacity c is a multiple of BC and every compute
+# slot count r a multiple of BR (enforced by aot.py); BR×BC tiles keep the
+# VMEM working set small and map onto MXU-friendly (8k × 128) shapes.
+BR = 16
+BC = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, kvalid_ref, o_ref, *, scale: float, nc: int):
+    """One (head, q-block) grid cell: stream `nc` KV blocks with online softmax."""
+    q = q_ref[...][:, 0, :] * scale                     # [BR, Dh]
+    br = q.shape[0]
+    dh = q.shape[1]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = pl.load(k_ref, (pl.dslice(j * BC, BC), 0, slice(None)))  # [BC, Dh]
+        vb = pl.load(v_ref, (pl.dslice(j * BC, BC), 0, slice(None)))  # [BC, Dh]
+        mask = pl.load(kvalid_ref, (pl.dslice(j * BC, BC),))          # [BC]
+        s = q @ kb.T                                                   # [BR, BC]
+        s = jnp.where(mask[None, :] > 0.5, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))                     # [BR]
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])                                # [BR, BC]
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ vb
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((br,), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((br,), dtype=q.dtype)
+    acc0 = jnp.zeros((br, dh), dtype=q.dtype)
+    _, l, acc = jax.lax.fori_loop(0, nc, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def windowed_attention(q, k, v, kvalid, scale=None):
+    """Pallas windowed attention; same contract as ref.windowed_attention_ref."""
+    r, h, dh = q.shape
+    c = k.shape[0]
+    if scale is None:
+        scale = dh ** -0.5
+    if r % BR != 0 or c % BC != 0:
+        raise ValueError(f"r={r} must be a multiple of {BR}, c={c} of {BC}")
+    nc = c // BC
+    grid = (h, r // BR)
+    kernel = functools.partial(_attn_kernel, scale=float(scale), nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # q: one head column, one BR-row block per grid cell.
+            pl.BlockSpec((BR, 1, dh), lambda hh, qb: (qb, hh, 0)),
+            # k/v: the whole window for the current head stays resident.
+            pl.BlockSpec((c, 1, dh), lambda hh, qb: (0, hh, 0)),
+            pl.BlockSpec((c, 1, dh), lambda hh, qb: (0, hh, 0)),
+            pl.BlockSpec((c,), lambda hh, qb: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BR, 1, dh), lambda hh, qb: (qb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, h, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v, kvalid)
+
+
+def vmem_bytes(r: int, c: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM working set per grid cell (DESIGN.md §Perf / L1 target).
+
+    q-block + full-head KV window + mask + accumulator/out block.
+    """
+    qb = BR * dh * dtype_bytes
+    kv = 2 * c * dh * dtype_bytes
+    mask = c * dtype_bytes
+    acc = 2 * BR * dh * dtype_bytes
+    return qb + kv + mask + acc
+
+
+def mxu_utilization_estimate(r: int, c: int, dh: int) -> float:
+    """Fraction of MXU-issue slots doing useful work for the (BR, BC) tiling.
+
+    The MXU consumes (128×128)·8 tiles; a BR×Dh·BC block fills
+    (BR/128)·(Dh/128 rounded up) of a tile. This is the *structural* estimate
+    used in EXPERIMENTS.md §Perf — interpret mode gives no TPU wallclock.
+    """
+    eff_rows = min(BR, 128) / 128.0
+    eff_k = min(dh, 128) / 128.0
+    eff_cols = min(BC, 128) / 128.0
+    return eff_rows * eff_k * eff_cols

@@ -1,0 +1,238 @@
+"""L2: masked-diffusion transformer (JAX) with windowed step variants.
+
+A small LLaDA/Dream-style model: token embedding, `n_layers` pre-norm blocks
+(RMSNorm → multi-head bidirectional attention with RoPE → RMSNorm → SwiGLU),
+final RMSNorm, untied unembedding. No causal mask — DLMs attend globally.
+
+Three inference entry points (each AOT-lowered per shape bucket by aot.py):
+
+* :func:`full_step`   — baseline: full-sequence forward, logits everywhere.
+* :func:`fwd_window`  — one forward over the *window layout* (decoded prefix ∥
+  external window); returns logits for every slot plus per-layer K/V, i.e. the
+  paper's phase **refresh step** (and the pruning-only / block-diffusion paths).
+* :func:`fwd_cached`  — the paper's **normal step**: recomputes only the `r`
+  compute slots (active ∪ phase-decoded, padded), scatters their fresh
+  per-layer K/V into the cached window *before* attention, attends over the
+  whole window through the L1 Pallas kernel, and returns updated caches.
+
+Positions are *absolute* sequence positions (RoPE input), so pruning far-field
+tokens never perturbs positional geometry (DESIGN.md §3.1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import windowed_attention, windowed_attention_ref
+
+
+@dataclass(frozen=True)
+class Arch:
+    """Model architecture hyper-parameters (single source of truth: manifest)."""
+
+    d: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    dh: int = 32
+    ffn: int = 256
+    vocab: int = 1024
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Arch":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_shapes(arch: Arch) -> dict[str, tuple[int, ...]]:
+    shapes: dict[str, tuple[int, ...]] = {
+        "embed": (arch.vocab, arch.d),
+        "final_norm": (arch.d,),
+        "unembed": (arch.d, arch.vocab),
+    }
+    hd = arch.n_heads * arch.dh
+    for i in range(arch.n_layers):
+        shapes[f"l{i}.attn_norm"] = (arch.d,)
+        shapes[f"l{i}.wq"] = (arch.d, hd)
+        shapes[f"l{i}.wk"] = (arch.d, hd)
+        shapes[f"l{i}.wv"] = (arch.d, hd)
+        shapes[f"l{i}.wo"] = (hd, arch.d)
+        shapes[f"l{i}.ffn_norm"] = (arch.d,)
+        shapes[f"l{i}.w_gate"] = (arch.d, arch.ffn)
+        shapes[f"l{i}.w_up"] = (arch.d, arch.ffn)
+        shapes[f"l{i}.w_down"] = (arch.ffn, arch.d)
+    return shapes
+
+
+def init_params(key, arch: Arch) -> dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_shapes(arch).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else arch.d
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+            )
+    return params
+
+
+def flatten_params(params: dict) -> tuple[list[str], list[jnp.ndarray]]:
+    """Canonical flat ordering (sorted names) used by AOT inputs + weights.bin."""
+    names = sorted(params)
+    return names, [params[n] for n in names]
+
+
+def unflatten_params(names: list[str], flat) -> dict:
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps: float = 1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, pos, theta: float):
+    """Rotary embedding with absolute positions. x: [n, H, Dh], pos: [n] i32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)   # [half]
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]          # [n, half]
+    cos = jnp.cos(ang)[:, None, :]                                   # [n, 1, half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(params, i, xn, arch: Arch):
+    n = xn.shape[0]
+    shp = (n, arch.n_heads, arch.dh)
+    q = (xn @ params[f"l{i}.wq"]).reshape(shp)
+    k = (xn @ params[f"l{i}.wk"]).reshape(shp)
+    v = (xn @ params[f"l{i}.wv"]).reshape(shp)
+    return q, k, v
+
+
+def _ffn(params, i, h):
+    xn = rmsnorm(h, params[f"l{i}.ffn_norm"])
+    g = xn @ params[f"l{i}.w_gate"]
+    u = xn @ params[f"l{i}.w_up"]
+    return h + (g * jax.nn.sigmoid(g) * u) @ params[f"l{i}.w_down"]
+
+
+def _attend(q, k, v, kvalid, use_pallas: bool):
+    if use_pallas:
+        return windowed_attention(q, k, v, kvalid)
+    return windowed_attention_ref(q, k, v, kvalid)
+
+
+# ---------------------------------------------------------------------------
+# step variants
+# ---------------------------------------------------------------------------
+
+def fwd_window(params, arch: Arch, ids, pos, valid, use_pallas: bool = True):
+    """Forward over the window layout; returns (logits[c,V], K[L,c,H,Dh], V[...])."""
+    h = params["embed"][ids]
+    kvalid = valid.astype(jnp.float32)
+    ks, vs = [], []
+    for i in range(arch.n_layers):
+        xn = rmsnorm(h, params[f"l{i}.attn_norm"])
+        q, k, v = _qkv(params, i, xn, arch)
+        q = rope(q, pos, arch.rope_theta)
+        k = rope(k, pos, arch.rope_theta)
+        attn = _attend(q, k, v, kvalid, use_pallas)
+        h = h + attn.reshape(h.shape[0], -1) @ params[f"l{i}.wo"]
+        h = _ffn(params, i, h)
+        ks.append(k)
+        vs.append(v)
+    logits = rmsnorm(h, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def full_step(params, arch: Arch, ids, valid, use_pallas: bool = True):
+    """Baseline full-sequence step: logits[S,V] only (cheapest output transfer)."""
+    pos = jnp.arange(ids.shape[0], dtype=jnp.int32)
+    logits, _, _ = fwd_window(params, arch, ids, pos, valid, use_pallas)
+    return logits
+
+
+def fwd_cached(params, arch: Arch, ids_r, pos_r, slot_idx, rvalid, cvalid,
+               kcache, vcache, use_pallas: bool = True):
+    """Normal step: compute `r` slots against the cached `c`-window.
+
+    Args:
+      ids_r:    [r] token ids of compute slots (active ∪ phase-decoded; padded).
+      pos_r:    [r] absolute positions of those slots.
+      slot_idx: [r] window-slot index of each compute token; padded entries must
+                be set to `c` (out of bounds) so the scatter drops them.
+      rvalid:   [r] 1.0 for live compute slots.
+      cvalid:   [c] 1.0 for live window slots (keys visible to attention).
+      kcache/vcache: [L, c, H, Dh] caches from the last refresh / normal step.
+
+    Returns (logits[r,V], K'[L,c,H,Dh], V'[L,c,H,Dh]) — caches with the fresh
+    per-layer K/V of the compute slots scattered in (buffer rows untouched).
+    """
+    del rvalid  # validity is enforced via slot_idx drop-scatter + cvalid masking
+    h = params["embed"][ids_r]
+    kvalid = cvalid.astype(jnp.float32)
+    ks, vs = [], []
+    for i in range(arch.n_layers):
+        xn = rmsnorm(h, params[f"l{i}.attn_norm"])
+        q, k, v = _qkv(params, i, xn, arch)
+        q = rope(q, pos_r, arch.rope_theta)
+        k = rope(k, pos_r, arch.rope_theta)
+        # Scatter fresh K/V into the cached window BEFORE attention so active
+        # tokens see each other's current-step states (paper §4.3).
+        kl = kcache[i].at[slot_idx].set(k, mode="drop")
+        vl = vcache[i].at[slot_idx].set(v, mode="drop")
+        attn = _attend(q, kl, vl, kvalid, use_pallas)
+        h = h + attn.reshape(h.shape[0], -1) @ params[f"l{i}.wo"]
+        h = _ffn(params, i, h)
+        ks.append(kl)
+        vs.append(vl)
+    logits = rmsnorm(h, params["final_norm"]) @ params["unembed"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+# ---------------------------------------------------------------------------
+# training forward (build path only — dense ref attention, batched)
+# ---------------------------------------------------------------------------
+
+def fwd_train(params, arch: Arch, ids, valid):
+    """Batched full forward for the trainer: ids [B,S] -> logits [B,S,V]."""
+    def one(ids1, valid1):
+        return full_step(params, arch, ids1, valid1, use_pallas=False)
+    return jax.vmap(one)(ids, valid)
+
+
+def diffusion_loss(params, arch: Arch, key, ids, attn_valid, loss_mask, mask_id: int):
+    """LLaDA masked-diffusion objective.
+
+    For each sample draw t ~ U(eps, 1), mask each loss-eligible token with
+    probability t, and weight the masked-token cross-entropy by 1/t.
+    """
+    b, s = ids.shape
+    kt, km = jax.random.split(key)
+    t = jax.random.uniform(kt, (b, 1), minval=0.05, maxval=1.0)
+    noise = jax.random.uniform(km, (b, s))
+    masked = (noise < t) & (loss_mask > 0)
+    x_t = jnp.where(masked, mask_id, ids)
+    logits = fwd_train(params, arch, x_t, attn_valid)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_lp = jnp.take_along_axis(logp, ids[..., None], axis=-1)[..., 0]
+    w = masked.astype(jnp.float32) / t
+    return -(tok_lp * w).sum() / jnp.maximum(masked.sum(), 1)

@@ -1,0 +1,93 @@
+"""Word-level tokenizer shared between the python build path and the rust runtime.
+
+The tokenizer is deliberately trivial so that the rust side
+(``rust/src/tokenizer``) can implement the exact same algorithm and be checked
+against golden vectors emitted by :func:`write_vocab`:
+
+* text is split on whitespace;
+* every digit is its own token (``"42"`` -> ``["4", "2"]``) so the tiny model
+  can learn arithmetic compositionally;
+* runs of letters/underscore and single punctuation characters are tokens;
+* unknown words map to ``<unk>``.
+
+Special ids are fixed and baked into the artifact manifest:
+``<pad>=0, <mask>=1, <eos>=2, <bos>=3, <unk>=4``.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+PAD, MASK, EOS, BOS, UNK = 0, 1, 2, 3, 4
+SPECIALS = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+
+_TOKEN_RE = re.compile(r"[A-Za-z_]+|[0-9]|[^\sA-Za-z0-9_]")
+
+
+def pretokenize(text: str) -> list[str]:
+    """Split text into surface tokens (digits are always singletons)."""
+    return _TOKEN_RE.findall(text)
+
+
+@dataclass
+class Tokenizer:
+    """Closed-vocabulary word tokenizer with fixed special ids."""
+
+    vocab: list[str] = field(default_factory=lambda: list(SPECIALS))
+    index: dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.index:
+            self.index = {w: i for i, w in enumerate(self.vocab)}
+
+    # -- vocabulary construction ------------------------------------------------
+    def add(self, word: str) -> int:
+        if word not in self.index:
+            self.index[word] = len(self.vocab)
+            self.vocab.append(word)
+        return self.index[word]
+
+    def fit(self, texts: list[str]) -> "Tokenizer":
+        for t in texts:
+            for tok in pretokenize(t):
+                self.add(tok)
+        return self
+
+    # -- encode / decode ---------------------------------------------------------
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> list[int]:
+        ids = [self.index.get(tok, UNK) for tok in pretokenize(text)]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids: list[int], skip_special: bool = True) -> str:
+        words = []
+        for i in ids:
+            if skip_special and i < len(SPECIALS):
+                continue
+            words.append(self.vocab[i] if 0 <= i < len(self.vocab) else "<unk>")
+        return " ".join(words)
+
+    def __len__(self) -> int:
+        return len(self.vocab)
+
+    # -- persistence ---------------------------------------------------------------
+    def save(self, path: str, golden: list[str] | None = None) -> None:
+        """Write vocab plus golden encode vectors for the rust parity test."""
+        payload: dict = {"vocab": self.vocab}
+        if golden is not None:
+            payload["golden"] = [
+                {"text": g, "ids": self.encode(g)} for g in golden
+            ]
+        with open(path, "w") as f:
+            json.dump(payload, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Tokenizer":
+        with open(path) as f:
+            payload = json.load(f)
+        return cls(vocab=list(payload["vocab"]))

@@ -1,0 +1,118 @@
+"""Build-time trainer for the sim DLMs (LLaDA masked-diffusion objective).
+
+The paper's method is training-free and uses off-the-shelf 7B checkpoints we
+don't have; instead `make artifacts` trains tiny stand-ins on the synthetic
+corpus so that inference exhibits the *real* dynamics the paper exploits
+(prefix-localized confidence, post-decode KV transients). Adam is hand-rolled
+(optax is not a declared dependency of the build image).
+
+Runs once per model; weights are persisted to ``artifacts/weights_<model>.bin``
+(flat little-endian f32 + manifest offsets) for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import Arch, diffusion_loss, init_params
+from .tokenizer import EOS, PAD, Tokenizer
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def build_batches(tok: Tokenizer, fmt: str, arch: Arch, n_docs: int,
+                  seq_len: int, seed: int) -> np.ndarray:
+    """Pack wrapped (prompt, completion, <eos>) pairs into fixed-length rows."""
+    docs = corpus.training_documents(fmt, n_docs, seed=seed)
+    rows: list[list[int]] = []
+    cur: list[int] = []
+    for doc in docs:
+        for p, t in doc:
+            ids = tok.encode(p) + tok.encode(t) + [EOS]
+            if len(cur) + len(ids) > seq_len:
+                if cur:
+                    rows.append(cur + [PAD] * (seq_len - len(cur)))
+                cur = []
+                if len(ids) > seq_len:
+                    ids = ids[:seq_len]
+            cur.extend(ids)
+    if cur:
+        rows.append(cur + [PAD] * (seq_len - len(cur)))
+    return np.asarray(rows, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# training loop
+# ---------------------------------------------------------------------------
+
+def train_model(tok: Tokenizer, arch: Arch, fmt: str, *, mask_id: int,
+                steps: int = 350, batch: int = 8, seq_len: int | None = None,
+                lr: float = 3e-3, seed: int = 0, n_docs: int = 1500,
+                log_every: int = 100, log=print) -> dict:
+    """Train one sim model; returns the trained param dict."""
+    seq_len = seq_len or min(arch.max_seq, 256)
+    data = build_batches(tok, fmt, arch, n_docs, seq_len, seed=17 if fmt == "base" else 18)
+    log(f"[train] fmt={fmt} rows={data.shape[0]} seq={seq_len} steps={steps}")
+
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    params = init_params(kinit, arch)
+    opt = adam_init(params)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt, key, ids):
+        attn_valid = (ids != PAD).astype(jnp.float32)
+        loss_mask = attn_valid
+        loss, grads = jax.value_and_grad(diffusion_loss)(
+            params, arch, key, ids, attn_valid, loss_mask, mask_id)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    loss_hist = []
+    for it in range(steps):
+        idx = rng.integers(0, data.shape[0], size=batch)
+        key, kstep = jax.random.split(key)
+        params, opt, loss = step_fn(params, opt, kstep, jnp.asarray(data[idx]))
+        loss_hist.append(float(loss))
+        if (it + 1) % log_every == 0 or it == 0:
+            recent = float(np.mean(loss_hist[-log_every:]))
+            log(f"[train] {fmt} step {it + 1}/{steps} loss={recent:.4f} "
+                f"({time.time() - t0:.0f}s)")
+    first = float(np.mean(loss_hist[:20]))
+    last = float(np.mean(loss_hist[-20:]))
+    log(f"[train] {fmt} done: loss {first:.3f} -> {last:.3f}")
+    if not last < first:
+        raise RuntimeError(f"training diverged for fmt={fmt}: {first} -> {last}")
+    return params

@@ -1,0 +1,96 @@
+"""L1 kernel correctness: Pallas windowed attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (r, c, H, Dh within the bucket constraints), mask
+patterns and value scales; every case must match the dense reference. This is
+the CORE correctness signal for the compute hot path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import windowed_attention, windowed_attention_ref
+from compile.kernels.windowed_attn import (BC, BR, mxu_utilization_estimate,
+                                           vmem_bytes)
+
+
+def run_case(r, c, h, dh, seed, mask_frac=0.3, scale_vals=1.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((r, h, dh)) * scale_vals, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((c, h, dh)) * scale_vals, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((c, h, dh)) * scale_vals, jnp.float32)
+    kvalid = (rng.random(c) > mask_frac).astype(np.float32)
+    if kvalid.sum() == 0:
+        kvalid[0] = 1.0  # keep at least one visible key
+    kvalid = jnp.asarray(kvalid)
+    out = windowed_attention(q, k, v, kvalid)
+    ref = windowed_attention_ref(q, k, v, kvalid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_basic_shapes():
+    run_case(16, 64, 4, 24, seed=0)
+
+
+def test_ladder_shapes():
+    # the exact (r, c) buckets aot.py lowers
+    for c in (64, 128, 192, 256):
+        for r in (16, 48):
+            run_case(r, c, 4, 24, seed=c * 100 + r)
+
+
+def test_all_keys_valid():
+    run_case(32, 128, 2, 16, seed=1, mask_frac=0.0)
+
+
+def test_single_valid_key():
+    rng = np.random.default_rng(2)
+    r, c, h, dh = 16, 64, 2, 16
+    q = jnp.asarray(rng.standard_normal((r, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((c, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((c, h, dh)), jnp.float32)
+    kvalid = np.zeros(c, np.float32)
+    kvalid[7] = 1.0
+    out = windowed_attention(q, k, v, jnp.asarray(kvalid))
+    # with one visible key, output == that key's value for every query/head
+    expect = np.broadcast_to(np.asarray(v)[7][None], (r, h, dh))
+    np.testing.assert_allclose(np.asarray(out), expect, atol=1e-5)
+
+
+def test_large_logits_stable():
+    # online softmax must not overflow with large score magnitudes
+    run_case(16, 128, 2, 16, seed=3, scale_vals=30.0)
+
+
+def test_rejects_misaligned_shapes():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((10, 2, 16)), jnp.float32)  # r % 16 != 0
+    k = jnp.asarray(rng.standard_normal((64, 2, 16)), jnp.float32)
+    v = k
+    with pytest.raises(ValueError):
+        windowed_attention(q, k, v, jnp.ones(64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r_mult=st.integers(1, 4),
+    c_mult=st.integers(1, 4),
+    h=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 24, 32]),
+    seed=st.integers(0, 2 ** 16),
+    mask_frac=st.floats(0.0, 0.9),
+)
+def test_hypothesis_sweep(r_mult, c_mult, h, dh, seed, mask_frac):
+    run_case(BR * r_mult, BC * c_mult, h, dh, seed, mask_frac)
+
+
+def test_vmem_budget():
+    # DESIGN.md §Perf: the largest bucket must fit the 16 MiB VMEM budget
+    assert vmem_bytes(256, 512, 32) < 16 * 1024 * 1024
+
+
+def test_mxu_estimate_bounds():
+    u = mxu_utilization_estimate(64, 256, 32)
+    assert 0.0 < u <= 1.0

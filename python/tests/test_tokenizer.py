@@ -1,0 +1,74 @@
+"""Tokenizer unit tests + the contract the rust implementation mirrors."""
+
+import json
+
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.tokenizer import (BOS, EOS, MASK, PAD, SPECIALS, UNK, Tokenizer,
+                               pretokenize)
+
+
+def test_special_ids_fixed():
+    assert (PAD, MASK, EOS, BOS, UNK) == (0, 1, 2, 3, 4)
+    t = Tokenizer()
+    assert t.vocab[:5] == SPECIALS
+
+
+def test_pretokenize_digits_split():
+    assert pretokenize("42 apples") == ["4", "2", "apples"]
+
+
+def test_pretokenize_punct():
+    assert pretokenize("f ( x ) : x+1") == ["f", "(", "x", ")", ":", "x", "+", "1"]
+
+
+def test_encode_decode_roundtrip():
+    t = Tokenizer().fit(["tom has 3 apples ."])
+    ids = t.encode("tom has 3 apples .")
+    assert t.decode(ids) == "tom has 3 apples ."
+
+
+def test_unknown_maps_to_unk():
+    t = Tokenizer().fit(["hello"])
+    assert t.encode("goodbye") == [UNK]
+
+
+def test_bos_eos_flags():
+    t = Tokenizer().fit(["x"])
+    assert t.encode("x", bos=True, eos=True)[0] == BOS
+    assert t.encode("x", bos=True, eos=True)[-1] == EOS
+
+
+def test_fit_idempotent():
+    t = Tokenizer().fit(["a b c"]).fit(["a b c"])
+    assert len(t) == len(SPECIALS) + 3
+
+
+def test_save_load_golden(tmp_path):
+    t = Tokenizer().fit(["tom has 3 apples"])
+    p = tmp_path / "vocab.json"
+    t.save(str(p), golden=["tom has 3"])
+    payload = json.loads(p.read_text())
+    assert payload["golden"][0]["ids"] == t.encode("tom has 3")
+    t2 = Tokenizer.load(str(p))
+    assert t2.vocab == t.vocab
+    assert t2.encode("tom has 3 apples") == t.encode("tom has 3 apples")
+
+
+@given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+               max_size=80))
+def test_pretokenize_total(text):
+    """pretokenize never throws and never emits whitespace or multi-digit runs."""
+    for tok in pretokenize(text):
+        assert tok.strip() == tok and tok
+        if tok[0].isdigit():
+            assert len(tok) == 1
+
+
+@given(st.lists(st.sampled_from(["tom", "has", "3", "7", ".", "apples"]),
+                min_size=1, max_size=20))
+def test_encode_decode_identity_on_vocab(words):
+    t = Tokenizer().fit(["tom has 3 7 . apples"])
+    text = " ".join(words)
+    assert t.decode(t.encode(text)) == text

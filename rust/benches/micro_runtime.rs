@@ -1,0 +1,67 @@
+//! §Perf micro-benchmarks: per-step-variant latency, host↔device transfer
+//! overhead attribution, and the serving layer's per-request overhead.
+//! These are the numbers the EXPERIMENTS.md §Perf iteration log tracks.
+
+use window_diffusion::bench_support::*;
+use window_diffusion::coordinator::{ComputeSet, SeqState, WindowLayout};
+use window_diffusion::util::stats::{fmt_secs, Measurement};
+
+fn main() -> anyhow::Result<()> {
+    let (_, engine, tok) = load("dream-sim-base")?;
+    let prompt = tok.encode("q : compute : ( 3 + 4 ) * 2 = ? a :");
+    let sp = engine.special;
+    let state = SeqState::new(&prompt, 96, 256, sp.mask, sp.eos, sp.pad)?;
+    let m = Measurement::new(3, 15);
+    let mut csv = Csv::new("micro_runtime", "step_kind,shape,p50_secs,mean_secs");
+
+    println!("=== micro: step-variant latency [dream-sim-base] ===");
+    // full-sequence step
+    let s1 = m.run(|| {
+        engine.full_step(256, &state.ids, &state.full_valid()).unwrap();
+    });
+    println!("full_step s=256          p50={} mean={}", fmt_secs(s1.p50), fmt_secs(s1.mean));
+    csv.row(&["full".into(), "s256".into(), format!("{:.6}", s1.p50), format!("{:.6}", s1.mean)]);
+
+    // window refresh at each c bucket
+    for c in [64usize, 128, 192, 256] {
+        let w_ex = c.saturating_sub(prompt.len()).max(8).min(96);
+        let layout = WindowLayout::build(&state, w_ex, &[c])?;
+        let ids = layout.ids_padded(&state);
+        let pos = layout.pos_padded();
+        let s2 = m.run(|| {
+            engine.fwd_window(256, c, &ids, &pos, &layout.cvalid).unwrap();
+        });
+        println!("fwd_window c={c:<4}        p50={} mean={}", fmt_secs(s2.p50), fmt_secs(s2.mean));
+        csv.row(&["window".into(), format!("c{c}"), format!("{:.6}", s2.p50),
+                  format!("{:.6}", s2.mean)]);
+    }
+
+    // cached step at representative (c, r)
+    for (c, r) in [(128usize, 16usize), (128, 48), (256, 48), (256, 128)] {
+        let layout = WindowLayout::build(&state, c - prompt.len().min(c / 2), &[c])?;
+        let (_, kv) = engine.fwd_window(256, c, &layout.ids_padded(&state),
+                                        &layout.pos_padded(), &layout.cvalid)?;
+        let active = state.undecoded_prefix(r.min(16));
+        let cs = ComputeSet::build(&state, &layout, &active, &[], &[r])?;
+        let s3 = m.run(|| {
+            engine
+                .fwd_cached(256, c, r, &cs.ids_r, &cs.pos_r, &cs.slot_idx, &cs.rvalid,
+                            &layout.cvalid, &kv)
+                .unwrap();
+        });
+        println!("fwd_cached c={c:<3} r={r:<4}   p50={} mean={}", fmt_secs(s3.p50),
+                 fmt_secs(s3.mean));
+        csv.row(&["cached".into(), format!("c{c}r{r}"), format!("{:.6}", s3.p50),
+                  format!("{:.6}", s3.mean)]);
+    }
+
+    // engine-level accounting
+    let st = &engine.stats;
+    println!("\n=== engine counters ===");
+    println!("executions={} exec_time={:.2}s compiles={} compile_time={:.2}s",
+             st.executions.get(), st.exec_secs.get(), st.compiles.get(),
+             st.compile_secs.get());
+    println!("h2d={:.1}MB d2h={:.1}MB",
+             st.h2d_bytes.get() as f64 / 1e6, st.d2h_bytes.get() as f64 / 1e6);
+    csv.finish()
+}

@@ -1,0 +1,68 @@
+//! Table 1: window-based vs block-based token pruning **without KV caching**
+//! on Dream-sim (Base + Instruct), window/block size L ∈ {16, 32}.
+//!
+//! Shape expected: window-nocache degrades less than block at L=16
+//! (block's rigid update order hurts, especially Instruct), and both recover
+//! at L=32. Accuracy is grader score; `agreement` vs the unpruned baseline
+//! decode is the direct quality-preservation measure.
+
+use window_diffusion::bench_support::*;
+use window_diffusion::eval::tasks::{display_name, TASKS};
+use window_diffusion::eval::EvalOptions;
+use window_diffusion::strategies::{self, FullBaseline};
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n(2);
+    let gen = bench_gen(96);
+    let mut csv = Csv::new(
+        "table1_pruning",
+        "model,format,task,strategy,L,accuracy,agreement,tokens_per_sec",
+    );
+    for (model, fmt) in [("dream-sim-base", "base"), ("dream-sim-instruct", "instruct")] {
+        let (manifest, engine, tok) = load(model)?;
+        println!("\n=== Table 1 [{model}] n={n} gen={gen} ===");
+        println!("{:<26} {}", "method", TASKS.map(display_name).join("  |  "));
+        hr(100);
+
+        // unpruned reference decodes (the "Dream" row)
+        let mut refs: Vec<Vec<Vec<i32>>> = Vec::new();
+        let mut cells = Vec::new();
+        for task in TASKS {
+            let opts = EvalOptions { n, gen_len: gen, s: 256, ..Default::default() };
+            let rep = run_cell(&manifest, &engine, &tok, &FullBaseline, task, fmt, &opts)?;
+            refs.push(rep.outputs.clone());
+            cells.push(format!("{:>5.1}        ", rep.accuracy * 100.0));
+            csv.row(&[model.into(), fmt.into(), task.into(), "full".into(), "-".into(),
+                      format!("{:.4}", rep.accuracy), "1.0".into(),
+                      format!("{:.3}", rep.tokens_per_sec())]);
+        }
+        println!("{:<26} {}", "dream-sim (no pruning)", cells.join("  |  "));
+
+        for l in [16usize, 32] {
+            for (label, spec) in [
+                ("block", format!("block:size={l}")),
+                ("window-nocache", format!("window-nocache:w_ex={l},a={}", l.min(16))),
+            ] {
+                let strat = strategies::from_name(&spec)?;
+                let mut cells = Vec::new();
+                for (ti, task) in TASKS.iter().enumerate() {
+                    let opts = EvalOptions {
+                        n,
+                        gen_len: gen,
+                        s: 256,
+                        reference: Some(refs[ti].clone()),
+                        ..Default::default()
+                    };
+                    let rep = run_cell(&manifest, &engine, &tok, strat.as_ref(), task, fmt, &opts)?;
+                    cells.push(format!("{:>5.1} (ag {:.2})", rep.accuracy * 100.0, rep.agreement));
+                    csv.row(&[model.into(), fmt.into(), task.to_string(), label.into(),
+                              format!("{l}"), format!("{:.4}", rep.accuracy),
+                              format!("{:.4}", rep.agreement),
+                              format!("{:.3}", rep.tokens_per_sec())]);
+                }
+                println!("{:<26} {}", format!("{label} L={l}"), cells.join("  |  "));
+            }
+        }
+    }
+    csv.finish()
+}

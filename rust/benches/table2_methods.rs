@@ -1,0 +1,65 @@
+//! Table 2: accuracy + decoding throughput (tok/s) + speedup of all five
+//! acceleration methods on the Dream-sim models (Base + Instruct × 4 tasks).
+//!
+//! Paper settings: WD internal window 16, refresh cycle 32, early stopping
+//! disabled; dKV-Cache interval 4; Fast-dLLM block 32, parallel decoding off.
+//! Shape expected to reproduce: full < dkv < fdllm-prefix < fdllm-dual <
+//! window in tok/s, with window accuracy ≈ baseline.
+
+use window_diffusion::bench_support::*;
+use window_diffusion::eval::tasks::{display_name, TASKS};
+use window_diffusion::eval::EvalOptions;
+use window_diffusion::strategies::table2_lineup;
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_n(2);
+    let gen = bench_gen(96);
+    let mut csv = Csv::new(
+        "table2_methods",
+        "model,format,task,strategy,accuracy,agreement,tokens_per_sec,speedup,token_slots",
+    );
+    for (model, fmt) in [("dream-sim-base", "base"), ("dream-sim-instruct", "instruct")] {
+        let (manifest, engine, tok) = load(model)?;
+        println!("\n=== Table 2 [{model}] n={n} gen={gen} ===");
+        println!("{:<22} {}", "method", TASKS.map(display_name).join("  |  "));
+        hr(100);
+        let mut references: Vec<Vec<Vec<i32>>> = Vec::new();
+        let mut base_tps: Vec<f64> = Vec::new();
+        for strat in table2_lineup() {
+            let mut cells = Vec::new();
+            for (ti, task) in TASKS.iter().enumerate() {
+                let mut opts = EvalOptions {
+                    n,
+                    gen_len: gen,
+                    s: 256,
+                    adaptive: false,
+                    ..Default::default()
+                };
+                if let Some(r) = references.get(ti) {
+                    opts.reference = Some(r.clone());
+                }
+                let rep = run_cell(&manifest, &engine, &tok, strat.as_ref(), task, fmt, &opts)?;
+                let tps = rep.tokens_per_sec();
+                if references.len() <= ti {
+                    references.push(rep.outputs.clone());
+                    base_tps.push(tps);
+                }
+                let sp = speedup(base_tps[ti], tps);
+                cells.push(fmt_cell(rep.accuracy, tps, sp));
+                csv.row(&[
+                    model.into(),
+                    fmt.into(),
+                    task.to_string(),
+                    rep.strategy.clone(),
+                    format!("{:.4}", rep.accuracy),
+                    format!("{:.4}", rep.agreement),
+                    format!("{:.3}", tps),
+                    format!("{:.3}", sp),
+                    format!("{}", rep.counts.token_slots),
+                ]);
+            }
+            println!("{:<22} {}", strat.name(), cells.join("  |  "));
+        }
+    }
+    csv.finish()
+}

@@ -1,0 +1,71 @@
+//! Fig. 2: token-wise prediction confidence over undecoded positions at
+//! chosen diffusion steps — the prefix-locality evidence (Obs. 1).
+
+use anyhow::Result;
+
+use super::{confidence_field, decode_until};
+use crate::coordinator::{SeqState, StepExec};
+
+/// One heatmap row: the confidence field at a snapshot step.
+#[derive(Debug, Clone)]
+pub struct ConfidenceSnapshot {
+    pub step: usize,
+    /// (absolute position, confidence) for every undecoded position.
+    pub field: Vec<(usize, f64)>,
+}
+
+/// Fraction of total top-confidence mass in the first `frac_window` of the
+/// undecoded region — the scalar the bench asserts prefix locality with.
+pub fn prefix_mass(snap: &ConfidenceSnapshot, frac_window: f64) -> f64 {
+    if snap.field.is_empty() {
+        return 0.0;
+    }
+    let cut = (snap.field.len() as f64 * frac_window).ceil() as usize;
+    let total: f64 = snap.field.iter().map(|(_, c)| c).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    snap.field.iter().take(cut).map(|(_, c)| c).sum::<f64>() / total
+}
+
+/// Run a full-sequence decode, snapshotting the confidence field at `steps`.
+pub fn run_probe(exec: &dyn StepExec, prompt: &[i32], gen_len: usize, s: usize,
+                 snapshot_steps: &[usize], k_per_step: usize)
+                 -> Result<Vec<ConfidenceSnapshot>> {
+    let sp = exec.special();
+    let mut state = SeqState::new(prompt, gen_len, s, sp.mask, sp.eos, sp.pad)?;
+    let mut out = Vec::new();
+    let mut cur = 0usize;
+    let mut steps = snapshot_steps.to_vec();
+    steps.sort_unstable();
+    for &t in &steps {
+        decode_until(exec, &mut state, s, t.saturating_sub(cur), k_per_step)?;
+        cur = t;
+        out.push(ConfidenceSnapshot { step: t, field: confidence_field(exec, &state, s)? });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+
+    #[test]
+    fn snapshots_at_requested_steps() {
+        let m = MockExec::new(256);
+        let snaps = run_probe(&m, &[10; 8], 96, 256, &[4, 12], 2).unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].step, 4);
+        assert_eq!(snaps[0].field.len(), 96 - 8);
+        assert_eq!(snaps[1].field.len(), 96 - 24);
+    }
+
+    #[test]
+    fn mock_mass_concentrates_at_prefix() {
+        let m = MockExec::new(256);
+        let snaps = run_probe(&m, &[10; 8], 96, 256, &[8], 2).unwrap();
+        // first 25% of undecoded region holds >25% of confidence mass
+        assert!(prefix_mass(&snaps[0], 0.25) > 0.25);
+    }
+}

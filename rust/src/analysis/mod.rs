@@ -1,0 +1,75 @@
+//! Token-level analysis probes reproducing the paper's §3 observations:
+//! Fig. 2 (prefix-local confidence), Fig. 3 (truncation KL ± cache),
+//! Fig. 4 (decoded-token V stability).
+
+pub mod confidence;
+pub mod stability;
+pub mod truncation;
+
+use anyhow::Result;
+
+use crate::coordinator::policies::{candidates, select_top_k};
+use crate::coordinator::{SeqState, StepExec};
+
+/// Drive a plain full-sequence decode to diffusion step `t_stop` (exclusive),
+/// committing `k` top-confidence tokens per step — the shared setup for all
+/// probes ("observe the model mid-decode").
+pub fn decode_until(exec: &dyn StepExec, state: &mut SeqState, s: usize,
+                    t_stop: usize, k: usize) -> Result<()> {
+    let vocab = exec.arch().vocab;
+    for step in 0..t_stop {
+        if state.done() {
+            break;
+        }
+        let logits = exec.full(s, &state.ids, &state.full_valid())?;
+        let undecoded = state.undecoded();
+        let cands = candidates(
+            undecoded.iter().map(|&p| (p, &logits[p * vocab..(p + 1) * vocab])),
+        );
+        for c in select_top_k(cands, k) {
+            state.decode(c.pos, c.token, step, false)?;
+        }
+    }
+    Ok(())
+}
+
+/// Softmax confidence of each undecoded position under full-sequence logits.
+pub fn confidence_field(exec: &dyn StepExec, state: &SeqState, s: usize)
+                        -> Result<Vec<(usize, f64)>> {
+    let vocab = exec.arch().vocab;
+    let logits = exec.full(s, &state.ids, &state.full_valid())?;
+    Ok(state
+        .undecoded()
+        .into_iter()
+        .map(|p| {
+            let (_, conf) = crate::coordinator::policies::score_row(
+                &logits[p * vocab..(p + 1) * vocab],
+            );
+            (p, conf)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+
+    #[test]
+    fn decode_until_advances() {
+        let m = MockExec::new(256);
+        let mut st = SeqState::new(&[10; 8], 64, 256, 1, 2, 0).unwrap();
+        decode_until(&m, &mut st, 256, 10, 2).unwrap();
+        assert_eq!(st.num_undecoded(), 64 - 20);
+    }
+
+    #[test]
+    fn confidence_field_is_prefix_local_on_mock() {
+        let m = MockExec::new(256);
+        let st = SeqState::new(&[10; 8], 64, 256, 1, 2, 0).unwrap();
+        let field = confidence_field(&m, &st, 256).unwrap();
+        assert_eq!(field.len(), 64);
+        // mock confidence decays with position
+        assert!(field.first().unwrap().1 > field.last().unwrap().1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Shared support for the paper-table/figure benches (`rust/benches/*.rs`).
+//!
+//! `criterion` is not in the offline crate set; each bench is a
+//! `harness = false` binary that prints the paper's rows and writes a CSV to
+//! `bench_results/`. Scale knobs (all env vars) let `cargo bench` finish on
+//! the single-core substrate while still exercising every code path:
+//!
+//! * `WD_BENCH_N`    — instances per suite cell (default 2)
+//! * `WD_BENCH_GEN`  — generation length (default 64)
+//! * `WD_ARTIFACTS`  — artifact root (default ./artifacts)
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::eval::{self, EvalOptions, EvalReport};
+use crate::runtime::{Engine, Manifest};
+use crate::strategies::Strategy;
+use crate::tokenizer::Tokenizer;
+
+pub fn bench_n(default: usize) -> usize {
+    std::env::var("WD_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn bench_gen(default: usize) -> usize {
+    std::env::var("WD_BENCH_GEN").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Load (manifest, engine, tokenizer) for a model.
+pub fn load(model: &str) -> Result<(Manifest, Engine, Tokenizer)> {
+    let root = Manifest::default_root();
+    let manifest = Manifest::load(&root)?;
+    let engine = Engine::load(&manifest, model)?;
+    let tok = Tokenizer::load(&manifest.vocab_file)?;
+    Ok((manifest, engine, tok))
+}
+
+/// Run one (strategy × task × format) cell.
+pub fn run_cell(
+    manifest: &Manifest,
+    engine: &Engine,
+    tok: &Tokenizer,
+    strategy: &dyn Strategy,
+    task: &str,
+    fmt: &str,
+    opts: &EvalOptions,
+) -> Result<EvalReport> {
+    let instances = eval::load_task(&manifest.tasks_dir, task, fmt)?;
+    eval::run_eval(engine, strategy, tok, &instances, opts)
+}
+
+/// CSV writer into `bench_results/<name>.csv`.
+pub struct Csv {
+    path: PathBuf,
+    lines: Vec<String>,
+}
+
+impl Csv {
+    pub fn new(name: &str, header: &str) -> Csv {
+        Csv {
+            path: PathBuf::from("bench_results").join(format!("{name}.csv")),
+            lines: vec![header.to_string()],
+        }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        self.lines.push(fields.join(","));
+    }
+
+    pub fn finish(self) -> Result<()> {
+        std::fs::create_dir_all(self.path.parent().unwrap())?;
+        let mut f = std::fs::File::create(&self.path)?;
+        for l in &self.lines {
+            writeln!(f, "{l}")?;
+        }
+        eprintln!("[bench] wrote {}", self.path.display());
+        Ok(())
+    }
+}
+
+pub fn speedup(base: f64, x: f64) -> f64 {
+    if base <= 0.0 {
+        0.0
+    } else {
+        x / base
+    }
+}
+
+/// Paper-style cell: `acc  tok/s (speedup×)`.
+pub fn fmt_cell(acc: f64, tps: f64, sp: f64) -> String {
+    format!("{:>5.1} {:>7.2}t/s ({:>4.1}x)", acc * 100.0, tps, sp)
+}
+
+pub fn hr(width: usize) {
+    println!("{}", "-".repeat(width));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_default() {
+        assert!(bench_n(2) >= 1);
+        assert!(bench_gen(64) >= 1);
+    }
+
+    #[test]
+    fn csv_accumulates() {
+        let mut c = Csv::new("test_tmp", "a,b");
+        c.row(&["1".into(), "2".into()]);
+        assert_eq!(c.lines.len(), 2);
+        // don't write in unit tests
+    }
+
+    #[test]
+    fn speedup_math() {
+        assert_eq!(speedup(2.0, 6.0), 3.0);
+        assert_eq!(speedup(0.0, 6.0), 0.0);
+    }
+}

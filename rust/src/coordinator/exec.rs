@@ -1,0 +1,268 @@
+//! `StepExec`: the step-execution interface strategies are written against.
+//!
+//! Implementations: [`Engine`] (direct, single-threaded), [`EngineCell`]
+//! (mutex-per-step, used by the serving layer so concurrent requests
+//! interleave at step granularity), and [`MockExec`] (deterministic fake
+//! model — lets every coordinator/strategy test run without artifacts).
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::{Arch, Engine, EngineCell, KvCache, Specials};
+
+pub trait StepExec {
+    fn arch(&self) -> Arch;
+    fn special(&self) -> Specials;
+    /// Artifact sequence sets available (e.g. [256, 512]).
+    fn seqs(&self) -> Vec<usize>;
+    fn c_ladder(&self, s: usize) -> Vec<usize>;
+    fn r_ladder(&self, s: usize) -> Vec<usize>;
+
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>>;
+
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)>;
+
+    #[allow(clippy::too_many_arguments)]
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)>;
+}
+
+fn ladder_le(ladder: &[usize], s: usize) -> Vec<usize> {
+    ladder.iter().copied().filter(|&x| x <= s).collect()
+}
+
+impl StepExec for Engine {
+    fn arch(&self) -> Arch {
+        self.model.arch.clone()
+    }
+    fn special(&self) -> Specials {
+        self.special
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.model.seqs.clone()
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(&self.model.c_ladder, s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(&self.model.r_ladder, s)
+    }
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        Engine::full_step(self, s, ids, valid)
+    }
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        Engine::fwd_window(self, s, c, ids, pos, valid)
+    }
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        Engine::fwd_cached(self, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+    }
+}
+
+impl StepExec for EngineCell {
+    fn arch(&self) -> Arch {
+        self.with(|e| e.model.arch.clone())
+    }
+    fn special(&self) -> Specials {
+        self.with(|e| e.special)
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.with(|e| e.model.seqs.clone())
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        self.with(|e| ladder_le(&e.model.c_ladder, s))
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        self.with(|e| ladder_le(&e.model.r_ladder, s))
+    }
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.with(|e| e.full_step(s, ids, valid))
+    }
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        self.with(|e| e.fwd_window(s, c, ids, pos, valid))
+    }
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        self.with(|e| e.fwd_cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mock
+// ---------------------------------------------------------------------------
+
+/// Deterministic fake model for coordinator tests (no artifacts needed).
+///
+/// Per position `p` the mock's "prediction" is `token_at(p)` with confidence
+/// decaying in `p` — a caricature of the paper's prefix locality, so
+/// confidence-ranked selection decodes front-to-back. `eos_at` injects an
+/// EOS prediction at a chosen position to exercise adaptive termination.
+pub struct MockExec {
+    pub vocab: usize,
+    pub s: usize,
+    pub eos_at: Option<usize>,
+    pub calls: std::sync::Mutex<CallCounts>,
+}
+
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct CallCounts {
+    pub full: usize,
+    pub window: usize,
+    pub cached: usize,
+    /// Total computed token-slots (c for window/full, r for cached) — the
+    /// compute-cost model used by coordinator-level assertions.
+    pub token_slots: usize,
+}
+
+impl MockExec {
+    pub fn new(s: usize) -> MockExec {
+        MockExec { vocab: 16, s, eos_at: None, calls: Default::default() }
+    }
+
+    pub fn with_eos_at(mut self, pos: usize) -> MockExec {
+        self.eos_at = Some(pos);
+        self
+    }
+
+    pub fn token_at(&self, pos: usize) -> i32 {
+        if self.eos_at == Some(pos) {
+            return 2; // EOS
+        }
+        5 + ((pos * 7) % (self.vocab - 5)) as i32
+    }
+
+    /// Logit row for a position: peak at token_at(pos), margin shrinking
+    /// with position (prefix-local confidence).
+    fn row(&self, pos: usize) -> Vec<f32> {
+        let mut row = vec![0f32; self.vocab];
+        let margin = 8.0 - 6.0 * (pos as f32 / self.s as f32);
+        row[self.token_at(pos) as usize] = margin;
+        row
+    }
+
+    pub fn counts(&self) -> CallCounts {
+        self.calls.lock().unwrap().clone()
+    }
+
+    /// KV literal with the correct [L, c, H, Dh] element count (zeros).
+    fn mock_kv(&self, s: usize, c: usize) -> KvCache {
+        let a = self.arch();
+        let elems = a.n_layers * c * a.n_heads * a.dh;
+        KvCache {
+            s,
+            c,
+            k: Literal::vec1(&vec![0f32; elems]),
+            v: Literal::vec1(&vec![0f32; elems]),
+        }
+    }
+}
+
+impl StepExec for MockExec {
+    fn arch(&self) -> Arch {
+        Arch { d: 8, n_layers: 1, n_heads: 1, dh: 8, ffn: 16, vocab: self.vocab,
+               max_seq: self.s }
+    }
+    fn special(&self) -> Specials {
+        Specials { pad: 0, mask: 1, eos: 2 }
+    }
+    fn seqs(&self) -> Vec<usize> {
+        vec![self.s]
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(&[64, 128, 192, 256, 384, 512], s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(&[16, 32, 48, 64, 128, 256], s)
+    }
+
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(ids.len(), s);
+        assert_eq!(valid.len(), s);
+        let mut c = self.calls.lock().unwrap();
+        c.full += 1;
+        c.token_slots += s;
+        drop(c);
+        let mut out = Vec::with_capacity(s * self.vocab);
+        for p in 0..s {
+            out.extend(self.row(p));
+        }
+        Ok(out)
+    }
+
+    fn window(&self, _s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        assert_eq!(ids.len(), c);
+        assert_eq!(pos.len(), c);
+        assert_eq!(valid.len(), c);
+        let mut cc = self.calls.lock().unwrap();
+        cc.window += 1;
+        cc.token_slots += c;
+        drop(cc);
+        let mut out = Vec::with_capacity(c * self.vocab);
+        for slot in 0..c {
+            out.extend(self.row(pos[slot] as usize));
+        }
+        Ok((out, self.mock_kv(_s, c)))
+    }
+
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], _cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        assert_eq!(ids_r.len(), r);
+        assert_eq!(pos_r.len(), r);
+        assert_eq!(slot_idx.len(), r);
+        assert_eq!(rvalid.len(), r);
+        assert_eq!(kv.c, c, "cache/bucket mismatch");
+        let mut cc = self.calls.lock().unwrap();
+        cc.cached += 1;
+        cc.token_slots += r;
+        drop(cc);
+        let mut out = Vec::with_capacity(r * self.vocab);
+        for i in 0..r {
+            out.extend(self.row(pos_r[i] as usize));
+        }
+        Ok((out, self.mock_kv(s, c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_prefix_local_confidence() {
+        let m = MockExec::new(256);
+        let logits = m.full(256, &vec![1; 256], &vec![1.0; 256]).unwrap();
+        let row = |p: usize| &logits[p * m.vocab..(p + 1) * m.vocab];
+        let (_, c10) = crate::coordinator::policies::score_row(row(10));
+        let (_, c200) = crate::coordinator::policies::score_row(row(200));
+        assert!(c10 > c200);
+    }
+
+    #[test]
+    fn mock_eos_injection() {
+        let m = MockExec::new(64).with_eos_at(20);
+        assert_eq!(m.token_at(20), 2);
+        assert_ne!(m.token_at(21), 2);
+    }
+
+    #[test]
+    fn mock_counts_token_slots() {
+        let m = MockExec::new(64);
+        let _ = m.full(64, &vec![1; 64], &vec![1.0; 64]);
+        let (_, kv) = m.window(64, 64, &vec![1; 64], &vec![0; 64], &vec![1.0; 64]).unwrap();
+        let _ = m.cached(64, 64, 16, &vec![1; 16], &vec![0; 16], &vec![64; 16],
+                         &vec![1.0; 16], &vec![1.0; 64], &kv);
+        let c = m.counts();
+        assert_eq!(c.full, 1);
+        assert_eq!(c.window, 1);
+        assert_eq!(c.cached, 1);
+        assert_eq!(c.token_slots, 64 + 64 + 16);
+    }
+}

@@ -1,0 +1,121 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`state`] — per-request masked-diffusion sequence state + adaptive EOS.
+//! * [`window`] — dual-window layout (decoded ∥ external window; far-field
+//!   pruning) and normal-step compute sets.
+//! * [`policies`] — confidence-based decode selection and step schedules.
+//! * [`exec`] — the step-execution interface ([`exec::StepExec`]) strategies
+//!   are written against (engine, engine-cell, mock).
+
+pub mod exec;
+pub mod policies;
+pub mod state;
+pub mod window;
+
+use std::time::Duration;
+
+pub use exec::{MockExec, StepExec};
+pub use state::SeqState;
+pub use window::{ComputeSet, WindowLayout};
+
+/// One generation request (the coordinator-level unit of work).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub gen_len: usize,
+    /// Artifact sequence set (must be one of the model's `seqs`).
+    pub s: usize,
+    /// Tokens decoded per diffusion step (LLaDA-style k-per-step schedule).
+    pub tokens_per_step: usize,
+    /// Hard cap on diffusion steps (safety net; 0 = derive from gen_len).
+    pub max_steps: usize,
+    /// Adaptive termination: stop at the first decoded `<eos>`.
+    pub adaptive: bool,
+}
+
+impl GenRequest {
+    pub fn new(prompt: Vec<i32>, gen_len: usize, s: usize) -> GenRequest {
+        GenRequest { prompt, gen_len, s, tokens_per_step: 2, max_steps: 0,
+                     adaptive: false }
+    }
+
+    pub fn step_cap(&self) -> usize {
+        if self.max_steps > 0 {
+            self.max_steps
+        } else {
+            // enough steps to decode everything one token at a time, plus slack
+            self.gen_len * 2 + 16
+        }
+    }
+}
+
+/// Step-kind accounting (cost model + §Perf attribution).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StepCounts {
+    pub full: usize,
+    pub window: usize,
+    pub cached: usize,
+    /// Sum of computed token-slots across steps (c per full/window, r per
+    /// cached step) — proportional to FLOPs spent.
+    pub token_slots: usize,
+}
+
+impl StepCounts {
+    pub fn steps(&self) -> usize {
+        self.full + self.window + self.cached
+    }
+}
+
+/// Outcome of one generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// Final sequence state (ids, decode times, eos position).
+    pub state: SeqState,
+    pub steps: usize,
+    pub counts: StepCounts,
+    pub wall: Duration,
+}
+
+impl GenResult {
+    /// Emitted tokens (generated region, truncated at EOS, eos stripped).
+    pub fn generated(&self) -> Vec<i32> {
+        self.state.generated()
+    }
+
+    pub fn tokens_generated(&self) -> usize {
+        self.generated().len()
+    }
+
+    /// Decode throughput in generated tokens per second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated() as f64 / secs
+    }
+
+    pub fn latency_secs(&self) -> f64 {
+        self.wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_step_cap() {
+        let r = GenRequest::new(vec![1], 64, 256);
+        assert_eq!(r.step_cap(), 144);
+        let mut r2 = r.clone();
+        r2.max_steps = 10;
+        assert_eq!(r2.step_cap(), 10);
+    }
+
+    #[test]
+    fn step_counts_total() {
+        let c = StepCounts { full: 1, window: 2, cached: 3, token_slots: 99 };
+        assert_eq!(c.steps(), 6);
+    }
+}

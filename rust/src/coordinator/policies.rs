@@ -1,0 +1,170 @@
+//! Decode policies: which candidate tokens are committed at each diffusion
+//! step. All strategies use confidence-based selection (LLaDA-style greedy
+//! low-uncertainty decoding): among the candidate positions, decode the
+//! `k` with the highest top-1 softmax probability.
+
+use crate::util::stats::softmax;
+
+/// One candidate position with its logit row.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub pos: usize,
+    /// (token, confidence) of the argmax under softmax.
+    pub token: i32,
+    pub confidence: f64,
+}
+
+/// Score a logit row: (argmax token, softmax confidence).
+pub fn score_row(logits: &[f32]) -> (i32, f64) {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    let probs = softmax(logits);
+    (best as i32, probs[best])
+}
+
+/// Build candidates from per-position logit rows.
+/// `rows` yields (absolute position, logit row).
+pub fn candidates<'a>(rows: impl Iterator<Item = (usize, &'a [f32])>) -> Vec<Candidate> {
+    rows.map(|(pos, row)| {
+        let (token, confidence) = score_row(row);
+        Candidate { pos, token, confidence }
+    })
+    .collect()
+}
+
+/// Pick the `k` most confident candidates (stable: ties broken by position,
+/// keeping runs deterministic across platforms).
+pub fn select_top_k(mut cands: Vec<Candidate>, k: usize) -> Vec<Candidate> {
+    cands.sort_by(|a, b| {
+        b.confidence
+            .partial_cmp(&a.confidence)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.pos.cmp(&b.pos))
+    });
+    cands.truncate(k);
+    cands
+}
+
+/// Tokens-per-step schedule: decode `total` tokens over `steps` diffusion
+/// steps as evenly as possible (LLaDA semantics: gen_len / T per step, the
+/// remainder spread over the earliest steps).
+#[derive(Debug, Clone)]
+pub struct DecodeSchedule {
+    per_step: Vec<usize>,
+}
+
+impl DecodeSchedule {
+    pub fn even(total: usize, steps: usize) -> DecodeSchedule {
+        let steps = steps.max(1);
+        let base = total / steps;
+        let extra = total % steps;
+        let per_step = (0..steps)
+            .map(|i| base + usize::from(i < extra))
+            .collect();
+        DecodeSchedule { per_step }
+    }
+
+    /// Fixed k per step (run until done).
+    pub fn fixed(k: usize) -> DecodeSchedule {
+        DecodeSchedule { per_step: vec![k.max(1)] }
+    }
+
+    /// Budget for diffusion step `t` (0-based). Fixed schedules repeat.
+    pub fn at(&self, t: usize) -> usize {
+        if self.per_step.len() == 1 {
+            self.per_step[0]
+        } else {
+            self.per_step.get(t).copied().unwrap_or(0).max(
+                // never stall: if the schedule is exhausted but tokens remain,
+                // keep decoding one per step
+                usize::from(t >= self.per_step.len()),
+            )
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.per_step.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn score_row_argmax() {
+        let (tok, conf) = score_row(&[0.0, 5.0, 1.0]);
+        assert_eq!(tok, 1);
+        assert!(conf > 0.9);
+    }
+
+    #[test]
+    fn select_top_k_orders_by_confidence() {
+        let cands = vec![
+            Candidate { pos: 5, token: 1, confidence: 0.2 },
+            Candidate { pos: 3, token: 2, confidence: 0.9 },
+            Candidate { pos: 9, token: 3, confidence: 0.5 },
+        ];
+        let picked = select_top_k(cands, 2);
+        assert_eq!(picked[0].pos, 3);
+        assert_eq!(picked[1].pos, 9);
+    }
+
+    #[test]
+    fn select_ties_break_by_position() {
+        let cands = vec![
+            Candidate { pos: 9, token: 1, confidence: 0.5 },
+            Candidate { pos: 3, token: 2, confidence: 0.5 },
+        ];
+        let picked = select_top_k(cands, 1);
+        assert_eq!(picked[0].pos, 3);
+    }
+
+    #[test]
+    fn even_schedule_sums() {
+        let s = DecodeSchedule::even(100, 64);
+        let total: usize = (0..64).map(|t| s.at(t)).sum();
+        assert_eq!(total, 100);
+        assert!((0..64).all(|t| s.at(t) >= 1));
+    }
+
+    #[test]
+    fn fixed_schedule_repeats() {
+        let s = DecodeSchedule::fixed(2);
+        assert_eq!(s.at(0), 2);
+        assert_eq!(s.at(1000), 2);
+    }
+
+    #[test]
+    fn exhausted_even_schedule_does_not_stall() {
+        let s = DecodeSchedule::even(4, 2);
+        assert_eq!(s.at(5), 1);
+    }
+
+    #[test]
+    fn prop_even_schedule_invariants() {
+        prop::check(
+            "schedule-even",
+            |rng| (1 + rng.usize_below(500), 1 + rng.usize_below(300)),
+            |&(total, steps)| {
+                let s = DecodeSchedule::even(total, steps);
+                let sum: usize = (0..steps).map(|t| s.at(t)).sum();
+                if sum != total {
+                    return Err(format!("sum {sum} != total {total}"));
+                }
+                let max = (0..steps).map(|t| s.at(t)).max().unwrap();
+                let min = (0..steps).map(|t| s.at(t)).min().unwrap();
+                if max - min > 1 {
+                    return Err(format!("uneven: {min}..{max}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,241 @@
+//! Per-request sequence state for masked-diffusion decoding.
+//!
+//! Tracks which positions are decoded, when they were decoded (for phase
+//! bookkeeping and the Fig-4 stability probe), and the adaptive-termination
+//! EOS frontier (paper §4.2 "Adaptive termination").
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    /// Artifact sequence-set this request runs on (full_step_s{S} etc.).
+    pub s: usize,
+    pub prompt_len: usize,
+    /// prompt_len + requested generation length (<= s).
+    pub total_len: usize,
+    /// Current token at every position (`mask_id` when undecoded).
+    pub ids: Vec<i32>,
+    /// Diffusion step at which each position was decoded (None = undecoded).
+    pub decoded_at: Vec<Option<usize>>,
+    /// First decoded EOS position, if any.
+    pub eos_pos: Option<usize>,
+    pub mask_id: i32,
+    pub eos_id: i32,
+    pub pad_id: i32,
+}
+
+impl SeqState {
+    pub fn new(prompt: &[i32], gen_len: usize, s: usize, mask_id: i32,
+               eos_id: i32, pad_id: i32) -> Result<SeqState> {
+        let total_len = prompt.len() + gen_len;
+        if total_len > s {
+            return Err(anyhow!(
+                "prompt {} + gen {gen_len} exceeds artifact seq len {s}",
+                prompt.len()
+            ));
+        }
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        let mut ids = vec![pad_id; s];
+        let mut decoded_at = vec![None; s];
+        for (i, &t) in prompt.iter().enumerate() {
+            ids[i] = t;
+            decoded_at[i] = Some(0); // prompt counts as pre-decoded
+        }
+        for slot in ids.iter_mut().take(total_len).skip(prompt.len()) {
+            *slot = mask_id;
+        }
+        Ok(SeqState {
+            s,
+            prompt_len: prompt.len(),
+            total_len,
+            ids,
+            decoded_at,
+            eos_pos: None,
+            mask_id,
+            eos_id,
+            pad_id,
+        })
+    }
+
+    pub fn is_decoded(&self, pos: usize) -> bool {
+        self.decoded_at[pos].is_some()
+    }
+
+    /// End of the *live* region: everything at or beyond this is dead
+    /// (either past total_len, or pruned behind a decoded EOS).
+    pub fn live_end(&self) -> usize {
+        match self.eos_pos {
+            Some(e) => (e + 1).min(self.total_len),
+            None => self.total_len,
+        }
+    }
+
+    /// First undecoded live position (the decoding frontier).
+    pub fn frontier(&self) -> Option<usize> {
+        (self.prompt_len..self.live_end()).find(|&p| !self.is_decoded(p))
+    }
+
+    /// All undecoded live positions, in order.
+    pub fn undecoded(&self) -> Vec<usize> {
+        (self.prompt_len..self.live_end())
+            .filter(|&p| !self.is_decoded(p))
+            .collect()
+    }
+
+    /// First `n` undecoded live positions (the internal-window candidates).
+    pub fn undecoded_prefix(&self, n: usize) -> Vec<usize> {
+        (self.prompt_len..self.live_end())
+            .filter(|&p| !self.is_decoded(p))
+            .take(n)
+            .collect()
+    }
+
+    /// All decoded live positions (prompt included), in order.
+    pub fn decoded_positions(&self) -> Vec<usize> {
+        (0..self.live_end()).filter(|&p| self.is_decoded(p)).collect()
+    }
+
+    pub fn num_undecoded(&self) -> usize {
+        (self.prompt_len..self.live_end())
+            .filter(|&p| !self.is_decoded(p))
+            .count()
+    }
+
+    pub fn done(&self) -> bool {
+        self.num_undecoded() == 0
+    }
+
+    /// Commit a decode. `adaptive` controls whether a decoded EOS prunes the
+    /// tail (paper: the internal window stops advancing at `<eos>`).
+    pub fn decode(&mut self, pos: usize, token: i32, step: usize,
+                  adaptive: bool) -> Result<()> {
+        if pos < self.prompt_len || pos >= self.total_len {
+            return Err(anyhow!("decode at {pos} outside generable region"));
+        }
+        if self.is_decoded(pos) {
+            return Err(anyhow!("double decode at {pos}"));
+        }
+        self.ids[pos] = token;
+        self.decoded_at[pos] = Some(step);
+        if adaptive && token == self.eos_id {
+            self.eos_pos = Some(match self.eos_pos {
+                Some(e) => e.min(pos),
+                None => pos,
+            });
+        }
+        Ok(())
+    }
+
+    /// Generated tokens (post-prompt, truncated at EOS if present).
+    pub fn generated(&self) -> Vec<i32> {
+        let end = self.live_end();
+        let mut out: Vec<i32> = self.ids[self.prompt_len..end].to_vec();
+        // strip a trailing eos for grading
+        if out.last() == Some(&self.eos_id) {
+            out.pop();
+        }
+        out
+    }
+
+    /// Validity mask over `[0, s)` for full-sequence steps: live region only.
+    pub fn full_valid(&self) -> Vec<f32> {
+        let mut v = vec![0f32; self.s];
+        for x in v.iter_mut().take(self.live_end()) {
+            *x = 1.0;
+        }
+        v
+    }
+
+    /// Positions decoded at or after `since_step` (excluding prompt).
+    pub fn decoded_since(&self, since_step: usize) -> Vec<usize> {
+        (self.prompt_len..self.live_end())
+            .filter(|&p| matches!(self.decoded_at[p], Some(t) if t >= since_step))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st() -> SeqState {
+        SeqState::new(&[10, 11, 12], 8, 32, 1, 2, 0).unwrap()
+    }
+
+    #[test]
+    fn init_layout() {
+        let s = st();
+        assert_eq!(s.prompt_len, 3);
+        assert_eq!(s.total_len, 11);
+        assert_eq!(s.ids[0..3], [10, 11, 12]);
+        assert!(s.ids[3..11].iter().all(|&x| x == 1));
+        assert!(s.ids[11..].iter().all(|&x| x == 0));
+        assert_eq!(s.frontier(), Some(3));
+        assert_eq!(s.num_undecoded(), 8);
+    }
+
+    #[test]
+    fn decode_and_frontier() {
+        let mut s = st();
+        s.decode(4, 20, 1, false).unwrap();
+        assert_eq!(s.frontier(), Some(3));
+        s.decode(3, 21, 2, false).unwrap();
+        assert_eq!(s.frontier(), Some(5));
+        assert_eq!(s.decoded_since(2), vec![3]);
+    }
+
+    #[test]
+    fn double_decode_rejected() {
+        let mut s = st();
+        s.decode(3, 20, 1, false).unwrap();
+        assert!(s.decode(3, 21, 2, false).is_err());
+    }
+
+    #[test]
+    fn decode_outside_region_rejected() {
+        let mut s = st();
+        assert!(s.decode(2, 20, 1, false).is_err()); // prompt
+        assert!(s.decode(11, 20, 1, false).is_err()); // beyond total
+    }
+
+    #[test]
+    fn adaptive_eos_prunes_tail() {
+        let mut s = st();
+        s.decode(5, 2, 1, true).unwrap(); // EOS at 5
+        assert_eq!(s.eos_pos, Some(5));
+        assert_eq!(s.live_end(), 6);
+        // undecoded beyond eos are dead; only 3,4 remain
+        assert_eq!(s.undecoded(), vec![3, 4]);
+        s.decode(3, 20, 2, true).unwrap();
+        s.decode(4, 21, 2, true).unwrap();
+        assert!(s.done());
+        assert_eq!(s.generated(), vec![20, 21]); // trailing eos stripped
+    }
+
+    #[test]
+    fn non_adaptive_eos_ignored() {
+        let mut s = st();
+        s.decode(5, 2, 1, false).unwrap();
+        assert_eq!(s.eos_pos, None);
+        assert_eq!(s.num_undecoded(), 7);
+    }
+
+    #[test]
+    fn full_valid_live_only() {
+        let mut s = st();
+        let v = s.full_valid();
+        assert_eq!(v.iter().filter(|&&x| x > 0.0).count(), 11);
+        s.decode(5, 2, 1, true).unwrap();
+        let v = s.full_valid();
+        assert_eq!(v.iter().filter(|&&x| x > 0.0).count(), 6);
+    }
+
+    #[test]
+    fn undecoded_prefix_takes_front() {
+        let mut s = st();
+        s.decode(3, 9, 1, false).unwrap();
+        assert_eq!(s.undecoded_prefix(3), vec![4, 5, 6]);
+    }
+}

@@ -1,0 +1,316 @@
+//! Window layout construction — the paper's dual-window token organization.
+//!
+//! At each phase boundary the coordinator rebuilds the *window layout*: the
+//! contiguous re-indexing `slot -> absolute position` containing every
+//! decoded token (`D^{<p}`, never pruned) plus the first `w_ex` undecoded
+//! positions (the external window). Undecoded positions beyond that are
+//! **far-field** and simply absent — that is the token pruning.
+//!
+//! Slot order is ascending absolute position; padding slots (up to the `c`
+//! bucket) carry `cvalid = 0` and are inert in attention.
+
+use anyhow::{anyhow, Result};
+
+use super::state::SeqState;
+use crate::runtime::buckets;
+
+#[derive(Debug, Clone)]
+pub struct WindowLayout {
+    /// slot -> absolute position (sorted ascending), length = live slots.
+    pub abs: Vec<usize>,
+    /// Bucketed window capacity (>= abs.len()).
+    pub c: usize,
+    /// Validity per slot, length `c`.
+    pub cvalid: Vec<f32>,
+    /// absolute position -> slot (usize::MAX if not in window), length s.
+    slot_of: Vec<usize>,
+}
+
+impl WindowLayout {
+    /// Build the phase layout: all decoded positions ∪ first `w_ex` undecoded.
+    pub fn build(state: &SeqState, w_ex: usize, c_ladder: &[usize]) -> Result<WindowLayout> {
+        let mut abs = state.decoded_positions();
+        abs.extend(state.undecoded_prefix(w_ex));
+        abs.sort_unstable();
+        Self::from_positions(state, abs, c_ladder)
+    }
+
+    /// Build a layout over an explicit position set (block baselines, probes).
+    pub fn from_positions(state: &SeqState, abs: Vec<usize>,
+                          c_ladder: &[usize]) -> Result<WindowLayout> {
+        if abs.is_empty() {
+            return Err(anyhow!("empty window layout"));
+        }
+        debug_assert!(abs.windows(2).all(|w| w[0] < w[1]), "positions not sorted/unique");
+        let c = buckets::pick(c_ladder, abs.len())?;
+        let mut cvalid = vec![0f32; c];
+        for slot in 0..abs.len() {
+            cvalid[slot] = 1.0;
+        }
+        let mut slot_of = vec![usize::MAX; state.s];
+        for (slot, &p) in abs.iter().enumerate() {
+            slot_of[p] = slot;
+        }
+        Ok(WindowLayout { abs, c, cvalid, slot_of })
+    }
+
+    pub fn len(&self) -> usize {
+        self.abs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.abs.is_empty()
+    }
+
+    pub fn slot(&self, abs_pos: usize) -> Option<usize> {
+        match self.slot_of.get(abs_pos) {
+            Some(&s) if s != usize::MAX => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, abs_pos: usize) -> bool {
+        self.slot(abs_pos).is_some()
+    }
+
+    /// Token ids per slot, padded to `c` with `pad_id`.
+    pub fn ids_padded(&self, state: &SeqState) -> Vec<i32> {
+        let mut out = vec![state.pad_id; self.c];
+        for (slot, &p) in self.abs.iter().enumerate() {
+            out[slot] = state.ids[p];
+        }
+        out
+    }
+
+    /// Absolute positions per slot (RoPE input), padded with 0.
+    pub fn pos_padded(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.c];
+        for (slot, &p) in self.abs.iter().enumerate() {
+            out[slot] = p as i32;
+        }
+        out
+    }
+
+    /// Number of *undecoded* slots still inside the window.
+    pub fn undecoded_in_window(&self, state: &SeqState) -> usize {
+        self.abs.iter().filter(|&&p| !state.is_decoded(p)).count()
+    }
+
+    /// Partition check used by the property tests: every live position is
+    /// exactly one of {in-window, far-field}; decoded ⊆ window.
+    pub fn far_field<'a>(&'a self, state: &'a SeqState) -> impl Iterator<Item = usize> + 'a {
+        (0..state.live_end()).filter(move |&p| !self.contains(p))
+    }
+}
+
+/// The compute set of a normal step: active ∪ phase-decoded slots, padded to
+/// the `r` bucket. Produces the `fwd_cached` step inputs.
+#[derive(Debug, Clone)]
+pub struct ComputeSet {
+    /// Absolute positions of compute tokens (actives first, then phase-decoded).
+    pub positions: Vec<usize>,
+    /// How many of `positions` are active (logit rows used for decoding).
+    pub n_active: usize,
+    pub r: usize,
+    pub ids_r: Vec<i32>,
+    pub pos_r: Vec<i32>,
+    pub slot_idx: Vec<i32>,
+    pub rvalid: Vec<f32>,
+}
+
+impl ComputeSet {
+    pub fn build(state: &SeqState, layout: &WindowLayout, active: &[usize],
+                 phase_decoded: &[usize], r_ladder: &[usize]) -> Result<ComputeSet> {
+        let mut positions: Vec<usize> = active.to_vec();
+        positions.extend(phase_decoded.iter().copied().filter(|p| !active.contains(p)));
+        if positions.is_empty() {
+            return Err(anyhow!("empty compute set"));
+        }
+        let need = positions.len();
+        let r = buckets::pick(r_ladder, need)?;
+        if r > layout.c {
+            return Err(anyhow!("compute bucket r={r} exceeds window c={}", layout.c));
+        }
+        let mut ids_r = vec![state.pad_id; r];
+        let mut pos_r = vec![0i32; r];
+        // Padded slots scatter out-of-bounds (slot c) and are dropped in-graph.
+        let mut slot_idx = vec![layout.c as i32; r];
+        let mut rvalid = vec![0f32; r];
+        for (i, &p) in positions.iter().enumerate() {
+            let slot = layout
+                .slot(p)
+                .ok_or_else(|| anyhow!("compute position {p} not in window"))?;
+            ids_r[i] = state.ids[p];
+            pos_r[i] = p as i32;
+            slot_idx[i] = slot as i32;
+            rvalid[i] = 1.0;
+        }
+        Ok(ComputeSet {
+            positions,
+            n_active: active.len(),
+            r,
+            ids_r,
+            pos_r,
+            slot_idx,
+            rvalid,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    const CS: &[usize] = &[64, 128, 192, 256];
+    const RS: &[usize] = &[16, 32, 48, 64, 128, 256];
+
+    fn state_with(prompt_len: usize, gen: usize, decodes: &[usize]) -> SeqState {
+        let prompt: Vec<i32> = (0..prompt_len as i32).map(|x| x + 10).collect();
+        let mut st = SeqState::new(&prompt, gen, 256, 1, 2, 0).unwrap();
+        for (i, &p) in decodes.iter().enumerate() {
+            st.decode(p, 30 + i as i32, 1, false).unwrap();
+        }
+        st
+    }
+
+    #[test]
+    fn layout_contains_decoded_and_window_prefix() {
+        let st = state_with(8, 100, &[8, 9, 40]);
+        let l = WindowLayout::build(&st, 16, CS).unwrap();
+        // decoded (prompt 0..8 + {8,9,40}) + first 16 undecoded (10..=25)
+        assert!(l.contains(0) && l.contains(40));
+        assert_eq!(l.len(), 8 + 3 + 16);
+        assert!(l.contains(10) && l.contains(25));
+        assert!(!l.contains(26)); // 17th undecoded -> far field
+        assert_eq!(l.c, 64);
+    }
+
+    #[test]
+    fn layout_slot_roundtrip() {
+        let st = state_with(4, 60, &[]);
+        let l = WindowLayout::build(&st, 8, CS).unwrap();
+        for (slot, &p) in l.abs.iter().enumerate() {
+            assert_eq!(l.slot(p), Some(slot));
+        }
+        assert_eq!(l.slot(200), None);
+    }
+
+    #[test]
+    fn ids_and_pos_padded() {
+        let st = state_with(4, 60, &[]);
+        let l = WindowLayout::build(&st, 8, CS).unwrap();
+        let ids = l.ids_padded(&st);
+        let pos = l.pos_padded();
+        assert_eq!(ids.len(), l.c);
+        assert_eq!(ids[0], 10);
+        assert_eq!(ids[4], 1); // first undecoded = mask
+        assert_eq!(pos[11], 11);
+        // padding
+        assert_eq!(ids[l.len()], 0);
+        assert_eq!(l.cvalid[l.len()], 0.0);
+        assert_eq!(l.cvalid[l.len() - 1], 1.0);
+    }
+
+    #[test]
+    fn compute_set_shapes() {
+        let st = state_with(8, 100, &[8, 9]);
+        let l = WindowLayout::build(&st, 32, CS).unwrap();
+        let active = st.undecoded_prefix(4);
+        let cs = ComputeSet::build(&st, &l, &active, &[8, 9], RS).unwrap();
+        assert_eq!(cs.positions.len(), 6);
+        assert_eq!(cs.n_active, 4);
+        assert_eq!(cs.r, 16);
+        assert_eq!(cs.rvalid.iter().filter(|&&x| x > 0.).count(), 6);
+        assert_eq!(cs.slot_idx[6], l.c as i32); // padded -> drop slot
+        assert_eq!(cs.ids_r[0], 1); // active = mask token
+    }
+
+    #[test]
+    fn compute_set_rejects_far_field() {
+        let st = state_with(8, 200, &[]);
+        let l = WindowLayout::build(&st, 16, CS).unwrap();
+        let err = ComputeSet::build(&st, &l, &[150], &[], RS);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn prop_partition_disjoint_complete() {
+        // active ∪ buffer ∪ far-field ∪ decoded partitions the live region
+        prop::check(
+            "window-partition",
+            |rng: &mut Rng| {
+                let gen = 32 + rng.usize_below(150);
+                let prompt = 4 + rng.usize_below(12);
+                let n_dec = rng.usize_below(gen / 2);
+                let mut st = state_with(prompt, gen, &[]);
+                let und = st.undecoded();
+                for i in 0..n_dec {
+                    // decode a prefix-biased random position (like real decoding)
+                    let j = (rng.f64() * rng.f64() * und.len() as f64) as usize;
+                    let p = und[j.min(und.len() - 1)];
+                    if !st.is_decoded(p) {
+                        st.decode(p, 50, 1 + i, false).unwrap();
+                    }
+                }
+                let w_ex = 8 + rng.usize_below(64);
+                let a = 1 + rng.usize_below(w_ex);
+                (st, w_ex, a)
+            },
+            |(st, w_ex, a)| {
+                let l = WindowLayout::build(st, *w_ex, CS).map_err(|e| e.to_string())?;
+                let active = st.undecoded_prefix(*a);
+                let far: Vec<usize> = l.far_field(st).collect();
+                for p in 0..st.live_end() {
+                    let in_window = l.contains(p);
+                    let in_far = far.contains(&p);
+                    if in_window == in_far {
+                        return Err(format!("pos {p}: window={in_window} far={in_far}"));
+                    }
+                    if st.is_decoded(p) && !in_window {
+                        return Err(format!("decoded pos {p} pruned"));
+                    }
+                    if active.contains(&p) && !in_window {
+                        return Err(format!("active pos {p} pruned"));
+                    }
+                }
+                // far field is all-undecoded and strictly beyond the window's
+                // last undecoded position
+                let last_w_und = l.abs.iter().rev().find(|&&p| !st.is_decoded(p));
+                for &p in &far {
+                    if st.is_decoded(p) {
+                        return Err(format!("decoded {p} in far field"));
+                    }
+                    if let Some(&lw) = last_w_und {
+                        if p < lw {
+                            return Err(format!("far-field {p} before window undecoded {lw}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_window_size_bounded() {
+        prop::check(
+            "window-size",
+            |rng: &mut Rng| {
+                let gen = 16 + rng.usize_below(100);
+                (state_with(8, gen, &[]), 4 + rng.usize_below(60))
+            },
+            |(st, w_ex)| {
+                let l = WindowLayout::build(st, *w_ex, CS).map_err(|e| e.to_string())?;
+                let und = l.undecoded_in_window(st);
+                if und > *w_ex {
+                    return Err(format!("{und} undecoded in window > w_ex {w_ex}"));
+                }
+                if l.len() > l.c {
+                    return Err("layout exceeds bucket".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

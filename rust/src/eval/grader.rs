@@ -1,0 +1,139 @@
+//! Graders for the synthetic task suites.
+//!
+//! * math-style tasks (`synth-gsm`, `synth-math`): extract the digits after
+//!   the `#### ` marker and exact-match against the reference answer;
+//! * code-style tasks (`synth-he`, `synth-mbpp`): canonical-form exact match
+//!   of the emitted function (whitespace-normalized token sequence).
+//!
+//! Besides task accuracy we grade **agreement with the full-sequence
+//! reference decode** — the direct measure of "quality preserved" that the
+//! paper's accuracy columns proxy (DESIGN.md §2).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Grade {
+    pub correct: bool,
+    /// Token-level agreement with a reference decode in [0,1] (1 = identical).
+    pub agreement: f64,
+}
+
+/// Extract the answer span after the last `####` marker.
+///
+/// The word-level tokenizer renders `####` as four `#` tokens, so decoded
+/// text reads `... # # # # 7`. We therefore scan the *token* sequence for
+/// the last run of four `#` and take the following digit tokens.
+pub fn extract_answer(text: &str) -> Option<String> {
+    let toks: Vec<&str> = text.split_whitespace().collect();
+    let mut marker_end = None;
+    let mut run = 0usize;
+    for (i, t) in toks.iter().enumerate() {
+        if *t == "#" {
+            run += 1;
+            if run >= 4 {
+                marker_end = Some(i + 1);
+            }
+        } else {
+            run = 0;
+        }
+    }
+    // also accept a literal "####" token (python-side reference strings)
+    for (i, t) in toks.iter().enumerate() {
+        if t.contains("####") {
+            marker_end = Some(marker_end.map_or(i + 1, |m: usize| m.max(i + 1)));
+        }
+    }
+    let end = marker_end?;
+    let digits: Vec<&str> = toks[end..]
+        .iter()
+        .take_while(|t| t.len() == 1 && t.chars().all(|c| c.is_ascii_digit()))
+        .copied()
+        .collect();
+    if digits.is_empty() {
+        None
+    } else {
+        Some(digits.join(" "))
+    }
+}
+
+/// Whitespace-normalize a token string.
+pub fn normalize(s: &str) -> String {
+    s.split_whitespace().collect::<Vec<_>>().join(" ")
+}
+
+/// Grade a generated text against a task instance.
+pub fn grade(task: &str, output: &str, answer: &str) -> bool {
+    match task {
+        "synth-gsm" | "synth-math" => {
+            extract_answer(output).as_deref() == Some(normalize(answer).as_str())
+        }
+        "synth-he" | "synth-mbpp" => {
+            // canonical form: the emitted `def f ...` must match exactly
+            match output.find("def ") {
+                Some(i) => normalize(&output[i..]).starts_with(&normalize(answer)),
+                None => false,
+            }
+        }
+        _ => false,
+    }
+}
+
+/// Token-level agreement of two id sequences (prefix-aligned Hamming).
+pub fn agreement(a: &[i32], b: &[i32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let n = a.len().max(b.len());
+    let matches = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    matches as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_simple() {
+        assert_eq!(extract_answer("blah #### 4 2").as_deref(), Some("4 2"));
+        assert_eq!(extract_answer("no marker"), None);
+        assert_eq!(extract_answer("x #### "), None);
+    }
+
+    #[test]
+    fn extract_uses_last_marker() {
+        assert_eq!(extract_answer("#### 1 then #### 7").as_deref(), Some("7"));
+    }
+
+    #[test]
+    fn extract_stops_at_non_digit() {
+        assert_eq!(extract_answer("#### 4 2 q : next").as_deref(), Some("4 2"));
+    }
+
+    #[test]
+    fn grade_math_tasks() {
+        assert!(grade("synth-gsm", "tom has 3 + 4 = 7 . #### 7", "7"));
+        assert!(!grade("synth-gsm", "#### 8", "7"));
+        assert!(grade("synth-math", "the value is 1 4 . #### 1 4", "1 4"));
+    }
+
+    #[test]
+    fn grade_code_tasks() {
+        let ans = "def f ( x ) : return x + 3";
+        assert!(grade("synth-he", "def f ( x ) : return x + 3", ans));
+        // trailing continuation after the function is fine
+        assert!(grade("synth-he", "def f ( x ) : return x + 3 q : next", ans));
+        assert!(!grade("synth-he", "def f ( x ) : return x + 4", ans));
+        assert!(!grade("synth-he", "no function here", ans));
+    }
+
+    #[test]
+    fn grade_unknown_task_false() {
+        assert!(!grade("bogus", "#### 7", "7"));
+    }
+
+    #[test]
+    fn agreement_basics() {
+        assert_eq!(agreement(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(agreement(&[1, 2, 3], &[1, 9, 3]), 2.0 / 3.0);
+        assert_eq!(agreement(&[1, 2], &[1, 2, 3, 4]), 0.5);
+        assert_eq!(agreement(&[], &[]), 1.0);
+    }
+}

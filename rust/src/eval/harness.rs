@@ -1,0 +1,215 @@
+//! Eval harness: strategy × task-suite → (accuracy, agreement, tok/s,
+//! latency) — the cell contents of Tables 1/2/3/6.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::grader::{agreement, grade};
+use super::tasks::TaskInstance;
+use crate::coordinator::{GenRequest, StepCounts, StepExec};
+use crate::strategies::Strategy;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    /// Instances evaluated per suite (subsampled deterministically).
+    pub n: usize,
+    /// Generation length (max tokens after the prompt).
+    pub gen_len: usize,
+    /// Artifact sequence set.
+    pub s: usize,
+    pub tokens_per_step: usize,
+    pub adaptive: bool,
+    pub seed: u64,
+    /// Optional reference decodes (full baseline) for agreement scoring.
+    pub reference: Option<Vec<Vec<i32>>>,
+    /// Run the first instance once untimed so lazy executable compilation
+    /// never pollutes throughput numbers.
+    pub warmup: bool,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { n: 8, gen_len: 96, s: 256, tokens_per_step: 1,
+                      adaptive: false, seed: 7, reference: None, warmup: true }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub strategy: String,
+    pub task: String,
+    pub n: usize,
+    pub accuracy: f64,
+    /// Mean token agreement vs the reference decode (1.0 when no reference).
+    pub agreement: f64,
+    pub total_wall: Duration,
+    pub total_tokens: usize,
+    pub counts: StepCounts,
+    /// Per-instance generated token ids (reusable as a later reference).
+    pub outputs: Vec<Vec<i32>>,
+    /// Per-instance latencies (secs).
+    pub latencies: Vec<f64>,
+}
+
+impl EvalReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.total_wall.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / secs
+        }
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+        }
+    }
+}
+
+/// Deterministically subsample `n` instances.
+pub fn subsample(instances: &[TaskInstance], n: usize, seed: u64) -> Vec<TaskInstance> {
+    if instances.len() <= n {
+        return instances.to_vec();
+    }
+    let mut rng = Rng::new(seed);
+    rng.sample_indices(instances.len(), n)
+        .into_iter()
+        .map(|i| instances[i].clone())
+        .collect()
+}
+
+/// Run one strategy over one suite.
+pub fn run_eval(exec: &dyn StepExec, strategy: &dyn Strategy, tok: &Tokenizer,
+                instances: &[TaskInstance], opts: &EvalOptions) -> Result<EvalReport> {
+    let picked = subsample(instances, opts.n, opts.seed);
+    let mut correct = 0usize;
+    let mut agreements = Vec::new();
+    let mut total_wall = Duration::ZERO;
+    let mut total_tokens = 0usize;
+    let mut counts = StepCounts::default();
+    let mut outputs = Vec::with_capacity(picked.len());
+    let mut latencies = Vec::with_capacity(picked.len());
+    if opts.warmup {
+        if let Some(inst) = picked.first() {
+            let mut req = GenRequest::new(tok.encode(&inst.prompt), opts.gen_len, opts.s);
+            req.tokens_per_step = opts.tokens_per_step;
+            req.adaptive = opts.adaptive;
+            let _ = strategy.generate(exec, &req)?;
+        }
+    }
+    for (i, inst) in picked.iter().enumerate() {
+        let prompt = tok.encode(&inst.prompt);
+        let mut req = GenRequest::new(prompt, opts.gen_len, opts.s);
+        req.tokens_per_step = opts.tokens_per_step;
+        req.adaptive = opts.adaptive;
+        let r = strategy.generate(exec, &req)?;
+        let gen_ids = r.generated();
+        let text = tok.decode(&gen_ids);
+        if grade(&inst.task, &text, &inst.answer) {
+            correct += 1;
+        }
+        if let Some(refs) = &opts.reference {
+            if let Some(r_ids) = refs.get(i) {
+                agreements.push(agreement(&gen_ids, r_ids));
+            }
+        }
+        total_wall += r.wall;
+        total_tokens += gen_ids.len();
+        counts.full += r.counts.full;
+        counts.window += r.counts.window;
+        counts.cached += r.counts.cached;
+        counts.token_slots += r.counts.token_slots;
+        latencies.push(r.wall.as_secs_f64());
+        outputs.push(gen_ids);
+    }
+    let task = picked.first().map(|i| i.task.clone()).unwrap_or_default();
+    Ok(EvalReport {
+        strategy: strategy.name(),
+        task,
+        n: picked.len(),
+        accuracy: if picked.is_empty() { 0.0 } else { correct as f64 / picked.len() as f64 },
+        agreement: if agreements.is_empty() {
+            1.0
+        } else {
+            agreements.iter().sum::<f64>() / agreements.len() as f64
+        },
+        total_wall,
+        total_tokens,
+        counts,
+        outputs,
+        latencies,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+    use crate::strategies::FullBaseline;
+
+    fn toy_tok() -> Tokenizer {
+        let mut vocab: Vec<String> =
+            ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"].iter().map(|s| s.to_string()).collect();
+        for i in 0..20 {
+            vocab.push(format!("w{i}"));
+        }
+        Tokenizer::from_vocab(vocab)
+    }
+
+    fn toy_instances(n: usize) -> Vec<TaskInstance> {
+        (0..n)
+            .map(|i| TaskInstance {
+                id: format!("t{i}"),
+                task: "synth-gsm".into(),
+                format: "base".into(),
+                prompt: "w1 w2 w3 w4".into(),
+                answer: "7".into(),
+                reference: "#### 7".into(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn subsample_deterministic() {
+        let inst = toy_instances(20);
+        let a = subsample(&inst, 5, 3);
+        let b = subsample(&inst, 5, 3);
+        assert_eq!(
+            a.iter().map(|x| x.id.clone()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.id.clone()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn harness_runs_on_mock() {
+        let m = MockExec::new(256);
+        let tok = toy_tok();
+        let opts = EvalOptions { n: 3, gen_len: 24, ..Default::default() };
+        let rep = run_eval(&m, &FullBaseline, &tok, &toy_instances(5), &opts).unwrap();
+        assert_eq!(rep.n, 3);
+        assert_eq!(rep.outputs.len(), 3);
+        assert_eq!(rep.total_tokens, 3 * 24);
+        // mock never emits "#### 7"
+        assert_eq!(rep.accuracy, 0.0);
+        assert!(rep.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn agreement_against_self_is_one() {
+        let m = MockExec::new(256);
+        let tok = toy_tok();
+        let opts = EvalOptions { n: 2, gen_len: 16, ..Default::default() };
+        let first = run_eval(&m, &FullBaseline, &tok, &toy_instances(4), &opts).unwrap();
+        let opts2 = EvalOptions { reference: Some(first.outputs.clone()), ..opts };
+        let second = run_eval(&m, &FullBaseline, &tok, &toy_instances(4), &opts2).unwrap();
+        assert_eq!(second.agreement, 1.0);
+    }
+}

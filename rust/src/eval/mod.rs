@@ -1,0 +1,11 @@
+//! Evaluation harness: loads the held-out task suites emitted by the build
+//! path, runs a strategy over them, grades outputs, and reports the
+//! accuracy / throughput / speedup cells of the paper's tables.
+
+pub mod grader;
+pub mod harness;
+pub mod tasks;
+
+pub use grader::{grade, Grade};
+pub use harness::{run_eval, EvalOptions, EvalReport};
+pub use tasks::{load_task, TaskInstance, TASKS};

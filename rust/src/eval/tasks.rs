@@ -1,0 +1,89 @@
+//! Task-suite loading. The build path (`python/compile/corpus.py`) writes
+//! held-out instances to `artifacts/tasks/<task>_<fmt>.json`; these are the
+//! synthetic stand-ins for GSM8K / MATH / HumanEval / MBPP (DESIGN.md §2).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::parse_file;
+
+pub const TASKS: [&str; 4] = ["synth-gsm", "synth-math", "synth-he", "synth-mbpp"];
+
+/// Paper-table display names for the synthetic stand-ins.
+pub fn display_name(task: &str) -> &'static str {
+    match task {
+        "synth-gsm" => "GSM8K*",
+        "synth-math" => "MATH*",
+        "synth-he" => "HumanEval*",
+        "synth-mbpp" => "MBPP*",
+        _ => "?",
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskInstance {
+    pub id: String,
+    pub task: String,
+    pub format: String,
+    pub prompt: String,
+    pub answer: String,
+    pub reference: String,
+}
+
+/// Load one suite (`synth-gsm`, …) in one format (`base`/`instruct`).
+pub fn load_task(tasks_dir: &Path, task: &str, format: &str) -> Result<Vec<TaskInstance>> {
+    let path = tasks_dir.join(format!("{task}_{format}.json"));
+    let j = parse_file(&path).with_context(|| format!("loading {}", path.display()))?;
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{}: not an array", path.display()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let s = |k: &str| item.get(k).as_str().unwrap_or_default().to_string();
+        let inst = TaskInstance {
+            id: s("id"),
+            task: s("task"),
+            format: s("format"),
+            prompt: s("prompt"),
+            answer: s("answer"),
+            reference: s("reference"),
+        };
+        if inst.prompt.is_empty() || inst.answer.is_empty() {
+            return Err(anyhow!("{}: instance missing prompt/answer", path.display()));
+        }
+        out.push(inst);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("wdtasks-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("synth-gsm_base.json")).unwrap();
+        f.write_all(
+            b"[{\"id\":\"g0\",\"task\":\"synth-gsm\",\"format\":\"base\",
+               \"prompt\":\"q : 1 + 1 ? a :\",\"answer\":\"2\",\"reference\":\"#### 2\"}]",
+        )
+        .unwrap();
+        let v = load_task(&dir, "synth-gsm", "base").unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].answer, "2");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_task(Path::new("/nonexistent"), "synth-gsm", "base").is_err());
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(display_name("synth-gsm"), "GSM8K*");
+        assert_eq!(display_name("synth-mbpp"), "MBPP*");
+    }
+}

@@ -1,0 +1,35 @@
+//! # window-diffusion
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via xla/PJRT) reproduction of
+//! *Window-Diffusion: Accelerating Diffusion Language Model Inference with
+//! Windowed Token Pruning and Caching*.
+//!
+//! This crate is **Layer 3**: the serving coordinator. It loads HLO-text
+//! executables AOT-lowered from the JAX model (Layer 2, `python/compile/`)
+//! which calls the Pallas windowed-attention kernel (Layer 1), and implements
+//! the paper's contribution — dual-window token organization with phase-level
+//! KV caching — plus every comparison baseline, the eval/analysis harnesses,
+//! and an HTTP serving layer. Python never runs on the request path.
+//!
+//! Quick tour:
+//! * [`runtime`] — PJRT engine, artifact manifest, shape buckets, weights;
+//! * [`coordinator`] — sequence state, dual-window layout, decode policies;
+//! * [`strategies`] — `window` (the paper) + `full`/`block`/`dkv`/`fastdllm-*`;
+//! * [`eval`] — task suites, graders, accuracy/throughput harness;
+//! * [`analysis`] — Fig. 2/3/4 token-level probes;
+//! * [`server`] — HTTP front end, batcher, worker pool;
+//! * [`util`] — std-only substrates (JSON, RNG, stats, pool, mini-proptest).
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench_support;
+pub mod coordinator;
+pub mod eval;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod strategies;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,246 @@
+//! `wdserve` — the Window-Diffusion leader binary.
+//!
+//! Subcommands:
+//! * `serve`    — boot the HTTP serving layer on a model
+//! * `generate` — one-shot generation from the CLI
+//! * `eval`     — run a strategy over a task suite, print the table cell
+//! * `analyze`  — run the Fig.2/3/4 token-level probes
+//! * `info`     — dump manifest / model info
+//!
+//! (`clap` is not in the offline crate set; flags are parsed by the small
+//! hand-rolled parser below: `--key value` or `--key=value`, positionals.)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use window_diffusion::analysis;
+use window_diffusion::coordinator::GenRequest;
+use window_diffusion::eval::{self, EvalOptions};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{Engine, EngineCell, Manifest};
+use window_diffusion::server::{self, api::AppState, ServerConfig};
+use window_diffusion::strategies;
+use window_diffusion::tokenizer::Tokenizer;
+use window_diffusion::{info, util};
+
+/// Tiny argv parser: positionals + `--key value` / `--key=value` / `--flag`.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub named: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    named.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    named.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    named.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, named }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(String::as_str)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+fn load_engine(args: &Args) -> Result<(Manifest, Engine, Tokenizer)> {
+    let root = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_root);
+    let manifest = Manifest::load(&root)?;
+    let model = args.get("model").unwrap_or("dream-sim-instruct");
+    let engine = Engine::load(&manifest, model)?;
+    let tok = Tokenizer::load(&manifest.vocab_file)?;
+    Ok((manifest, engine, tok))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (_, engine, tok) = load_engine(args)?;
+    let model_name = engine.model.name.clone();
+    let s = args.usize_or("s", engine.model.seqs[0]);
+    let state = Arc::new(AppState {
+        engine: EngineCell::new(engine),
+        tokenizer: tok,
+        metrics: Arc::new(Metrics::default()),
+        model_name,
+        default_strategy: args.get("strategy").unwrap_or("window").to_string(),
+        default_gen_len: args.usize_or("gen-len", 96),
+        s,
+    });
+    let cfg = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:8787").to_string(),
+        workers: args.usize_or("workers", 2),
+        queue_capacity: args.usize_or("queue", 64),
+    };
+    let server = server::serve(state, cfg)?;
+    info!("ready on {} — POST /generate, GET /metrics (ctrl-c to stop)", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let (_, engine, tok) = load_engine(args)?;
+    let prompt_text = args
+        .get("prompt")
+        .ok_or_else(|| anyhow!("--prompt required"))?;
+    let strategy = strategies::from_name(args.get("strategy").unwrap_or("window"))?;
+    let s = args.usize_or("s", engine.model.seqs[0]);
+    let mut req = GenRequest::new(tok.encode(prompt_text), args.usize_or("gen-len", 96), s);
+    req.adaptive = !args.flag("no-adaptive");
+    req.tokens_per_step = args.usize_or("tokens-per-step", 2);
+    let r = strategy.generate(&engine, &req)?;
+    println!("{}", tok.decode(&r.generated()));
+    info!(
+        "{} tokens in {:.2}s ({:.1} tok/s, {} steps: {} window/{} cached/{} full)",
+        r.tokens_generated(),
+        r.wall.as_secs_f64(),
+        r.tokens_per_sec(),
+        r.steps,
+        r.counts.window,
+        r.counts.cached,
+        r.counts.full
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (manifest, engine, tok) = load_engine(args)?;
+    let task = args.get("task").unwrap_or("synth-gsm");
+    let fmt = args.get("format").unwrap_or(&engine.model.format).to_string();
+    let instances = eval::load_task(&manifest.tasks_dir, task, &fmt)?;
+    let strategy = strategies::from_name(args.get("strategy").unwrap_or("window"))?;
+    let opts = EvalOptions {
+        n: args.usize_or("n", 8),
+        gen_len: args.usize_or("gen-len", 96),
+        s: args.usize_or("s", engine.model.seqs[0]),
+        tokens_per_step: args.usize_or("tokens-per-step", 1),
+        adaptive: args.flag("adaptive"),
+        seed: 7,
+        reference: None,
+        warmup: true,
+    };
+    let rep = eval::run_eval(&engine, strategy.as_ref(), &tok, &instances, &opts)?;
+    println!(
+        "{:<24} {:<12} acc={:.3} tok/s={:.2} latency={:.2}s steps={} slots={}",
+        rep.strategy,
+        task,
+        rep.accuracy,
+        rep.tokens_per_sec(),
+        rep.mean_latency(),
+        rep.counts.steps(),
+        rep.counts.token_slots
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let (_, engine, tok) = load_engine(args)?;
+    let s = engine.model.seqs[0];
+    let prompt = tok.encode(args.get("prompt").unwrap_or("q : compute : ( 3 + 4 ) * 2 = ? a :"));
+    let probe = args.get("probe").unwrap_or("confidence");
+    match probe {
+        "confidence" => {
+            let snaps = analysis::confidence::run_probe(
+                &engine, &prompt, args.usize_or("gen-len", 96), s, &[8, 16, 32], 2,
+            )?;
+            for sn in snaps {
+                println!(
+                    "step {:>3}: prefix-mass(25%)={:.3} undecoded={}",
+                    sn.step,
+                    analysis::confidence::prefix_mass(&sn, 0.25),
+                    sn.field.len()
+                );
+            }
+        }
+        "truncation" => {
+            let pts = analysis::truncation::run_probe(
+                &engine, &prompt, args.usize_or("gen-len", 96), s,
+                args.usize_or("t0", 16), 16, &[16, 32, 48, 64, 96], 2,
+            )?;
+            for p in pts {
+                println!("W={:>3}: KL(no-cache)={:.5} KL(cache)={:.5}", p.w,
+                         p.kl_nocache, p.kl_cache);
+            }
+        }
+        "stability" => {
+            let c = analysis::stability::run_probe(
+                &engine, &prompt, args.usize_or("gen-len", 64), s, 48, 16, 8, 12, 2,
+            )?;
+            println!("recent (Δ, cos): {:?}", c.recent);
+            println!("early  (Δ, cos): {:?}", c.early);
+        }
+        other => return Err(anyhow!("unknown probe '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_root);
+    let manifest = Manifest::load(&root)?;
+    println!("artifacts: {} (attn={})", root.display(), manifest.attn);
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name}: d={} L={} H={} Dh={} V={} S={:?} ({} executables, fmt={})",
+            m.arch.d, m.arch.n_layers, m.arch.n_heads, m.arch.dh, m.arch.vocab,
+            m.seqs, m.executables.len(), m.format
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let args = Args::parse(&argv[argv.len().min(1)..]);
+    if args.flag("debug") {
+        util::set_log_level(2);
+    }
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
+                 [--artifacts DIR] [--strategy SPEC] ...\n\
+                 strategies: full | window[:w_ex=64,a=16,refresh=32] | \
+                 window-nocache | block[:size=32] | dkv[:interval=4] | \
+                 fastdllm-prefix | fastdllm-dual"
+            );
+            Ok(())
+        }
+    }
+    .context(format!("command '{cmd}' failed"))
+}

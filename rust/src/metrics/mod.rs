@@ -1,0 +1,144 @@
+//! Serving metrics: counters and latency histograms, exported over the HTTP
+//! API (`GET /metrics`) and printed by the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Log-scaled latency histogram (µs buckets, powers of two up to ~134s).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    /// raw samples for exact percentiles (bounded ring)
+    samples: Mutex<Vec<f64>>,
+}
+
+const NBUCKETS: usize = 28;
+const MAX_SAMPLES: usize = 4096;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let b = (64 - us.max(1).leading_zeros() as usize).min(NBUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < MAX_SAMPLES {
+            s.push(d.as_secs_f64());
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&s))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_secs", Json::num(self.mean_secs())),
+        ];
+        if let Some(s) = self.summary() {
+            fields.push(("p50", Json::num(s.p50)));
+            fields.push(("p95", Json::num(s.p95)));
+            fields.push(("max", Json::num(s.max)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Global serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub diffusion_steps: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub request_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn record_request(&self, latency: Duration, tokens: usize, steps: usize,
+                          ok: bool) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.requests_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.diffusion_steps.fetch_add(steps as u64, Ordering::Relaxed);
+        self.request_latency.record(latency);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests_total", Json::num(self.requests_total.load(Ordering::Relaxed) as f64)),
+            ("requests_failed", Json::num(self.requests_failed.load(Ordering::Relaxed) as f64)),
+            ("tokens_generated", Json::num(self.tokens_generated.load(Ordering::Relaxed) as f64)),
+            ("diffusion_steps", Json::num(self.diffusion_steps.load(Ordering::Relaxed) as f64)),
+            ("queue_depth", Json::num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            ("request_latency", self.request_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_secs() - 0.02).abs() < 1e-3);
+        let s = h.summary().unwrap();
+        assert!(s.max >= 0.029);
+    }
+
+    #[test]
+    fn metrics_record_and_export() {
+        let m = Metrics::default();
+        m.record_request(Duration::from_millis(5), 32, 16, true);
+        m.record_request(Duration::from_millis(7), 0, 0, false);
+        let j = m.to_json();
+        assert_eq!(j.get("requests_total").as_i64(), Some(2));
+        assert_eq!(j.get("requests_failed").as_i64(), Some(1));
+        assert_eq!(j.get("tokens_generated").as_i64(), Some(32));
+        assert_eq!(j.get_path(&["request_latency", "count"]).as_i64(), Some(2));
+    }
+}

@@ -1,0 +1,104 @@
+//! Shape-bucket selection (DESIGN.md §3.1).
+//!
+//! AOT executables exist only at ladder shapes; the coordinator picks the
+//! smallest bucket that fits its (window capacity, compute slots) need and
+//! pads the remainder (validity masks make padding inert).
+
+use anyhow::{anyhow, Result};
+
+/// Smallest ladder value >= need.
+pub fn pick(ladder: &[usize], need: usize) -> Result<usize> {
+    ladder
+        .iter()
+        .copied()
+        .filter(|&b| b >= need)
+        .min()
+        .ok_or_else(|| anyhow!("need {need} exceeds largest bucket {:?}", ladder.last()))
+}
+
+/// Pick (c, r) buckets jointly: the cached executables only exist for r <= c,
+/// so r is clamped into the chosen c.
+pub fn pick_cr(c_ladder: &[usize], r_ladder: &[usize], c_need: usize,
+               r_need: usize) -> Result<(usize, usize)> {
+    let c = pick(c_ladder, c_need)?;
+    let r = pick(r_ladder, r_need)?;
+    if r > c {
+        // no (c, r>c) executable; widen c to the r bucket
+        let c2 = pick(c_ladder, r)?;
+        return Ok((c2, r));
+    }
+    Ok((c, r))
+}
+
+/// Padding waste of a bucket choice (for metrics / perf accounting).
+pub fn waste(bucket: usize, need: usize) -> usize {
+    bucket.saturating_sub(need)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const CS: &[usize] = &[64, 128, 192, 256];
+    const RS: &[usize] = &[16, 32, 48, 64, 128, 256];
+
+    #[test]
+    fn picks_smallest_fit() {
+        assert_eq!(pick(CS, 1).unwrap(), 64);
+        assert_eq!(pick(CS, 64).unwrap(), 64);
+        assert_eq!(pick(CS, 65).unwrap(), 128);
+        assert_eq!(pick(CS, 256).unwrap(), 256);
+    }
+
+    #[test]
+    fn overflow_errors() {
+        assert!(pick(CS, 257).is_err());
+    }
+
+    #[test]
+    fn cr_respects_r_le_c() {
+        let (c, r) = pick_cr(CS, RS, 30, 100).unwrap();
+        assert_eq!((c, r), (128, 128));
+        let (c, r) = pick_cr(CS, RS, 200, 20).unwrap();
+        assert_eq!((c, r), (256, 32));
+    }
+
+    #[test]
+    fn prop_pick_is_minimal_fit() {
+        prop::check(
+            "bucket-minimal-fit",
+            |rng| rng.usize_below(257),
+            |&need| {
+                let b = pick(CS, need.max(1)).map_err(|e| e.to_string())?;
+                if b < need {
+                    return Err(format!("bucket {b} < need {need}"));
+                }
+                if let Some(smaller) = CS.iter().copied().filter(|&x| x < b).max() {
+                    if smaller >= need {
+                        return Err(format!("{smaller} also fits but {b} chosen"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_cr_always_valid_pair() {
+        prop::check(
+            "cr-valid-pair",
+            |rng| (rng.usize_below(257).max(1), rng.usize_below(257).max(1)),
+            |&(cn, rn)| {
+                let (c, r) = pick_cr(CS, RS, cn, rn).map_err(|e| e.to_string())?;
+                if r > c {
+                    return Err(format!("r {r} > c {c}"));
+                }
+                if c < cn || r < rn {
+                    return Err("bucket smaller than need".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

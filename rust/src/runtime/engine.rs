@@ -1,0 +1,319 @@
+//! Engine: loads AOT artifacts for one model and executes step variants.
+//!
+//! Wraps the `xla` crate PJRT CPU client: `HloModuleProto::from_text_file` →
+//! `client.compile` (lazily, per shape bucket, cached) → `execute_b` with
+//! device-resident weight buffers. Only step inputs (ids/positions/masks) and
+//! step outputs (logits, KV literals) cross the host boundary per step.
+//!
+//! Weights are uploaded once at engine construction. KV caches travel as
+//! host `Literal`s between steps (the executables return a result tuple which
+//! PJRT materializes as one tuple buffer; see DESIGN.md §3.1 and the §Perf
+//! notes on why this is cheap at sim-model scale).
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Arch, Manifest, ModelEntry, Specials};
+use super::weights::{load_host_weights, param_count};
+
+/// Per-request KV cache state: per-layer K/V for a `c`-slot window layout,
+/// held host-side between steps and re-uploaded per call.
+pub struct KvCache {
+    pub s: usize,
+    pub c: usize,
+    pub k: Literal,
+    pub v: Literal,
+}
+
+impl KvCache {
+    /// Copy out the V cache as f32 (layout [L, c, H, Dh]) — analysis probes.
+    pub fn v_host(&self) -> Result<Vec<f32>> {
+        Ok(self.v.to_vec::<f32>()?)
+    }
+
+    pub fn k_host(&self) -> Result<Vec<f32>> {
+        Ok(self.k.to_vec::<f32>()?)
+    }
+}
+
+/// Step input: host array or pre-existing literal (KV caches).
+pub enum In<'a> {
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+    Lit(&'a Literal),
+}
+
+/// Execution counters (perf accounting; see `metrics`).
+#[derive(Default)]
+pub struct EngineStats {
+    pub executions: Cell<u64>,
+    pub exec_secs: Cell<f64>,
+    pub compiles: Cell<u64>,
+    pub compile_secs: Cell<f64>,
+    pub h2d_bytes: Cell<u64>,
+    pub d2h_bytes: Cell<u64>,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub model: ModelEntry,
+    pub special: Specials,
+    root: PathBuf,
+    weights: Vec<PjRtBuffer>,
+    execs: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub fn load(manifest: &Manifest, model_name: &str) -> Result<Engine> {
+        let model = manifest.model(model_name)?.clone();
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let host = load_host_weights(&manifest.root, &model)?;
+        let mut weights = Vec::with_capacity(host.len());
+        let mut bytes = 0u64;
+        for p in &host {
+            let dims: Vec<usize> = if p.shape.is_empty() { vec![1] } else { p.shape.clone() };
+            weights.push(
+                client
+                    .buffer_from_host_buffer(&p.data, &dims, None)
+                    .with_context(|| format!("uploading weight {}", p.name))?,
+            );
+            bytes += (p.data.len() * 4) as u64;
+        }
+        crate::info!(
+            "engine {}: {} params ({:.1} MB) uploaded, {} executables available",
+            model_name,
+            param_count(&model),
+            bytes as f64 / 1e6,
+            model.executables.len()
+        );
+        Ok(Engine {
+            client,
+            model,
+            special: manifest.special,
+            root: manifest.root.clone(),
+            weights,
+            execs: RefCell::new(HashMap::new()),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn arch(&self) -> &Arch {
+        &self.model.arch
+    }
+
+    /// Lazily compile an executable by manifest name.
+    fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self.model.exec_spec(name)?;
+        let path = self.root.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.compiles.set(self.stats.compiles.get() + 1);
+        self.stats.compile_secs.set(self.stats.compile_secs.get() + dt);
+        crate::debug!("compiled {name} in {:.2}s", dt);
+        let rc = Rc::new(exe);
+        self.execs.borrow_mut().insert(name.to_string(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Pre-compile a set of executables (boot-time warmup for serving).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with step inputs (weights appended automatically) and
+    /// return the decomposed output tuple.
+    pub fn run(&self, name: &str, inputs: &[In<'_>]) -> Result<Vec<Literal>> {
+        let spec = self.model.exec_spec(name)?;
+        if spec.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} step inputs, manifest says {}",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        let exe = self.executable(name)?;
+        // Host inputs -> device buffers (validated against the manifest spec).
+        let mut owned: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut h2d = 0u64;
+        for (i, input) in inputs.iter().enumerate() {
+            let io = &spec.inputs[i];
+            let want: usize = io.shape.iter().product::<usize>().max(1);
+            let dims: Vec<usize> =
+                if io.shape.is_empty() { vec![1] } else { io.shape.clone() };
+            let buf = match input {
+                In::I32(data) => {
+                    if data.len() != want {
+                        return Err(anyhow!(
+                            "{name}: input '{}' has {} elems, expected {want}",
+                            io.name,
+                            data.len()
+                        ));
+                    }
+                    h2d += (data.len() * 4) as u64;
+                    self.client.buffer_from_host_buffer(data, &dims, None)?
+                }
+                In::F32(data) => {
+                    if data.len() != want {
+                        return Err(anyhow!(
+                            "{name}: input '{}' has {} elems, expected {want}",
+                            io.name,
+                            data.len()
+                        ));
+                    }
+                    h2d += (data.len() * 4) as u64;
+                    self.client.buffer_from_host_buffer(data, &dims, None)?
+                }
+                In::Lit(lit) => {
+                    h2d += lit.size_bytes() as u64;
+                    self.client.buffer_from_host_literal(None, lit)?
+                }
+            };
+            owned.push(buf);
+        }
+        let mut args: Vec<&PjRtBuffer> = owned.iter().collect();
+        args.extend(self.weights.iter());
+
+        let t0 = Instant::now();
+        let result = exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        // d2h accounting from the manifest spec — NEVER call
+        // `Literal::size_bytes()` on the result: it is a *tuple* literal and
+        // xla_extension 0.5.1 CHECK-fails (ByteSizeOf with pointer_size=-1)
+        // on tuple shapes, aborting the process.
+        let d2h: usize = spec
+            .outputs
+            .iter()
+            .map(|o| o.shape.iter().product::<usize>().max(1) * 4)
+            .sum();
+        self.stats.executions.set(self.stats.executions.get() + 1);
+        self.stats.exec_secs.set(self.stats.exec_secs.get() + dt);
+        self.stats.h2d_bytes.set(self.stats.h2d_bytes.get() + h2d);
+        self.stats.d2h_bytes.set(self.stats.d2h_bytes.get() + d2h as u64);
+        let parts = tuple.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        Ok(parts)
+    }
+
+    // -- step variants ---------------------------------------------------------
+
+    /// Baseline full-sequence step: logits `[s * vocab]`.
+    pub fn full_step(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        let name = ModelEntry::full_step_name(s);
+        let out = self.run(&name, &[In::I32(ids), In::F32(valid)])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Refresh / pruning-only step over the window layout:
+    /// logits `[c * vocab]` + fresh KV cache.
+    pub fn fwd_window(
+        &self,
+        s: usize,
+        c: usize,
+        ids: &[i32],
+        pos: &[i32],
+        valid: &[f32],
+    ) -> Result<(Vec<f32>, KvCache)> {
+        let name = ModelEntry::fwd_window_name(s, c);
+        let mut out = self.run(&name, &[In::I32(ids), In::I32(pos), In::F32(valid)])?;
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, KvCache { s, c, k, v }))
+    }
+
+    /// Normal step: compute `r` slots against the cached `c`-window.
+    /// Returns logits `[r * vocab]` + the updated cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fwd_cached(
+        &self,
+        s: usize,
+        c: usize,
+        r: usize,
+        ids_r: &[i32],
+        pos_r: &[i32],
+        slot_idx: &[i32],
+        rvalid: &[f32],
+        cvalid: &[f32],
+        kv: &KvCache,
+    ) -> Result<(Vec<f32>, KvCache)> {
+        if kv.c != c {
+            return Err(anyhow!("KV cache has c={}, step wants c={c}", kv.c));
+        }
+        let name = ModelEntry::fwd_cached_name(s, c, r);
+        let mut out = self.run(
+            &name,
+            &[
+                In::I32(ids_r),
+                In::I32(pos_r),
+                In::I32(slot_idx),
+                In::F32(rvalid),
+                In::F32(cvalid),
+                In::Lit(&kv.k),
+                In::Lit(&kv.v),
+            ],
+        )?;
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, KvCache { s, c, k, v }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cross-thread sharing
+// ---------------------------------------------------------------------------
+
+/// `Engine` is single-threaded (`PjRtClient` is `Rc`-based). `EngineCell`
+/// serializes all engine access behind a mutex so the serving layer's worker
+/// threads can share one engine.
+///
+/// # Safety
+/// Sound because (a) every `Rc` clone and PJRT call happens while holding the
+/// mutex, so refcount updates are serialized; (b) the TFRT CPU PJRT client is
+/// itself thread-safe; (c) `Literal`s returned to callers are plain owned
+/// host memory with no aliasing back into the engine.
+pub struct EngineCell {
+    inner: Mutex<Engine>,
+}
+
+unsafe impl Send for EngineCell {}
+unsafe impl Sync for EngineCell {}
+
+impl EngineCell {
+    pub fn new(engine: Engine) -> Arc<EngineCell> {
+        Arc::new(EngineCell { inner: Mutex::new(engine) })
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(&Engine) -> R) -> R {
+        let guard = self.inner.lock().expect("engine mutex poisoned");
+        f(&guard)
+    }
+}

@@ -1,0 +1,276 @@
+//! Artifact manifest: the single source of truth emitted by `python -m
+//! compile.aot` describing models, architectures, shape-bucket ladders,
+//! executables and the weight bank layout.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub dh: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl Arch {
+    /// f32 elements in one KV cache tensor for a window capacity `c`.
+    pub fn kv_elems(&self, c: usize) -> usize {
+        self.n_layers * c * self.n_heads * self.dh
+    }
+
+    fn from_json(j: &Json) -> Result<Arch> {
+        let u = |k: &str| -> Result<usize> {
+            j.get(k).as_usize().ok_or_else(|| anyhow!("arch: missing '{k}'"))
+        };
+        Ok(Arch {
+            d: u("d")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            dh: u("dh")?,
+            ffn: u("ffn")?,
+            vocab: u("vocab")?,
+            max_seq: u("max_seq")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub arch: Arch,
+    pub format: String,
+    pub seqs: Vec<usize>,
+    pub c_ladder: Vec<usize>,
+    pub r_ladder: Vec<usize>,
+    pub weights_file: String,
+    pub weights: Vec<WeightSpec>,
+    pub weight_order: Vec<String>,
+    pub executables: HashMap<String, ExecSpec>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Specials {
+    pub pad: i32,
+    pub mask: i32,
+    pub eos: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub attn: String,
+    pub special: Specials,
+    pub vocab_file: PathBuf,
+    pub tasks_dir: PathBuf,
+    pub models: HashMap<String, ModelEntry>,
+}
+
+fn io_specs(j: &Json) -> Vec<IoSpec> {
+    j.as_arr()
+        .map(|arr| {
+            arr.iter()
+                .map(|s| IoSpec {
+                    name: s.get("name").as_str().unwrap_or_default().to_string(),
+                    dtype: s.get("dtype").as_str().unwrap_or("f32").to_string(),
+                    shape: s
+                        .get("shape")
+                        .as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default(),
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn usize_arr(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let j = parse_file(&root.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let special = Specials {
+            pad: j.get_path(&["special", "pad"]).as_i64().unwrap_or(0) as i32,
+            mask: j.get_path(&["special", "mask"]).as_i64().unwrap_or(1) as i32,
+            eos: j.get_path(&["special", "eos"]).as_i64().unwrap_or(2) as i32,
+        };
+        let mut models = HashMap::new();
+        let model_obj = j
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: missing 'models'"))?;
+        for (name, m) in model_obj {
+            let mut executables = HashMap::new();
+            if let Some(arr) = m.get("executables").as_arr() {
+                for e in arr {
+                    let ename = e.get("name").as_str().unwrap_or_default().to_string();
+                    executables.insert(
+                        ename.clone(),
+                        ExecSpec {
+                            name: ename,
+                            file: e.get("file").as_str().unwrap_or_default().to_string(),
+                            inputs: io_specs(e.get("inputs")),
+                            outputs: io_specs(e.get("outputs")),
+                        },
+                    );
+                }
+            }
+            let weights = m
+                .get("weights")
+                .as_arr()
+                .map(|arr| {
+                    arr.iter()
+                        .map(|w| WeightSpec {
+                            name: w.get("name").as_str().unwrap_or_default().to_string(),
+                            shape: usize_arr(w.get("shape")),
+                            offset: w.get("offset").as_usize().unwrap_or(0),
+                            size: w.get("size").as_usize().unwrap_or(0),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let weight_order = m
+                .get("weight_order")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    arch: Arch::from_json(m.get("arch"))
+                        .with_context(|| format!("model {name}"))?,
+                    format: m.get("format").as_str().unwrap_or("base").to_string(),
+                    seqs: usize_arr(m.get("seqs")),
+                    c_ladder: usize_arr(m.get("c_ladder")),
+                    r_ladder: usize_arr(m.get("r_ladder")),
+                    weights_file: m
+                        .get("weights_file")
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                    weights,
+                    weight_order,
+                    executables,
+                },
+            );
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            attn: j.get("attn").as_str().unwrap_or("pallas").to_string(),
+            special,
+            vocab_file: root.join(j.get("vocab_file").as_str().unwrap_or("vocab.json")),
+            tasks_dir: root.join(j.get("tasks_dir").as_str().unwrap_or("tasks")),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Default artifact root: `$WD_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("WD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+impl ModelEntry {
+    pub fn exec_spec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("model {}: no executable '{name}'", self.name))
+    }
+
+    pub fn full_step_name(s: usize) -> String {
+        format!("full_step_s{s}")
+    }
+
+    pub fn fwd_window_name(s: usize, c: usize) -> String {
+        format!("fwd_window_s{s}_c{c}")
+    }
+
+    pub fn fwd_cached_name(s: usize, c: usize, r: usize) -> String {
+        format!("fwd_cached_s{s}_c{c}_r{r}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn arch_from_json() {
+        let j = parse(
+            r#"{"d":96,"n_layers":3,"n_heads":4,"dh":24,"ffn":192,
+                "vocab":512,"max_seq":256,"rope_theta":10000.0}"#,
+        )
+        .unwrap();
+        let a = Arch::from_json(&j).unwrap();
+        assert_eq!(a.d, 96);
+        assert_eq!(a.kv_elems(128), 3 * 128 * 4 * 24);
+    }
+
+    #[test]
+    fn arch_missing_field_errors() {
+        let j = parse(r#"{"d":96}"#).unwrap();
+        assert!(Arch::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn exec_names() {
+        assert_eq!(ModelEntry::full_step_name(256), "full_step_s256");
+        assert_eq!(ModelEntry::fwd_window_name(256, 128), "fwd_window_s256_c128");
+        assert_eq!(
+            ModelEntry::fwd_cached_name(512, 256, 48),
+            "fwd_cached_s512_c256_r48"
+        );
+    }
+}

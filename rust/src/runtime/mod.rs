@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, weight residency,
+//! shape-bucket selection (DESIGN.md §4 item 7).
+
+pub mod buckets;
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use engine::{Engine, EngineCell, In, KvCache};
+pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};

@@ -1,0 +1,123 @@
+//! Weight bank loading: `weights_<model>.bin` is a flat little-endian f32
+//! stream; the manifest records (name, shape, offset, size) per parameter.
+//! Weights are uploaded to device once per engine and stay resident.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ModelEntry;
+
+/// One named parameter on the host.
+#[derive(Debug, Clone)]
+pub struct HostParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Read + validate the model's weight bank, in manifest `weight_order`.
+pub fn load_host_weights(root: &Path, model: &ModelEntry) -> Result<Vec<HostParam>> {
+    let path = root.join(&model.weights_file);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading weight bank {}", path.display()))?;
+    let total: usize = model.weights.iter().map(|w| w.size).sum();
+    if bytes.len() != total * 4 {
+        return Err(anyhow!(
+            "weight bank {}: {} bytes, manifest expects {}",
+            path.display(),
+            bytes.len(),
+            total * 4
+        ));
+    }
+    let by_name: std::collections::HashMap<_, _> =
+        model.weights.iter().map(|w| (w.name.as_str(), w)).collect();
+    let mut out = Vec::with_capacity(model.weight_order.len());
+    for name in &model.weight_order {
+        let spec = by_name
+            .get(name.as_str())
+            .ok_or_else(|| anyhow!("weight_order names unknown param '{name}'"))?;
+        let elems: usize = spec.shape.iter().product::<usize>().max(1);
+        if elems != spec.size {
+            return Err(anyhow!(
+                "param {name}: shape {:?} has {elems} elems but size={}",
+                spec.shape,
+                spec.size
+            ));
+        }
+        let start = spec.offset;
+        let end = start + spec.size * 4;
+        if end > bytes.len() {
+            return Err(anyhow!("param {name}: range {start}..{end} out of bounds"));
+        }
+        let mut data = vec![0f32; spec.size];
+        for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        out.push(HostParam { name: name.clone(), shape: spec.shape.clone(), data });
+    }
+    Ok(out)
+}
+
+/// Parameter count of the model (for logging / README numbers).
+pub fn param_count(model: &ModelEntry) -> usize {
+    model.weights.iter().map(|w| w.size).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Arch, WeightSpec};
+    use std::collections::HashMap;
+
+    fn entry(dir: &Path, specs: Vec<WeightSpec>, order: Vec<&str>) -> ModelEntry {
+        ModelEntry {
+            name: "toy".into(),
+            arch: Arch { d: 4, n_layers: 1, n_heads: 1, dh: 4, ffn: 8, vocab: 16, max_seq: 8 },
+            format: "base".into(),
+            seqs: vec![8],
+            c_ladder: vec![8],
+            r_ladder: vec![8],
+            weights_file: dir.join("w.bin").file_name().unwrap().to_str().unwrap().into(),
+            weights: specs,
+            weight_order: order.into_iter().map(String::from).collect(),
+            executables: HashMap::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_two_params() {
+        let dir = std::env::temp_dir().join(format!("wdw-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let b: Vec<f32> = (0..4).map(|x| 10.0 + x as f32).collect();
+        let mut bytes = Vec::new();
+        for v in a.iter().chain(b.iter()) {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("w.bin"), &bytes).unwrap();
+        let specs = vec![
+            WeightSpec { name: "a".into(), shape: vec![2, 3], offset: 0, size: 6 },
+            WeightSpec { name: "b".into(), shape: vec![4], offset: 24, size: 4 },
+        ];
+        // weight_order deliberately reversed vs file order
+        let m = entry(&dir, specs, vec!["b", "a"]);
+        let params = load_host_weights(&dir, &m).unwrap();
+        assert_eq!(params[0].name, "b");
+        assert_eq!(params[0].data, b);
+        assert_eq!(params[1].data, a);
+        assert_eq!(param_count(&m), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("wdw2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("w.bin"), [0u8; 8]).unwrap();
+        let specs = vec![WeightSpec { name: "a".into(), shape: vec![4], offset: 0, size: 4 }];
+        let m = entry(&dir, specs, vec!["a"]);
+        assert!(load_host_weights(&dir, &m).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,169 @@
+//! Serving API: request/response schema + handler dispatch.
+//!
+//! Endpoints:
+//! * `POST /generate` — `{prompt, gen_len?, strategy?, adaptive?,
+//!   tokens_per_step?}` → `{text, tokens, steps, latency_secs, tokens_per_sec,
+//!   strategy, eos}`
+//! * `GET /metrics`   — serving counters + latency histogram
+//! * `GET /healthz`   — liveness
+//! * `GET /info`      — model / config / ladder info
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::http::{Request, Response};
+use crate::coordinator::{GenRequest, StepExec};
+use crate::metrics::Metrics;
+use crate::runtime::EngineCell;
+use crate::strategies::{self, Strategy};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{parse, Json};
+
+/// Server-wide shared state.
+pub struct AppState {
+    pub engine: Arc<EngineCell>,
+    pub tokenizer: Tokenizer,
+    pub metrics: Arc<Metrics>,
+    pub model_name: String,
+    /// Default strategy spec (see `strategies::from_name`).
+    pub default_strategy: String,
+    pub default_gen_len: usize,
+    pub s: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerateParams {
+    pub prompt: String,
+    pub gen_len: usize,
+    pub strategy: String,
+    pub adaptive: bool,
+    pub tokens_per_step: usize,
+}
+
+impl GenerateParams {
+    pub fn from_json(j: &Json, st: &AppState) -> Result<GenerateParams> {
+        let prompt = j
+            .get("prompt")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing 'prompt'"))?
+            .to_string();
+        if prompt.trim().is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        Ok(GenerateParams {
+            prompt,
+            gen_len: j.get("gen_len").as_usize().unwrap_or(st.default_gen_len),
+            strategy: j
+                .get("strategy")
+                .as_str()
+                .unwrap_or(&st.default_strategy)
+                .to_string(),
+            adaptive: j.get("adaptive").as_bool().unwrap_or(true),
+            tokens_per_step: j.get("tokens_per_step").as_usize().unwrap_or(2),
+        })
+    }
+}
+
+/// Execute one generation request against the shared engine.
+pub fn handle_generate(st: &AppState, params: &GenerateParams) -> Result<Json> {
+    let strategy: Box<dyn Strategy> = strategies::from_name(&params.strategy)?;
+    let prompt_ids = st.tokenizer.encode(&params.prompt);
+    if prompt_ids.is_empty() {
+        return Err(anyhow!("prompt tokenized to nothing"));
+    }
+    let mut req = GenRequest::new(prompt_ids, params.gen_len, st.s);
+    req.adaptive = params.adaptive;
+    req.tokens_per_step = params.tokens_per_step;
+    let exec: &dyn StepExec = st.engine.as_ref();
+    let result = strategy.generate(exec, &req)?;
+    let gen_ids = result.generated();
+    st.metrics.record_request(result.wall, gen_ids.len(), result.steps, true);
+    Ok(Json::obj(vec![
+        ("text", Json::str(st.tokenizer.decode(&gen_ids))),
+        ("tokens", Json::num(gen_ids.len() as f64)),
+        ("steps", Json::num(result.steps as f64)),
+        ("latency_secs", Json::num(result.wall.as_secs_f64())),
+        ("tokens_per_sec", Json::num(result.tokens_per_sec())),
+        ("strategy", Json::str(strategy.name())),
+        ("eos", Json::Bool(result.state.eos_pos.is_some())),
+    ]))
+}
+
+/// Route a parsed HTTP request (pure: no I/O — unit-testable).
+pub fn route(st: &AppState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#.to_string()),
+        ("GET", "/metrics") => Response::json(200, st.metrics.to_json().to_string()),
+        ("GET", "/info") => Response::json(
+            200,
+            Json::obj(vec![
+                ("model", Json::str(st.model_name.clone())),
+                ("default_strategy", Json::str(st.default_strategy.clone())),
+                ("s", Json::num(st.s as f64)),
+                ("vocab", Json::num(st.tokenizer.len() as f64)),
+            ])
+            .to_string(),
+        ),
+        ("POST", "/generate") => {
+            let body = match std::str::from_utf8(&req.body) {
+                Ok(b) => b,
+                Err(_) => return Response::json(400, err_json("body not utf-8")),
+            };
+            let parsed = match parse(body) {
+                Ok(j) => j,
+                Err(e) => return Response::json(400, err_json(&format!("bad json: {e}"))),
+            };
+            let params = match GenerateParams::from_json(&parsed, st) {
+                Ok(p) => p,
+                Err(e) => return Response::json(400, err_json(&e.to_string())),
+            };
+            match handle_generate(st, &params) {
+                Ok(j) => Response::json(200, j.to_string()),
+                Err(e) => {
+                    st.metrics
+                        .record_request(std::time::Duration::ZERO, 0, 0, false);
+                    Response::json(500, err_json(&e.to_string()))
+                }
+            }
+        }
+        ("POST", _) | ("GET", _) => Response::json(404, err_json("no such endpoint")),
+        _ => Response::json(405, err_json("method not allowed")),
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // route() needs an AppState with a real EngineCell; the pure pieces
+    // (param parsing, error paths) are tested here, the full path in
+    // tests/integration.rs against artifacts.
+
+    fn fake_state_json() -> Json {
+        parse(r#"{"prompt":"q : 1 + 1 ? a :","gen_len":32,"strategy":"window"}"#).unwrap()
+    }
+
+    #[test]
+    fn params_parse_defaults() {
+        let j = fake_state_json();
+        // can't build AppState without an engine; test from_json field logic
+        // via a stub using unsafe zeroed state is UB — instead assert on the
+        // json accessors the parser relies on.
+        assert_eq!(j.get("prompt").as_str().unwrap(), "q : 1 + 1 ? a :");
+        assert_eq!(j.get("gen_len").as_usize(), Some(32));
+        assert_eq!(j.get("strategy").as_str(), Some("window"));
+        assert_eq!(j.get("adaptive").as_bool(), None); // default applies
+    }
+
+    #[test]
+    fn err_json_shape() {
+        let e = err_json("boom");
+        let j = parse(&e).unwrap();
+        assert_eq!(j.get("error").as_str(), Some("boom"));
+    }
+}

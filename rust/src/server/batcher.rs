@@ -1,0 +1,147 @@
+//! Dynamic request batcher + router.
+//!
+//! With batch-1 AOT executables (DESIGN.md §3.1), batching is *temporal*:
+//! requests are admitted into a bounded queue and dispatched to engine
+//! workers that interleave at diffusion-step granularity through the shared
+//! [`EngineCell`] mutex — the DLM analogue of continuous batching, where a
+//! long decode does not block short ones for its whole duration, only for
+//! one step. The router tracks queue depth and applies backpressure (429)
+//! past the admission limit.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::metrics::Metrics;
+
+/// A queued generation job (domain payload is opaque to the batcher).
+pub struct Job<T> {
+    pub id: u64,
+    pub payload: T,
+}
+
+struct QueueInner<T> {
+    queue: VecDeque<Job<T>>,
+    closed: bool,
+}
+
+/// Bounded MPMC job queue with backpressure.
+pub struct Batcher<T> {
+    inner: Mutex<QueueInner<T>>,
+    available: Condvar,
+    capacity: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(capacity: usize, metrics: Arc<Metrics>) -> Arc<Batcher<T>> {
+        Arc::new(Batcher {
+            inner: Mutex::new(QueueInner { queue: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+            capacity,
+            metrics,
+        })
+    }
+
+    /// Try to admit a job; `Err(job)` on backpressure (queue full / closed).
+    pub fn submit(&self, job: Job<T>) -> Result<(), Job<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.queue.len() >= self.capacity {
+            return Err(job);
+        }
+        inner.queue.push_back(job);
+        self.metrics.queue_depth.store(inner.queue.len() as u64, Ordering::Relaxed);
+        drop(inner);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    pub fn next(&self) -> Option<Job<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = inner.queue.pop_front() {
+                self.metrics.queue_depth.store(inner.queue.len() as u64, Ordering::Relaxed);
+                return Some(job);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.available.wait(inner).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn batcher(cap: usize) -> Arc<Batcher<u32>> {
+        Batcher::new(cap, Arc::new(Metrics::default()))
+    }
+
+    #[test]
+    fn fifo_order() {
+        let b = batcher(10);
+        for i in 0..5 {
+            b.submit(Job { id: i, payload: i as u32 }).ok().unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(b.next().unwrap().id, i);
+        }
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let b = batcher(2);
+        assert!(b.submit(Job { id: 0, payload: 0 }).is_ok());
+        assert!(b.submit(Job { id: 1, payload: 1 }).is_ok());
+        assert!(b.submit(Job { id: 2, payload: 2 }).is_err());
+        let _ = b.next();
+        assert!(b.submit(Job { id: 3, payload: 3 }).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = batcher(10);
+        b.submit(Job { id: 0, payload: 7 }).ok().unwrap();
+        b.close();
+        assert!(b.submit(Job { id: 1, payload: 8 }).is_err());
+        assert_eq!(b.next().unwrap().payload, 7);
+        assert!(b.next().is_none());
+    }
+
+    #[test]
+    fn no_job_lost_or_duplicated_across_workers() {
+        let b = batcher(1000);
+        let seen = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let b2 = Arc::clone(&b);
+            let s2 = Arc::clone(&seen);
+            handles.push(std::thread::spawn(move || {
+                while let Some(_job) = b2.next() {
+                    s2.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for i in 0..200 {
+            b.submit(Job { id: i, payload: i as u32 }).ok().unwrap();
+        }
+        b.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), 200);
+    }
+}

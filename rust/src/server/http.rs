@@ -1,0 +1,174 @@
+//! Minimal HTTP/1.1 server over `std::net` (the offline crate set has no
+//! tokio/hyper; DESIGN.md §4 item 13). Supports the subset the serving API
+//! needs: GET/POST, Content-Length bodies, keep-alive off (connection:
+//! close per response — simple and robust for a bench/serving harness).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            405 => "405 Method Not Allowed",
+            429 => "429 Too Many Requests",
+            500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
+            _ => "200 OK",
+        }
+    }
+}
+
+/// Parse one request from a stream (HTTP/1.1, Content-Length bodies only).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(anyhow!("connection closed mid-headers"));
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad content-length"))?;
+            }
+        }
+    }
+    if content_length > 16 * 1024 * 1024 {
+        return Err(anyhow!("body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+/// Write a response and close.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// tiny client (examples / integration tests / the serve_batch driver)
+// ---------------------------------------------------------------------------
+
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    http_call(addr, "POST", path, Some(body))
+}
+
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
+    http_call(addr, "GET", path, None)
+}
+
+fn http_call(addr: &str, method: &str, path: &str, body: Option<&str>)
+             -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad response: {raw}"))?;
+    let payload = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&mut stream).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/echo");
+            assert_eq!(req.body, b"{\"x\":1}");
+            write_response(&mut stream, &Response::json(200, "{\"ok\":true}".into()))
+                .unwrap();
+        });
+        let (status, body) = http_post(&addr, "/echo", "{\"x\":1}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn get_without_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&mut stream).unwrap();
+            assert_eq!(req.method, "GET");
+            assert!(req.body.is_empty());
+            write_response(&mut stream, &Response::text(404, "nope")).unwrap();
+        });
+        let (status, body) = http_get(&addr, "/missing").unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, "nope");
+        handle.join().unwrap();
+    }
+}

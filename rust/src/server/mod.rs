@@ -1,0 +1,118 @@
+//! Serving layer: HTTP front end, bounded admission queue (backpressure),
+//! worker pool over the shared engine (DESIGN.md §4 item 13).
+//!
+//! Request flow: accept thread → `Batcher` (bounded queue, 429 past
+//! capacity) → worker pool → strategy over [`EngineCell`] (requests
+//! interleave at diffusion-step granularity) → JSON response.
+
+pub mod api;
+pub mod batcher;
+pub mod http;
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use api::{route, AppState};
+use batcher::{Batcher, Job};
+use http::{read_request, write_response, Response};
+
+use crate::util::threadpool::ThreadPool;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:8787".into(), workers: 2, queue_capacity: 64 }
+    }
+}
+
+pub struct Server {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Start serving in background threads; returns a handle (bind errors are
+/// surfaced synchronously).
+pub fn serve(state: Arc<AppState>, cfg: ServerConfig) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?.to_string();
+    listener.set_nonblocking(true)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let queue: Arc<Batcher<TcpStream>> =
+        Batcher::new(cfg.queue_capacity, Arc::clone(&state.metrics));
+    let next_id = Arc::new(AtomicU64::new(0));
+
+    // worker pool: each worker pulls connections and serves them to completion
+    let pool = ThreadPool::new(cfg.workers);
+    for _ in 0..cfg.workers {
+        let q = Arc::clone(&queue);
+        let st = Arc::clone(&state);
+        pool.execute(move || {
+            while let Some(job) = q.next() {
+                let mut stream = job.payload;
+                let resp = match read_request(&mut stream) {
+                    Ok(req) => route(&st, &req),
+                    Err(e) => Response::json(400, format!("{{\"error\":\"{e}\"}}")),
+                };
+                let _ = write_response(&mut stream, &resp);
+            }
+        });
+    }
+
+    let sd = Arc::clone(&shutdown);
+    let accept_handle = std::thread::Builder::new()
+        .name("wd-accept".into())
+        .spawn(move || {
+            let _pool = pool; // keep workers alive until accept loop exits
+            crate::info!("serving on http://{}", listener.local_addr().unwrap());
+            while !sd.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let id = next_id.fetch_add(1, Ordering::Relaxed);
+                        if let Err(job) = queue.submit(Job { id, payload: stream }) {
+                            // backpressure: reject at the door
+                            let mut s = job.payload;
+                            let _ = write_response(
+                                &mut s,
+                                &Response::json(429, "{\"error\":\"queue full\"}".into()),
+                            );
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            queue.close();
+        })?;
+
+    Ok(Server { addr, shutdown, accept_handle: Some(accept_handle) })
+}
+
+impl Server {
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Block Diffusion baseline [Arriola et al. 2025], as the paper compares it
+//! in Table 1: autoregressive over blocks, diffusion within a block, applied
+//! at inference time with attention truncated at the current block's end.
+//! No KV caching (Table 1 isolates the pruning scheme).
+//!
+//! Contrast with Window-Diffusion: the computation window is the *rigid*
+//! prefix `[0, block_end)` and decoding cannot proceed past the block until
+//! the whole block is decoded — exactly the constrained update order the
+//! paper criticizes (and why its Instruct-model accuracy collapses at L=16).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{commit, Strategy};
+use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
+use crate::coordinator::{GenRequest, GenResult, SeqState, StepCounts, StepExec,
+                         WindowLayout};
+
+pub struct BlockDiffusion {
+    pub size: usize,
+}
+
+impl Strategy for BlockDiffusion {
+    fn name(&self) -> String {
+        format!("block[{}]", self.size)
+    }
+
+    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
+        assert!(self.size >= 1);
+        let sp = exec.special();
+        let vocab = exec.arch().vocab;
+        let c_ladder = exec.c_ladder(req.s);
+        let mut state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask,
+                                      sp.eos, sp.pad)?;
+        let schedule = DecodeSchedule::fixed(req.tokens_per_step);
+        let mut counts = StepCounts::default();
+        let t0 = Instant::now();
+        let mut step = 0usize;
+
+        while !state.done() {
+            if step >= req.step_cap() {
+                return Err(anyhow!("step cap {} exceeded", req.step_cap()));
+            }
+            // current block: starts at the frontier, rounded to block grid
+            let frontier = state.frontier().expect("not done");
+            let block_start = state.prompt_len
+                + ((frontier - state.prompt_len) / self.size) * self.size;
+            let block_end = (block_start + self.size).min(state.live_end());
+
+            // decode the whole block before moving on
+            while state.undecoded().iter().any(|&p| p < block_end) {
+                if step >= req.step_cap() {
+                    return Err(anyhow!("step cap {} exceeded", req.step_cap()));
+                }
+                // attention sees only [0, block_end): prefix + current block
+                let positions: Vec<usize> = (0..block_end).collect();
+                let layout = WindowLayout::from_positions(&state, positions, &c_ladder)?;
+                let (logits, _kv) = exec.window(
+                    req.s,
+                    layout.c,
+                    &layout.ids_padded(&state),
+                    &layout.pos_padded(),
+                    &layout.cvalid,
+                )?;
+                counts.window += 1;
+                counts.token_slots += layout.c;
+                let block_cands: Vec<usize> = state
+                    .undecoded()
+                    .into_iter()
+                    .filter(|&p| p >= block_start && p < block_end)
+                    .collect();
+                let cands = candidates(block_cands.iter().map(|&p| {
+                    let slot = layout.slot(p).expect("block pos in layout");
+                    (p, &logits[slot * vocab..(slot + 1) * vocab])
+                }));
+                let picked = select_top_k(cands, schedule.at(step));
+                if picked.is_empty() {
+                    return Err(anyhow!("no block candidates at step {step}"));
+                }
+                commit(&mut state, &picked, step, req.adaptive)?;
+                step += 1;
+                if state.done() {
+                    break;
+                }
+            }
+        }
+        Ok(GenResult { state, steps: step, counts, wall: t0.elapsed() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+
+    #[test]
+    fn decodes_block_by_block() {
+        let m = MockExec::new(256);
+        let b = BlockDiffusion { size: 16 };
+        let mut req = GenRequest::new(vec![10, 11, 12, 13], 48, 256);
+        req.tokens_per_step = 1;
+        let r = b.generate(&m, &req).unwrap();
+        assert!(r.state.done());
+        // strict block order: every token in block 0 decoded before block 1
+        let at = |p: usize| r.state.decoded_at[p].unwrap();
+        let max_b0 = (4..20).map(at).max().unwrap();
+        let min_b1 = (20..36).map(at).min().unwrap();
+        assert!(max_b0 < min_b1);
+    }
+
+    #[test]
+    fn never_sees_future_blocks() {
+        // token_slots accounting: each step computes at most the c-bucket of
+        // [0, block_end), never the full sequence
+        let m = MockExec::new(256);
+        let b = BlockDiffusion { size: 32 };
+        let req = GenRequest::new(vec![10; 8], 64, 256);
+        let r = b.generate(&m, &req).unwrap();
+        // largest layout = 8 + 64 = 72 -> bucket 128 < 256
+        assert!(r.counts.token_slots <= r.steps * 128);
+        assert_eq!(r.counts.full, 0);
+        assert_eq!(r.counts.cached, 0);
+    }
+
+    #[test]
+    fn adaptive_eos_stops_block_walk() {
+        let m = MockExec::new(256).with_eos_at(30);
+        let b = BlockDiffusion { size: 16 };
+        let mut req = GenRequest::new(vec![10; 4], 128, 256);
+        req.adaptive = true;
+        let r = b.generate(&m, &req).unwrap();
+        assert_eq!(r.state.eos_pos, Some(30));
+        assert!(r.tokens_generated() <= 27);
+    }
+}

@@ -1,0 +1,118 @@
+//! Inference strategies: the paper's Window-Diffusion and every comparison
+//! baseline, all written against [`StepExec`] so the same code path runs on
+//! the real PJRT engine, the serving layer's shared engine cell, and the
+//! mock (tests).
+//!
+//! | strategy            | paper role                                   |
+//! |---------------------|----------------------------------------------|
+//! | `full`              | original model (Table 2 "Dream"/"LLaDA" row) |
+//! | `window`            | Window-Diffusion (pruning + phase KV cache)  |
+//! | `window-nocache`    | pruning-only ablation (Table 1)              |
+//! | `block`             | Block Diffusion (Table 1 baseline)           |
+//! | `dkv`               | dKV-Cache [Ma et al. 2025]                   |
+//! | `fastdllm-prefix`   | Fast-dLLM Prefix-Cache [Wu et al. 2025]      |
+//! | `fastdllm-dual`     | Fast-dLLM Dual-Cache                         |
+
+mod block;
+mod dkv;
+mod fastdllm;
+mod full;
+mod window;
+
+use anyhow::{anyhow, Result};
+
+pub use block::BlockDiffusion;
+pub use dkv::DkvCache;
+pub use fastdllm::{FastDllmDual, FastDllmPrefix};
+pub use full::FullBaseline;
+pub use window::{WdConfig, WindowDiffusion};
+
+use crate::coordinator::policies::Candidate;
+use crate::coordinator::{GenRequest, GenResult, SeqState, StepExec};
+
+pub trait Strategy: Send + Sync {
+    fn name(&self) -> String;
+    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult>;
+}
+
+/// Commit picked candidates into the state.
+pub(crate) fn commit(state: &mut SeqState, picked: &[Candidate], step: usize,
+                     adaptive: bool) -> Result<()> {
+    for c in picked {
+        state.decode(c.pos, c.token, step, adaptive)?;
+    }
+    Ok(())
+}
+
+/// Build a strategy by name (CLI / bench / server dispatch).
+/// Names accept parameter suffixes: `window:w_ex=64,a=16,refresh=32`,
+/// `block:size=32`, `dkv:interval=4`, `fastdllm-prefix:block=32`.
+pub fn from_name(spec: &str) -> Result<Box<dyn Strategy>> {
+    let (name, args) = match spec.split_once(':') {
+        Some((n, a)) => (n, a),
+        None => (spec, ""),
+    };
+    let get = |key: &str, default: usize| -> usize {
+        args.split(',')
+            .filter_map(|kv| kv.split_once('='))
+            .find(|(k, _)| *k == key)
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(default)
+    };
+    Ok(match name {
+        "full" => Box::new(FullBaseline),
+        "window" => Box::new(WindowDiffusion::new(WdConfig {
+            w_ex: get("w_ex", 64),
+            a: get("a", 16),
+            refresh: get("refresh", 32),
+            cache: true,
+        })),
+        "window-nocache" => Box::new(WindowDiffusion::new(WdConfig {
+            w_ex: get("w_ex", 64),
+            a: get("a", 16),
+            refresh: get("refresh", 32),
+            cache: false,
+        })),
+        "block" => Box::new(BlockDiffusion { size: get("size", 32) }),
+        "dkv" => Box::new(DkvCache { interval: get("interval", 4) }),
+        "fastdllm-prefix" => Box::new(FastDllmPrefix { block: get("block", 32) }),
+        "fastdllm-dual" => Box::new(FastDllmDual { block: get("block", 32) }),
+        other => return Err(anyhow!("unknown strategy '{other}'")),
+    })
+}
+
+/// All comparison strategies of Table 2 / Table 6 in paper order.
+pub fn table2_lineup() -> Vec<Box<dyn Strategy>> {
+    vec![
+        Box::new(FullBaseline),
+        Box::new(DkvCache { interval: 4 }),
+        Box::new(FastDllmPrefix { block: 32 }),
+        Box::new(FastDllmDual { block: 32 }),
+        Box::new(WindowDiffusion::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_name_defaults() {
+        assert_eq!(from_name("full").unwrap().name(), "full");
+        assert_eq!(from_name("window").unwrap().name(), "window[w64/a16/r32]");
+        assert!(from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn from_name_params() {
+        let s = from_name("window:w_ex=128,a=8,refresh=16").unwrap();
+        assert_eq!(s.name(), "window[w128/a8/r16]");
+        let b = from_name("block:size=16").unwrap();
+        assert_eq!(b.name(), "block[16]");
+    }
+
+    #[test]
+    fn lineup_has_five() {
+        assert_eq!(table2_lineup().len(), 5);
+    }
+}

@@ -1,0 +1,203 @@
+//! Rust mirror of `python/compile/tokenizer.py`.
+//!
+//! Same algorithm: whitespace-separated words, digits always singleton tokens,
+//! letter/underscore runs and single punctuation chars as tokens, closed
+//! vocabulary with fixed special ids. Parity with the python implementation is
+//! enforced by golden vectors baked into `artifacts/vocab.json`
+//! (see `tests/integration.rs::tokenizer_parity`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::parse_file;
+
+pub const PAD: i32 = 0;
+pub const MASK: i32 = 1;
+pub const EOS: i32 = 2;
+pub const BOS: i32 = 3;
+pub const UNK: i32 = 4;
+pub const NUM_SPECIALS: usize = 5;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+/// Split text into surface tokens exactly like python's `pretokenize`:
+/// `[A-Za-z_]+ | [0-9] | single non-alnum-non-ws char`.
+pub fn pretokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut chars = text.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        if c.is_whitespace() {
+            chars.next();
+        } else if c.is_ascii_alphabetic() || c == '_' {
+            let mut word = String::new();
+            while let Some(&c2) = chars.peek() {
+                if c2.is_ascii_alphabetic() || c2 == '_' {
+                    word.push(c2);
+                    chars.next();
+                } else {
+                    break;
+                }
+            }
+            out.push(word);
+        } else if c.is_ascii_digit() {
+            out.push(c.to_string());
+            chars.next();
+        } else {
+            out.push(c.to_string());
+            chars.next();
+        }
+    }
+    out
+}
+
+impl Tokenizer {
+    pub fn from_vocab(vocab: Vec<String>) -> Tokenizer {
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Tokenizer { vocab, index }
+    }
+
+    /// Load from `artifacts/vocab.json` (written by aot.py).
+    pub fn load(path: &Path) -> Result<Tokenizer> {
+        let payload = parse_file(path)?;
+        let vocab = payload
+            .get("vocab")
+            .as_arr()
+            .ok_or_else(|| anyhow!("vocab.json: missing 'vocab' array"))?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()
+            .context("vocab.json: non-string vocab entry")?;
+        if vocab.len() < NUM_SPECIALS {
+            return Err(anyhow!("vocab.json: fewer than {NUM_SPECIALS} entries"));
+        }
+        Ok(Tokenizer::from_vocab(vocab))
+    }
+
+    /// Golden (text, ids) pairs emitted by python for the parity test.
+    pub fn load_golden(path: &Path) -> Result<Vec<(String, Vec<i32>)>> {
+        let payload = parse_file(path)?;
+        let mut out = Vec::new();
+        if let Some(arr) = payload.get("golden").as_arr() {
+            for g in arr {
+                let text = g.get("text").as_str().unwrap_or_default().to_string();
+                let ids = g
+                    .get("ids")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as i32).collect())
+                    .unwrap_or_default();
+                out.push((text, ids));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        pretokenize(text)
+            .into_iter()
+            .map(|tok| self.index.get(&tok).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut words = Vec::new();
+        for &i in ids {
+            if (i as usize) < NUM_SPECIALS {
+                continue;
+            }
+            match self.vocab.get(i as usize) {
+                Some(w) => words.push(w.as_str()),
+                None => words.push("<unk>"),
+            }
+        }
+        words.join(" ")
+    }
+
+    /// Decode stopping at the first `<eos>` (adaptive-termination output).
+    pub fn decode_until_eos(&self, ids: &[i32]) -> String {
+        let end = ids.iter().position(|&i| i == EOS).unwrap_or(ids.len());
+        self.decode(&ids[..end])
+    }
+
+    pub fn len(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vocab.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let mut vocab: Vec<String> =
+            ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"].iter().map(|s| s.to_string()).collect();
+        for w in ["tom", "has", "apples", ".", "3", "7", "+", "(", ")", "def", "f", "x", ":"] {
+            vocab.push(w.to_string());
+        }
+        Tokenizer::from_vocab(vocab)
+    }
+
+    #[test]
+    fn pretokenize_digits_split() {
+        assert_eq!(pretokenize("42 apples"), vec!["4", "2", "apples"]);
+    }
+
+    #[test]
+    fn pretokenize_punct_and_words() {
+        assert_eq!(
+            pretokenize("f ( x ) : x+1"),
+            vec!["f", "(", "x", ")", ":", "x", "+", "1"]
+        );
+    }
+
+    #[test]
+    fn pretokenize_underscore_words() {
+        assert_eq!(pretokenize("my_var=2"), vec!["my_var", "=", "2"]);
+    }
+
+    #[test]
+    fn encode_known_and_unknown() {
+        let t = toy();
+        let ids = t.encode("tom has 3 bananas");
+        assert_eq!(ids[0], 5); // tom
+        assert_eq!(*ids.last().unwrap(), UNK);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = toy();
+        assert_eq!(t.decode(&[MASK, 5, 6, EOS, 7]), "tom has apples");
+    }
+
+    #[test]
+    fn decode_until_eos_stops() {
+        let t = toy();
+        assert_eq!(t.decode_until_eos(&[5, 6, EOS, 7]), "tom has");
+    }
+
+    #[test]
+    fn roundtrip_known_text() {
+        let t = toy();
+        let text = "tom has 3 apples .";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn out_of_range_id_decodes_unk() {
+        let t = toy();
+        assert_eq!(t.decode(&[9999]), "<unk>");
+    }
+}

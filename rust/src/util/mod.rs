@@ -1,0 +1,43 @@
+//! Std-only substrates: JSON codec, PRNG, stats/bench kernel, thread pool,
+//! mini property-testing framework, logging.
+//!
+//! These exist because the offline build environment has no network: the
+//! crates that would normally provide them (`serde_json`, `rand`, `criterion`,
+//! `rayon`, `proptest`, `env_logger`) are not in the vendored set.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// 0 = quiet, 1 = info, 2 = debug.
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_level() -> u8 {
+    LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 {
+            eprintln!("[wd] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 {
+            eprintln!("[wd:debug] {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,142 @@
+//! Fixed-size thread pool (std-only `tokio`/`rayon` stand-in).
+//!
+//! The serving layer (DESIGN.md §4 item 13) uses this for connection handling
+//! and for running engine workers; jobs are plain boxed closures over an
+//! mpsc channel guarded by a mutex (the classic shared-receiver pool).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                let q = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("wd-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let lock = rx.lock().unwrap();
+                            lock.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                q.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // channel closed -> shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers, queued }
+    }
+
+    /// Submit a job; panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool receiver gone");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close channel; workers drain + exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over items on `threads` threads, preserving order of results.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let pool = ThreadPool::new(threads.max(1));
+    let (tx, rx) = mpsc::channel();
+    let n = items.len();
+    for (i, item) in items.into_iter().enumerate() {
+        let tx = tx.clone();
+        let f = Arc::clone(&f);
+        pool.execute(move || {
+            let r = f(item);
+            let _ = tx.send((i, r));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..50).collect::<Vec<_>>(), 4, |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pending_drains() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..10 {
+            pool.execute(|| thread::sleep(std::time::Duration::from_millis(1)));
+        }
+        while pool.pending() > 0 {
+            thread::yield_now();
+        }
+        assert_eq!(pool.pending(), 0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full bridge: HLO text → PJRT compile → execute with
+//! resident weights, plus the cross-language contracts (tokenizer parity,
+//! golden logits) and the end-to-end semantic invariants (cached-step
+//! exactness, window ≡ full equivalence, strategy quality/cost ordering).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use window_diffusion::coordinator::{GenRequest, MockExec, SeqState, StepExec};
+use window_diffusion::eval::{self, EvalOptions};
+use window_diffusion::runtime::{Engine, EngineCell, Manifest};
+use window_diffusion::strategies::{self, Strategy, WdConfig, WindowDiffusion};
+use window_diffusion::tokenizer::Tokenizer;
+use window_diffusion::util::json::parse_file;
+
+fn artifacts_root() -> PathBuf {
+    std::env::var("WD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| {
+        Manifest::load(&artifacts_root()).expect("run `make artifacts` first")
+    })
+}
+
+/// One shared engine per test binary (compilation is the expensive part).
+fn engine() -> &'static EngineCell {
+    static E: OnceLock<std::sync::Arc<EngineCell>> = OnceLock::new();
+    E.get_or_init(|| {
+        EngineCell::new(Engine::load(manifest(), "dream-sim-base").unwrap())
+    })
+}
+
+fn tokenizer() -> Tokenizer {
+    Tokenizer::load(&manifest().vocab_file).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// cross-language contracts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tokenizer_parity_with_python() {
+    let tok = tokenizer();
+    let golden = Tokenizer::load_golden(&manifest().vocab_file).unwrap();
+    assert!(!golden.is_empty(), "vocab.json has no golden vectors");
+    for (text, ids) in golden {
+        assert_eq!(tok.encode(&text), ids, "parity failure on {text:?}");
+    }
+}
+
+#[test]
+fn golden_full_step_numerics() {
+    // aot.py recorded argmax/confidence/logits of the first full step on a
+    // fixed prompt; the rust runtime must reproduce them through PJRT.
+    let g = parse_file(&artifacts_root().join("golden.json")).unwrap();
+    assert_eq!(g.get("model").as_str(), Some("dream-sim-base"));
+    let prompt: Vec<i32> = g
+        .get("prompt_ids")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    let gen_len = g.get("gen_len").as_usize().unwrap();
+
+    engine().with(|e| {
+        let s = e.model.seqs[0];
+        let sp = e.special;
+        let state = SeqState::new(&prompt, gen_len, s, sp.mask, sp.eos, sp.pad).unwrap();
+        let logits = e.full_step(s, &state.ids, &state.full_valid()).unwrap();
+        let vocab = e.model.arch.vocab;
+
+        // logit row of the first undecoded position (first 8 entries)
+        let row0: Vec<f64> = g
+            .get("logit_row0")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        let p0 = prompt.len();
+        for (i, want) in row0.iter().enumerate() {
+            let got = logits[p0 * vocab + i] as f64;
+            assert!(
+                (got - want).abs() < 2e-3,
+                "logit[{i}]: got {got}, python said {want}"
+            );
+        }
+
+        // argmax parity over the first 16 undecoded positions
+        let argmax: Vec<i64> = g
+            .get("argmax")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        for (k, want) in argmax.iter().enumerate() {
+            let p = p0 + k;
+            let row = &logits[p * vocab..(p + 1) * vocab];
+            let got = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i64;
+            assert_eq!(got, *want, "argmax mismatch at undecoded offset {k}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// step-variant semantics on the real model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_step_exact_after_refresh() {
+    // fwd_cached with caches fresh from fwd_window must reproduce the window
+    // logits at the compute slots (refresh-boundary exactness).
+    engine().with(|e| {
+        let s = e.model.seqs[0];
+        let c = 128;
+        let tok = tokenizer();
+        let prompt = tok.encode("q : compute : ( 3 + 4 ) * 2 = ? a :");
+        let sp = e.special;
+        let state = SeqState::new(&prompt, 96, s, sp.mask, sp.eos, sp.pad).unwrap();
+        let layout = window_diffusion::coordinator::WindowLayout::build(
+            &state, 64, &[64, 128, 192, 256],
+        )
+        .unwrap();
+        assert_eq!(layout.c, c);
+        let (wl, kv) = e
+            .fwd_window(s, c, &layout.ids_padded(&state), &layout.pos_padded(),
+                        &layout.cvalid)
+            .unwrap();
+        let active = state.undecoded_prefix(16);
+        let cs = window_diffusion::coordinator::ComputeSet::build(
+            &state, &layout, &active, &[], &[16, 32, 48, 64, 128, 256],
+        )
+        .unwrap();
+        let (cl, _) = e
+            .fwd_cached(s, c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
+                        &cs.rvalid, &layout.cvalid, &kv)
+            .unwrap();
+        let vocab = e.model.arch.vocab;
+        for (row, &p) in cs.positions.iter().enumerate() {
+            let slot = layout.slot(p).unwrap();
+            for v in 0..vocab {
+                let a = cl[row * vocab + v];
+                let b = wl[slot * vocab + v];
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "pos {p} vocab {v}: cached {a} vs window {b}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn window_equals_full_when_window_covers_everything() {
+    // W_ex = gen region + refresh cadence 1 + a = everything => WD must
+    // reproduce the full baseline token-for-token.
+    let tok = tokenizer();
+    let prompt = tok.encode("q : compute : ( 2 + 5 ) * 2 = ? a :");
+    let gen_len = 48;
+    let mut req = GenRequest::new(prompt, gen_len, 256);
+    req.tokens_per_step = 2;
+    let full = strategies::FullBaseline;
+    let wd = WindowDiffusion::new(WdConfig {
+        w_ex: gen_len,
+        a: gen_len,
+        refresh: 1,
+        cache: true,
+    });
+    let (rf, rw) = engine().with(|e| {
+        (full.generate(e, &req).unwrap(), wd.generate(e, &req).unwrap())
+    });
+    assert_eq!(rf.generated(), rw.generated(), "decode divergence");
+}
+
+#[test]
+fn strategies_all_complete_on_real_model() {
+    let tok = tokenizer();
+    let prompt = tok.encode("q : tom has 4 apples . tom buys 3 more . how many apples does tom have ? a :");
+    for spec in ["full", "window", "window-nocache", "block", "dkv",
+                 "fastdllm-prefix", "fastdllm-dual"] {
+        let strat = strategies::from_name(spec).unwrap();
+        let mut req = GenRequest::new(prompt.clone(), 64, 256);
+        req.tokens_per_step = 2;
+        let r = engine().with(|e| strat.generate(e, &req)).unwrap();
+        assert!(r.state.done(), "{spec} did not finish");
+        assert_eq!(r.tokens_generated(), 64, "{spec} wrong token count");
+    }
+}
+
+#[test]
+fn window_cheaper_than_full_in_token_slots() {
+    let tok = tokenizer();
+    let prompt = tok.encode("q : compute : ( 3 + 4 ) * 2 = ? a :");
+    let mut req = GenRequest::new(prompt, 96, 256);
+    req.tokens_per_step = 2;
+    let (rf, rw) = engine().with(|e| {
+        (
+            strategies::FullBaseline.generate(e, &req).unwrap(),
+            WindowDiffusion::default().generate(e, &req).unwrap(),
+        )
+    });
+    assert!(
+        rw.counts.token_slots * 2 < rf.counts.token_slots,
+        "window {} vs full {}",
+        rw.counts.token_slots,
+        rf.counts.token_slots
+    );
+    // and actually faster end-to-end
+    assert!(rw.wall < rf.wall, "window {:?} vs full {:?}", rw.wall, rf.wall);
+}
+
+#[test]
+fn adaptive_termination_on_real_model() {
+    // the trained model emits <eos> after completing a short answer; with
+    // adaptive on, generation must stop early and stay well under budget
+    let tok = tokenizer();
+    let prompt = tok.encode("q : compute : ( 3 + 4 ) * 2 = ? a :");
+    let mut req = GenRequest::new(prompt, 128, 256);
+    req.adaptive = true;
+    req.tokens_per_step = 2;
+    let r = engine()
+        .with(|e| WindowDiffusion::default().generate(e, &req))
+        .unwrap();
+    assert!(r.state.done());
+    if r.state.eos_pos.is_some() {
+        assert!(r.tokens_generated() < 128);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// eval harness + serving layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eval_harness_on_real_model() {
+    let tok = tokenizer();
+    let instances =
+        eval::load_task(&manifest().tasks_dir, "synth-gsm", "base").unwrap();
+    assert!(instances.len() >= 8);
+    let opts = EvalOptions { n: 2, gen_len: 48, ..Default::default() };
+    let rep = engine().with(|e| {
+        eval::run_eval(e, &strategies::FullBaseline, &tok, &instances, &opts)
+    })
+    .unwrap();
+    assert_eq!(rep.n, 2);
+    assert!(rep.tokens_per_sec() > 0.0);
+}
+
+#[test]
+fn server_end_to_end() {
+    use window_diffusion::metrics::Metrics;
+    use window_diffusion::server::api::AppState;
+    use window_diffusion::server::http::{http_get, http_post};
+    use window_diffusion::server::{serve, ServerConfig};
+
+    // separate engine: the shared one's mutex would serialize with other tests
+    let eng = Engine::load(manifest(), "dream-sim-base").unwrap();
+    let state = std::sync::Arc::new(AppState {
+        engine: EngineCell::new(eng),
+        tokenizer: tokenizer(),
+        metrics: std::sync::Arc::new(Metrics::default()),
+        model_name: "dream-sim-base".into(),
+        default_strategy: "window".into(),
+        default_gen_len: 32,
+        s: 256,
+    });
+    let server = serve(
+        state.clone(),
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_capacity: 8 },
+    )
+    .unwrap();
+    let addr = server.addr.clone();
+
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "{body}");
+
+    let (code, body) = http_post(
+        &addr,
+        "/generate",
+        "{\"prompt\":\"q : compute : ( 1 + 2 ) * 2 = ? a :\",\"gen_len\":32,\"strategy\":\"window\"}",
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = window_diffusion::util::json::parse(&body).unwrap();
+    assert!(j.get("tokens").as_usize().unwrap() > 0);
+    assert!(j.get("tokens_per_sec").as_f64().unwrap() > 0.0);
+
+    let (code, body) = http_get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let m = window_diffusion::util::json::parse(&body).unwrap();
+    assert_eq!(m.get("requests_total").as_i64(), Some(1));
+
+    // bad request path
+    let (code, _) = http_post(&addr, "/generate", "{oops").unwrap();
+    assert_eq!(code, 400);
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// mock-vs-real consistency (the mock is only useful if it mirrors reality)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mock_and_engine_agree_on_interfaces() {
+    let m = MockExec::new(256);
+    assert_eq!(m.c_ladder(256), vec![64, 128, 192, 256]);
+    engine().with(|e| {
+        let exec: &dyn StepExec = e;
+        assert_eq!(exec.c_ladder(256), vec![64, 128, 192, 256]);
+        assert_eq!(exec.r_ladder(256), vec![16, 32, 48, 64, 128, 256]);
+        assert_eq!(exec.special().mask, 1);
+    });
+}

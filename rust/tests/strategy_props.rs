@@ -1,0 +1,183 @@
+//! Property tests over the strategy layer (MockExec — no artifacts needed).
+//!
+//! The mock's confidence field is strictly prefix-local (monotonically
+//! decaying in position), which pins down the expected decode behavior for
+//! *every* strategy: completion, single-assignment, exact output parity
+//! with the full baseline, and the compute-cost ordering the paper's
+//! speedups rest on.
+
+use window_diffusion::coordinator::{GenRequest, MockExec};
+use window_diffusion::strategies::{self, Strategy, WdConfig, WindowDiffusion};
+use window_diffusion::util::prop;
+use window_diffusion::util::rng::Rng;
+
+const SPECS: &[&str] = &[
+    "full",
+    "window",
+    "window-nocache",
+    "block:size=16",
+    "dkv:interval=4",
+    "fastdllm-prefix",
+    "fastdllm-dual",
+];
+
+fn random_req(rng: &mut Rng) -> GenRequest {
+    let prompt_len = 2 + rng.usize_below(12);
+    let gen = 8 + rng.usize_below(88);
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| 5 + (i % 10) as i32).collect();
+    let mut req = GenRequest::new(prompt, gen, 256);
+    req.tokens_per_step = 1 + rng.usize_below(3);
+    req
+}
+
+#[test]
+fn prop_all_strategies_complete_and_assign_once() {
+    prop::check_seeded("complete+once", 0xA11, 24, random_req, |req| {
+        for spec in SPECS {
+            let m = MockExec::new(256);
+            let strat = strategies::from_name(spec).map_err(|e| e.to_string())?;
+            let r = strat.generate(&m, req).map_err(|e| format!("{spec}: {e}"))?;
+            if !r.state.done() {
+                return Err(format!("{spec}: not done"));
+            }
+            if r.tokens_generated() != req.gen_len {
+                return Err(format!("{spec}: {} != {}", r.tokens_generated(), req.gen_len));
+            }
+            // single assignment: every generated position decoded exactly once,
+            // with a step stamp <= total steps
+            for p in req.prompt.len()..req.prompt.len() + req.gen_len {
+                match r.state.decoded_at[p] {
+                    Some(t) if t < r.steps => {}
+                    other => return Err(format!("{spec}: pos {p} stamp {other:?}")),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_strategies_match_full_output_under_prefix_locality() {
+    // the mock's argmax is position-determined and its confidence strictly
+    // front-loaded, so every strategy must emit the identical token sequence
+    prop::check_seeded("output-parity", 0xB22, 16, random_req, |req| {
+        let full = strategies::FullBaseline
+            .generate(&MockExec::new(256), req)
+            .map_err(|e| e.to_string())?;
+        for spec in SPECS {
+            let strat = strategies::from_name(spec).map_err(|e| e.to_string())?;
+            let r = strat
+                .generate(&MockExec::new(256), req)
+                .map_err(|e| format!("{spec}: {e}"))?;
+            if r.generated() != full.generated() {
+                return Err(format!("{spec}: diverged from full baseline"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_cost_ordering() {
+    // paper's Table-2 premise: window <= fastdllm-dual-ish < full in
+    // computed token-slots, for long-enough generations
+    prop::check_seeded("cost-order", 0xC33, 12, |rng| {
+        let mut req = random_req(rng);
+        req.gen_len = 48 + rng.usize_below(48);
+        req.tokens_per_step = 1;
+        req
+    }, |req| {
+        let full = strategies::FullBaseline
+            .generate(&MockExec::new(256), req)
+            .map_err(|e| e.to_string())?;
+        let wd = WindowDiffusion::default()
+            .generate(&MockExec::new(256), req)
+            .map_err(|e| e.to_string())?;
+        if wd.counts.token_slots * 2 >= full.counts.token_slots {
+            return Err(format!(
+                "window {} vs full {}",
+                wd.counts.token_slots, full.counts.token_slots
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_never_slower_than_static_in_steps() {
+    prop::check_seeded("adaptive-steps", 0xD44, 16, |rng| {
+        let mut req = random_req(rng);
+        req.gen_len = 32 + rng.usize_below(64);
+        let eos_at = req.prompt.len() + 4 + rng.usize_below(req.gen_len - 8);
+        (req, eos_at)
+    }, |(req, eos_at)| {
+        let m = MockExec::new(256).with_eos_at(*eos_at);
+        let mut adaptive_req = req.clone();
+        adaptive_req.adaptive = true;
+        let wd = WindowDiffusion::default();
+        let r_static = wd.generate(&MockExec::new(256).with_eos_at(*eos_at), req)
+            .map_err(|e| e.to_string())?;
+        let r_adapt = wd.generate(&m, &adaptive_req).map_err(|e| e.to_string())?;
+        if r_adapt.steps > r_static.steps {
+            return Err(format!("adaptive {} > static {}", r_adapt.steps, r_static.steps));
+        }
+        if r_adapt.state.eos_pos != Some(*eos_at) {
+            return Err(format!("eos not detected at {eos_at}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_config_sweep_completes() {
+    // every (w_ex >= a, refresh, cache) config must terminate
+    prop::check_seeded("wd-config-sweep", 0xE55, 24, |rng| {
+        let a = 1 + rng.usize_below(24);
+        let w_ex = a + rng.usize_below(64);
+        let refresh = 1 + rng.usize_below(40);
+        let cache = rng.f64() < 0.5;
+        let mut req = random_req(rng);
+        req.tokens_per_step = 1 + rng.usize_below(2);
+        (WdConfig { w_ex, a, refresh, cache }, req)
+    }, |(cfg, req)| {
+        let wd = WindowDiffusion::new(cfg.clone());
+        let r = wd.generate(&MockExec::new(256), req).map_err(|e| e.to_string())?;
+        if !r.state.done() {
+            return Err("not done".into());
+        }
+        // cache=false must never hit the cached path
+        if !cfg.cache && r.counts.cached > 0 {
+            return Err("nocache used cached steps".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_strict_order() {
+    prop::check_seeded("block-order", 0xF66, 12, |rng| {
+        let mut req = random_req(rng);
+        req.tokens_per_step = 1;
+        (req, 8 + 8 * rng.usize_below(3))
+    }, |(req, size)| {
+        let r = strategies::BlockDiffusion { size: *size }
+            .generate(&MockExec::new(256), req)
+            .map_err(|e| e.to_string())?;
+        // every block fully decoded before any token of the next block
+        let p0 = req.prompt.len();
+        let blocks = (req.gen_len + size - 1) / size;
+        let mut prev_max = 0usize;
+        for b in 0..blocks {
+            let lo = p0 + b * size;
+            let hi = (lo + size).min(p0 + req.gen_len);
+            let stamps: Vec<usize> =
+                (lo..hi).map(|p| r.state.decoded_at[p].unwrap()).collect();
+            let min = *stamps.iter().min().unwrap();
+            if b > 0 && min < prev_max {
+                return Err(format!("block {b} started at {min} before block {} ended at {prev_max}", b - 1));
+            }
+            prev_max = *stamps.iter().max().unwrap();
+        }
+        Ok(())
+    });
+}
