@@ -1,10 +1,22 @@
-//! End-to-end serving driver (DESIGN.md: the E2E validation example).
+//! End-to-end serving driver + scheduler A/B comparison.
 //!
-//! Boots the full serving stack on a trained sim model, fires concurrent
-//! batched requests from client threads (mixed task types and strategies),
-//! and reports latency percentiles + aggregate throughput — the
-//! "load a small real model and serve batched requests" proof that all
-//! three layers compose. Results are recorded in EXPERIMENTS.md.
+//! Boots the serving stack twice over one shared engine and fires the same
+//! mixed-length concurrent workload at both:
+//!
+//! 1. **worker-per-request** (`direct: true`) — the legacy path: each HTTP
+//!    worker drives one generation to completion; concurrency exists only
+//!    through blind engine-mutex interleaving;
+//! 2. **scheduler** — requests become sessions; a single driver advances
+//!    every in-flight session one diffusion step per quantum (round-robin),
+//!    so short requests are not stuck behind long ones.
+//!
+//! Prints aggregate tokens/sec and latency percentiles for both (overall and
+//! short-requests-only), then demonstrates KV-pool admission control: a
+//! server with a tiny `kv_budget_bytes` answers `429` instead of
+//! overcommitting.
+//!
+//! Runs against the trained sim model when artifacts exist, otherwise falls
+//! back to the deterministic mock model so the comparison runs anywhere.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_batch
@@ -13,9 +25,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use window_diffusion::coordinator::{MockExec, StepExec};
 use window_diffusion::eval;
 use window_diffusion::metrics::Metrics;
 use window_diffusion::runtime::{Engine, EngineCell, Manifest};
+use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::api::AppState;
 use window_diffusion::server::http::{http_get, http_post};
 use window_diffusion::server::{serve, ServerConfig};
@@ -24,81 +38,257 @@ use window_diffusion::util::json::{parse, Json};
 use window_diffusion::util::stats::Summary;
 use window_diffusion::util::threadpool::parallel_map;
 
-fn main() -> anyhow::Result<()> {
-    let n_requests: usize = std::env::var("WD_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
-    let concurrency: usize = std::env::var("WD_CONC").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+const SHORT_GEN: usize = 24;
+const LONG_GEN: usize = 96;
 
-    // -- boot the serving stack ------------------------------------------------
-    let manifest = Manifest::load(&Manifest::default_root())?;
-    let engine = Engine::load(&manifest, "dream-sim-instruct")?;
-    let tok = Tokenizer::load(&manifest.vocab_file)?;
-    let state = Arc::new(AppState {
-        engine: EngineCell::new(engine),
+struct PhaseStats {
+    label: &'static str,
+    wall: f64,
+    tokens: usize,
+    ok: usize,
+    total: usize,
+    all: Vec<f64>,
+    short: Vec<f64>,
+}
+
+fn toy_tokenizer() -> Tokenizer {
+    let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for i in 0..11 {
+        vocab.push(format!("w{i}"));
+    }
+    Tokenizer::from_vocab(vocab)
+}
+
+fn build_state(
+    exec: Arc<dyn StepExec + Send + Sync>,
+    tok: Tokenizer,
+    model_name: &str,
+    sched_cfg: SchedulerConfig,
+    direct: bool,
+) -> Arc<AppState> {
+    let metrics = Arc::new(Metrics::default());
+    let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
+    scheduler.spawn();
+    Arc::new(AppState {
+        exec,
+        scheduler,
         tokenizer: tok,
-        metrics: Arc::new(Metrics::default()),
-        model_name: "dream-sim-instruct".into(),
+        metrics,
+        model_name: model_name.into(),
         default_strategy: "window".into(),
         default_gen_len: 64,
         s: 256,
-    });
+        direct,
+    })
+}
+
+fn run_phase(
+    label: &'static str,
+    state: Arc<AppState>,
+    bodies: &[(String, usize)],
+    concurrency: usize,
+) -> anyhow::Result<PhaseStats> {
     let server = serve(
-        state.clone(),
-        ServerConfig { addr: "127.0.0.1:0".into(), workers: concurrency, queue_capacity: 64 },
+        Arc::clone(&state),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: concurrency.max(2),
+            queue_capacity: 64,
+        },
     )?;
     let addr = server.addr.clone();
-    println!("serving dream-sim-instruct on http://{addr}");
 
-    // -- build a mixed workload from the held-out suites -----------------------
-    let mut bodies = Vec::new();
-    for (i, task) in ["synth-gsm", "synth-mbpp", "synth-he", "synth-math"].iter().cycle()
-        .take(n_requests).enumerate()
-    {
-        let instances = eval::load_task(&manifest.tasks_dir, task, "instruct")?;
-        let inst = &instances[i % instances.len()];
-        let body = Json::obj(vec![
-            ("prompt", Json::str(inst.prompt.clone())),
-            ("gen_len", Json::num(64.0)),
-            ("strategy", Json::str(if i % 4 == 3 { "full" } else { "window" })),
-            ("adaptive", Json::Bool(true)),
-        ]);
-        bodies.push(body.to_string());
-    }
+    // warmup (compile all buckets once so neither phase pays it in-band)
+    let _ = http_post(&addr, "/generate", &bodies[0].0);
 
-    // warmup (compile all buckets once)
-    let _ = http_post(&addr, "/generate", &bodies[0]);
+    // mid-flight introspection probe (scheduler phase shows live sessions)
+    let probe_addr = addr.clone();
+    let probe = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        http_get(&probe_addr, "/sessions").ok()
+    });
 
-    // -- fire concurrently -------------------------------------------------------
     let t0 = Instant::now();
     let addr2 = addr.clone();
-    let results = parallel_map(bodies, concurrency, move |body| {
+    let work: Vec<(String, usize)> = bodies.to_vec();
+    let results = parallel_map(work, concurrency, move |(body, gen_len)| {
         let t = Instant::now();
         let r = http_post(&addr2, "/generate", &body);
-        (t.elapsed().as_secs_f64(), r)
+        (t.elapsed().as_secs_f64(), gen_len, r)
     });
     let wall = t0.elapsed().as_secs_f64();
 
-    // -- report -------------------------------------------------------------------
-    let mut latencies = Vec::new();
-    let mut tokens = 0usize;
-    let mut ok = 0usize;
-    for (lat, resp) in &results {
-        match resp {
-            Ok((200, body)) => {
-                ok += 1;
-                latencies.push(*lat);
-                let j = parse(body).unwrap();
-                tokens += j.get("tokens").as_usize().unwrap_or(0);
-            }
-            other => println!("request failed: {other:?}"),
+    if let Ok(Some((200, body))) = probe.join() {
+        if let Ok(j) = parse(&body) {
+            let live = j.get("sessions").as_arr().map(|a| a.len()).unwrap_or(0);
+            println!("[{label}] mid-flight /sessions: {live} live");
         }
     }
-    let s = Summary::of(&latencies);
-    println!("\n=== serve_batch: {ok}/{} ok, concurrency={concurrency} ===", results.len());
-    println!("wall = {wall:.2}s   aggregate throughput = {:.1} tok/s", tokens as f64 / wall);
-    println!("latency p50 = {:.2}s  p95 = {:.2}s  max = {:.2}s", s.p50, s.p95, s.max);
 
+    let mut stats = PhaseStats {
+        label,
+        wall,
+        tokens: 0,
+        ok: 0,
+        total: results.len(),
+        all: Vec::new(),
+        short: Vec::new(),
+    };
+    for (lat, gen_len, resp) in &results {
+        match resp {
+            Ok((200, body)) => {
+                stats.ok += 1;
+                stats.all.push(*lat);
+                if *gen_len == SHORT_GEN {
+                    stats.short.push(*lat);
+                }
+                let j = parse(body).unwrap();
+                stats.tokens += j.get("tokens").as_usize().unwrap_or(0);
+            }
+            other => println!("[{label}] request failed: {other:?}"),
+        }
+    }
     let (_, metrics_body) = http_get(&addr, "/metrics")?;
-    println!("server metrics: {metrics_body}");
+    println!("[{label}] server metrics: {metrics_body}");
     server.stop();
+    state.scheduler.shutdown();
+    Ok(stats)
+}
+
+/// (p50, p95), tolerating an empty sample set (all requests failed).
+fn pctls(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        (f64::NAN, f64::NAN)
+    } else {
+        let s = Summary::of(xs);
+        (s.p50, s.p95)
+    }
+}
+
+fn print_phase(s: &PhaseStats) {
+    let agg = s.tokens as f64 / s.wall.max(1e-9);
+    let (p50, p95) = pctls(&s.all);
+    let (_, short_p95) = pctls(&s.short);
+    println!(
+        "{:<22} {:>2}/{:<2} ok  wall={:>6.2}s  agg={:>7.1} tok/s  \
+         p50={p50:.2}s p95={p95:.2}s  short-p95={short_p95:.2}s",
+        s.label, s.ok, s.total, s.wall, agg
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize =
+        std::env::var("WD_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let concurrency: usize =
+        std::env::var("WD_CONC").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+
+    // -- boot one shared executor (sim model, or mock without artifacts) -------
+    let (exec, tok, prompts, model_name): (
+        Arc<dyn StepExec + Send + Sync>,
+        Tokenizer,
+        Vec<String>,
+        &'static str,
+    ) = match Manifest::load(&Manifest::default_root()) {
+        Ok(manifest) => {
+            let engine = Engine::load(&manifest, "dream-sim-instruct")?;
+            let tok = Tokenizer::load(&manifest.vocab_file)?;
+            let mut prompts = Vec::new();
+            for (i, task) in ["synth-gsm", "synth-mbpp", "synth-he", "synth-math"]
+                .iter()
+                .cycle()
+                .take(n_requests)
+                .enumerate()
+            {
+                let instances = eval::load_task(&manifest.tasks_dir, task, "instruct")?;
+                prompts.push(instances[i % instances.len()].prompt.clone());
+            }
+            let exec: Arc<dyn StepExec + Send + Sync> = EngineCell::new(engine);
+            (exec, tok, prompts, "dream-sim-instruct")
+        }
+        Err(e) => {
+            eprintln!("[serve_batch] artifacts unavailable ({e}); using the mock model");
+            let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+            (exec, toy_tokenizer(), vec!["w1 w2 w3 w4".to_string(); n_requests], "mock")
+        }
+    };
+
+    // -- mixed workload: alternating short/long, window + full strategies ------
+    let bodies: Vec<(String, usize)> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            let gen_len = if i % 2 == 0 { SHORT_GEN } else { LONG_GEN };
+            let body = Json::obj(vec![
+                ("prompt", Json::str(prompt.clone())),
+                ("gen_len", Json::num(gen_len as f64)),
+                ("strategy", Json::str(if i % 4 == 3 { "full" } else { "window" })),
+                ("adaptive", Json::Bool(false)),
+            ]);
+            (body.to_string(), gen_len)
+        })
+        .collect();
+
+    println!(
+        "=== serve_batch: {n_requests} requests ({SHORT_GEN}/{LONG_GEN} tok mixed), \
+         concurrency={concurrency}, model={model_name} ==="
+    );
+
+    // -- phase 1: legacy worker-per-request ------------------------------------
+    let direct = run_phase(
+        "worker-per-request",
+        build_state(Arc::clone(&exec), tok.clone(), model_name,
+                    SchedulerConfig::default(), true),
+        &bodies,
+        concurrency,
+    )?;
+
+    // -- phase 2: step-level scheduler (round-robin) ---------------------------
+    let sched = run_phase(
+        "scheduler[rr]",
+        build_state(
+            Arc::clone(&exec),
+            tok.clone(),
+            model_name,
+            SchedulerConfig { policy: Policy::RoundRobin, ..Default::default() },
+            false,
+        ),
+        &bodies,
+        concurrency,
+    )?;
+
+    println!("\n--- comparison ---");
+    print_phase(&direct);
+    print_phase(&sched);
+    let agg_d = direct.tokens as f64 / direct.wall.max(1e-9);
+    let agg_s = sched.tokens as f64 / sched.wall.max(1e-9);
+    println!(
+        "scheduler/worker aggregate throughput: {:.2}x, short-p95: {:.2}s -> {:.2}s",
+        agg_s / agg_d.max(1e-9),
+        pctls(&direct.short).1,
+        pctls(&sched.short).1,
+    );
+
+    // -- KV-pool admission control: tiny budget answers 429 --------------------
+    let tiny = build_state(
+        Arc::clone(&exec),
+        tok.clone(),
+        model_name,
+        SchedulerConfig { kv_budget_bytes: 1024, ..Default::default() },
+        false,
+    );
+    let server = serve(
+        Arc::clone(&tiny),
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_capacity: 8 },
+    )?;
+    let (code, body) = http_post(&server.addr, "/generate", &bodies[0].0)?;
+    println!(
+        "\nkv-pool admission with 1 KiB budget: HTTP {code} {}",
+        if code == 429 { "(rejected, as designed)" } else { body.as_str() }
+    );
+    server.stop();
+    tiny.scheduler.shutdown();
     Ok(())
 }

@@ -14,10 +14,13 @@
 //! Quick tour:
 //! * [`runtime`] — PJRT engine, artifact manifest, shape buckets, weights;
 //! * [`coordinator`] — sequence state, dual-window layout, decode policies;
-//! * [`strategies`] — `window` (the paper) + `full`/`block`/`dkv`/`fastdllm-*`;
+//! * [`strategies`] — `window` (the paper) + `full`/`block`/`dkv`/`fastdllm-*`,
+//!   each a resumable step-machine behind the `generate()` compat shim;
+//! * [`scheduler`] — step-level continuous batching: policies, budgeted
+//!   KV-cache pool, session tickets;
 //! * [`eval`] — task suites, graders, accuracy/throughput harness;
 //! * [`analysis`] — Fig. 2/3/4 token-level probes;
-//! * [`server`] — HTTP front end, batcher, worker pool;
+//! * [`server`] — HTTP front end, connection admission, scheduler bridge;
 //! * [`util`] — std-only substrates (JSON, RNG, stats, pool, mini-proptest).
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for
@@ -29,6 +32,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod metrics;
 pub mod runtime;
+pub mod scheduler;
 pub mod server;
 pub mod strategies;
 pub mod tokenizer;

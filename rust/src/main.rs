@@ -16,10 +16,11 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use window_diffusion::analysis;
-use window_diffusion::coordinator::GenRequest;
+use window_diffusion::coordinator::{GenRequest, StepExec};
 use window_diffusion::eval::{self, EvalOptions};
 use window_diffusion::metrics::Metrics;
 use window_diffusion::runtime::{Engine, EngineCell, Manifest};
+use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::{self, api::AppState, ServerConfig};
 use window_diffusion::strategies;
 use window_diffusion::tokenizer::Tokenizer;
@@ -84,22 +85,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (_, engine, tok) = load_engine(args)?;
     let model_name = engine.model.name.clone();
     let s = args.usize_or("s", engine.model.seqs[0]);
+    let exec: Arc<dyn StepExec + Send + Sync> = EngineCell::new(engine);
+    let metrics = Arc::new(Metrics::default());
+    let sched_cfg = SchedulerConfig {
+        policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
+        kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
+        kv_soft_bytes: args.usize_or("kv-soft-mb", 0) * 1024 * 1024,
+        max_sessions: args.usize_or("max-sessions", 64),
+    };
+    let policy_name = sched_cfg.policy.name();
+    let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
+    scheduler.spawn();
     let state = Arc::new(AppState {
-        engine: EngineCell::new(engine),
+        exec,
+        scheduler,
         tokenizer: tok,
-        metrics: Arc::new(Metrics::default()),
+        metrics,
         model_name,
         default_strategy: args.get("strategy").unwrap_or("window").to_string(),
         default_gen_len: args.usize_or("gen-len", 96),
         s,
+        direct: args.flag("direct"),
     });
     let cfg = ServerConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:8787").to_string(),
-        workers: args.usize_or("workers", 2),
+        workers: args.usize_or("workers", 8),
         queue_capacity: args.usize_or("queue", 64),
     };
     let server = server::serve(state, cfg)?;
-    info!("ready on {} — POST /generate, GET /metrics (ctrl-c to stop)", server.addr);
+    info!(
+        "ready on {} — POST /generate, GET /metrics, GET /sessions \
+         (policy={policy_name}; ctrl-c to stop)",
+        server.addr
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -235,6 +253,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
                  [--artifacts DIR] [--strategy SPEC] ...\n\
+                 serve flags: [--policy rr|shortest|deadline] [--kv-budget-mb N] \
+                 [--kv-soft-mb N] [--max-sessions N] [--workers N] [--queue N] \
+                 [--direct]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \
                  window-nocache | block[:size=32] | dkv[:interval=4] | \
                  fastdllm-prefix | fastdllm-dual"

@@ -80,7 +80,9 @@ impl LatencyHistogram {
     }
 }
 
-/// Global serving metrics.
+/// Global serving metrics: request counters + latency histogram, plus the
+/// scheduler gauges (active sessions, KV pool occupancy/evictions/
+/// rejections, aggregate step rate).
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_total: AtomicU64,
@@ -89,6 +91,17 @@ pub struct Metrics {
     pub diffusion_steps: AtomicU64,
     pub queue_depth: AtomicU64,
     pub request_latency: LatencyHistogram,
+    // -- scheduler gauges (owned by scheduler::Scheduler) ---------------------
+    pub active_sessions: AtomicU64,
+    /// Reserved KV pool bytes (admission-control view).
+    pub kv_pool_bytes: AtomicU64,
+    pub kv_pool_evictions: AtomicU64,
+    pub kv_pool_rejections: AtomicU64,
+    /// Submissions refused because `max_sessions` was reached.
+    pub sched_rejections: AtomicU64,
+    pub sched_steps_total: AtomicU64,
+    /// Aggregate diffusion steps per second since boot (f64 bit-pattern).
+    steps_per_second_bits: AtomicU64,
 }
 
 impl Metrics {
@@ -103,6 +116,20 @@ impl Metrics {
         self.request_latency.record(latency);
     }
 
+    /// Single point of truth for the queue-depth gauge (the batcher calls
+    /// this on every submit/pop instead of duplicating the store).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn set_steps_per_second(&self, v: f64) {
+        self.steps_per_second_bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn steps_per_second(&self) -> f64 {
+        f64::from_bits(self.steps_per_second_bits.load(Ordering::Relaxed))
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("requests_total", Json::num(self.requests_total.load(Ordering::Relaxed) as f64)),
@@ -110,6 +137,13 @@ impl Metrics {
             ("tokens_generated", Json::num(self.tokens_generated.load(Ordering::Relaxed) as f64)),
             ("diffusion_steps", Json::num(self.diffusion_steps.load(Ordering::Relaxed) as f64)),
             ("queue_depth", Json::num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            ("active_sessions", Json::num(self.active_sessions.load(Ordering::Relaxed) as f64)),
+            ("kv_pool_bytes", Json::num(self.kv_pool_bytes.load(Ordering::Relaxed) as f64)),
+            ("kv_pool_evictions", Json::num(self.kv_pool_evictions.load(Ordering::Relaxed) as f64)),
+            ("kv_pool_rejections", Json::num(self.kv_pool_rejections.load(Ordering::Relaxed) as f64)),
+            ("sched_rejections", Json::num(self.sched_rejections.load(Ordering::Relaxed) as f64)),
+            ("sched_steps_total", Json::num(self.sched_steps_total.load(Ordering::Relaxed) as f64)),
+            ("steps_per_second", Json::num(self.steps_per_second())),
             ("request_latency", self.request_latency.to_json()),
         ])
     }
@@ -140,5 +174,28 @@ mod tests {
         assert_eq!(j.get("requests_failed").as_i64(), Some(1));
         assert_eq!(j.get("tokens_generated").as_i64(), Some(32));
         assert_eq!(j.get_path(&["request_latency", "count"]).as_i64(), Some(2));
+    }
+
+    #[test]
+    fn scheduler_gauges_export() {
+        let m = Metrics::default();
+        m.active_sessions.store(3, Ordering::Relaxed);
+        m.kv_pool_bytes.store(4096, Ordering::Relaxed);
+        m.kv_pool_evictions.store(2, Ordering::Relaxed);
+        m.set_steps_per_second(12.5);
+        let j = m.to_json();
+        assert_eq!(j.get("active_sessions").as_i64(), Some(3));
+        assert_eq!(j.get("kv_pool_bytes").as_i64(), Some(4096));
+        assert_eq!(j.get("kv_pool_evictions").as_i64(), Some(2));
+        assert_eq!(j.get("steps_per_second").as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn queue_depth_helper_sets_gauge() {
+        let m = Metrics::default();
+        m.set_queue_depth(7);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 7);
+        m.set_queue_depth(0);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,0 +1,173 @@
+//! Budgeted KV-cache pool: admission control over phase-cache residency.
+//!
+//! Every admitted session holds a *reservation* sized to a conservative
+//! upper bound of its phase-cache footprint (the KV bytes of the largest
+//! `c` bucket its layouts can ever occupy — see [`KvPool::estimate_bytes`]).
+//! Admission fails once reservations would exceed the byte budget, so the
+//! aggregate possible residency can never exceed it: the serving layer maps
+//! that to `429` rather than letting concurrent sessions blow the budget.
+//!
+//! Separately the pool books *evictions*: the scheduler may drop idle
+//! sessions' resident caches (forcing a refresh on their next step) to keep
+//! the *actual* resident bytes under a soft limit — see
+//! `Scheduler::maybe_evict`. Reservations are not returned by eviction
+//! (the session may re-cache at any step); only completion releases them.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::runtime::{buckets, Arch};
+
+/// Admission failure: granting `need` more bytes would exceed the budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    pub need: usize,
+    pub budget: usize,
+    pub in_use: usize,
+}
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kv pool exhausted: need {} bytes, {} of {} in use",
+            self.need, self.in_use, self.budget
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+pub struct KvPool {
+    /// Byte budget; 0 = unlimited (admission always succeeds).
+    budget: usize,
+    reserved: HashMap<u64, usize>,
+    reserved_total: usize,
+    evictions: u64,
+    rejections: u64,
+}
+
+impl KvPool {
+    pub fn new(budget: usize) -> KvPool {
+        KvPool {
+            budget,
+            reserved: HashMap::new(),
+            reserved_total: 0,
+            evictions: 0,
+            rejections: 0,
+        }
+    }
+
+    /// Conservative peak phase-cache bytes for a request spanning
+    /// `total_len` positions (prompt + gen): the KV bytes (K + V, f32, all
+    /// layers) of the smallest `c` bucket covering the whole live region —
+    /// no layout a strategy builds can occupy a larger bucket.
+    pub fn estimate_bytes(arch: &Arch, c_ladder: &[usize], total_len: usize) -> usize {
+        let c = buckets::pick(c_ladder, total_len)
+            .unwrap_or_else(|_| c_ladder.last().copied().unwrap_or(total_len));
+        2 * 4 * arch.kv_elems(c)
+    }
+
+    /// Reserve `bytes` for session `id`; `Err` (and a booked rejection) when
+    /// the budget would be exceeded.
+    pub fn try_reserve(&mut self, id: u64, bytes: usize) -> Result<(), PoolExhausted> {
+        if self.budget > 0 && self.reserved_total + bytes > self.budget {
+            self.rejections += 1;
+            return Err(PoolExhausted {
+                need: bytes,
+                budget: self.budget,
+                in_use: self.reserved_total,
+            });
+        }
+        self.reserved_total += bytes;
+        self.reserved.insert(id, bytes);
+        Ok(())
+    }
+
+    /// Release a session's reservation (idempotent).
+    pub fn release(&mut self, id: u64) {
+        if let Some(bytes) = self.reserved.remove(&id) {
+            self.reserved_total -= bytes;
+        }
+    }
+
+    /// Book one cache eviction (the scheduler dropped a resident cache).
+    pub fn note_eviction(&mut self) {
+        self.evictions += 1;
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved_total
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.reserved.len()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn rejections(&self) -> u64 {
+        self.rejections
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_accounting() {
+        let mut p = KvPool::new(1000);
+        p.try_reserve(1, 400).unwrap();
+        p.try_reserve(2, 400).unwrap();
+        assert_eq!(p.reserved_bytes(), 800);
+        assert_eq!(p.sessions(), 2);
+        p.release(1);
+        assert_eq!(p.reserved_bytes(), 400);
+        p.release(1); // idempotent
+        assert_eq!(p.reserved_bytes(), 400);
+    }
+
+    #[test]
+    fn rejects_past_budget_and_books_it() {
+        let mut p = KvPool::new(1000);
+        p.try_reserve(1, 800).unwrap();
+        let err = p.try_reserve(2, 300).unwrap_err();
+        assert_eq!(err.in_use, 800);
+        assert_eq!(err.budget, 1000);
+        assert_eq!(p.rejections(), 1);
+        // budget never exceeded
+        assert_eq!(p.reserved_bytes(), 800);
+        // frees make room again
+        p.release(1);
+        p.try_reserve(2, 300).unwrap();
+    }
+
+    #[test]
+    fn zero_budget_is_unlimited() {
+        let mut p = KvPool::new(0);
+        for i in 0..64 {
+            p.try_reserve(i, usize::MAX / 128).unwrap();
+        }
+        assert_eq!(p.rejections(), 0);
+    }
+
+    #[test]
+    fn estimate_covers_any_layout_bucket() {
+        let arch = Arch { d: 8, n_layers: 2, n_heads: 2, dh: 4, ffn: 16, vocab: 16,
+                          max_seq: 256 };
+        let ladder = [64, 128, 192, 256];
+        // total_len 100 -> bucket 128 -> 2 tensors * 4B * L*c*H*Dh
+        let est = KvPool::estimate_bytes(&arch, &ladder, 100);
+        assert_eq!(est, 2 * 4 * 2 * 128 * 2 * 4);
+        // beyond the ladder: falls back to the largest bucket
+        let est_big = KvPool::estimate_bytes(&arch, &ladder, 10_000);
+        assert_eq!(est_big, 2 * 4 * 2 * 256 * 2 * 4);
+    }
+}

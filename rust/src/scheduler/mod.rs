@@ -1,0 +1,529 @@
+//! Step-level continuous-batching scheduler — the DLM analogue of
+//! continuous batching (cf. dLLM-Cache / FlashDLM serving, PAPERS.md).
+//!
+//! The legacy serving path ran each request to completion inside one HTTP
+//! worker; concurrent requests interleaved only by blind [`EngineCell`]
+//! mutex contention — no fairness, no preemption, no accounting of KV
+//! residency. Here a single driver owns every in-flight [`Session`] and
+//! advances **one session by one diffusion step per quantum** through the
+//! shared engine:
+//!
+//! * [`policy`] — who gets the next quantum (round-robin baseline,
+//!   shortest-remaining-steps, deadline-aware);
+//! * [`kvpool`] — byte-budgeted admission control over phase-cache
+//!   residency (reject, don't overcommit), plus soft-limit eviction of idle
+//!   sessions' caches;
+//! * [`Ticket`] — completion handle the serving layer blocks on.
+//!
+//! Steps run with the scheduler's run-queue lock **released**, so
+//! submission and introspection (`GET /sessions`) stay responsive while the
+//! engine is busy. `tick()` is public and synchronous: tests drive the
+//! scheduler deterministically without the background thread.
+//!
+//! [`EngineCell`]: crate::runtime::EngineCell
+
+pub mod kvpool;
+pub mod policy;
+
+pub use kvpool::{KvPool, PoolExhausted};
+pub use policy::Policy;
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{GenRequest, GenResult, StepExec};
+use crate::metrics::Metrics;
+use crate::strategies::{self, Session, StepOutcome};
+
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    /// KV pool byte budget (admission control); 0 = unlimited.
+    pub kv_budget_bytes: usize,
+    /// Soft residency limit: above this, idle sessions' caches are evicted
+    /// (they refresh on their next quantum). 0 = never evict.
+    pub kv_soft_bytes: usize,
+    /// In-flight session cap; 0 = unlimited.
+    pub max_sessions: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: Policy::RoundRobin,
+            kv_budget_bytes: 0,
+            kv_soft_bytes: 0,
+            max_sessions: 64,
+        }
+    }
+}
+
+/// One generation to schedule.
+pub struct SubmitSpec {
+    /// Strategy spec (see `strategies::from_name`).
+    pub strategy: String,
+    pub req: GenRequest,
+    /// Latency target for the deadline policy (relative to submission).
+    pub deadline: Option<Duration>,
+}
+
+/// Why a submission was refused. `Pool` and `Saturated` are backpressure
+/// (HTTP 429); `Start` is a bad request or engine failure.
+pub enum SubmitError {
+    Pool(PoolExhausted),
+    Saturated { active: usize, max: usize },
+    Start(anyhow::Error),
+}
+
+impl SubmitError {
+    pub fn is_backpressure(&self) -> bool {
+        matches!(self, SubmitError::Pool(_) | SubmitError::Saturated { .. })
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Pool(p) => write!(f, "{p}"),
+            SubmitError::Saturated { active, max } => {
+                write!(f, "scheduler saturated: {active}/{max} sessions in flight")
+            }
+            SubmitError::Start(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// Completion handle: fulfilled by the scheduler when the session finishes
+/// (or fails, or the scheduler shuts down).
+pub struct Ticket {
+    pub id: u64,
+    inner: Arc<TicketInner>,
+}
+
+struct TicketInner {
+    slot: Mutex<Option<Result<GenResult>>>,
+    cv: Condvar,
+}
+
+impl TicketInner {
+    fn fulfill(&self, r: Result<GenResult>) {
+        let mut slot = self.slot.lock().unwrap();
+        *slot = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+impl Ticket {
+    /// Block until the session completes. Bounded in practice by the
+    /// request's step cap — every session terminates or errors.
+    pub fn wait(self) -> Result<GenResult> {
+        let mut slot = self.inner.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.inner.cv.wait(slot).unwrap();
+        }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.inner.slot.lock().unwrap().is_some()
+    }
+}
+
+/// Introspection row for `GET /sessions`.
+#[derive(Debug, Clone)]
+pub struct SessionInfo {
+    pub id: u64,
+    pub strategy: String,
+    pub steps: usize,
+    pub remaining: usize,
+    pub gen_len: usize,
+    pub age_secs: f64,
+    pub kv_bytes: usize,
+    pub deadline_in_secs: Option<f64>,
+}
+
+struct Active {
+    id: u64,
+    seq: u64,
+    session: Session,
+    ticket: Arc<TicketInner>,
+    deadline: Option<Instant>,
+    /// Quantum counter at the session's last step (LRU for eviction).
+    last_stepped: u64,
+}
+
+struct Inner {
+    run: VecDeque<Active>,
+    /// Sessions currently out of `run` being stepped (lock released). They
+    /// still count toward `max_sessions` and the active-sessions gauge.
+    stepping: usize,
+    pool: KvPool,
+    quantum: u64,
+}
+
+pub struct Scheduler {
+    exec: Arc<dyn StepExec + Send + Sync>,
+    cfg: SchedulerConfig,
+    inner: Mutex<Inner>,
+    work: Condvar,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    started: Instant,
+    steps_total: AtomicU64,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    pub fn new(exec: Arc<dyn StepExec + Send + Sync>, cfg: SchedulerConfig,
+               metrics: Arc<Metrics>) -> Arc<Scheduler> {
+        let pool = KvPool::new(cfg.kv_budget_bytes);
+        Arc::new(Scheduler {
+            exec,
+            cfg,
+            inner: Mutex::new(Inner { run: VecDeque::new(), stepping: 0, pool, quantum: 0 }),
+            work: Condvar::new(),
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            metrics,
+            started: Instant::now(),
+            steps_total: AtomicU64::new(0),
+            handle: Mutex::new(None),
+        })
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.cfg.policy
+    }
+
+    /// Admit a session. Cheap: builds the sequence state but runs no
+    /// forward pass. Backpressure errors map to HTTP 429.
+    pub fn submit(&self, spec: SubmitSpec) -> Result<Ticket, SubmitError> {
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(SubmitError::Start(anyhow!("scheduler is shut down")));
+        }
+        let strategy = strategies::from_name(&spec.strategy).map_err(SubmitError::Start)?;
+        let est = KvPool::estimate_bytes(
+            &self.exec.arch(),
+            &self.exec.c_ladder(spec.req.s),
+            spec.req.prompt.len() + spec.req.gen_len,
+        );
+        let session = strategy
+            .start(self.exec.as_ref(), &spec.req)
+            .map_err(SubmitError::Start)?;
+
+        let mut inner = self.inner.lock().unwrap();
+        // re-check under the lock: shutdown() drains under this same lock,
+        // so a session admitted here is either refused or guaranteed to be
+        // drained — never stranded with an unfulfilled ticket
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(SubmitError::Start(anyhow!("scheduler is shut down")));
+        }
+        let in_flight = inner.run.len() + inner.stepping;
+        if self.cfg.max_sessions > 0 && in_flight >= self.cfg.max_sessions {
+            self.metrics.sched_rejections.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Saturated {
+                active: in_flight,
+                max: self.cfg.max_sessions,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = inner.pool.try_reserve(id, est) {
+            self.update_gauges(&inner);
+            return Err(SubmitError::Pool(e));
+        }
+        let ticket_inner = Arc::new(TicketInner {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        inner.run.push_back(Active {
+            id,
+            seq: id,
+            session,
+            ticket: Arc::clone(&ticket_inner),
+            deadline: spec.deadline.map(|d| Instant::now() + d),
+            last_stepped: 0,
+        });
+        self.update_gauges(&inner);
+        // notify while holding the lock: the driver cannot miss the wakeup
+        self.work.notify_one();
+        drop(inner);
+        Ok(Ticket { id, inner: ticket_inner })
+    }
+
+    /// Advance one quantum: pick a session per policy, step it once with the
+    /// run-queue lock released, book the outcome. Returns the stepped
+    /// session's id, or `None` when nothing is runnable.
+    pub fn tick(&self) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.run.is_empty() {
+            return None;
+        }
+        let views: Vec<policy::PickView> = inner
+            .run
+            .iter()
+            .map(|a| policy::PickView {
+                remaining: a.session.remaining(),
+                deadline: a.deadline,
+                seq: a.seq,
+            })
+            .collect();
+        let idx = policy::pick(self.cfg.policy, &views);
+        let mut active = inner.run.remove(idx).expect("picked index in range");
+        inner.stepping += 1;
+        inner.quantum += 1;
+        active.last_stepped = inner.quantum;
+        drop(inner);
+
+        let outcome = active.session.step(self.exec.as_ref());
+        let id = active.id;
+        self.steps_total.fetch_add(1, Ordering::Relaxed);
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.stepping -= 1;
+        match outcome {
+            Ok(StepOutcome::Running) => inner.run.push_back(active),
+            Ok(StepOutcome::Finished) => {
+                inner.pool.release(id);
+                let Active { session, ticket, .. } = active;
+                let result = session.into_result();
+                self.metrics.record_request(
+                    result.wall,
+                    result.tokens_generated(),
+                    result.steps,
+                    true,
+                );
+                ticket.fulfill(Ok(result));
+            }
+            Err(e) => {
+                inner.pool.release(id);
+                self.metrics.record_request(Duration::ZERO, 0, 0, false);
+                active.ticket.fulfill(Err(e));
+            }
+        }
+        self.maybe_evict(&mut inner, id);
+        self.update_gauges(&inner);
+        Some(id)
+    }
+
+    /// Soft-limit eviction: drop resident caches (LRU first, sparing the
+    /// just-stepped session while possible) until under `kv_soft_bytes`.
+    /// Evicted sessions refresh on their next quantum — correctness is
+    /// preserved, the cost is one extra refresh forward each.
+    fn maybe_evict(&self, inner: &mut Inner, just_stepped: u64) {
+        let soft = self.cfg.kv_soft_bytes;
+        if soft == 0 {
+            return;
+        }
+        let mut resident: usize = inner.run.iter().map(|a| a.session.cache_bytes()).sum();
+        while resident > soft {
+            let mut victim: Option<(usize, u64)> = None;
+            for (i, a) in inner.run.iter().enumerate() {
+                if a.session.cache_bytes() == 0 || a.id == just_stepped {
+                    continue;
+                }
+                if victim.map_or(true, |(_, ls)| a.last_stepped < ls) {
+                    victim = Some((i, a.last_stepped));
+                }
+            }
+            let idx = match victim {
+                Some((i, _)) => i,
+                // last resort: the just-stepped session's own cache
+                None => match inner.run.iter().position(|a| a.session.cache_bytes() > 0) {
+                    Some(i) => i,
+                    None => break,
+                },
+            };
+            let a = &mut inner.run[idx];
+            let freed = a.session.cache_bytes();
+            a.session.evict_cache();
+            inner.pool.note_eviction();
+            resident = resident.saturating_sub(freed);
+        }
+    }
+
+    fn update_gauges(&self, inner: &Inner) {
+        let m = &self.metrics;
+        m.active_sessions
+            .store((inner.run.len() + inner.stepping) as u64, Ordering::Relaxed);
+        m.kv_pool_bytes.store(inner.pool.reserved_bytes() as u64, Ordering::Relaxed);
+        m.kv_pool_evictions.store(inner.pool.evictions(), Ordering::Relaxed);
+        m.kv_pool_rejections.store(inner.pool.rejections(), Ordering::Relaxed);
+        let total = self.steps_total.load(Ordering::Relaxed);
+        m.sched_steps_total.store(total, Ordering::Relaxed);
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            m.set_steps_per_second(total as f64 / secs);
+        }
+    }
+
+    /// Snapshot of in-flight sessions (`GET /sessions`). A session that is
+    /// mid-step (lock released) is absent from the listing for that instant
+    /// but still counts toward `active_sessions` and `max_sessions`.
+    pub fn sessions(&self) -> Vec<SessionInfo> {
+        let inner = self.inner.lock().unwrap();
+        let now = Instant::now();
+        inner
+            .run
+            .iter()
+            .map(|a| SessionInfo {
+                id: a.id,
+                strategy: a.session.strategy.clone(),
+                steps: a.session.steps(),
+                remaining: a.session.remaining(),
+                gen_len: a.session.req().gen_len,
+                age_secs: a.session.age().as_secs_f64(),
+                kv_bytes: a.session.cache_bytes(),
+                deadline_in_secs: a.deadline.map(|d| {
+                    if d > now {
+                        (d - now).as_secs_f64()
+                    } else {
+                        -((now - d).as_secs_f64())
+                    }
+                }),
+            })
+            .collect()
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.run.len() + inner.stepping
+    }
+
+    /// Start the background driver ("wd-sched"). Call once; `shutdown` joins
+    /// it. Without `spawn`, drive the scheduler manually via `tick` (tests).
+    pub fn spawn(self: &Arc<Self>) {
+        let me = Arc::clone(self);
+        let h = std::thread::Builder::new()
+            .name("wd-sched".into())
+            .spawn(move || me.run_loop())
+            .expect("spawn scheduler thread");
+        *self.handle.lock().unwrap() = Some(h);
+    }
+
+    fn run_loop(&self) {
+        while !self.stop.load(Ordering::Relaxed) {
+            if self.tick().is_some() {
+                continue;
+            }
+            let inner = self.inner.lock().unwrap();
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            if !inner.run.is_empty() {
+                continue; // raced a submit between tick() and the lock
+            }
+            // short timeout backstop in case a wakeup is ever lost
+            let _ = self
+                .work
+                .wait_timeout(inner, Duration::from_millis(50))
+                .unwrap();
+        }
+    }
+
+    /// Stop the driver (if spawned) and fail any still-queued sessions.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.work.notify_all();
+        let handle = self.handle.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        let mut inner = self.inner.lock().unwrap();
+        while let Some(active) = inner.run.pop_front() {
+            inner.pool.release(active.id);
+            // book the failure like any other error path so /metrics stays
+            // consistent with the 500s the waiting clients observe
+            self.metrics.record_request(Duration::ZERO, 0, 0, false);
+            active.ticket.fulfill(Err(anyhow!("scheduler shut down")));
+        }
+        self.update_gauges(&inner);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+
+    fn mock_sched(cfg: SchedulerConfig) -> Arc<Scheduler> {
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+        Scheduler::new(exec, cfg, Arc::new(Metrics::default()))
+    }
+
+    fn spec(strategy: &str, gen_len: usize) -> SubmitSpec {
+        SubmitSpec {
+            strategy: strategy.into(),
+            req: GenRequest::new(vec![10, 11, 12, 13], gen_len, 256),
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn submit_tick_finish() {
+        let s = mock_sched(SchedulerConfig::default());
+        let ticket = s.submit(spec("full", 16)).unwrap();
+        assert_eq!(s.active_sessions(), 1);
+        while s.tick().is_some() {}
+        assert!(ticket.is_ready());
+        let r = ticket.wait().unwrap();
+        assert_eq!(r.tokens_generated(), 16);
+        assert_eq!(s.active_sessions(), 0);
+    }
+
+    #[test]
+    fn unknown_strategy_is_start_error() {
+        let s = mock_sched(SchedulerConfig::default());
+        match s.submit(spec("bogus", 8)) {
+            Err(e) => assert!(!e.is_backpressure()),
+            Ok(_) => panic!("bogus strategy admitted"),
+        }
+    }
+
+    #[test]
+    fn saturation_rejects_with_backpressure() {
+        let cfg = SchedulerConfig { max_sessions: 1, ..Default::default() };
+        let s = mock_sched(cfg);
+        let _t1 = s.submit(spec("full", 16)).unwrap();
+        match s.submit(spec("full", 16)) {
+            Err(e) => assert!(e.is_backpressure()),
+            Ok(_) => panic!("second session admitted past max_sessions=1"),
+        }
+        // draining frees the slot
+        while s.tick().is_some() {}
+        let _t2 = s.submit(spec("full", 16)).unwrap();
+    }
+
+    #[test]
+    fn background_driver_completes_requests() {
+        let s = mock_sched(SchedulerConfig::default());
+        s.spawn();
+        let t = s.submit(spec("window", 32)).unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.tokens_generated(), 32);
+        s.shutdown();
+        // post-shutdown submits are refused
+        assert!(s.submit(spec("full", 8)).is_err());
+    }
+
+    #[test]
+    fn shutdown_fails_queued_sessions() {
+        let s = mock_sched(SchedulerConfig::default());
+        let t = s.submit(spec("full", 16)).unwrap();
+        s.shutdown(); // no driver spawned; session still queued
+        assert!(t.wait().is_err());
+    }
+}

@@ -2,27 +2,35 @@
 //!
 //! Endpoints:
 //! * `POST /generate` — `{prompt, gen_len?, strategy?, adaptive?,
-//!   tokens_per_step?}` → `{text, tokens, steps, latency_secs, tokens_per_sec,
-//!   strategy, eos}`
-//! * `GET /metrics`   — serving counters + latency histogram
+//!   tokens_per_step?, deadline_ms?}` → `{text, tokens, steps, latency_secs,
+//!   tokens_per_sec, strategy, eos}`; `429` on scheduler/KV-pool
+//!   backpressure
+//! * `GET /sessions`  — in-flight scheduler sessions (id, strategy, steps,
+//!   remaining, kv_bytes, age)
+//! * `GET /metrics`   — serving counters + scheduler gauges + latency
+//!   histogram
 //! * `GET /healthz`   — liveness
-//! * `GET /info`      — model / config / ladder info
+//! * `GET /info`      — model / config / scheduling info
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use super::http::{Request, Response};
 use crate::coordinator::{GenRequest, StepExec};
 use crate::metrics::Metrics;
-use crate::runtime::EngineCell;
-use crate::strategies::{self, Strategy};
+use crate::scheduler::{Scheduler, SubmitSpec};
+use crate::strategies;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{parse, Json};
 
 /// Server-wide shared state.
 pub struct AppState {
-    pub engine: Arc<EngineCell>,
+    /// Step executor shared by the scheduler and the direct path
+    /// (`EngineCell` in production, `MockExec` in tests).
+    pub exec: Arc<dyn StepExec + Send + Sync>,
+    pub scheduler: Arc<Scheduler>,
     pub tokenizer: Tokenizer,
     pub metrics: Arc<Metrics>,
     pub model_name: String,
@@ -30,6 +38,10 @@ pub struct AppState {
     pub default_strategy: String,
     pub default_gen_len: usize,
     pub s: usize,
+    /// Legacy worker-per-request path: each HTTP worker drives its own
+    /// generation to completion on the shared engine, bypassing the
+    /// scheduler. Kept for A/B benchmarking (`examples/serve_batch.rs`).
+    pub direct: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -39,6 +51,8 @@ pub struct GenerateParams {
     pub strategy: String,
     pub adaptive: bool,
     pub tokens_per_step: usize,
+    /// Latency target for the deadline scheduling policy.
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenerateParams {
@@ -61,33 +75,101 @@ impl GenerateParams {
                 .to_string(),
             adaptive: j.get("adaptive").as_bool().unwrap_or(true),
             tokens_per_step: j.get("tokens_per_step").as_usize().unwrap_or(2),
+            deadline_ms: j.get("deadline_ms").as_usize().map(|v| v as u64),
         })
     }
 }
 
-/// Execute one generation request against the shared engine.
-pub fn handle_generate(st: &AppState, params: &GenerateParams) -> Result<Json> {
-    let strategy: Box<dyn Strategy> = strategies::from_name(&params.strategy)?;
+/// Execute one generation request: submit to the scheduler and wait for the
+/// ticket (or, on the legacy `direct` path, run to completion inline).
+pub fn handle_generate(st: &AppState, params: &GenerateParams) -> Response {
+    // normalize/validate the strategy spec up front -> 400 on bad specs
+    let strategy = match strategies::from_name(&params.strategy) {
+        Ok(s) => s,
+        Err(e) => return Response::json(400, err_json(&e.to_string())),
+    };
+    let strategy_name = strategy.name();
     let prompt_ids = st.tokenizer.encode(&params.prompt);
     if prompt_ids.is_empty() {
-        return Err(anyhow!("prompt tokenized to nothing"));
+        return Response::json(400, err_json("prompt tokenized to nothing"));
     }
     let mut req = GenRequest::new(prompt_ids, params.gen_len, st.s);
     req.adaptive = params.adaptive;
     req.tokens_per_step = params.tokens_per_step;
-    let exec: &dyn StepExec = st.engine.as_ref();
-    let result = strategy.generate(exec, &req)?;
+
+    let result = if st.direct {
+        // legacy worker-per-request: this thread owns the whole generation
+        match strategy.generate(st.exec.as_ref(), &req) {
+            Ok(r) => {
+                st.metrics.record_request(r.wall, r.tokens_generated(), r.steps, true);
+                r
+            }
+            Err(e) => {
+                st.metrics.record_request(Duration::ZERO, 0, 0, false);
+                return Response::json(500, err_json(&e.to_string()));
+            }
+        }
+    } else {
+        let spec = SubmitSpec {
+            strategy: params.strategy.clone(),
+            req,
+            deadline: params.deadline_ms.map(Duration::from_millis),
+        };
+        let ticket = match st.scheduler.submit(spec) {
+            Ok(t) => t,
+            Err(e) if e.is_backpressure() => {
+                return Response::json(429, err_json(&e.to_string()));
+            }
+            Err(e) => return Response::json(400, err_json(&e.to_string())),
+        };
+        // scheduler records request metrics on completion
+        match ticket.wait() {
+            Ok(r) => r,
+            Err(e) => return Response::json(500, err_json(&e.to_string())),
+        }
+    };
+
     let gen_ids = result.generated();
-    st.metrics.record_request(result.wall, gen_ids.len(), result.steps, true);
-    Ok(Json::obj(vec![
-        ("text", Json::str(st.tokenizer.decode(&gen_ids))),
-        ("tokens", Json::num(gen_ids.len() as f64)),
-        ("steps", Json::num(result.steps as f64)),
-        ("latency_secs", Json::num(result.wall.as_secs_f64())),
-        ("tokens_per_sec", Json::num(result.tokens_per_sec())),
-        ("strategy", Json::str(strategy.name())),
-        ("eos", Json::Bool(result.state.eos_pos.is_some())),
-    ]))
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("text", Json::str(st.tokenizer.decode(&gen_ids))),
+            ("tokens", Json::num(gen_ids.len() as f64)),
+            ("steps", Json::num(result.steps as f64)),
+            ("latency_secs", Json::num(result.wall.as_secs_f64())),
+            ("tokens_per_sec", Json::num(result.tokens_per_sec())),
+            ("strategy", Json::str(strategy_name)),
+            ("eos", Json::Bool(result.state.eos_pos.is_some())),
+        ])
+        .to_string(),
+    )
+}
+
+fn sessions_json(st: &AppState) -> Json {
+    let rows = st
+        .scheduler
+        .sessions()
+        .into_iter()
+        .map(|s| {
+            let mut fields = vec![
+                ("id", Json::num(s.id as f64)),
+                ("strategy", Json::str(s.strategy)),
+                ("steps", Json::num(s.steps as f64)),
+                ("remaining", Json::num(s.remaining as f64)),
+                ("gen_len", Json::num(s.gen_len as f64)),
+                ("age_secs", Json::num(s.age_secs)),
+                ("kv_bytes", Json::num(s.kv_bytes as f64)),
+            ];
+            if let Some(d) = s.deadline_in_secs {
+                fields.push(("deadline_in_secs", Json::num(d)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("policy", Json::str(st.scheduler.policy().name())),
+        ("sessions", Json::Arr(rows)),
+    ])
 }
 
 /// Route a parsed HTTP request (pure: no I/O — unit-testable).
@@ -95,6 +177,7 @@ pub fn route(st: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#.to_string()),
         ("GET", "/metrics") => Response::json(200, st.metrics.to_json().to_string()),
+        ("GET", "/sessions") => Response::json(200, sessions_json(st).to_string()),
         ("GET", "/info") => Response::json(
             200,
             Json::obj(vec![
@@ -102,6 +185,8 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("default_strategy", Json::str(st.default_strategy.clone())),
                 ("s", Json::num(st.s as f64)),
                 ("vocab", Json::num(st.tokenizer.len() as f64)),
+                ("policy", Json::str(st.scheduler.policy().name())),
+                ("direct", Json::Bool(st.direct)),
             ])
             .to_string(),
         ),
@@ -118,14 +203,7 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 Ok(p) => p,
                 Err(e) => return Response::json(400, err_json(&e.to_string())),
             };
-            match handle_generate(st, &params) {
-                Ok(j) => Response::json(200, j.to_string()),
-                Err(e) => {
-                    st.metrics
-                        .record_request(std::time::Duration::ZERO, 0, 0, false);
-                    Response::json(500, err_json(&e.to_string()))
-                }
-            }
+            handle_generate(st, &params)
         }
         ("POST", _) | ("GET", _) => Response::json(404, err_json("no such endpoint")),
         _ => Response::json(405, err_json("method not allowed")),
@@ -139,25 +217,107 @@ fn err_json(msg: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::MockExec;
+    use crate::scheduler::SchedulerConfig;
 
-    // route() needs an AppState with a real EngineCell; the pure pieces
-    // (param parsing, error paths) are tested here, the full path in
-    // tests/integration.rs against artifacts.
+    /// Full AppState over the mock executor — the whole route surface is
+    /// testable without artifacts.
+    fn mock_state(direct: bool) -> Arc<AppState> {
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+        let metrics = Arc::new(Metrics::default());
+        let scheduler = Scheduler::new(
+            Arc::clone(&exec),
+            SchedulerConfig::default(),
+            Arc::clone(&metrics),
+        );
+        scheduler.spawn();
+        let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for i in 0..11 {
+            vocab.push(format!("w{i}"));
+        }
+        Arc::new(AppState {
+            exec,
+            scheduler,
+            tokenizer: Tokenizer::from_vocab(vocab),
+            metrics,
+            model_name: "mock".into(),
+            default_strategy: "window".into(),
+            default_gen_len: 32,
+            s: 256,
+            direct,
+        })
+    }
 
-    fn fake_state_json() -> Json {
-        parse(r#"{"prompt":"q : 1 + 1 ? a :","gen_len":32,"strategy":"window"}"#).unwrap()
+    fn post(st: &AppState, body: &str) -> Response {
+        route(
+            st,
+            &Request {
+                method: "POST".into(),
+                path: "/generate".into(),
+                body: body.as_bytes().to_vec(),
+            },
+        )
+    }
+
+    fn get(st: &AppState, path: &str) -> Response {
+        route(st, &Request { method: "GET".into(), path: path.into(), body: vec![] })
+    }
+
+    #[test]
+    fn generate_roundtrip_through_scheduler() {
+        let st = mock_state(false);
+        let resp = post(&st, r#"{"prompt":"w1 w2 w3","gen_len":16,"strategy":"window"}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("tokens").as_usize(), Some(16));
+        assert_eq!(j.get("strategy").as_str(), Some("window[w64/a16/r32]"));
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(mj.get("requests_total").as_i64(), Some(1));
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn generate_roundtrip_direct_path() {
+        let st = mock_state(true);
+        let resp = post(&st, r#"{"prompt":"w1 w2","gen_len":8,"strategy":"full"}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn bad_strategy_is_400() {
+        let st = mock_state(false);
+        let resp = post(&st, r#"{"prompt":"w1","strategy":"bogus"}"#);
+        assert_eq!(resp.status, 400);
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn sessions_route_lists_policy() {
+        let st = mock_state(false);
+        let resp = get(&st, "/sessions");
+        assert_eq!(resp.status, 200);
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("policy").as_str(), Some("round-robin"));
+        assert!(j.get("sessions").as_arr().is_some());
+        st.scheduler.shutdown();
     }
 
     #[test]
     fn params_parse_defaults() {
-        let j = fake_state_json();
-        // can't build AppState without an engine; test from_json field logic
-        // via a stub using unsafe zeroed state is UB — instead assert on the
-        // json accessors the parser relies on.
-        assert_eq!(j.get("prompt").as_str().unwrap(), "q : 1 + 1 ? a :");
-        assert_eq!(j.get("gen_len").as_usize(), Some(32));
-        assert_eq!(j.get("strategy").as_str(), Some("window"));
-        assert_eq!(j.get("adaptive").as_bool(), None); // default applies
+        let st = mock_state(false);
+        let j = parse(r#"{"prompt":"q : 1 + 1 ? a :","gen_len":32,"strategy":"window"}"#).unwrap();
+        let p = GenerateParams::from_json(&j, &st).unwrap();
+        assert_eq!(p.gen_len, 32);
+        assert_eq!(p.strategy, "window");
+        assert!(p.adaptive); // default applies
+        assert_eq!(p.tokens_per_step, 2);
+        assert_eq!(p.deadline_ms, None);
+        st.scheduler.shutdown();
     }
 
     #[test]

@@ -1,15 +1,19 @@
-//! Dynamic request batcher + router.
+//! Bounded connection-admission queue for the HTTP front end.
 //!
-//! With batch-1 AOT executables (DESIGN.md §3.1), batching is *temporal*:
-//! requests are admitted into a bounded queue and dispatched to engine
-//! workers that interleave at diffusion-step granularity through the shared
-//! [`EngineCell`] mutex — the DLM analogue of continuous batching, where a
-//! long decode does not block short ones for its whole duration, only for
-//! one step. The router tracks queue depth and applies backpressure (429)
-//! past the admission limit.
+//! The batcher admits *connections*, not generations: a worker pops a
+//! connection, parses the request and hands the generation to the
+//! [`scheduler`](crate::scheduler), which interleaves all in-flight
+//! sessions at diffusion-step granularity (the DLM analogue of continuous
+//! batching). The queue's job is purely front-door backpressure: bounded
+//! depth, 429 past the admission limit, clean drain on shutdown.
+//!
+//! Shutdown contract: `close()` flips the closed flag and wakes every
+//! worker *while holding the queue lock*, so no wakeup can slip between the
+//! flag store and the notify; any job admitted (`submit` returned `Ok`)
+//! before the close is guaranteed to be drained by `next()` — jobs are
+//! never silently dropped (see `close_racing_submits_loses_no_job`).
 
 use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::metrics::Metrics;
@@ -50,8 +54,10 @@ impl<T> Batcher<T> {
             return Err(job);
         }
         inner.queue.push_back(job);
-        self.metrics.queue_depth.store(inner.queue.len() as u64, Ordering::Relaxed);
-        drop(inner);
+        self.metrics.set_queue_depth(inner.queue.len());
+        // notify under the lock: a close() racing this submit cannot slot
+        // its notify_all between our push and our wakeup, so the admitted
+        // job is always visible to the woken worker
         self.available.notify_one();
         Ok(())
     }
@@ -61,7 +67,7 @@ impl<T> Batcher<T> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(job) = inner.queue.pop_front() {
-                self.metrics.queue_depth.store(inner.queue.len() as u64, Ordering::Relaxed);
+                self.metrics.set_queue_depth(inner.queue.len());
                 return Some(job);
             }
             if inner.closed {
@@ -71,9 +77,16 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Reject new submissions and wake every worker; already-admitted jobs
+    /// are still drained by `next()` before it returns `None`. The flag
+    /// store and the broadcast happen under one lock acquisition so a job
+    /// submitted concurrently is either admitted-and-drained or refused —
+    /// never silently dropped.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
         self.available.notify_all();
+        drop(inner);
     }
 
     pub fn depth(&self) -> usize {
@@ -84,7 +97,7 @@ impl<T> Batcher<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn batcher(cap: usize) -> Arc<Batcher<u32>> {
         Batcher::new(cap, Arc::new(Metrics::default()))
@@ -143,5 +156,58 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(seen.load(Ordering::SeqCst), 200);
+    }
+
+    /// Regression test for the shutdown race: jobs submitted concurrently
+    /// with `close()` must either be refused (`Err`, caller gets the job
+    /// back for a 429) or drained by a worker — an accepted job must never
+    /// vanish. Run several rounds to give the race real opportunities.
+    #[test]
+    fn close_racing_submits_loses_no_job() {
+        for round in 0..20 {
+            let b = batcher(10_000);
+            let processed = Arc::new(AtomicUsize::new(0));
+            let mut workers = Vec::new();
+            for _ in 0..3 {
+                let b2 = Arc::clone(&b);
+                let p2 = Arc::clone(&processed);
+                workers.push(std::thread::spawn(move || {
+                    while b2.next().is_some() {
+                        p2.fetch_add(1, Ordering::SeqCst);
+                    }
+                }));
+            }
+            let accepted = Arc::new(AtomicUsize::new(0));
+            let mut submitters = Vec::new();
+            for t in 0..4 {
+                let b2 = Arc::clone(&b);
+                let a2 = Arc::clone(&accepted);
+                submitters.push(std::thread::spawn(move || {
+                    for i in 0..50u64 {
+                        if b2.submit(Job { id: t * 1000 + i, payload: i as u32 }).is_ok() {
+                            a2.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }));
+            }
+            // close somewhere in the middle of the submit storm
+            if round % 2 == 0 {
+                std::thread::yield_now();
+            }
+            b.close();
+            for h in submitters {
+                h.join().unwrap();
+            }
+            for h in workers {
+                h.join().unwrap();
+            }
+            assert_eq!(
+                processed.load(Ordering::SeqCst),
+                accepted.load(Ordering::SeqCst),
+                "round {round}: accepted jobs were dropped"
+            );
+            // and the queue rejects everything after close
+            assert!(b.submit(Job { id: 9999, payload: 0 }).is_err());
+        }
     }
 }

@@ -1,9 +1,18 @@
 //! Serving layer: HTTP front end, bounded admission queue (backpressure),
-//! worker pool over the shared engine (DESIGN.md §4 item 13).
+//! worker pool for connection handling (DESIGN.md §"Serving at scale").
 //!
-//! Request flow: accept thread → `Batcher` (bounded queue, 429 past
-//! capacity) → worker pool → strategy over [`EngineCell`] (requests
-//! interleave at diffusion-step granularity) → JSON response.
+//! Request flow: accept thread → `Batcher` (bounded *connection* queue, 429
+//! past capacity) → worker parses the request → [`scheduler`] session
+//! (`POST /generate` submits and waits on a ticket; the scheduler advances
+//! all in-flight sessions one diffusion step per quantum with fairness, KV
+//! budgeting and preemption-by-quantum) → JSON response.
+//!
+//! Workers therefore only block on I/O and ticket waits — the engine is
+//! driven by the scheduler, not by whichever worker got a connection first.
+//! The legacy worker-per-request path survives behind `AppState::direct`
+//! for A/B comparison.
+//!
+//! [`scheduler`]: crate::scheduler
 
 pub mod api;
 pub mod batcher;
@@ -29,7 +38,9 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:8787".into(), workers: 2, queue_capacity: 64 }
+        // workers only parse requests and park on scheduler tickets, so they
+        // are cheap; enough of them keeps many sessions in flight at once
+        ServerConfig { addr: "127.0.0.1:8787".into(), workers: 8, queue_capacity: 64 }
     }
 }
 

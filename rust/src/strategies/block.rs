@@ -8,17 +8,77 @@
 //! the whole block is decoded — exactly the constrained update order the
 //! paper criticizes (and why its Instruct-model accuracy collapses at L=16).
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
+use super::machine::{Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{GenRequest, GenResult, SeqState, StepCounts, StepExec,
-                         WindowLayout};
+use crate::coordinator::{GenRequest, StepExec, WindowLayout};
 
 pub struct BlockDiffusion {
     pub size: usize,
+}
+
+/// Continuation state: the current block's bounds, held fixed until every
+/// position below `block_end` is decoded (legacy inner-loop semantics — the
+/// bounds do NOT track a live-region shrink mid-block).
+struct BlockMachine {
+    size: usize,
+    vocab: usize,
+    schedule: DecodeSchedule,
+    c_ladder: Vec<usize>,
+    cur_block: Option<(usize, usize)>,
+}
+
+impl StepMachine for BlockMachine {
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+        if core.state.done() {
+            return Ok(StepOutcome::Finished);
+        }
+        core.cap_guard()?;
+        // keep the block while anything below its end is undecoded,
+        // otherwise advance to the frontier's block
+        let (block_start, block_end) = match self.cur_block {
+            Some((bs, be)) if core.state.undecoded().iter().any(|&p| p < be) => (bs, be),
+            _ => {
+                let frontier = core.state.frontier().expect("not done");
+                let bs = core.state.prompt_len
+                    + ((frontier - core.state.prompt_len) / self.size) * self.size;
+                let be = (bs + self.size).min(core.state.live_end());
+                self.cur_block = Some((bs, be));
+                (bs, be)
+            }
+        };
+        // attention sees only [0, block_end): prefix + current block
+        let positions: Vec<usize> = (0..block_end).collect();
+        let layout = WindowLayout::from_positions(&core.state, positions, &self.c_ladder)?;
+        let (logits, _kv) = exec.window(
+            core.req.s,
+            layout.c,
+            &layout.ids_padded(&core.state),
+            &layout.pos_padded(),
+            &layout.cvalid,
+        )?;
+        core.counts.window += 1;
+        core.counts.token_slots += layout.c;
+        let block_cands: Vec<usize> = core
+            .state
+            .undecoded()
+            .into_iter()
+            .filter(|&p| p >= block_start && p < block_end)
+            .collect();
+        let cands = candidates(block_cands.iter().map(|&p| {
+            let slot = layout.slot(p).expect("block pos in layout");
+            (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
+        }));
+        let picked = select_top_k(cands, self.schedule.at(core.step));
+        if picked.is_empty() {
+            return Err(anyhow!("no block candidates at step {}", core.step));
+        }
+        commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+        core.step += 1;
+        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
+    }
 }
 
 impl Strategy for BlockDiffusion {
@@ -26,66 +86,17 @@ impl Strategy for BlockDiffusion {
         format!("block[{}]", self.size)
     }
 
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session> {
         assert!(self.size >= 1);
-        let sp = exec.special();
-        let vocab = exec.arch().vocab;
-        let c_ladder = exec.c_ladder(req.s);
-        let mut state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask,
-                                      sp.eos, sp.pad)?;
-        let schedule = DecodeSchedule::fixed(req.tokens_per_step);
-        let mut counts = StepCounts::default();
-        let t0 = Instant::now();
-        let mut step = 0usize;
-
-        while !state.done() {
-            if step >= req.step_cap() {
-                return Err(anyhow!("step cap {} exceeded", req.step_cap()));
-            }
-            // current block: starts at the frontier, rounded to block grid
-            let frontier = state.frontier().expect("not done");
-            let block_start = state.prompt_len
-                + ((frontier - state.prompt_len) / self.size) * self.size;
-            let block_end = (block_start + self.size).min(state.live_end());
-
-            // decode the whole block before moving on
-            while state.undecoded().iter().any(|&p| p < block_end) {
-                if step >= req.step_cap() {
-                    return Err(anyhow!("step cap {} exceeded", req.step_cap()));
-                }
-                // attention sees only [0, block_end): prefix + current block
-                let positions: Vec<usize> = (0..block_end).collect();
-                let layout = WindowLayout::from_positions(&state, positions, &c_ladder)?;
-                let (logits, _kv) = exec.window(
-                    req.s,
-                    layout.c,
-                    &layout.ids_padded(&state),
-                    &layout.pos_padded(),
-                    &layout.cvalid,
-                )?;
-                counts.window += 1;
-                counts.token_slots += layout.c;
-                let block_cands: Vec<usize> = state
-                    .undecoded()
-                    .into_iter()
-                    .filter(|&p| p >= block_start && p < block_end)
-                    .collect();
-                let cands = candidates(block_cands.iter().map(|&p| {
-                    let slot = layout.slot(p).expect("block pos in layout");
-                    (p, &logits[slot * vocab..(slot + 1) * vocab])
-                }));
-                let picked = select_top_k(cands, schedule.at(step));
-                if picked.is_empty() {
-                    return Err(anyhow!("no block candidates at step {step}"));
-                }
-                commit(&mut state, &picked, step, req.adaptive)?;
-                step += 1;
-                if state.done() {
-                    break;
-                }
-            }
-        }
-        Ok(GenResult { state, steps: step, counts, wall: t0.elapsed() })
+        let core = SessionCore::new(exec, req)?;
+        let machine = BlockMachine {
+            size: self.size,
+            vocab: exec.arch().vocab,
+            schedule: DecodeSchedule::fixed(req.tokens_per_step),
+            c_ladder: exec.c_ladder(req.s),
+            cur_block: None,
+        };
+        Ok(Session::new(self.name(), core, Box::new(machine)))
     }
 }
 

@@ -10,20 +10,140 @@
 //! plus tokens decoded since the refresh (delayed cache write), reusing KV
 //! for the rest.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
+use super::machine::{kv_slot_bytes, Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{
-    ComputeSet, GenRequest, GenResult, SeqState, StepCounts, StepExec, WindowLayout,
-};
-use crate::runtime::buckets;
+use crate::coordinator::{ComputeSet, GenRequest, StepExec, WindowLayout};
+use crate::runtime::{buckets, KvCache};
 
 pub struct DkvCache {
     /// Refresh interval (paper: 4 on Dream, 8 on LLaDA).
     pub interval: usize,
+}
+
+/// Continuation state: the live-region layout (rebuilt when EOS shrinks it)
+/// plus the delayed-write cache and its refresh stamp.
+struct DkvState {
+    layout: WindowLayout,
+    live_end: usize,
+    kv: Option<KvCache>,
+    refresh_step: usize, // decodes since here are uncached
+}
+
+struct DkvMachine {
+    interval: usize,
+    vocab: usize,
+    schedule: DecodeSchedule,
+    c_ladder: Vec<usize>,
+    r_ladder: Vec<usize>,
+    kv_slot_bytes: usize,
+    cur: Option<DkvState>,
+}
+
+impl StepMachine for DkvMachine {
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+        if core.state.done() {
+            return Ok(StepOutcome::Finished);
+        }
+        core.cap_guard()?;
+        // at most one rebuild / forced-refresh retry is ever needed per
+        // quantum; 3 attempts is one of safety margin
+        for _attempt in 0..3 {
+            let rebuild = match &self.cur {
+                None => true,
+                // EOS shrank the region -> rebuild
+                Some(st) => st.live_end != core.state.live_end(),
+            };
+            if rebuild {
+                let positions: Vec<usize> = (0..core.state.live_end()).collect();
+                let layout = WindowLayout::from_positions(&core.state, positions, &self.c_ladder)?;
+                self.cur = Some(DkvState {
+                    layout,
+                    live_end: core.state.live_end(),
+                    kv: None,
+                    refresh_step: core.step,
+                });
+            }
+            let st = self.cur.as_mut().unwrap();
+            let undecoded = core.state.undecoded();
+            let do_refresh = st.kv.is_none() || (core.step - st.refresh_step) >= self.interval;
+
+            let picked = if do_refresh {
+                let (logits, fresh) = exec.window(
+                    core.req.s,
+                    st.layout.c,
+                    &st.layout.ids_padded(&core.state),
+                    &st.layout.pos_padded(),
+                    &st.layout.cvalid,
+                )?;
+                core.counts.window += 1;
+                core.counts.token_slots += st.layout.c;
+                st.kv = Some(fresh);
+                st.refresh_step = core.step;
+                let cands = candidates(undecoded.iter().map(|&p| {
+                    let slot = st.layout.slot(p).expect("undecoded in layout");
+                    (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
+                }));
+                select_top_k(cands, self.schedule.at(core.step))
+            } else {
+                // compute = undecoded + decoded-after-refresh (delayed write)
+                let recent = core.state.decoded_since(st.refresh_step);
+                let cs = match ComputeSet::build(&core.state, &st.layout, &undecoded,
+                                                 &recent, &self.r_ladder) {
+                    Ok(cs) if buckets::pick(&self.r_ladder, cs.positions.len()).is_ok()
+                        && cs.r <= st.layout.c =>
+                    {
+                        cs
+                    }
+                    _ => {
+                        st.kv = None; // force refresh on the next attempt
+                        continue;
+                    }
+                };
+                let cache = st.kv.as_ref().unwrap();
+                let (logits, new_kv) = exec.cached(
+                    core.req.s, st.layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
+                    &cs.rvalid, &st.layout.cvalid, cache,
+                )?;
+                core.counts.cached += 1;
+                core.counts.token_slots += cs.r;
+                st.kv = Some(new_kv);
+                let cands = candidates(
+                    cs.positions[..cs.n_active]
+                        .iter()
+                        .copied()
+                        .enumerate()
+                        .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
+                );
+                select_top_k(cands, self.schedule.at(core.step))
+            };
+
+            if picked.is_empty() {
+                return Err(anyhow!("no candidates at step {}", core.step));
+            }
+            commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+            core.step += 1;
+            return Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running });
+        }
+        Err(anyhow!("dkv made no progress at step {}", core.step))
+    }
+
+    fn cache_bytes(&self) -> usize {
+        self.cur
+            .as_ref()
+            .and_then(|st| st.kv.as_ref())
+            .map(|kv| kv.c * self.kv_slot_bytes)
+            .unwrap_or(0)
+    }
+
+    fn evict_cache(&mut self) {
+        // dropping only the KV (not the layout) forces a refresh next step
+        if let Some(st) = self.cur.as_mut() {
+            st.kv = None;
+        }
+    }
 }
 
 impl Strategy for DkvCache {
@@ -31,95 +151,19 @@ impl Strategy for DkvCache {
         format!("dkv[i{}]", self.interval)
     }
 
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session> {
         assert!(self.interval >= 1);
-        let sp = exec.special();
-        let vocab = exec.arch().vocab;
-        let c_ladder = exec.c_ladder(req.s);
-        let r_ladder = exec.r_ladder(req.s);
-        let mut state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask,
-                                      sp.eos, sp.pad)?;
-        let schedule = DecodeSchedule::fixed(req.tokens_per_step);
-        let mut counts = StepCounts::default();
-        let t0 = Instant::now();
-        let mut step = 0usize;
-
-        'outer: while !state.done() {
-            // (re)build the layout over the live region (shrinks after EOS)
-            let positions: Vec<usize> = (0..state.live_end()).collect();
-            let layout = WindowLayout::from_positions(&state, positions, &c_ladder)?;
-            let live_end = state.live_end();
-            let mut kv = None;
-            let mut refresh_step = step; // decodes since here are uncached
-
-            while !state.done() {
-                if step >= req.step_cap() {
-                    return Err(anyhow!("step cap {} exceeded", req.step_cap()));
-                }
-                if state.live_end() != live_end {
-                    continue 'outer; // EOS shrank the region -> rebuild
-                }
-                let undecoded = state.undecoded();
-                let do_refresh = kv.is_none() || (step - refresh_step) >= self.interval;
-
-                let picked = if do_refresh {
-                    let (logits, fresh) = exec.window(
-                        req.s,
-                        layout.c,
-                        &layout.ids_padded(&state),
-                        &layout.pos_padded(),
-                        &layout.cvalid,
-                    )?;
-                    counts.window += 1;
-                    counts.token_slots += layout.c;
-                    kv = Some(fresh);
-                    refresh_step = step;
-                    let cands = candidates(undecoded.iter().map(|&p| {
-                        let slot = layout.slot(p).expect("undecoded in layout");
-                        (p, &logits[slot * vocab..(slot + 1) * vocab])
-                    }));
-                    select_top_k(cands, schedule.at(step))
-                } else {
-                    // compute = undecoded + decoded-after-refresh (delayed write)
-                    let recent = state.decoded_since(refresh_step);
-                    let cs = match ComputeSet::build(&state, &layout, &undecoded,
-                                                     &recent, &r_ladder) {
-                        Ok(cs) if buckets::pick(&r_ladder, cs.positions.len()).is_ok()
-                            && cs.r <= layout.c =>
-                        {
-                            cs
-                        }
-                        _ => {
-                            kv = None; // force refresh next iteration
-                            continue;
-                        }
-                    };
-                    let cache = kv.as_ref().unwrap();
-                    let (logits, new_kv) = exec.cached(
-                        req.s, layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
-                        &cs.rvalid, &layout.cvalid, cache,
-                    )?;
-                    counts.cached += 1;
-                    counts.token_slots += cs.r;
-                    kv = Some(new_kv);
-                    let cands = candidates(
-                        cs.positions[..cs.n_active]
-                            .iter()
-                            .copied()
-                            .enumerate()
-                            .map(|(row, p)| (p, &logits[row * vocab..(row + 1) * vocab])),
-                    );
-                    select_top_k(cands, schedule.at(step))
-                };
-
-                if picked.is_empty() {
-                    return Err(anyhow!("no candidates at step {step}"));
-                }
-                commit(&mut state, &picked, step, req.adaptive)?;
-                step += 1;
-            }
-        }
-        Ok(GenResult { state, steps: step, counts, wall: t0.elapsed() })
+        let core = SessionCore::new(exec, req)?;
+        let machine = DkvMachine {
+            interval: self.interval,
+            vocab: exec.arch().vocab,
+            schedule: DecodeSchedule::fixed(req.tokens_per_step),
+            c_ladder: exec.c_ladder(req.s),
+            r_ladder: exec.r_ladder(req.s),
+            kv_slot_bytes: kv_slot_bytes(&exec.arch()),
+            cur: None,
+        };
+        Ok(Session::new(self.name(), core, Box::new(machine)))
     }
 }
 

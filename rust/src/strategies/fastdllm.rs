@@ -11,16 +11,13 @@
 //! drops to 23.8) and the block-boundary refresh still touches the full
 //! sequence.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
+use super::machine::{kv_slot_bytes, Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{
-    ComputeSet, GenRequest, GenResult, SeqState, StepCounts, StepExec, WindowLayout,
-};
-use crate::runtime::buckets;
+use crate::coordinator::{ComputeSet, GenRequest, StepExec, WindowLayout};
+use crate::runtime::{buckets, KvCache};
 
 pub struct FastDllmPrefix {
     pub block: usize,
@@ -30,91 +27,139 @@ pub struct FastDllmDual {
     pub block: usize,
 }
 
-/// Shared block-walk skeleton; `dual` selects the compute-set rule.
-fn generate_blockwise(exec: &dyn StepExec, req: &GenRequest, block: usize,
-                      dual: bool) -> Result<GenResult> {
-    assert!(block >= 1);
-    let sp = exec.special();
-    let vocab = exec.arch().vocab;
-    let c_ladder = exec.c_ladder(req.s);
-    let r_ladder = exec.r_ladder(req.s);
-    let mut state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask,
-                                  sp.eos, sp.pad)?;
-    let schedule = DecodeSchedule::fixed(req.tokens_per_step);
-    let mut counts = StepCounts::default();
-    let t0 = Instant::now();
-    let mut step = 0usize;
+/// Continuation state between a block-boundary refresh and the block's
+/// normal steps. Dropped (forcing a fresh refresh) when the block completes,
+/// the live region shrinks, or the compute set overflows the buckets.
+struct FdPhase {
+    block_start: usize,
+    block_end: usize,
+    live_end: usize,
+    layout: WindowLayout,
+    kv: KvCache,
+    block_decoded: Vec<usize>,
+}
 
-    while !state.done() {
-        if step >= req.step_cap() {
-            return Err(anyhow!("step cap {} exceeded", req.step_cap()));
-        }
-        let frontier = state.frontier().expect("not done");
-        let block_start = state.prompt_len
-            + ((frontier - state.prompt_len) / block) * block;
-        let block_end = (block_start + block).min(state.live_end());
-        let live_end = state.live_end();
+/// Shared block-walk machine; `dual` selects the compute-set rule.
+struct FastDllmMachine {
+    block: usize,
+    dual: bool,
+    vocab: usize,
+    schedule: DecodeSchedule,
+    c_ladder: Vec<usize>,
+    r_ladder: Vec<usize>,
+    kv_slot_bytes: usize,
+    phase: Option<FdPhase>,
+}
 
-        // -- block-boundary refresh over the whole live sequence ------------
+impl FastDllmMachine {
+    /// Block-boundary refresh over the whole live sequence: one committed
+    /// step, then the new phase is installed.
+    fn refresh_step(&mut self, core: &mut SessionCore, exec: &dyn StepExec)
+                    -> Result<StepOutcome> {
+        let frontier = core.state.frontier().expect("not done");
+        let block_start = core.state.prompt_len
+            + ((frontier - core.state.prompt_len) / self.block) * self.block;
+        let live_end = core.state.live_end();
+        let block_end = (block_start + self.block).min(live_end);
         let positions: Vec<usize> = (0..live_end).collect();
-        let layout = WindowLayout::from_positions(&state, positions, &c_ladder)?;
-        let (logits, mut kv) = exec.window(
-            req.s,
+        let layout = WindowLayout::from_positions(&core.state, positions, &self.c_ladder)?;
+        let (logits, kv) = exec.window(
+            core.req.s,
             layout.c,
-            &layout.ids_padded(&state),
+            &layout.ids_padded(&core.state),
             &layout.pos_padded(),
             &layout.cvalid,
         )?;
-        counts.window += 1;
-        counts.token_slots += layout.c;
-        let in_block = |p: &usize| *p >= block_start && *p < block_end;
-        let block_cands: Vec<usize> =
-            state.undecoded().into_iter().filter(in_block).collect();
+        core.counts.window += 1;
+        core.counts.token_slots += layout.c;
+        let block_cands: Vec<usize> = core
+            .state
+            .undecoded()
+            .into_iter()
+            .filter(|&p| p >= block_start && p < block_end)
+            .collect();
         let cands = candidates(block_cands.iter().map(|&p| {
             let slot = layout.slot(p).expect("in layout");
-            (p, &logits[slot * vocab..(slot + 1) * vocab])
+            (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
         }));
-        let picked = select_top_k(cands, schedule.at(step));
+        let picked = select_top_k(cands, self.schedule.at(core.step));
         if picked.is_empty() {
-            return Err(anyhow!("no candidates at refresh step {step}"));
+            return Err(anyhow!("no candidates at refresh step {}", core.step));
         }
-        commit(&mut state, &picked, step, req.adaptive)?;
-        let mut block_decoded: Vec<usize> = picked.iter().map(|c| c.pos).collect();
-        step += 1;
+        commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+        let block_decoded: Vec<usize> = picked.iter().map(|c| c.pos).collect();
+        core.step += 1;
+        self.phase = Some(FdPhase {
+            block_start,
+            block_end,
+            live_end,
+            layout,
+            kv,
+            block_decoded,
+        });
+        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
+    }
+}
 
-        // -- normal steps until the block is fully decoded -------------------
-        while state.undecoded().iter().any(in_block) {
-            if step >= req.step_cap() {
-                return Err(anyhow!("step cap {} exceeded", req.step_cap()));
+impl StepMachine for FastDllmMachine {
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+        if core.state.done() {
+            return Ok(StepOutcome::Finished);
+        }
+        core.cap_guard()?;
+        // a dropped phase resolves to a refresh, which always commits; two
+        // attempts suffice, 3 is one of safety margin
+        for _attempt in 0..3 {
+            let stale = match &self.phase {
+                None => true,
+                Some(ph) => {
+                    let block_done = !core
+                        .state
+                        .undecoded()
+                        .iter()
+                        .any(|&p| p >= ph.block_start && p < ph.block_end);
+                    // EOS shrank the region -> rebuild at a fresh boundary
+                    block_done || core.state.live_end() != ph.live_end
+                }
+            };
+            if stale {
+                self.phase = None;
+                return self.refresh_step(core, exec);
             }
-            if state.live_end() != live_end {
-                break; // EOS shrank the region; rebuild at next block loop
-            }
+            // -- normal step within the current block ------------------------
+            let ph = self.phase.as_mut().unwrap();
+            let in_block = |p: &usize| *p >= ph.block_start && *p < ph.block_end;
             let block_undecoded: Vec<usize> =
-                state.undecoded().into_iter().filter(in_block).collect();
+                core.state.undecoded().into_iter().filter(in_block).collect();
             // compute set:
             //   prefix-cache: block ∪ all masked suffix (+ in-block decodes)
             //   dual-cache:   block only (+ in-block decodes)
             let mut active = block_undecoded.clone();
-            if !dual {
-                active.extend(state.undecoded().into_iter().filter(|&p| p >= block_end));
+            if !self.dual {
+                active.extend(
+                    core.state.undecoded().into_iter().filter(|&p| p >= ph.block_end),
+                );
             }
-            let cs = match ComputeSet::build(&state, &layout, &active,
-                                             &block_decoded, &r_ladder) {
-                Ok(cs) if cs.r <= layout.c
-                    && buckets::pick(&r_ladder, cs.positions.len()).is_ok() =>
+            let cs = match ComputeSet::build(&core.state, &ph.layout, &active,
+                                             &ph.block_decoded, &self.r_ladder) {
+                Ok(cs) if cs.r <= ph.layout.c
+                    && buckets::pick(&self.r_ladder, cs.positions.len()).is_ok() =>
                 {
                     cs
                 }
-                _ => break, // overflow -> fall back to a fresh block refresh
+                _ => {
+                    // overflow -> fall back to a fresh block refresh
+                    self.phase = None;
+                    continue;
+                }
             };
             let (logits, new_kv) = exec.cached(
-                req.s, layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
-                &cs.rvalid, &layout.cvalid, &kv,
+                core.req.s, ph.layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
+                &cs.rvalid, &ph.layout.cvalid, &ph.kv,
             )?;
-            counts.cached += 1;
-            counts.token_slots += cs.r;
-            kv = new_kv;
+            core.counts.cached += 1;
+            core.counts.token_slots += cs.r;
+            ph.kv = new_kv;
             // decode only within the block (block_undecoded is a prefix of
             // the compute positions by construction)
             let cands = candidates(
@@ -122,26 +167,56 @@ fn generate_blockwise(exec: &dyn StepExec, req: &GenRequest, block: usize,
                     .iter()
                     .copied()
                     .enumerate()
-                    .map(|(row, p)| (p, &logits[row * vocab..(row + 1) * vocab])),
+                    .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
             );
-            let picked = select_top_k(cands, schedule.at(step));
+            let picked = select_top_k(cands, self.schedule.at(core.step));
             if picked.is_empty() {
-                return Err(anyhow!("no block candidates at step {step}"));
+                return Err(anyhow!("no block candidates at step {}", core.step));
             }
-            commit(&mut state, &picked, step, req.adaptive)?;
-            block_decoded.extend(picked.iter().map(|c| c.pos));
-            step += 1;
+            commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+            ph.block_decoded.extend(picked.iter().map(|c| c.pos));
+            core.step += 1;
+            return Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running });
         }
+        Err(anyhow!("fastdllm made no progress at step {}", core.step))
     }
-    Ok(GenResult { state, steps: step, counts, wall: t0.elapsed() })
+
+    fn cache_bytes(&self) -> usize {
+        self.phase
+            .as_ref()
+            .map(|ph| ph.kv.c * self.kv_slot_bytes)
+            .unwrap_or(0)
+    }
+
+    fn evict_cache(&mut self) {
+        // dropping the phase forces a block-boundary refresh next step
+        self.phase = None;
+    }
+}
+
+fn start_blockwise(exec: &dyn StepExec, req: &GenRequest, name: String, block: usize,
+                   dual: bool) -> Result<Session> {
+    assert!(block >= 1);
+    let core = SessionCore::new(exec, req)?;
+    let machine = FastDllmMachine {
+        block,
+        dual,
+        vocab: exec.arch().vocab,
+        schedule: DecodeSchedule::fixed(req.tokens_per_step),
+        c_ladder: exec.c_ladder(req.s),
+        r_ladder: exec.r_ladder(req.s),
+        kv_slot_bytes: kv_slot_bytes(&exec.arch()),
+        phase: None,
+    };
+    Ok(Session::new(name, core, Box::new(machine)))
 }
 
 impl Strategy for FastDllmPrefix {
     fn name(&self) -> String {
         format!("fastdllm-prefix[b{}]", self.block)
     }
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
-        generate_blockwise(exec, req, self.block, false)
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session> {
+        start_blockwise(exec, req, self.name(), self.block, false)
     }
 }
 
@@ -149,8 +224,8 @@ impl Strategy for FastDllmDual {
     fn name(&self) -> String {
         format!("fastdllm-dual[b{}]", self.block)
     }
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
-        generate_blockwise(exec, req, self.block, true)
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session> {
+        start_blockwise(exec, req, self.name(), self.block, true)
     }
 }
 

@@ -5,49 +5,56 @@
 //! commits the top-k. This is the "Dream"/"LLaDA" row of Tables 2/3/6 and
 //! the reference all speedups are measured against.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
+use super::machine::{Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{GenRequest, GenResult, SeqState, StepCounts, StepExec};
+use crate::coordinator::{GenRequest, StepExec};
 
 pub struct FullBaseline;
+
+/// Stateless between steps: every quantum is one full-sequence forward.
+struct FullMachine {
+    vocab: usize,
+    schedule: DecodeSchedule,
+}
+
+impl StepMachine for FullMachine {
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+        if core.state.done() {
+            return Ok(StepOutcome::Finished);
+        }
+        core.cap_guard()?;
+        let logits = exec.full(core.req.s, &core.state.ids, &core.state.full_valid())?;
+        core.counts.full += 1;
+        core.counts.token_slots += core.req.s;
+        let undecoded = core.state.undecoded();
+        let cands = candidates(
+            undecoded.iter().map(|&p| (p, &logits[p * self.vocab..(p + 1) * self.vocab])),
+        );
+        let picked = select_top_k(cands, self.schedule.at(core.step));
+        if picked.is_empty() {
+            return Err(anyhow!("no candidates at step {}", core.step));
+        }
+        commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+        core.step += 1;
+        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
+    }
+}
 
 impl Strategy for FullBaseline {
     fn name(&self) -> String {
         "full".into()
     }
 
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
-        let sp = exec.special();
-        let vocab = exec.arch().vocab;
-        let mut state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask,
-                                      sp.eos, sp.pad)?;
-        let schedule = DecodeSchedule::fixed(req.tokens_per_step);
-        let mut counts = StepCounts::default();
-        let t0 = Instant::now();
-        let mut step = 0usize;
-        while !state.done() {
-            if step >= req.step_cap() {
-                return Err(anyhow!("step cap {} exceeded", req.step_cap()));
-            }
-            let logits = exec.full(req.s, &state.ids, &state.full_valid())?;
-            counts.full += 1;
-            counts.token_slots += req.s;
-            let undecoded = state.undecoded();
-            let cands = candidates(
-                undecoded.iter().map(|&p| (p, &logits[p * vocab..(p + 1) * vocab])),
-            );
-            let picked = select_top_k(cands, schedule.at(step));
-            if picked.is_empty() {
-                return Err(anyhow!("no candidates at step {step}"));
-            }
-            commit(&mut state, &picked, step, req.adaptive)?;
-            step += 1;
-        }
-        Ok(GenResult { state, steps: step, counts, wall: t0.elapsed() })
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session> {
+        let core = SessionCore::new(exec, req)?;
+        let machine = FullMachine {
+            vocab: exec.arch().vocab,
+            schedule: DecodeSchedule::fixed(req.tokens_per_step),
+        };
+        Ok(Session::new(self.name(), core, Box::new(machine)))
     }
 }
 

@@ -1,0 +1,248 @@
+//! Resumable step-machines: the session-level API behind [`Strategy`].
+//!
+//! Historically every strategy exposed only run-to-completion `generate()`,
+//! which forced the serving layer into worker-per-request execution (a worker
+//! owns the engine mutex for one step at a time but owns the *request* for
+//! its whole lifetime). The scheduler needs to advance many in-flight
+//! requests one diffusion step at a time, so each strategy is now written as
+//! a [`StepMachine`]: `Strategy::start` captures the per-request state in a
+//! [`Session`], and `Session::step` advances exactly one diffusion step
+//! (possibly several engine calls when a phase boundary forces a rebuild —
+//! a "quantum" is one *committed* decode step, mirroring the legacy loops).
+//!
+//! `Strategy::generate` survives as a compat shim (start + step-to-finish),
+//! so the eval harness, benches and CLI are unchanged and the step-driven
+//! path is byte-identical to the legacy one by construction (see
+//! `tests/scheduler_props.rs`).
+//!
+//! [`Strategy`]: super::Strategy
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{GenRequest, GenResult, SeqState, StepCounts, StepExec};
+
+/// Result of advancing a session by one quantum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    Running,
+    Finished,
+}
+
+/// Strategy-specific continuation state (phase layouts, KV caches, block
+/// cursors). Implementations live next to their strategy.
+///
+/// Not `Send` by itself: KV caches hold `xla::Literal`s. [`Session`] asserts
+/// `Send` (see its safety comment), which is the single choke point.
+pub trait StepMachine {
+    /// Advance one diffusion step: run forward(s), commit decodes, bump
+    /// `core.step`. Must return `Finished` exactly when `core.state.done()`.
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome>;
+
+    /// Bytes of phase-level KV cache currently resident for this session
+    /// (0 when between phases or for cache-less strategies).
+    fn cache_bytes(&self) -> usize {
+        0
+    }
+
+    /// Drop the resident phase cache (KV-pool pressure). The next `step`
+    /// must recover by refreshing — correctness is preserved, the cost is
+    /// one extra refresh forward.
+    fn evict_cache(&mut self) {}
+}
+
+/// Strategy-independent per-request state shared with the machine.
+pub struct SessionCore {
+    pub req: GenRequest,
+    pub state: SeqState,
+    pub counts: StepCounts,
+    /// Committed diffusion steps so far (the legacy loops' `step` counter).
+    pub step: usize,
+}
+
+impl SessionCore {
+    pub fn new(exec: &dyn StepExec, req: &GenRequest) -> Result<SessionCore> {
+        let sp = exec.special();
+        let state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask, sp.eos, sp.pad)?;
+        Ok(SessionCore { req: req.clone(), state, counts: StepCounts::default(), step: 0 })
+    }
+
+    /// Step-cap guard, identical to the legacy per-iteration check.
+    pub fn cap_guard(&self) -> Result<()> {
+        if self.step >= self.req.step_cap() {
+            return Err(anyhow!("step cap {} exceeded", self.req.step_cap()));
+        }
+        Ok(())
+    }
+}
+
+/// One in-flight generation: core state + the strategy's machine.
+pub struct Session {
+    /// Normalized strategy name (e.g. `window[w64/a16/r32]`).
+    pub strategy: String,
+    core: SessionCore,
+    machine: Box<dyn StepMachine>,
+    started: Instant,
+    busy: Duration,
+    finished: bool,
+}
+
+// SAFETY: a Session may hold KV caches (`xla::Literal`s) inside its machine.
+// Those are plain owned host memory with no aliasing back into the engine
+// (see the `EngineCell` safety note in runtime/engine.rs); moving them across
+// threads is sound as long as access is exclusive, which `&mut self` on
+// every mutating method guarantees.
+unsafe impl Send for Session {}
+
+impl Session {
+    pub fn new(strategy: String, core: SessionCore, machine: Box<dyn StepMachine>) -> Session {
+        let finished = core.state.done(); // gen_len == 0 finishes instantly
+        Session {
+            strategy,
+            core,
+            machine,
+            started: Instant::now(),
+            busy: Duration::ZERO,
+            finished,
+        }
+    }
+
+    /// Advance one diffusion step. After an error the session is dead:
+    /// further calls return `Finished` without touching the engine.
+    pub fn step(&mut self, exec: &dyn StepExec) -> Result<StepOutcome> {
+        if self.finished {
+            return Ok(StepOutcome::Finished);
+        }
+        let t0 = Instant::now();
+        let out = self.machine.step(&mut self.core, exec);
+        self.busy += t0.elapsed();
+        match out {
+            Ok(StepOutcome::Finished) => {
+                self.finished = true;
+                Ok(StepOutcome::Finished)
+            }
+            Ok(StepOutcome::Running) => Ok(StepOutcome::Running),
+            Err(e) => {
+                self.finished = true;
+                Err(e)
+            }
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Committed diffusion steps so far.
+    pub fn steps(&self) -> usize {
+        self.core.step
+    }
+
+    /// Undecoded live positions left (the scheduler's remaining-work metric).
+    pub fn remaining(&self) -> usize {
+        self.core.state.num_undecoded()
+    }
+
+    pub fn req(&self) -> &GenRequest {
+        &self.core.req
+    }
+
+    pub fn state(&self) -> &SeqState {
+        &self.core.state
+    }
+
+    /// Wall-clock age since `start()`.
+    pub fn age(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Accumulated engine time (excludes time parked in the run queue).
+    pub fn busy(&self) -> Duration {
+        self.busy
+    }
+
+    /// Resident phase-cache bytes (KV pool accounting).
+    pub fn cache_bytes(&self) -> usize {
+        self.machine.cache_bytes()
+    }
+
+    /// Drop the resident phase cache (KV pool pressure).
+    pub fn evict_cache(&mut self) {
+        self.machine.evict_cache()
+    }
+
+    /// Finalize into the legacy result type. `wall` is time since `start()`,
+    /// which for scheduler-driven sessions includes queueing — the honest
+    /// serving latency.
+    pub fn into_result(self) -> GenResult {
+        GenResult {
+            state: self.core.state,
+            steps: self.core.step,
+            counts: self.core.counts,
+            wall: self.started.elapsed(),
+        }
+    }
+}
+
+/// Per-request KV bytes for one cached window slot: K + V, f32, all layers.
+/// (`KvCache` holds `[L, c, H, Dh]` per tensor; see runtime/engine.rs.)
+pub fn kv_slot_bytes(arch: &crate::runtime::Arch) -> usize {
+    2 * 4 * arch.n_layers * arch.n_heads * arch.dh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+    use crate::strategies::{FullBaseline, Strategy};
+
+    #[test]
+    fn session_steps_to_completion() {
+        let m = MockExec::new(64);
+        let req = GenRequest::new(vec![10, 11, 12, 13], 32, 64);
+        let mut s = FullBaseline.start(&m, &req).unwrap();
+        let mut quanta = 0;
+        while let StepOutcome::Running = s.step(&m).unwrap() {
+            quanta += 1;
+            assert!(quanta < 1000, "runaway session");
+        }
+        assert!(s.is_finished());
+        assert_eq!(s.remaining(), 0);
+        let r = s.into_result();
+        assert!(r.state.done());
+        assert_eq!(r.tokens_generated(), 32);
+    }
+
+    #[test]
+    fn finished_session_is_inert() {
+        let m = MockExec::new(64);
+        let req = GenRequest::new(vec![10, 11], 8, 64);
+        let mut s = FullBaseline.start(&m, &req).unwrap();
+        while let StepOutcome::Running = s.step(&m).unwrap() {}
+        let calls_before = m.counts();
+        assert_eq!(s.step(&m).unwrap(), StepOutcome::Finished);
+        assert_eq!(m.counts(), calls_before, "finished session touched the engine");
+    }
+
+    #[test]
+    fn remaining_decreases_monotonically() {
+        let m = MockExec::new(64);
+        let req = GenRequest::new(vec![10, 11], 24, 64);
+        let mut s = FullBaseline.start(&m, &req).unwrap();
+        let mut last = s.remaining();
+        while let StepOutcome::Running = s.step(&m).unwrap() {
+            let now = s.remaining();
+            assert!(now < last, "remaining went {last} -> {now}");
+            last = now;
+        }
+    }
+
+    #[test]
+    fn kv_slot_bytes_matches_arch() {
+        let m = MockExec::new(64);
+        let a = m.arch();
+        // 2 tensors * 4 bytes * L*H*Dh
+        assert_eq!(kv_slot_bytes(&a), 2 * 4 * a.n_layers * a.n_heads * a.dh);
+    }
+}

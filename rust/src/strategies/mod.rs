@@ -17,6 +17,7 @@ mod block;
 mod dkv;
 mod fastdllm;
 mod full;
+pub mod machine;
 mod window;
 
 use anyhow::{anyhow, Result};
@@ -25,14 +26,31 @@ pub use block::BlockDiffusion;
 pub use dkv::DkvCache;
 pub use fastdllm::{FastDllmDual, FastDllmPrefix};
 pub use full::FullBaseline;
+pub use machine::{Session, SessionCore, StepMachine, StepOutcome};
 pub use window::{WdConfig, WindowDiffusion};
 
 use crate::coordinator::policies::Candidate;
 use crate::coordinator::{GenRequest, GenResult, SeqState, StepExec};
 
+/// A decoding strategy, written as a resumable step-machine.
+///
+/// `start` captures all per-request state in a [`Session`]; each
+/// `Session::step` advances one diffusion step. `generate` is the
+/// run-to-completion compat shim (eval harness, benches, CLI) and is
+/// byte-identical to driving `step` in a loop — it *is* that loop.
 pub trait Strategy: Send + Sync {
     fn name(&self) -> String;
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult>;
+
+    /// Begin a session: build sequence state + the strategy's machine.
+    /// Cheap (no forward passes) — safe to call on the submission path.
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session>;
+
+    /// Run-to-completion shim over `start` + `step`.
+    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
+        let mut session = self.start(exec, req)?;
+        while let StepOutcome::Running = session.step(exec)? {}
+        Ok(session.into_result())
+    }
 }
 
 /// Commit picked candidates into the state.

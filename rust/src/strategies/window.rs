@@ -20,16 +20,13 @@
 //! (every external-window slot decoded) or the compute set outgrows the `r`
 //! buckets that fit the cached window.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
+use super::machine::{kv_slot_bytes, Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{
-    ComputeSet, GenRequest, GenResult, SeqState, StepCounts, StepExec, WindowLayout,
-};
-use crate::runtime::buckets;
+use crate::coordinator::{ComputeSet, GenRequest, StepExec, WindowLayout};
+use crate::runtime::{buckets, KvCache};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WdConfig {
@@ -69,6 +66,143 @@ impl WindowDiffusion {
     }
 }
 
+/// One phase's continuation state (dropped at every phase boundary).
+struct WdPhase {
+    layout: WindowLayout,
+    kv: Option<KvCache>,
+    /// Positions decoded since the phase's refresh (recomputed each normal
+    /// step until the next refresh caches them).
+    phase_decoded: Vec<usize>,
+    step_in_phase: usize,
+}
+
+struct WindowMachine {
+    cfg: WdConfig,
+    vocab: usize,
+    schedule: DecodeSchedule,
+    c_ladder: Vec<usize>,
+    r_ladder: Vec<usize>,
+    kv_slot_bytes: usize,
+    phase: Option<WdPhase>,
+}
+
+impl StepMachine for WindowMachine {
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+        if core.state.done() {
+            return Ok(StepOutcome::Finished);
+        }
+        core.cap_guard()?;
+        let phase_len = if self.cfg.cache { self.cfg.refresh } else { 1 };
+        // A quantum needs at most one phase rebuild before it can commit: a
+        // fresh phase always contains the internal window and its refresh
+        // step always decodes. Three attempts is one of safety margin.
+        for _attempt in 0..3 {
+            if self.phase.is_none() {
+                let layout = WindowLayout::build(&core.state, self.cfg.w_ex, &self.c_ladder)?;
+                self.phase = Some(WdPhase {
+                    layout,
+                    kv: None,
+                    phase_decoded: Vec::new(),
+                    step_in_phase: 0,
+                });
+            }
+            let ph = self.phase.as_mut().unwrap();
+            // refresh cycle elapsed -> phase boundary
+            if ph.step_in_phase >= phase_len {
+                self.phase = None;
+                continue;
+            }
+            let active = core.state.undecoded_prefix(self.cfg.a);
+            debug_assert!(!active.is_empty(), "active empty while undecoded remain");
+            // internal window escaped the external window -> new phase
+            if active.iter().any(|&p| !ph.layout.contains(p)) {
+                self.phase = None;
+                continue;
+            }
+
+            let picked = if ph.step_in_phase == 0 || !self.cfg.cache {
+                // refresh step (or pruning-only step): full window forward
+                let (logits, fresh_kv) = exec.window(
+                    core.req.s,
+                    ph.layout.c,
+                    &ph.layout.ids_padded(&core.state),
+                    &ph.layout.pos_padded(),
+                    &ph.layout.cvalid,
+                )?;
+                core.counts.window += 1;
+                core.counts.token_slots += ph.layout.c;
+                ph.kv = Some(fresh_kv);
+                // NOTE: after a refresh, earlier-phase decodes are in the
+                // cache; the phase-decoded set restarts here.
+                ph.phase_decoded.clear();
+                let cands = candidates(active.iter().map(|&p| {
+                    let slot = ph.layout.slot(p).expect("active in layout");
+                    (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
+                }));
+                select_top_k(cands, self.schedule.at(core.step))
+            } else {
+                // normal step: recompute actives + in-phase decoded only
+                let cs = match ComputeSet::build(&core.state, &ph.layout, &active,
+                                                 &ph.phase_decoded, &self.r_ladder) {
+                    Ok(cs) if cs.r <= ph.layout.c
+                        && buckets::pick(&self.r_ladder, cs.positions.len()).is_ok() =>
+                    {
+                        cs
+                    }
+                    _ => {
+                        // compute set outgrew buckets -> new phase
+                        self.phase = None;
+                        continue;
+                    }
+                };
+                let cache = ph.kv.as_ref().expect("refresh precedes normal steps");
+                let (logits, new_kv) = exec.cached(
+                    core.req.s, ph.layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
+                    &cs.rvalid, &ph.layout.cvalid, cache,
+                )?;
+                core.counts.cached += 1;
+                core.counts.token_slots += cs.r;
+                ph.kv = Some(new_kv);
+                let cands = candidates(
+                    cs.positions[..cs.n_active]
+                        .iter()
+                        .copied()
+                        .enumerate()
+                        .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
+                );
+                select_top_k(cands, self.schedule.at(core.step))
+            };
+
+            if picked.is_empty() {
+                return Err(anyhow!("no candidates at step {}", core.step));
+            }
+            commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+            for c in &picked {
+                ph.phase_decoded.push(c.pos);
+            }
+            ph.step_in_phase += 1;
+            core.step += 1;
+            return Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running });
+        }
+        // safety: a phase that makes zero progress would loop forever
+        Err(anyhow!("phase made no progress at step {}", core.step))
+    }
+
+    fn cache_bytes(&self) -> usize {
+        self.phase
+            .as_ref()
+            .and_then(|p| p.kv.as_ref())
+            .map(|kv| kv.c * self.kv_slot_bytes)
+            .unwrap_or(0)
+    }
+
+    fn evict_cache(&mut self) {
+        // dropping the phase forces a refresh over a fresh layout — exactly
+        // a phase boundary, so decode semantics are preserved
+        self.phase = None;
+    }
+}
+
 impl Strategy for WindowDiffusion {
     fn name(&self) -> String {
         let c = &self.cfg;
@@ -79,107 +213,18 @@ impl Strategy for WindowDiffusion {
         }
     }
 
-    fn generate(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<GenResult> {
-        let cfg = &self.cfg;
-        let sp = exec.special();
-        let vocab = exec.arch().vocab;
-        let c_ladder = exec.c_ladder(req.s);
-        let r_ladder = exec.r_ladder(req.s);
-        let mut state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask,
-                                      sp.eos, sp.pad)?;
-        let schedule = DecodeSchedule::fixed(req.tokens_per_step);
-        let mut counts = StepCounts::default();
-        let t0 = Instant::now();
-        let mut step = 0usize;
-        let phase_len = if cfg.cache { cfg.refresh } else { 1 };
-
-        'phases: while !state.done() {
-            if step >= req.step_cap() {
-                return Err(anyhow!("step cap {} exceeded", req.step_cap()));
-            }
-            // -- phase boundary: rebuild layout over current decode state --
-            let layout = WindowLayout::build(&state, cfg.w_ex, &c_ladder)?;
-            let mut kv = None;
-            let phase_start_step = step;
-            let mut phase_decoded: Vec<usize> = Vec::new();
-
-            for step_in_phase in 0..phase_len {
-                if state.done() || step >= req.step_cap() {
-                    break;
-                }
-                let active = state.undecoded_prefix(cfg.a);
-                if active.is_empty() {
-                    break;
-                }
-                // internal window escaped the external window -> new phase
-                if active.iter().any(|&p| !layout.contains(p)) {
-                    continue 'phases;
-                }
-
-                let picked = if step_in_phase == 0 || !cfg.cache {
-                    // refresh step (or pruning-only step): full window forward
-                    let (logits, fresh_kv) = exec.window(
-                        req.s,
-                        layout.c,
-                        &layout.ids_padded(&state),
-                        &layout.pos_padded(),
-                        &layout.cvalid,
-                    )?;
-                    counts.window += 1;
-                    counts.token_slots += layout.c;
-                    kv = Some(fresh_kv);
-                    // NOTE: after a refresh, earlier-phase decodes are in the
-                    // cache; the phase-decoded set restarts here.
-                    phase_decoded.clear();
-                    let cands = candidates(active.iter().map(|&p| {
-                        let slot = layout.slot(p).expect("active in layout");
-                        (p, &logits[slot * vocab..(slot + 1) * vocab])
-                    }));
-                    select_top_k(cands, schedule.at(step))
-                } else {
-                    // normal step: recompute actives + in-phase decoded only
-                    let cs = match ComputeSet::build(&state, &layout, &active,
-                                                     &phase_decoded, &r_ladder) {
-                        Ok(cs) if cs.r <= layout.c
-                            && buckets::pick(&r_ladder, cs.positions.len()).is_ok() =>
-                        {
-                            cs
-                        }
-                        _ => continue 'phases, // compute set outgrew buckets
-                    };
-                    let cache = kv.as_ref().expect("refresh precedes normal steps");
-                    let (logits, new_kv) = exec.cached(
-                        req.s, layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
-                        &cs.rvalid, &layout.cvalid, cache,
-                    )?;
-                    counts.cached += 1;
-                    counts.token_slots += cs.r;
-                    kv = Some(new_kv);
-                    let cands = candidates(
-                        cs.positions[..cs.n_active]
-                            .iter()
-                            .map(|&p| p)
-                            .enumerate()
-                            .map(|(row, p)| (p, &logits[row * vocab..(row + 1) * vocab])),
-                    );
-                    select_top_k(cands, schedule.at(step))
-                };
-
-                if picked.is_empty() {
-                    return Err(anyhow!("no candidates at step {step}"));
-                }
-                commit(&mut state, &picked, step, req.adaptive)?;
-                for c in &picked {
-                    phase_decoded.push(c.pos);
-                }
-                step += 1;
-            }
-            // safety: a phase that made zero progress would loop forever
-            if step == phase_start_step {
-                return Err(anyhow!("phase made no progress at step {step}"));
-            }
-        }
-        Ok(GenResult { state, steps: step, counts, wall: t0.elapsed() })
+    fn start(&self, exec: &dyn StepExec, req: &GenRequest) -> Result<Session> {
+        let core = SessionCore::new(exec, req)?;
+        let machine = WindowMachine {
+            cfg: self.cfg.clone(),
+            vocab: exec.arch().vocab,
+            schedule: DecodeSchedule::fixed(req.tokens_per_step),
+            c_ladder: exec.c_ladder(req.s),
+            r_ladder: exec.r_ladder(req.s),
+            kv_slot_bytes: kv_slot_bytes(&exec.arch()),
+            phase: None,
+        };
+        Ok(Session::new(self.name(), core, Box::new(machine)))
     }
 }
 

@@ -1,9 +1,14 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//! Integration tests.
 //!
-//! These exercise the full bridge: HLO text → PJRT compile → execute with
-//! resident weights, plus the cross-language contracts (tokenizer parity,
-//! golden logits) and the end-to-end semantic invariants (cached-step
-//! exactness, window ≡ full equivalence, strategy quality/cost ordering).
+//! Artifact-bound tests (HLO text → PJRT compile → execute with resident
+//! weights, cross-language contracts, real-model invariants) are marked
+//! `#[ignore]` with a reason: they need `make artifacts` to have produced
+//! the AOT bundle, which CI and the default `cargo test -q` run don't have.
+//! Run them with `cargo test -- --ignored` after building artifacts.
+//!
+//! The serving stack test (`server_end_to_end`) runs against the
+//! deterministic mock executor, so the full HTTP → scheduler → session path
+//! is exercised everywhere.
 
 use std::path::PathBuf;
 use std::sync::OnceLock;
@@ -45,6 +50,7 @@ fn tokenizer() -> Tokenizer {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn tokenizer_parity_with_python() {
     let tok = tokenizer();
     let golden = Tokenizer::load_golden(&manifest().vocab_file).unwrap();
@@ -55,6 +61,7 @@ fn tokenizer_parity_with_python() {
 }
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn golden_full_step_numerics() {
     // aot.py recorded argmax/confidence/logits of the first full step on a
     // fixed prompt; the rust runtime must reproduce them through PJRT.
@@ -120,6 +127,7 @@ fn golden_full_step_numerics() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn cached_step_exact_after_refresh() {
     // fwd_cached with caches fresh from fwd_window must reproduce the window
     // logits at the compute slots (refresh-boundary exactness).
@@ -164,6 +172,7 @@ fn cached_step_exact_after_refresh() {
 }
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn window_equals_full_when_window_covers_everything() {
     // W_ex = gen region + refresh cadence 1 + a = everything => WD must
     // reproduce the full baseline token-for-token.
@@ -186,6 +195,7 @@ fn window_equals_full_when_window_covers_everything() {
 }
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn strategies_all_complete_on_real_model() {
     let tok = tokenizer();
     let prompt = tok.encode("q : tom has 4 apples . tom buys 3 more . how many apples does tom have ? a :");
@@ -201,6 +211,7 @@ fn strategies_all_complete_on_real_model() {
 }
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn window_cheaper_than_full_in_token_slots() {
     let tok = tokenizer();
     let prompt = tok.encode("q : compute : ( 3 + 4 ) * 2 = ? a :");
@@ -223,6 +234,7 @@ fn window_cheaper_than_full_in_token_slots() {
 }
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn adaptive_termination_on_real_model() {
     // the trained model emits <eos> after completing a short answer; with
     // adaptive on, generation must stop early and stay well under budget
@@ -245,6 +257,7 @@ fn adaptive_termination_on_real_model() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn eval_harness_on_real_model() {
     let tok = tokenizer();
     let instances =
@@ -259,27 +272,46 @@ fn eval_harness_on_real_model() {
     assert!(rep.tokens_per_sec() > 0.0);
 }
 
+/// Full HTTP → scheduler → session path over the mock executor — runs
+/// without artifacts, so the serving stack is covered in every environment.
 #[test]
 fn server_end_to_end() {
     use window_diffusion::metrics::Metrics;
+    use window_diffusion::scheduler::{Scheduler, SchedulerConfig};
     use window_diffusion::server::api::AppState;
     use window_diffusion::server::http::{http_get, http_post};
     use window_diffusion::server::{serve, ServerConfig};
 
-    // separate engine: the shared one's mutex would serialize with other tests
-    let eng = Engine::load(manifest(), "dream-sim-base").unwrap();
+    let exec: std::sync::Arc<dyn StepExec + Send + Sync> =
+        std::sync::Arc::new(MockExec::new(256));
+    let metrics = std::sync::Arc::new(Metrics::default());
+    let scheduler = Scheduler::new(
+        std::sync::Arc::clone(&exec),
+        SchedulerConfig::default(),
+        std::sync::Arc::clone(&metrics),
+    );
+    scheduler.spawn();
+    let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for i in 0..11 {
+        vocab.push(format!("w{i}"));
+    }
     let state = std::sync::Arc::new(AppState {
-        engine: EngineCell::new(eng),
-        tokenizer: tokenizer(),
-        metrics: std::sync::Arc::new(Metrics::default()),
-        model_name: "dream-sim-base".into(),
+        exec,
+        scheduler,
+        tokenizer: Tokenizer::from_vocab(vocab),
+        metrics,
+        model_name: "mock".into(),
         default_strategy: "window".into(),
         default_gen_len: 32,
         s: 256,
+        direct: false,
     });
     let server = serve(
         state.clone(),
-        ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_capacity: 8 },
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 4, queue_capacity: 8 },
     )
     .unwrap();
     let addr = server.addr.clone();
@@ -290,23 +322,31 @@ fn server_end_to_end() {
     let (code, body) = http_post(
         &addr,
         "/generate",
-        "{\"prompt\":\"q : compute : ( 1 + 2 ) * 2 = ? a :\",\"gen_len\":32,\"strategy\":\"window\"}",
+        "{\"prompt\":\"w1 w2 w3 w4\",\"gen_len\":32,\"strategy\":\"window\"}",
     )
     .unwrap();
     assert_eq!(code, 200, "{body}");
     let j = window_diffusion::util::json::parse(&body).unwrap();
-    assert!(j.get("tokens").as_usize().unwrap() > 0);
+    assert_eq!(j.get("tokens").as_usize(), Some(32));
     assert!(j.get("tokens_per_sec").as_f64().unwrap() > 0.0);
 
     let (code, body) = http_get(&addr, "/metrics").unwrap();
     assert_eq!(code, 200);
     let m = window_diffusion::util::json::parse(&body).unwrap();
     assert_eq!(m.get("requests_total").as_i64(), Some(1));
+    assert!(m.get("sched_steps_total").as_i64().unwrap() > 0);
+
+    // scheduler introspection route
+    let (code, body) = http_get(&addr, "/sessions").unwrap();
+    assert_eq!(code, 200);
+    let s = window_diffusion::util::json::parse(&body).unwrap();
+    assert_eq!(s.get("policy").as_str(), Some("round-robin"));
 
     // bad request path
     let (code, _) = http_post(&addr, "/generate", "{oops").unwrap();
     assert_eq!(code, 400);
     server.stop();
+    state.scheduler.shutdown();
 }
 
 // ---------------------------------------------------------------------------
@@ -314,6 +354,7 @@ fn server_end_to_end() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires real PJRT artifacts (make artifacts)"]
 fn mock_and_engine_agree_on_interfaces() {
     let m = MockExec::new(256);
     assert_eq!(m.c_ladder(256), vec![64, 128, 192, 256]);

@@ -1,0 +1,293 @@
+//! Property tests over the scheduler + step-machine layer (MockExec — no
+//! artifacts needed).
+//!
+//! Two pillars:
+//! 1. **Parity** — driving a strategy through its resumable `Session` (solo
+//!    or interleaved with other sessions by the scheduler) emits the exact
+//!    token sequence, step count and cost accounting of the run-to-completion
+//!    `generate()` path, for all strategies.
+//! 2. **Fairness** — under round-robin no session starves: between two
+//!    consecutive quanta of any live session, every other live session gets
+//!    at most one quantum.
+
+use std::sync::Arc;
+
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::strategies::{self, Strategy};
+use window_diffusion::util::prop;
+use window_diffusion::util::rng::Rng;
+
+const SPECS: &[&str] = &[
+    "full",
+    "window",
+    "window-nocache",
+    "block:size=16",
+    "dkv:interval=4",
+    "fastdllm-prefix",
+    "fastdllm-dual",
+];
+
+fn random_req(rng: &mut Rng) -> GenRequest {
+    let prompt_len = 2 + rng.usize_below(12);
+    let gen = 8 + rng.usize_below(88);
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| 5 + (i % 10) as i32).collect();
+    let mut req = GenRequest::new(prompt, gen, 256);
+    req.tokens_per_step = 1 + rng.usize_below(3);
+    req
+}
+
+fn mock_sched(cfg: SchedulerConfig) -> Arc<Scheduler> {
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+    Scheduler::new(exec, cfg, Arc::new(Metrics::default()))
+}
+
+fn submit(strategy: &str, req: &GenRequest) -> SubmitSpec {
+    SubmitSpec { strategy: strategy.into(), req: req.clone(), deadline: None }
+}
+
+// ---------------------------------------------------------------------------
+// parity: step-driven == generate() for every strategy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_step_machine_matches_generate() {
+    prop::check_seeded("machine-parity", 0x5E55, 16, random_req, |req| {
+        for spec in SPECS {
+            let strat = strategies::from_name(spec).map_err(|e| e.to_string())?;
+            let legacy = strat
+                .generate(&MockExec::new(256), req)
+                .map_err(|e| format!("{spec} generate: {e}"))?;
+            // drive the session by hand, one quantum at a time
+            let m = MockExec::new(256);
+            let mut session = strat.start(&m, req).map_err(|e| e.to_string())?;
+            let mut quanta = 0usize;
+            while let strategies::StepOutcome::Running =
+                session.step(&m).map_err(|e| format!("{spec} step: {e}"))?
+            {
+                quanta += 1;
+                if quanta > 10_000 {
+                    return Err(format!("{spec}: session never finished"));
+                }
+            }
+            let stepped = session.into_result();
+            if stepped.generated() != legacy.generated() {
+                return Err(format!("{spec}: token divergence"));
+            }
+            if stepped.steps != legacy.steps {
+                return Err(format!("{spec}: steps {} != {}", stepped.steps, legacy.steps));
+            }
+            if stepped.counts != legacy.counts {
+                return Err(format!(
+                    "{spec}: counts {:?} != {:?}",
+                    stepped.counts, legacy.counts
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_interleaving_preserves_outputs() {
+    // all strategies in flight at once through one shared executor: each
+    // session's output must equal its solo run (sessions are independent;
+    // interleaving must not leak state between them)
+    prop::check_seeded("interleave-parity", 0x1A7E, 8, random_req, |req| {
+        let sched = mock_sched(SchedulerConfig::default());
+        let tickets: Vec<_> = SPECS
+            .iter()
+            .map(|spec| sched.submit(submit(spec, req)).expect("admit"))
+            .collect();
+        while sched.tick().is_some() {}
+        for (spec, ticket) in SPECS.iter().zip(tickets) {
+            let solo = strategies::from_name(spec)
+                .unwrap()
+                .generate(&MockExec::new(256), req)
+                .map_err(|e| format!("{spec} solo: {e}"))?;
+            let scheduled = ticket.wait().map_err(|e| format!("{spec} sched: {e}"))?;
+            if scheduled.generated() != solo.generated() {
+                return Err(format!("{spec}: interleaved run diverged from solo"));
+            }
+            if scheduled.steps != solo.steps {
+                return Err(format!("{spec}: interleaved steps diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fairness: round-robin never starves a session
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_round_robin_no_starvation() {
+    prop::check_seeded(
+        "rr-fairness",
+        0xFA18,
+        8,
+        |rng| {
+            let n = 3 + rng.usize_below(4); // 3..=6 sessions
+            (0..n).map(|_| random_req(rng)).collect::<Vec<_>>()
+        },
+        |reqs| {
+            let sched = mock_sched(SchedulerConfig::default());
+            let n = reqs.len();
+            let _tickets: Vec<_> = reqs
+                .iter()
+                .map(|r| sched.submit(submit("window", r)).expect("admit"))
+                .collect();
+            // trace of session ids, one per quantum
+            let mut trace = Vec::new();
+            while let Some(id) = sched.tick() {
+                trace.push(id);
+                if trace.len() > 100_000 {
+                    return Err("scheduler never drained".into());
+                }
+            }
+            // gap bound: between consecutive quanta of one session there are
+            // at most n-1 quanta of others (live set only shrinks)
+            for id in trace.iter().copied().collect::<std::collections::BTreeSet<_>>() {
+                let positions: Vec<usize> = trace
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &t)| t == id)
+                    .map(|(i, _)| i)
+                    .collect();
+                for w in positions.windows(2) {
+                    let gap = w[1] - w[0];
+                    if gap > n {
+                        return Err(format!(
+                            "session {id} starved: gap {gap} > {n} live sessions"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// policies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shortest_remaining_finishes_short_job_first() {
+    let sched = mock_sched(SchedulerConfig {
+        policy: Policy::ShortestRemaining,
+        ..Default::default()
+    });
+    let long = GenRequest::new(vec![10; 4], 96, 256);
+    let short = GenRequest::new(vec![10; 4], 16, 256);
+    let t_long = sched.submit(submit("full", &long)).unwrap();
+    let t_short = sched.submit(submit("full", &short)).unwrap();
+    let mut finish_order = Vec::new();
+    while sched.tick().is_some() {
+        if t_short.is_ready() && finish_order.is_empty() {
+            finish_order.push("short");
+        }
+        if t_long.is_ready() && !finish_order.contains(&"long") {
+            finish_order.push("long");
+        }
+    }
+    assert_eq!(finish_order.first(), Some(&"short"),
+               "short job did not finish first under SRS");
+    t_short.wait().unwrap();
+    t_long.wait().unwrap();
+}
+
+#[test]
+fn deadline_policy_prioritizes_urgent_session() {
+    let sched = mock_sched(SchedulerConfig { policy: Policy::Deadline, ..Default::default() });
+    let req = GenRequest::new(vec![10; 4], 48, 256);
+    // same length; the second submission has the tighter deadline
+    let relaxed = sched
+        .submit(SubmitSpec {
+            strategy: "full".into(),
+            req: req.clone(),
+            deadline: Some(std::time::Duration::from_secs(600)),
+        })
+        .unwrap();
+    let urgent = sched
+        .submit(SubmitSpec {
+            strategy: "full".into(),
+            req,
+            deadline: Some(std::time::Duration::from_secs(1)),
+        })
+        .unwrap();
+    while sched.tick().is_some() {
+        if urgent.is_ready() {
+            assert!(!relaxed.is_ready(),
+                    "relaxed-deadline session finished before the urgent one");
+            break;
+        }
+    }
+    while sched.tick().is_some() {}
+    urgent.wait().unwrap();
+    relaxed.wait().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// KV pool: admission control + soft-limit eviction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kv_admission_rejects_past_budget_then_recovers() {
+    use window_diffusion::scheduler::KvPool;
+    let m = MockExec::new(256);
+    let req = GenRequest::new(vec![10; 4], 60, 256);
+    let est = KvPool::estimate_bytes(&m.arch(), &m.c_ladder(256), 64);
+    // room for exactly two sessions
+    let sched = mock_sched(SchedulerConfig {
+        kv_budget_bytes: 2 * est + est / 2,
+        ..Default::default()
+    });
+    let t1 = sched.submit(submit("window", &req)).unwrap();
+    let _t2 = sched.submit(submit("window", &req)).unwrap();
+    let rejected = sched.submit(submit("window", &req));
+    match rejected {
+        Err(e) => assert!(e.is_backpressure(), "expected backpressure, got: {e}"),
+        Ok(_) => panic!("third session admitted past the kv budget"),
+    }
+    // draining releases reservations and admission recovers
+    while sched.tick().is_some() {}
+    t1.wait().unwrap();
+    let t3 = sched.submit(submit("window", &req)).expect("admission after drain");
+    while sched.tick().is_some() {}
+    t3.wait().unwrap();
+}
+
+#[test]
+fn soft_limit_eviction_preserves_outputs() {
+    let req = GenRequest::new(vec![10; 4], 64, 256);
+    let solo = strategies::from_name("window")
+        .unwrap()
+        .generate(&MockExec::new(256), &req)
+        .unwrap();
+    // soft limit of 1 byte: every quantum evicts the other session's cache,
+    // forcing constant refreshes — output must be unchanged
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig { kv_soft_bytes: 1, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let t1 = sched.submit(submit("window", &req)).unwrap();
+    let t2 = sched.submit(submit("window", &req)).unwrap();
+    while sched.tick().is_some() {}
+    let r1 = t1.wait().unwrap();
+    let r2 = t2.wait().unwrap();
+    assert_eq!(r1.generated(), solo.generated(), "eviction changed session 1 output");
+    assert_eq!(r2.generated(), solo.generated(), "eviction changed session 2 output");
+    use std::sync::atomic::Ordering;
+    assert!(
+        metrics.kv_pool_evictions.load(Ordering::Relaxed) > 0,
+        "soft limit never evicted"
+    );
+    // evicted sessions pay extra refreshes relative to solo
+    assert!(r1.counts.window >= solo.counts.window);
+}
