@@ -11,24 +11,28 @@
 //!    so short requests are not stuck behind long ones.
 //!
 //! Prints aggregate tokens/sec and latency percentiles for both (overall and
-//! short-requests-only), then demonstrates KV-pool admission control: a
-//! server with a tiny `kv_budget_bytes` answers `429` instead of
-//! overcommitting.
+//! short-requests-only), then an **engine-replica A/B**: the same scheduler
+//! workload on a 1-replica pool vs an N-replica pool (`WD_REPLICAS`, default
+//! 4) with one driver worker per replica — steps/sec should scale with the
+//! replica count. Finally demonstrates KV-pool admission control: a server
+//! with a tiny `kv_budget_bytes` answers `429` instead of overcommitting.
 //!
 //! Runs against the trained sim model when artifacts exist, otherwise falls
-//! back to the deterministic mock model so the comparison runs anywhere.
+//! back to the deterministic mock model so the comparison runs anywhere (the
+//! mock replica phase adds an artificial 1 ms step cost so speedups are
+//! measurable).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_batch
 //! ```
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use window_diffusion::coordinator::{MockExec, StepExec};
 use window_diffusion::eval;
 use window_diffusion::metrics::Metrics;
-use window_diffusion::runtime::{Engine, EngineCell, Manifest};
+use window_diffusion::runtime::{Engine, EngineCell, EnginePool, Manifest};
 use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::api::AppState;
 use window_diffusion::server::http::{http_get, http_post};
@@ -42,13 +46,21 @@ const SHORT_GEN: usize = 24;
 const LONG_GEN: usize = 96;
 
 struct PhaseStats {
-    label: &'static str,
+    label: String,
     wall: f64,
     tokens: usize,
     ok: usize,
     total: usize,
+    /// Scheduler steps booked during the phase (0 on the direct path).
+    steps: u64,
     all: Vec<f64>,
     short: Vec<f64>,
+}
+
+impl PhaseStats {
+    fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.wall.max(1e-9)
+    }
 }
 
 fn toy_tokenizer() -> Tokenizer {
@@ -64,16 +76,19 @@ fn toy_tokenizer() -> Tokenizer {
 
 fn build_state(
     exec: Arc<dyn StepExec + Send + Sync>,
+    pool: Option<Arc<EnginePool>>,
     tok: Tokenizer,
     model_name: &str,
     sched_cfg: SchedulerConfig,
+    sched_workers: usize,
     direct: bool,
 ) -> Arc<AppState> {
     let metrics = Arc::new(Metrics::default());
     let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
-    scheduler.spawn();
+    scheduler.spawn_workers(sched_workers);
     Arc::new(AppState {
         exec,
+        pool,
         scheduler,
         tokenizer: tok,
         metrics,
@@ -86,7 +101,7 @@ fn build_state(
 }
 
 fn run_phase(
-    label: &'static str,
+    label: &str,
     state: Arc<AppState>,
     bodies: &[(String, usize)],
     concurrency: usize,
@@ -111,6 +126,10 @@ fn run_phase(
         http_get(&probe_addr, "/sessions").ok()
     });
 
+    let steps0 = state
+        .metrics
+        .sched_steps_total
+        .load(std::sync::atomic::Ordering::Relaxed);
     let t0 = Instant::now();
     let addr2 = addr.clone();
     let work: Vec<(String, usize)> = bodies.to_vec();
@@ -129,11 +148,16 @@ fn run_phase(
     }
 
     let mut stats = PhaseStats {
-        label,
+        label: label.to_string(),
         wall,
         tokens: 0,
         ok: 0,
         total: results.len(),
+        steps: state
+            .metrics
+            .sched_steps_total
+            .load(std::sync::atomic::Ordering::Relaxed)
+            .saturating_sub(steps0),
         all: Vec::new(),
         short: Vec::new(),
     };
@@ -186,11 +210,12 @@ fn main() -> anyhow::Result<()> {
         std::env::var("WD_CONC").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
 
     // -- boot one shared executor (sim model, or mock without artifacts) -------
-    let (exec, tok, prompts, model_name): (
+    let (exec, tok, prompts, model_name, manifest): (
         Arc<dyn StepExec + Send + Sync>,
         Tokenizer,
         Vec<String>,
         &'static str,
+        Option<Manifest>,
     ) = match Manifest::load(&Manifest::default_root()) {
         Ok(manifest) => {
             let engine = Engine::load(&manifest, "dream-sim-instruct")?;
@@ -206,12 +231,12 @@ fn main() -> anyhow::Result<()> {
                 prompts.push(instances[i % instances.len()].prompt.clone());
             }
             let exec: Arc<dyn StepExec + Send + Sync> = EngineCell::new(engine);
-            (exec, tok, prompts, "dream-sim-instruct")
+            (exec, tok, prompts, "dream-sim-instruct", Some(manifest))
         }
         Err(e) => {
             eprintln!("[serve_batch] artifacts unavailable ({e}); using the mock model");
             let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
-            (exec, toy_tokenizer(), vec!["w1 w2 w3 w4".to_string(); n_requests], "mock")
+            (exec, toy_tokenizer(), vec!["w1 w2 w3 w4".to_string(); n_requests], "mock", None)
         }
     };
 
@@ -239,8 +264,8 @@ fn main() -> anyhow::Result<()> {
     // -- phase 1: legacy worker-per-request ------------------------------------
     let direct = run_phase(
         "worker-per-request",
-        build_state(Arc::clone(&exec), tok.clone(), model_name,
-                    SchedulerConfig::default(), true),
+        build_state(Arc::clone(&exec), None, tok.clone(), model_name,
+                    SchedulerConfig::default(), 1, true),
         &bodies,
         concurrency,
     )?;
@@ -250,9 +275,11 @@ fn main() -> anyhow::Result<()> {
         "scheduler[rr]",
         build_state(
             Arc::clone(&exec),
+            None,
             tok.clone(),
             model_name,
             SchedulerConfig { policy: Policy::RoundRobin, ..Default::default() },
+            1,
             false,
         ),
         &bodies,
@@ -271,12 +298,74 @@ fn main() -> anyhow::Result<()> {
         pctls(&sched.short).1,
     );
 
+    // -- phase 3: engine-replica pool — 1 vs N replicas+drivers ----------------
+    // same scheduler workload; the only variable is the replica count (and
+    // one driver worker per replica). On the mock path each step costs an
+    // artificial 1 ms so the speedup is measurable anywhere.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n_replicas: usize = std::env::var("WD_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .clamp(1, hw.max(1));
+    let make_pool = |k: usize| -> anyhow::Result<Arc<EnginePool>> {
+        match &manifest {
+            Some(m) => EnginePool::load(m, "dream-sim-instruct", k),
+            None => EnginePool::new(
+                (0..k)
+                    .map(|_| {
+                        Arc::new(
+                            MockExec::new(256).with_step_delay(Duration::from_millis(1)),
+                        ) as Arc<dyn StepExec + Send + Sync>
+                    })
+                    .collect(),
+            ),
+        }
+    };
+    if n_replicas == 1 {
+        println!(
+            "\n--- replica scaling skipped (WD_REPLICAS/available_parallelism \
+             clamp to 1; nothing to compare) ---"
+        );
+    } else {
+        let mut pool_phases = Vec::new();
+        for k in [1usize, n_replicas] {
+            let pool = make_pool(k)?;
+            let exec_k: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+            let st = build_state(
+                exec_k,
+                Some(pool),
+                tok.clone(),
+                model_name,
+                SchedulerConfig::default(),
+                k,
+                false,
+            );
+            let label = format!("pool[{k} replicas]");
+            pool_phases.push(run_phase(&label, st, &bodies, concurrency)?);
+        }
+        println!("\n--- replica scaling ---");
+        for p in &pool_phases {
+            print_phase(p);
+        }
+        let sp1 = pool_phases[0].steps_per_sec();
+        let spn = pool_phases[1].steps_per_sec();
+        println!(
+            "{n_replicas}-replica vs 1-replica: {:.1} -> {:.1} steps/sec ({:.2}x)",
+            sp1,
+            spn,
+            spn / sp1.max(1e-9),
+        );
+    }
+
     // -- KV-pool admission control: tiny budget answers 429 --------------------
     let tiny = build_state(
         Arc::clone(&exec),
+        None,
         tok.clone(),
         model_name,
         SchedulerConfig { kv_budget_bytes: 1024, ..Default::default() },
+        1,
         false,
     );
     let server = serve(

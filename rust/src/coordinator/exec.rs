@@ -1,14 +1,15 @@
 //! `StepExec`: the step-execution interface strategies are written against.
 //!
 //! Implementations: [`Engine`] (direct, single-threaded), [`EngineCell`]
-//! (mutex-per-step, used by the serving layer so concurrent requests
-//! interleave at step granularity), and [`MockExec`] (deterministic fake
+//! (mutex-per-step — all callers serialize on one engine), [`EnginePool`]
+//! (N replicas, idle-checkout per step — concurrent callers execute truly
+//! in parallel, one per replica), and [`MockExec`] (deterministic fake
 //! model — lets every coordinator/strategy test run without artifacts).
 
 use anyhow::Result;
 use xla::Literal;
 
-use crate::runtime::{Arch, Engine, EngineCell, KvCache, Specials};
+use crate::runtime::{Arch, Engine, EngineCell, EnginePool, KvCache, Specials};
 
 pub trait StepExec {
     fn arch(&self) -> Arch;
@@ -93,6 +94,41 @@ impl StepExec for EngineCell {
     }
 }
 
+/// Each forward checks out an idle replica (blocking while all are busy);
+/// metadata comes from the pool's construction-time snapshot, so it never
+/// contends with in-flight steps.
+impl StepExec for EnginePool {
+    fn arch(&self) -> Arch {
+        self.cached_arch().clone()
+    }
+    fn special(&self) -> Specials {
+        self.cached_special()
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.cached_seqs().to_vec()
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(self.cached_c_ladder(), s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(self.cached_r_ladder(), s)
+    }
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.with_replica(|e| e.full(s, ids, valid))
+    }
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        self.with_replica(|e| e.window(s, c, ids, pos, valid))
+    }
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        self.with_replica(|e| {
+            e.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+        })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // mock
 // ---------------------------------------------------------------------------
@@ -107,6 +143,10 @@ pub struct MockExec {
     pub vocab: usize,
     pub s: usize,
     pub eos_at: Option<usize>,
+    /// Artificial per-forward cost (sleep). Scheduler throughput tests use
+    /// this to make mock workloads compute-bound, so speedups from stepping
+    /// sessions concurrently are measurable and robust.
+    pub step_delay: Option<std::time::Duration>,
     pub calls: std::sync::Mutex<CallCounts>,
 }
 
@@ -122,12 +162,23 @@ pub struct CallCounts {
 
 impl MockExec {
     pub fn new(s: usize) -> MockExec {
-        MockExec { vocab: 16, s, eos_at: None, calls: Default::default() }
+        MockExec { vocab: 16, s, eos_at: None, step_delay: None, calls: Default::default() }
     }
 
     pub fn with_eos_at(mut self, pos: usize) -> MockExec {
         self.eos_at = Some(pos);
         self
+    }
+
+    pub fn with_step_delay(mut self, d: std::time::Duration) -> MockExec {
+        self.step_delay = Some(d);
+        self
+    }
+
+    fn simulate_cost(&self) {
+        if let Some(d) = self.step_delay {
+            std::thread::sleep(d);
+        }
     }
 
     pub fn token_at(&self, pos: usize) -> i32 {
@@ -184,6 +235,7 @@ impl StepExec for MockExec {
     fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
         assert_eq!(ids.len(), s);
         assert_eq!(valid.len(), s);
+        self.simulate_cost();
         let mut c = self.calls.lock().unwrap();
         c.full += 1;
         c.token_slots += s;
@@ -200,6 +252,7 @@ impl StepExec for MockExec {
         assert_eq!(ids.len(), c);
         assert_eq!(pos.len(), c);
         assert_eq!(valid.len(), c);
+        self.simulate_cost();
         let mut cc = self.calls.lock().unwrap();
         cc.window += 1;
         cc.token_slots += c;
@@ -219,6 +272,7 @@ impl StepExec for MockExec {
         assert_eq!(slot_idx.len(), r);
         assert_eq!(rvalid.len(), r);
         assert_eq!(kv.c, c, "cache/bucket mismatch");
+        self.simulate_cost();
         let mut cc = self.calls.lock().unwrap();
         cc.cached += 1;
         cc.token_slots += r;

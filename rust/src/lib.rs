@@ -12,12 +12,13 @@
 //! and an HTTP serving layer. Python never runs on the request path.
 //!
 //! Quick tour:
-//! * [`runtime`] — PJRT engine, artifact manifest, shape buckets, weights;
+//! * [`runtime`] — PJRT engine, engine-replica pool, artifact manifest,
+//!   shape buckets, weights;
 //! * [`coordinator`] — sequence state, dual-window layout, decode policies;
 //! * [`strategies`] — `window` (the paper) + `full`/`block`/`dkv`/`fastdllm-*`,
 //!   each a resumable step-machine behind the `generate()` compat shim;
-//! * [`scheduler`] — step-level continuous batching: policies, budgeted
-//!   KV-cache pool, session tickets;
+//! * [`scheduler`] — step-level continuous batching with K driver workers:
+//!   policies, budgeted KV-cache pool, session tickets;
 //! * [`eval`] — task suites, graders, accuracy/throughput harness;
 //! * [`analysis`] — Fig. 2/3/4 token-level probes;
 //! * [`server`] — HTTP front end, connection admission, scheduler bridge;

@@ -19,7 +19,7 @@ use window_diffusion::analysis;
 use window_diffusion::coordinator::{GenRequest, StepExec};
 use window_diffusion::eval::{self, EvalOptions};
 use window_diffusion::metrics::Metrics;
-use window_diffusion::runtime::{Engine, EngineCell, Manifest};
+use window_diffusion::runtime::{Engine, EnginePool, Manifest};
 use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::{self, api::AppState, ServerConfig};
 use window_diffusion::strategies;
@@ -69,23 +69,39 @@ impl Args {
     }
 }
 
-fn load_engine(args: &Args) -> Result<(Manifest, Engine, Tokenizer)> {
+/// Shared artifact bootstrap: `--artifacts` root, `--model` default, vocab.
+fn load_manifest(args: &Args) -> Result<(Manifest, String, Tokenizer)> {
     let root = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Manifest::default_root);
     let manifest = Manifest::load(&root)?;
-    let model = args.get("model").unwrap_or("dream-sim-instruct");
-    let engine = Engine::load(&manifest, model)?;
+    let model = args.get("model").unwrap_or("dream-sim-instruct").to_string();
     let tok = Tokenizer::load(&manifest.vocab_file)?;
+    Ok((manifest, model, tok))
+}
+
+fn load_engine(args: &Args) -> Result<(Manifest, Engine, Tokenizer)> {
+    let (manifest, model, tok) = load_manifest(args)?;
+    let engine = Engine::load(&manifest, &model)?;
     Ok((manifest, engine, tok))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (_, engine, tok) = load_engine(args)?;
-    let model_name = engine.model.name.clone();
-    let s = args.usize_or("s", engine.model.seqs[0]);
-    let exec: Arc<dyn StepExec + Send + Sync> = EngineCell::new(engine);
+    let (manifest, model, tok) = load_manifest(args)?;
+
+    // engine-replica pool: N weight copies, N concurrent steps. Clamped by
+    // the host's parallelism — more replicas than cores only burns memory.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let want = args.usize_or("replicas", 1).max(1);
+    let replicas = want.min(hw);
+    if replicas < want {
+        info!("--replicas {want} clamped to {replicas} (available_parallelism)");
+    }
+    let pool = EnginePool::load(&manifest, &model, replicas)?;
+    let s = args.usize_or("s", pool.seqs()[0]);
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+
     let metrics = Arc::new(Metrics::default());
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
@@ -95,13 +111,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let policy_name = sched_cfg.policy.name();
     let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
-    scheduler.spawn();
+    // one driver worker per replica: K sessions step in parallel
+    scheduler.spawn_workers(replicas);
     let state = Arc::new(AppState {
         exec,
+        pool: Some(pool),
         scheduler,
         tokenizer: tok,
         metrics,
-        model_name,
+        model_name: model,
         default_strategy: args.get("strategy").unwrap_or("window").to_string(),
         default_gen_len: args.usize_or("gen-len", 96),
         s,
@@ -115,7 +133,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = server::serve(state, cfg)?;
     info!(
         "ready on {} — POST /generate, GET /metrics, GET /sessions \
-         (policy={policy_name}; ctrl-c to stop)",
+         (policy={policy_name}, replicas={replicas}; ctrl-c to stop)",
         server.addr
     );
     loop {
@@ -253,9 +271,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
                  [--artifacts DIR] [--strategy SPEC] ...\n\
-                 serve flags: [--policy rr|shortest|deadline] [--kv-budget-mb N] \
-                 [--kv-soft-mb N] [--max-sessions N] [--workers N] [--queue N] \
-                 [--direct]\n\
+                 serve flags: [--replicas N] [--policy rr|shortest|deadline] \
+                 [--kv-budget-mb N] [--kv-soft-mb N] [--max-sessions N] \
+                 [--workers N] [--queue N] [--direct]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \
                  window-nocache | block[:size=32] | dkv[:interval=4] | \
                  fastdllm-prefix | fastdllm-dual"

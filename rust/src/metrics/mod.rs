@@ -100,7 +100,9 @@ pub struct Metrics {
     /// Submissions refused because `max_sessions` was reached.
     pub sched_rejections: AtomicU64,
     pub sched_steps_total: AtomicU64,
-    /// Aggregate diffusion steps per second since boot (f64 bit-pattern).
+    /// Aggregate diffusion steps per second over the scheduler's trailing
+    /// rate window — *recent* throughput, not a lifetime average (f64
+    /// bit-pattern; see `util::stats::RateMeter`).
     steps_per_second_bits: AtomicU64,
 }
 

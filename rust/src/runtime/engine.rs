@@ -61,6 +61,43 @@ pub struct EngineStats {
     pub d2h_bytes: Cell<u64>,
 }
 
+/// Plain-value copy of [`EngineStats`] — safe to move across threads and to
+/// sum across the replicas of an [`EnginePool`](super::pool::EnginePool).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct EngineStatsSnapshot {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+impl EngineStats {
+    pub fn snapshot(&self) -> EngineStatsSnapshot {
+        EngineStatsSnapshot {
+            executions: self.executions.get(),
+            exec_secs: self.exec_secs.get(),
+            compiles: self.compiles.get(),
+            compile_secs: self.compile_secs.get(),
+            h2d_bytes: self.h2d_bytes.get(),
+            d2h_bytes: self.d2h_bytes.get(),
+        }
+    }
+}
+
+impl EngineStatsSnapshot {
+    /// Accumulate another replica's counters into this one.
+    pub fn merge(&mut self, other: &EngineStatsSnapshot) {
+        self.executions += other.executions;
+        self.exec_secs += other.exec_secs;
+        self.compiles += other.compiles;
+        self.compile_secs += other.compile_secs;
+        self.h2d_bytes += other.h2d_bytes;
+        self.d2h_bytes += other.d2h_bytes;
+    }
+}
+
 pub struct Engine {
     client: PjRtClient,
     pub model: ModelEntry,
@@ -315,5 +352,11 @@ impl EngineCell {
     pub fn with<R>(&self, f: impl FnOnce(&Engine) -> R) -> R {
         let guard = self.inner.lock().expect("engine mutex poisoned");
         f(&guard)
+    }
+
+    /// Copy out the execution counters. Blocks while a step is in flight on
+    /// this engine (steps are ms-scale at sim-model size).
+    pub fn stats(&self) -> EngineStatsSnapshot {
+        self.with(|e| e.stats.snapshot())
     }
 }

@@ -1,10 +1,13 @@
 //! Runtime layer: PJRT client wrapper, artifact manifest, weight residency,
-//! shape-bucket selection (DESIGN.md §4 item 7).
+//! shape-bucket selection (DESIGN.md §4 item 7), and the engine-replica
+//! pool behind the multi-worker scheduler (DESIGN.md §"Serving at scale").
 
 pub mod buckets;
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 pub mod weights;
 
-pub use engine::{Engine, EngineCell, In, KvCache};
+pub use engine::{Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
 pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};
+pub use pool::{EnginePool, ReplicaStats};

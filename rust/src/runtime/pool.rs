@@ -1,0 +1,328 @@
+//! Engine-replica pool: N engines behind an idle-checkout queue.
+//!
+//! PR 1's scheduler made requests fair but still funneled every forward pass
+//! through one [`EngineCell`] mutex — a single-core server no matter how many
+//! sessions were in flight. [`EnginePool`] holds N independent replicas
+//! (each its own `PjRtClient` + weight upload, see [`EnginePool::load`]) and
+//! implements the step interface by checking out an **idle** replica per
+//! call: K scheduler driver workers step K sessions truly concurrently, one
+//! per replica, and block only when all replicas are busy.
+//!
+//! The pool is deliberately generic over the replica type (`dyn StepExec`):
+//! production pools hold [`EngineCell`]s, tests hold `MockExec`s, and the
+//! checkout discipline is identical. Model metadata (arch, ladders, specials)
+//! is snapshotted from replica 0 at construction so metadata queries never
+//! contend with in-flight steps.
+//!
+//! The memory tradeoff is explicit: N replicas hold N copies of the weights
+//! (see DESIGN.md §"Serving at scale" — replica sizing).
+//!
+//! [`EngineCell`]: super::engine::EngineCell
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Engine, EngineCell, EngineStatsSnapshot};
+use super::manifest::{Arch, Manifest, Specials};
+use crate::coordinator::StepExec;
+
+/// Per-replica observability row (`GET /metrics` → `replicas`).
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub id: usize,
+    /// Steps executed via this replica (checkout count).
+    pub steps: u64,
+    /// PJRT execution counters (`None` for non-engine replicas, e.g. mocks).
+    pub engine: Option<EngineStatsSnapshot>,
+}
+
+pub struct EnginePool {
+    replicas: Vec<Arc<dyn StepExec + Send + Sync>>,
+    /// Typed handles for engine-stat aggregation (empty for mock pools).
+    cells: Vec<Arc<EngineCell>>,
+    /// Indices of replicas not currently executing a step.
+    idle: Mutex<Vec<usize>>,
+    available: Condvar,
+    /// Per-replica step counters (lock-free; safe to read from `/metrics`).
+    steps: Vec<AtomicU64>,
+    // -- metadata snapshot (replica 0 at construction) ------------------------
+    arch: Arch,
+    special: Specials,
+    seqs: Vec<usize>,
+    c_ladder: Vec<usize>,
+    r_ladder: Vec<usize>,
+}
+
+/// RAII checkout: returns the replica to the idle set on drop, waking one
+/// waiter.
+struct Checkout<'a> {
+    pool: &'a EnginePool,
+    idx: usize,
+}
+
+impl Drop for Checkout<'_> {
+    fn drop(&mut self) {
+        self.pool.idle.lock().unwrap().push(self.idx);
+        self.pool.available.notify_one();
+    }
+}
+
+impl EnginePool {
+    /// Pool over pre-built replicas (tests, custom executors). Engine-stat
+    /// aggregation is unavailable on this path — use [`EnginePool::load`]
+    /// for real engines.
+    pub fn new(replicas: Vec<Arc<dyn StepExec + Send + Sync>>) -> Result<Arc<EnginePool>> {
+        EnginePool::build(replicas, Vec::new())
+    }
+
+    /// Load `n` engine replicas of one model: each gets its own PJRT client
+    /// and device-resident weight copy.
+    pub fn load(manifest: &Manifest, model_name: &str, n: usize) -> Result<Arc<EnginePool>> {
+        let n = n.max(1);
+        let mut cells = Vec::with_capacity(n);
+        let mut replicas: Vec<Arc<dyn StepExec + Send + Sync>> = Vec::with_capacity(n);
+        for i in 0..n {
+            crate::info!("engine pool: loading replica {}/{n} of {model_name}", i + 1);
+            let cell = EngineCell::new(Engine::load(manifest, model_name)?);
+            replicas.push(Arc::clone(&cell) as Arc<dyn StepExec + Send + Sync>);
+            cells.push(cell);
+        }
+        EnginePool::build(replicas, cells)
+    }
+
+    fn build(
+        replicas: Vec<Arc<dyn StepExec + Send + Sync>>,
+        cells: Vec<Arc<EngineCell>>,
+    ) -> Result<Arc<EnginePool>> {
+        let first = replicas
+            .first()
+            .ok_or_else(|| anyhow!("engine pool needs at least one replica"))?;
+        let arch = first.arch();
+        let special = first.special();
+        let seqs = first.seqs();
+        // unfiltered ladders; the StepExec impl re-filters per requested s
+        let c_ladder = first.c_ladder(usize::MAX);
+        let r_ladder = first.r_ladder(usize::MAX);
+        let n = replicas.len();
+        Ok(Arc::new(EnginePool {
+            replicas,
+            cells,
+            // reversed so pop() hands out replica 0 first
+            idle: Mutex::new((0..n).rev().collect()),
+            available: Condvar::new(),
+            steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            arch,
+            special,
+            seqs,
+            c_ladder,
+            r_ladder,
+        }))
+    }
+
+    fn checkout(&self) -> Checkout<'_> {
+        let mut idle = self.idle.lock().unwrap();
+        loop {
+            if let Some(idx) = idle.pop() {
+                return Checkout { pool: self, idx };
+            }
+            idle = self.available.wait(idle).unwrap();
+        }
+    }
+
+    /// Run `f` on an idle replica, blocking until one frees up. This is the
+    /// whole concurrency story: K concurrent callers occupy K replicas.
+    pub fn with_replica<R>(&self, f: impl FnOnce(&dyn StepExec) -> R) -> R {
+        let co = self.checkout();
+        self.steps[co.idx].fetch_add(1, Ordering::Relaxed);
+        f(self.replicas[co.idx].as_ref())
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Steps executed per replica (index-aligned with replica ids).
+    pub fn replica_steps(&self) -> Vec<u64> {
+        self.steps.iter().map(|s| s.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Aggregated PJRT counters across all engine replicas (`None` when the
+    /// pool holds non-engine replicas). May briefly block on replicas that
+    /// are mid-step.
+    pub fn engine_stats(&self) -> Option<EngineStatsSnapshot> {
+        if self.cells.is_empty() {
+            return None;
+        }
+        let mut agg = EngineStatsSnapshot::default();
+        for c in &self.cells {
+            agg.merge(&c.stats());
+        }
+        Some(agg)
+    }
+
+    /// Per-replica observability rows.
+    pub fn per_replica_stats(&self) -> Vec<ReplicaStats> {
+        (0..self.replicas.len())
+            .map(|i| ReplicaStats {
+                id: i,
+                steps: self.steps[i].load(Ordering::Relaxed),
+                engine: self.cells.get(i).map(|c| c.stats()),
+            })
+            .collect()
+    }
+
+    // -- metadata snapshot accessors (used by the StepExec impl) --------------
+
+    pub(crate) fn cached_arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    pub(crate) fn cached_special(&self) -> Specials {
+        self.special
+    }
+
+    pub(crate) fn cached_seqs(&self) -> &[usize] {
+        &self.seqs
+    }
+
+    pub(crate) fn cached_c_ladder(&self) -> &[usize] {
+        &self.c_ladder
+    }
+
+    pub(crate) fn cached_r_ladder(&self) -> &[usize] {
+        &self.r_ladder
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GenRequest, MockExec};
+    use crate::strategies;
+    use std::sync::Barrier;
+
+    fn mock_pool(n: usize) -> Arc<EnginePool> {
+        let replicas = (0..n)
+            .map(|_| Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>)
+            .collect();
+        EnginePool::new(replicas).unwrap()
+    }
+
+    #[test]
+    fn empty_pool_is_an_error() {
+        assert!(EnginePool::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn pool_metadata_matches_replica() {
+        let p = mock_pool(2);
+        let m = MockExec::new(256);
+        assert_eq!(p.arch().vocab, m.arch().vocab);
+        assert_eq!(p.arch().max_seq, m.arch().max_seq);
+        assert_eq!(p.special().mask, m.special().mask);
+        assert_eq!(p.seqs(), m.seqs());
+        assert_eq!(p.c_ladder(128), m.c_ladder(128));
+        assert_eq!(p.r_ladder(64), m.r_ladder(64));
+        assert_eq!(p.replicas(), 2);
+    }
+
+    #[test]
+    fn pool_round_trips_generation() {
+        let p = mock_pool(2);
+        let exec: Arc<dyn StepExec + Send + Sync> = p.clone();
+        let req = GenRequest::new(vec![10, 11, 12], 16, 256);
+        let solo = strategies::from_name("window")
+            .unwrap()
+            .generate(&MockExec::new(256), &req)
+            .unwrap();
+        let pooled = strategies::from_name("window")
+            .unwrap()
+            .generate(exec.as_ref(), &req)
+            .unwrap();
+        assert_eq!(pooled.generated(), solo.generated(), "pool changed the output");
+        assert!(p.replica_steps().iter().sum::<u64>() > 0);
+        // mock replicas have no PJRT counters
+        assert!(p.engine_stats().is_none());
+    }
+
+    /// Two calls that *must* overlap: a barrier inside the executor
+    /// rendezvouses them, which can only succeed when the pool hands out
+    /// two distinct replicas concurrently.
+    #[test]
+    fn checkout_runs_replicas_concurrently() {
+        struct BarrierExec {
+            inner: MockExec,
+            barrier: Arc<Barrier>,
+        }
+        impl StepExec for BarrierExec {
+            fn arch(&self) -> crate::runtime::Arch {
+                self.inner.arch()
+            }
+            fn special(&self) -> Specials {
+                self.inner.special()
+            }
+            fn seqs(&self) -> Vec<usize> {
+                self.inner.seqs()
+            }
+            fn c_ladder(&self, s: usize) -> Vec<usize> {
+                self.inner.c_ladder(s)
+            }
+            fn r_ladder(&self, s: usize) -> Vec<usize> {
+                self.inner.r_ladder(s)
+            }
+            fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+                self.barrier.wait();
+                self.inner.full(s, ids, valid)
+            }
+            fn window(
+                &self,
+                s: usize,
+                c: usize,
+                ids: &[i32],
+                pos: &[i32],
+                valid: &[f32],
+            ) -> Result<(Vec<f32>, crate::runtime::KvCache)> {
+                self.inner.window(s, c, ids, pos, valid)
+            }
+            fn cached(
+                &self,
+                s: usize,
+                c: usize,
+                r: usize,
+                ids_r: &[i32],
+                pos_r: &[i32],
+                slot_idx: &[i32],
+                rvalid: &[f32],
+                cvalid: &[f32],
+                kv: &crate::runtime::KvCache,
+            ) -> Result<(Vec<f32>, crate::runtime::KvCache)> {
+                self.inner
+                    .cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+            }
+        }
+
+        let barrier = Arc::new(Barrier::new(2));
+        let replicas: Vec<Arc<dyn StepExec + Send + Sync>> = (0..2)
+            .map(|_| {
+                Arc::new(BarrierExec {
+                    inner: MockExec::new(64),
+                    barrier: Arc::clone(&barrier),
+                }) as Arc<dyn StepExec + Send + Sync>
+            })
+            .collect();
+        let p = EnginePool::new(replicas).unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let p = &p;
+                scope.spawn(move || {
+                    let ids = vec![1i32; 64];
+                    let valid = vec![1.0f32; 64];
+                    p.full(64, &ids, &valid).unwrap();
+                });
+            }
+        });
+        assert_eq!(p.replica_steps(), vec![1, 1], "both replicas must serve one step");
+    }
+}

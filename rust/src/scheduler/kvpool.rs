@@ -10,8 +10,14 @@
 //! Separately the pool books *evictions*: the scheduler may drop idle
 //! sessions' resident caches (forcing a refresh on their next step) to keep
 //! the *actual* resident bytes under a soft limit — see
-//! `Scheduler::maybe_evict`. Reservations are not returned by eviction
-//! (the session may re-cache at any step); only completion releases them.
+//! `Scheduler::maybe_evict`, which also counts the bytes of sessions that
+//! are mid-step on other driver workers (booked at checkout). Reservations
+//! are not returned by eviction (the session may re-cache at any step);
+//! only completion releases them.
+//!
+//! The pool itself is not thread-safe; every call happens under the
+//! scheduler's run-queue lock, which serializes the K driver workers'
+//! booking paths.
 
 use std::collections::HashMap;
 use std::fmt;

@@ -4,6 +4,11 @@
 //! session, push it to the back), so **round-robin** is simply "front of the
 //! queue". The other policies scan a cheap per-session view each quantum —
 //! with tens of in-flight sessions the scan is noise next to one engine step.
+//!
+//! With K concurrent driver workers the picker only ever sees sessions
+//! parked in the run queue: a session being stepped on another worker has
+//! been removed from the queue (and thus from `views`), so concurrent picks
+//! are disjoint by construction and no policy needs locking of its own.
 
 use std::cmp::Ordering;
 use std::time::Instant;

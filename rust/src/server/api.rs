@@ -8,7 +8,8 @@
 //! * `GET /sessions`  — in-flight scheduler sessions (id, strategy, steps,
 //!   remaining, kv_bytes, age)
 //! * `GET /metrics`   — serving counters + scheduler gauges + latency
-//!   histogram
+//!   histogram; with an engine-replica pool, per-replica step/execution
+//!   gauges under `"replicas"`
 //! * `GET /healthz`   — liveness
 //! * `GET /info`      — model / config / scheduling info
 
@@ -20,6 +21,7 @@ use anyhow::{anyhow, Result};
 use super::http::{Request, Response};
 use crate::coordinator::{GenRequest, StepExec};
 use crate::metrics::Metrics;
+use crate::runtime::EnginePool;
 use crate::scheduler::{Scheduler, SubmitSpec};
 use crate::strategies;
 use crate::tokenizer::Tokenizer;
@@ -28,8 +30,11 @@ use crate::util::json::{parse, Json};
 /// Server-wide shared state.
 pub struct AppState {
     /// Step executor shared by the scheduler and the direct path
-    /// (`EngineCell` in production, `MockExec` in tests).
+    /// (`EnginePool` in production, `MockExec` in tests).
     pub exec: Arc<dyn StepExec + Send + Sync>,
+    /// Typed handle to the replica pool when `exec` is one — powers the
+    /// per-replica gauges on `GET /metrics` and `replicas` on `GET /info`.
+    pub pool: Option<Arc<EnginePool>>,
     pub scheduler: Arc<Scheduler>,
     pub tokenizer: Tokenizer,
     pub metrics: Arc<Metrics>,
@@ -172,11 +177,62 @@ fn sessions_json(st: &AppState) -> Json {
     ])
 }
 
+/// Per-replica gauge rows for `GET /metrics` (steps via the pool's
+/// lock-free counters; PJRT execution counters when the replicas are real
+/// engines).
+fn replicas_json(pool: &EnginePool) -> Json {
+    Json::Arr(
+        pool.per_replica_stats()
+            .into_iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("steps", Json::num(r.steps as f64)),
+                ];
+                if let Some(e) = r.engine {
+                    fields.push(("executions", Json::num(e.executions as f64)));
+                    fields.push(("exec_secs", Json::num(e.exec_secs)));
+                    fields.push(("compiles", Json::num(e.compiles as f64)));
+                    fields.push(("h2d_bytes", Json::num(e.h2d_bytes as f64)));
+                    fields.push(("d2h_bytes", Json::num(e.d2h_bytes as f64)));
+                }
+                Json::obj(fields)
+            })
+            .collect(),
+    )
+}
+
+fn metrics_json(st: &AppState) -> Json {
+    // the booking path only updates the rate gauge on activity; recompute at
+    // read time so an idle server reports a decayed (eventually zero) rate
+    st.scheduler.refresh_rate_gauge();
+    let mut j = st.metrics.to_json();
+    if let (Some(pool), Json::Obj(fields)) = (&st.pool, &mut j) {
+        fields.insert("replica_count".into(), Json::num(pool.replicas() as f64));
+        fields.insert("replicas".into(), replicas_json(pool));
+        // aggregate PJRT counters across replicas (absent on mock pools)
+        if let Some(agg) = pool.engine_stats() {
+            fields.insert(
+                "engine".into(),
+                Json::obj(vec![
+                    ("executions", Json::num(agg.executions as f64)),
+                    ("exec_secs", Json::num(agg.exec_secs)),
+                    ("compiles", Json::num(agg.compiles as f64)),
+                    ("compile_secs", Json::num(agg.compile_secs)),
+                    ("h2d_bytes", Json::num(agg.h2d_bytes as f64)),
+                    ("d2h_bytes", Json::num(agg.d2h_bytes as f64)),
+                ]),
+            );
+        }
+    }
+    j
+}
+
 /// Route a parsed HTTP request (pure: no I/O — unit-testable).
 pub fn route(st: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#.to_string()),
-        ("GET", "/metrics") => Response::json(200, st.metrics.to_json().to_string()),
+        ("GET", "/metrics") => Response::json(200, metrics_json(st).to_string()),
         ("GET", "/sessions") => Response::json(200, sessions_json(st).to_string()),
         ("GET", "/info") => Response::json(
             200,
@@ -186,6 +242,9 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("s", Json::num(st.s as f64)),
                 ("vocab", Json::num(st.tokenizer.len() as f64)),
                 ("policy", Json::str(st.scheduler.policy().name())),
+                ("replicas", Json::num(
+                    st.pool.as_ref().map_or(1, |p| p.replicas()) as f64,
+                )),
                 ("direct", Json::Bool(st.direct)),
             ])
             .to_string(),
@@ -240,6 +299,7 @@ mod tests {
         }
         Arc::new(AppState {
             exec,
+            pool: None,
             scheduler,
             tokenizer: Tokenizer::from_vocab(vocab),
             metrics,
@@ -325,5 +385,58 @@ mod tests {
         let e = err_json("boom");
         let j = parse(&e).unwrap();
         assert_eq!(j.get("error").as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn metrics_and_info_expose_replica_pool() {
+        let replicas = (0..2)
+            .map(|_| Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>)
+            .collect();
+        let pool = EnginePool::new(replicas).unwrap();
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+        let metrics = Arc::new(Metrics::default());
+        let scheduler = Scheduler::new(
+            Arc::clone(&exec),
+            SchedulerConfig::default(),
+            Arc::clone(&metrics),
+        );
+        scheduler.spawn_workers(2);
+        let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for i in 0..11 {
+            vocab.push(format!("w{i}"));
+        }
+        let st = Arc::new(AppState {
+            exec,
+            pool: Some(pool),
+            scheduler,
+            tokenizer: Tokenizer::from_vocab(vocab),
+            metrics,
+            model_name: "mock-pool".into(),
+            default_strategy: "window".into(),
+            default_gen_len: 16,
+            s: 256,
+            direct: false,
+        });
+        let resp = post(&st, r#"{"prompt":"w1 w2 w3","gen_len":16,"strategy":"window"}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+
+        let i = get(&st, "/info");
+        let ij = parse(std::str::from_utf8(&i.body).unwrap()).unwrap();
+        assert_eq!(ij.get("replicas").as_usize(), Some(2));
+
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(mj.get("replica_count").as_usize(), Some(2));
+        let rows = mj.get("replicas").as_arr().expect("replicas array");
+        assert_eq!(rows.len(), 2);
+        let steps: u64 = rows
+            .iter()
+            .map(|r| r.get("steps").as_usize().unwrap_or(0) as u64)
+            .sum();
+        assert!(steps > 0, "pool replicas never stepped");
+        st.scheduler.shutdown();
     }
 }

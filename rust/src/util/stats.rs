@@ -90,6 +90,88 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// windowed rate meter
+// ---------------------------------------------------------------------------
+
+/// Events-per-second over a trailing time window.
+///
+/// A lifetime average (`total / uptime`) decays toward zero across idle
+/// periods and misleads operators about *current* throughput — exactly the
+/// bug the scheduler's `steps_per_second` gauge used to have. This meter
+/// counts events in coarse time buckets and reports the rate over the
+/// trailing window only, so it recovers immediately after idling.
+///
+/// Memory is bounded by the bucket count, not the event rate; the clock is
+/// passed in explicitly so tests need no sleeping.
+pub struct RateMeter {
+    origin: Instant,
+    granule: Duration,
+    window_granules: u64,
+    /// (granule index, event count), ascending, pruned to the window.
+    buckets: std::collections::VecDeque<(u64, u64)>,
+}
+
+impl RateMeter {
+    /// Meter over `window` with 16 buckets of resolution.
+    pub fn new(window: Duration, origin: Instant) -> RateMeter {
+        RateMeter::with_resolution(window, 16, origin)
+    }
+
+    pub fn with_resolution(window: Duration, granules: u64, origin: Instant) -> RateMeter {
+        assert!(granules > 0, "RateMeter needs at least one bucket");
+        let granule = window / granules as u32;
+        assert!(granule > Duration::ZERO, "RateMeter window too small");
+        RateMeter {
+            origin,
+            granule,
+            window_granules: granules,
+            buckets: std::collections::VecDeque::new(),
+        }
+    }
+
+    fn granule_of(&self, now: Instant) -> u64 {
+        (now.saturating_duration_since(self.origin).as_nanos() / self.granule.as_nanos()) as u64
+    }
+
+    /// Oldest granule index still inside the window ending at `idx`
+    /// (exactly `window_granules` buckets: `cutoff..=idx`).
+    fn cutoff(&self, idx: u64) -> u64 {
+        (idx + 1).saturating_sub(self.window_granules)
+    }
+
+    /// Book one event at time `now`.
+    pub fn note(&mut self, now: Instant) {
+        let idx = self.granule_of(now);
+        match self.buckets.back_mut() {
+            Some((i, n)) if *i == idx => *n += 1,
+            _ => self.buckets.push_back((idx, 1)),
+        }
+        let cutoff = self.cutoff(idx);
+        while matches!(self.buckets.front(), Some((i, _)) if *i < cutoff) {
+            self.buckets.pop_front();
+        }
+    }
+
+    /// Events per second over the trailing window ending at `now`. During
+    /// the first window after `origin` the divisor is the elapsed time, so
+    /// early rates are not diluted by the not-yet-existing history.
+    pub fn rate(&self, now: Instant) -> f64 {
+        let idx = self.granule_of(now);
+        let cutoff = self.cutoff(idx);
+        let events: u64 = self
+            .buckets
+            .iter()
+            .filter(|(i, _)| *i >= cutoff)
+            .map(|(_, n)| n)
+            .sum();
+        let window = self.granule * self.window_granules as u32;
+        let elapsed = now.saturating_duration_since(self.origin);
+        let span = window.min(elapsed).max(self.granule).as_secs_f64();
+        events as f64 / span
+    }
+}
+
+// ---------------------------------------------------------------------------
 // measurement harness (criterion stand-in)
 // ---------------------------------------------------------------------------
 
@@ -207,5 +289,51 @@ mod tests {
         assert_eq!(fmt_secs(2.5), "2.50s");
         assert_eq!(fmt_secs(0.0025), "2.50ms");
         assert_eq!(fmt_secs(2.5e-5), "25.0us");
+    }
+
+    #[test]
+    fn rate_meter_counts_recent_events() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut m = RateMeter::new(Duration::from_secs(2), t0);
+        for i in 0..100 {
+            m.note(at(i * 5)); // 100 events over 0.5s
+        }
+        // warmup divisor is elapsed time, not the full window
+        let r = m.rate(at(500));
+        assert!(r > 150.0, "early rate diluted: {r}");
+    }
+
+    #[test]
+    fn rate_meter_recovers_after_idle() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut m = RateMeter::new(Duration::from_secs(2), t0);
+        // burst, then a long idle gap
+        for i in 0..200 {
+            m.note(at(i));
+        }
+        assert!(m.rate(at(200)) > 100.0);
+        assert_eq!(m.rate(at(600_000)) as u64, 0, "idle window must read zero");
+        // a fresh burst reads at full strength — a lifetime average would
+        // report ~200 events / 600s and keep decaying
+        for i in 0..200 {
+            m.note(at(600_000 + i));
+        }
+        let r = m.rate(at(600_200));
+        assert!(r > 50.0, "rate did not recover after idle: {r}");
+        let lifetime = 400.0 / 600.2;
+        assert!(r > 10.0 * lifetime, "windowed rate should dwarf lifetime avg");
+    }
+
+    #[test]
+    fn rate_meter_memory_is_bounded() {
+        let t0 = Instant::now();
+        let mut m = RateMeter::with_resolution(Duration::from_secs(1), 8, t0);
+        for i in 0..100_000u64 {
+            m.note(t0 + Duration::from_micros(i * 37));
+        }
+        // buckets pruned to the window regardless of event count
+        assert!(m.buckets.len() <= 10, "unpruned buckets: {}", m.buckets.len());
     }
 }

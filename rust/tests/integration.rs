@@ -300,6 +300,7 @@ fn server_end_to_end() {
     }
     let state = std::sync::Arc::new(AppState {
         exec,
+        pool: None,
         scheduler,
         tokenizer: Tokenizer::from_vocab(vocab),
         metrics,

@@ -1,19 +1,30 @@
 //! Property tests over the scheduler + step-machine layer (MockExec — no
 //! artifacts needed).
 //!
-//! Two pillars:
+//! Four pillars:
 //! 1. **Parity** — driving a strategy through its resumable `Session` (solo
 //!    or interleaved with other sessions by the scheduler) emits the exact
 //!    token sequence, step count and cost accounting of the run-to-completion
-//!    `generate()` path, for all strategies.
+//!    `generate()` path, for all strategies — including when K threads drive
+//!    `tick()` concurrently (the replica-pool regime).
 //! 2. **Fairness** — under round-robin no session starves: between two
 //!    consecutive quanta of any live session, every other live session gets
 //!    at most one quantum.
+//! 3. **Liveness** — every ticket ever issued resolves, even when
+//!    `shutdown()` races submissions and mid-step sessions (the PR-1
+//!    stranded-ticket bug).
+//! 4. **Scaling** — K driver workers complete a compute-bound mock workload
+//!    ≥ 2× faster than one (ISSUE 2 acceptance).
 
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
 
 use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
 use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{Arch, KvCache, Specials};
 use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig, SubmitSpec};
 use window_diffusion::strategies::{self, Strategy};
 use window_diffusion::util::prop;
@@ -258,6 +269,338 @@ fn kv_admission_rejects_past_budget_then_recovers() {
     let t3 = sched.submit(submit("window", &req)).expect("admission after drain");
     while sched.tick().is_some() {}
     t3.wait().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// gate executor: lets a test hold a session mid-step deterministically
+// ---------------------------------------------------------------------------
+
+/// Rendezvous point: while armed, a gated forward pass blocks inside the
+/// executor (the session is "mid-step": out of the run queue, lock released)
+/// until the test calls `open()`.
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    armed: bool,
+    entered: usize,
+    open: bool,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { state: Mutex::new(GateState::default()), cv: Condvar::new() })
+    }
+
+    /// The next gated forward blocks until `open()`.
+    fn arm(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.armed = true;
+        st.open = false;
+    }
+
+    /// Block until a forward pass is parked inside the gate.
+    fn wait_entered(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.entered == 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Release the parked forward; later forwards pass through un-gated.
+    fn open(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = true;
+        st.armed = false;
+        self.cv.notify_all();
+    }
+
+    fn pass(&self) {
+        let mut st = self.state.lock().unwrap();
+        if !st.armed {
+            return;
+        }
+        st.entered += 1;
+        self.cv.notify_all();
+        while !st.open {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.entered -= 1;
+    }
+}
+
+/// MockExec wrapper whose selected forward kinds rendezvous with a [`Gate`].
+struct GateExec {
+    inner: MockExec,
+    gate: Arc<Gate>,
+    gate_full: bool,
+    gate_cached: bool,
+}
+
+impl StepExec for GateExec {
+    fn arch(&self) -> Arch {
+        self.inner.arch()
+    }
+    fn special(&self) -> Specials {
+        self.inner.special()
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.inner.seqs()
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.c_ladder(s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.r_ladder(s)
+    }
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        if self.gate_full {
+            self.gate.pass();
+        }
+        self.inner.full(s, ids, valid)
+    }
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        self.inner.window(s, c, ids, pos, valid)
+    }
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        if self.gate_cached {
+            self.gate.pass();
+        }
+        self.inner.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shutdown liveness: every ticket resolves (ISSUE 2 regression)
+// ---------------------------------------------------------------------------
+
+/// Deterministic replay of the PR-1 hang: a session is mid-step (popped out
+/// of the run queue) while `shutdown()` drains the queue. The fixed booking
+/// path must fail the session's ticket instead of pushing it back into the
+/// dead queue, and `shutdown()` must wait for it to land.
+#[test]
+fn shutdown_fails_mid_step_session_instead_of_stranding_it() {
+    let gate = Gate::new();
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(GateExec {
+        inner: MockExec::new(256),
+        gate: Arc::clone(&gate),
+        gate_full: true,
+        gate_cached: false,
+    });
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig::default(),
+        Arc::new(Metrics::default()),
+    );
+    let req = GenRequest::new(vec![10; 4], 16, 256);
+    let ticket = sched.submit(submit("full", &req)).unwrap();
+
+    gate.arm();
+    let s2 = Arc::clone(&sched);
+    let stepper = thread::spawn(move || s2.tick());
+    gate.wait_entered(); // the session is now mid-step, out of the run queue
+
+    let s3 = Arc::clone(&sched);
+    let closer = thread::spawn(move || s3.shutdown());
+    // shutdown sets the stop flag before waiting for mid-step sessions to
+    // land; once new submissions are refused the flag is visible
+    while sched.submit(submit("full", &req)).is_ok() {
+        thread::sleep(Duration::from_millis(1));
+    }
+
+    gate.open();
+    stepper.join().unwrap();
+    closer.join().unwrap();
+    let err = ticket.wait().expect_err("mid-step session must fail at shutdown");
+    assert!(err.to_string().contains("shut down"), "unexpected error: {err}");
+    assert_eq!(sched.active_sessions(), 0);
+}
+
+/// Stochastic version, per the acceptance criteria: 100 consecutive races of
+/// spawn + submits against shutdown — every admitted ticket must resolve
+/// (a hang here is the stranded-ticket bug).
+#[test]
+fn shutdown_race_resolves_every_ticket() {
+    for i in 0..100u64 {
+        let exec: Arc<dyn StepExec + Send + Sync> =
+            Arc::new(MockExec::new(256).with_step_delay(Duration::from_micros(200)));
+        let sched = Scheduler::new(
+            exec,
+            SchedulerConfig::default(),
+            Arc::new(Metrics::default()),
+        );
+        sched.spawn_workers(2);
+        let s2 = Arc::clone(&sched);
+        let submitter = thread::spawn(move || {
+            let req = GenRequest::new(vec![10; 4], 8, 256);
+            let mut tickets = Vec::new();
+            for _ in 0..6 {
+                match s2.submit(SubmitSpec {
+                    strategy: "full".into(),
+                    req: req.clone(),
+                    deadline: None,
+                }) {
+                    Ok(t) => tickets.push(t),
+                    Err(_) => break, // shutdown won the race — fine
+                }
+            }
+            tickets
+        });
+        // stagger the shutdown across the submit/step timeline
+        thread::sleep(Duration::from_micros(i * 40 % 4000));
+        sched.shutdown();
+        for t in submitter.join().unwrap() {
+            let _ = t.wait(); // must return Ok or Err — never hang
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// N-replica determinism + throughput scaling (ISSUE 2 tentpole)
+// ---------------------------------------------------------------------------
+
+/// K threads driving `tick()` concurrently is exactly the K-worker /
+/// N-replica regime (the pool only changes *where* a step executes, never
+/// its result). Outputs must be byte-identical to each strategy's solo run.
+#[test]
+fn prop_pooled_driver_matches_solo_outputs() {
+    prop::check_seeded("pool-parity", 0x9001, 4, random_req, |req| {
+        let sched = mock_sched(SchedulerConfig::default());
+        let tickets: Vec<_> = SPECS
+            .iter()
+            .map(|spec| sched.submit(submit(spec, req)).expect("admit"))
+            .collect();
+        thread::scope(|scope| {
+            for _ in 0..4 {
+                let sched = &sched;
+                scope.spawn(move || loop {
+                    if sched.tick().is_none() {
+                        if sched.active_sessions() == 0 {
+                            break; // fully drained
+                        }
+                        thread::yield_now(); // others are mid-step
+                    }
+                });
+            }
+        });
+        for (spec, ticket) in SPECS.iter().zip(tickets) {
+            let solo = strategies::from_name(spec)
+                .unwrap()
+                .generate(&MockExec::new(256), req)
+                .map_err(|e| format!("{spec} solo: {e}"))?;
+            let pooled = ticket.wait().map_err(|e| format!("{spec} pooled: {e}"))?;
+            if pooled.generated() != solo.generated() {
+                return Err(format!("{spec}: concurrent-driver run diverged from solo"));
+            }
+            if pooled.steps != solo.steps {
+                return Err(format!("{spec}: concurrent-driver steps diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn mock_pool_steps_per_sec(workers: usize) -> f64 {
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> =
+        Arc::new(MockExec::new(256).with_step_delay(Duration::from_millis(2)));
+    let sched = Scheduler::new(exec, SchedulerConfig::default(), Arc::clone(&metrics));
+    sched.spawn_workers(workers);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..16)
+        .map(|i| {
+            let gen = if i % 2 == 0 { 8 } else { 16 };
+            let spec = if i % 4 == 3 { "window" } else { "full" };
+            let req = GenRequest::new(vec![10; 4], gen, 256);
+            sched
+                .submit(SubmitSpec { strategy: spec.into(), req, deadline: None })
+                .expect("admit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("workload completes");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    use std::sync::atomic::Ordering;
+    metrics.sched_steps_total.load(Ordering::Relaxed) as f64 / wall.max(1e-9)
+}
+
+/// ISSUE 2 acceptance: a 16-session mixed workload on 4 driver workers
+/// sustains ≥ 2× the steps/sec of 1 worker. The mock's artificial 2 ms step
+/// cost makes the workload compute-bound, so the bound holds even on
+/// loaded single-core CI (sleeps overlap regardless of core count).
+#[test]
+fn multi_worker_driver_scales_mock_throughput() {
+    let r1 = mock_pool_steps_per_sec(1);
+    let r4 = mock_pool_steps_per_sec(4);
+    assert!(
+        r4 >= 2.0 * r1,
+        "4 drivers: {r4:.1} steps/s < 2x 1 driver: {r1:.1} steps/s"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// soft-limit eviction must see mid-step sessions' bytes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn soft_limit_counts_mid_step_session_bytes() {
+    // measure the per-session resident cache for this request shape
+    let req = GenRequest::new(vec![10; 4], 64, 256);
+    let probe = MockExec::new(256);
+    let mut probe_sess = strategies::from_name("window")
+        .unwrap()
+        .start(&probe, &req)
+        .unwrap();
+    probe_sess.step(&probe).unwrap();
+    let per_session = probe_sess.cache_bytes();
+    assert!(per_session > 0, "window session should hold a cache after one step");
+
+    // the soft limit fits ONE resident cache, not two: pressure only exists
+    // if the mid-step session's checkout bytes are counted
+    let gate = Gate::new();
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(GateExec {
+        inner: MockExec::new(256),
+        gate: Arc::clone(&gate),
+        gate_full: false,
+        gate_cached: true,
+    });
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            kv_soft_bytes: per_session + per_session / 2,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    let t_a = sched.submit(submit("window", &req)).unwrap();
+    sched.tick(); // A refreshes (window forward) and now holds a cache
+    gate.arm();
+    let s2 = Arc::clone(&sched);
+    let stepper = thread::spawn(move || s2.tick()); // A's cached step parks
+    gate.wait_entered();
+
+    let t_b = sched.submit(submit("window", &req)).unwrap();
+    sched.tick(); // B refreshes; booking must see A's mid-step bytes
+    use std::sync::atomic::Ordering;
+    assert!(
+        metrics.kv_pool_evictions.load(Ordering::Relaxed) > 0,
+        "mid-step session bytes were invisible to the soft limit"
+    );
+
+    gate.open();
+    stepper.join().unwrap();
+    while sched.tick().is_some() {}
+    t_a.wait().unwrap();
+    t_b.wait().unwrap();
 }
 
 #[test]
