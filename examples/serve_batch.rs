@@ -14,8 +14,12 @@
 //! short-requests-only), then an **engine-replica A/B**: the same scheduler
 //! workload on a 1-replica pool vs an N-replica pool (`WD_REPLICAS`, default
 //! 4) with one driver worker per replica — steps/sec should scale with the
-//! replica count. Finally demonstrates KV-pool admission control: a server
-//! with a tiny `kv_budget_bytes` answers `429` instead of overcommitting.
+//! replica count. Then a **micro-batch A/B**: the scheduler workload at
+//! coalescing widths B ∈ {1, 4, 8}, reporting steps/sec and
+//! `batch_occupancy` (mean lanes per forward; the mid-flight `/sessions`
+//! probe also tables per-session `age_secs` vs `busy_ms`). Finally
+//! demonstrates KV-pool admission control: a server with a tiny
+//! `kv_budget_bytes` answers `429` instead of overcommitting.
 //!
 //! Runs against the trained sim model when artifacts exist, otherwise falls
 //! back to the deterministic mock model so the comparison runs anywhere (the
@@ -100,6 +104,28 @@ fn build_state(
     })
 }
 
+/// Mid-flight `/sessions` table: queue time (age minus busy) vs engine time
+/// per live session.
+fn print_sessions_table(label: &str, body: &str) {
+    let Ok(j) = parse(body) else { return };
+    let Some(rows) = j.get("sessions").as_arr() else { return };
+    println!("[{label}] mid-flight /sessions: {} live", rows.len());
+    if rows.is_empty() {
+        return;
+    }
+    println!("  {:>4} {:<22} {:>5} {:>9} {:>9}", "id", "strategy", "steps", "age_s", "busy_ms");
+    for r in rows {
+        println!(
+            "  {:>4} {:<22} {:>5} {:>9.3} {:>9.2}",
+            r.get("id").as_usize().unwrap_or(0),
+            r.get("strategy").as_str().unwrap_or("?"),
+            r.get("steps").as_usize().unwrap_or(0),
+            r.get("age_secs").as_f64().unwrap_or(0.0),
+            r.get("busy_ms").as_f64().unwrap_or(0.0),
+        );
+    }
+}
+
 fn run_phase(
     label: &str,
     state: Arc<AppState>,
@@ -141,10 +167,7 @@ fn run_phase(
     let wall = t0.elapsed().as_secs_f64();
 
     if let Ok(Some((200, body))) = probe.join() {
-        if let Ok(j) = parse(&body) {
-            let live = j.get("sessions").as_arr().map(|a| a.len()).unwrap_or(0);
-            println!("[{label}] mid-flight /sessions: {live} live");
-        }
+        print_sessions_table(label, &body);
     }
 
     let mut stats = PhaseStats {
@@ -357,6 +380,53 @@ fn main() -> anyhow::Result<()> {
             spn / sp1.max(1e-9),
         );
     }
+
+    // -- phase 4: cross-session micro-batching — max_batch ∈ {1, 4, 8} ---------
+    // same scheduler workload, one driver; the only variable is the
+    // coalescing width B. On the mock path each forward costs 1 ms and the
+    // batched mock pays it once per batch, so steps/sec should scale with
+    // occupancy; with artifacts the engine batches when the manifest ships
+    // batched executables (b_ladder) and falls back to solo loops otherwise.
+    let make_batch_exec = || -> anyhow::Result<Arc<dyn StepExec + Send + Sync>> {
+        let exec: Arc<dyn StepExec + Send + Sync> = match &manifest {
+            Some(m) => EngineCell::new(Engine::load(m, "dream-sim-instruct")?),
+            None => Arc::new(MockExec::new(256).with_step_delay(Duration::from_millis(1))),
+        };
+        Ok(exec)
+    };
+    let mut batch_phases: Vec<(usize, PhaseStats, f64)> = Vec::new();
+    for b in [1usize, 4, 8] {
+        let exec_b = make_batch_exec()?;
+        let st = build_state(
+            exec_b,
+            None,
+            tok.clone(),
+            model_name,
+            SchedulerConfig { max_batch: b, ..Default::default() },
+            1,
+            false,
+        );
+        let metrics_b = Arc::clone(&st.metrics);
+        let label = format!("batch[B={b}]");
+        let phase = run_phase(&label, st, &bodies, concurrency)?;
+        batch_phases.push((b, phase, metrics_b.batch_occupancy()));
+    }
+    println!("\n--- micro-batch scaling (1 driver, coalesced forwards) ---");
+    for (b, p, occ) in &batch_phases {
+        print_phase(p);
+        println!(
+            "  B={b}: {:.1} steps/sec, batch_occupancy={occ:.2}",
+            p.steps_per_sec()
+        );
+    }
+    let sp1 = batch_phases[0].1.steps_per_sec();
+    let spb = batch_phases.last().map(|(_, p, _)| p.steps_per_sec()).unwrap_or(sp1);
+    println!(
+        "B=8 vs B=1: {:.1} -> {:.1} steps/sec ({:.2}x)",
+        sp1,
+        spb,
+        spb / sp1.max(1e-9),
+    );
 
     // -- KV-pool admission control: tiny budget answers 429 --------------------
     let tiny = build_state(

@@ -83,6 +83,15 @@ def ladders(s: int) -> tuple[list[int], list[int]]:
     return [c for c in cs if c <= s], [r for r in rs if r <= s]
 
 
+def parse_batch_ladder(spec: str) -> list[int]:
+    """Batch-lane ladder for the batched executables. B=1 is always present
+    as the unbatched forms, so entries <= 1 are dropped (listing 1 is
+    harmless, not an error). Empty spec disables batched lowering."""
+    if not spec:
+        return []
+    return sorted({b for b in (int(x) for x in spec.split(",") if x.strip()) if b > 1})
+
+
 # ---------------------------------------------------------------------------
 # HLO text lowering
 # ---------------------------------------------------------------------------
@@ -134,19 +143,37 @@ def lower_exec(fn, step_specs: list[tuple[str, object]],
 
 
 def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
-                      out_dir: str, attn: str, log=print) -> list[dict]:
-    """Lower the full/window/cached executable matrix for one model."""
+                      out_dir: str, attn: str, b_ladder: list[int] | None = None,
+                      log=print) -> list[dict]:
+    """Lower the full/window/cached executable matrix for one model.
+
+    With a non-empty ``b_ladder``, each (variant, bucket) additionally gets
+    batched forms with a leading batch dim B (``full_step_b{B}_s{S}`` etc.):
+    the single-sequence step fn vmapped over B lanes, with a ``lane_valid``
+    [B] input multiplied into each lane's validity mask so padding lanes are
+    inert in-graph — the cross-session micro-batching substrate
+    (DESIGN.md §"Batched execution"). A batched variant that fails to lower
+    (e.g. a kernel without a batching rule) is skipped with a warning: the
+    rust engine falls back to solo loops for buckets it can't find.
+    """
     use_pallas = attn == "pallas"
+    b_ladder = b_ladder or []
     names, flat_w = flatten_params(params)
     weight_specs = [(n, f32(params[n].shape)) for n in names]
     l, h, dh = arch.n_layers, arch.n_heads, arch.dh
     os.makedirs(os.path.join(out_dir, name), exist_ok=True)
     entries = []
 
-    def add(exec_name, fn, step_specs, out_names):
+    def add(exec_name, fn, step_specs, out_names, optional=False):
         t0 = time.time()
         path = os.path.join(out_dir, name, f"{exec_name}.hlo.txt")
-        e = lower_exec(fn, step_specs, weight_specs, out_names, path)
+        try:
+            e = lower_exec(fn, step_specs, weight_specs, out_names, path)
+        except Exception as err:  # pragma: no cover - depends on jax version
+            if not optional:
+                raise
+            log(f"  [aot] {name}/{exec_name} SKIPPED ({err})")
+            return
         e["name"] = exec_name
         entries.append(e)
         log(f"  [aot] {name}/{exec_name} ({time.time() - t0:.1f}s)")
@@ -160,8 +187,21 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                 return (full_step(p, arch, ids, valid, use_pallas),)
             return fn
 
+        def mk_full_b(s_):
+            def fn(ids, valid, lane_valid, *flat):
+                p = unflatten_params(names, flat)
+                def one(ids1, valid1, lv1):
+                    return full_step(p, arch, ids1, valid1 * lv1, use_pallas)
+                return (jax.vmap(one)(ids, valid, lane_valid),)
+            return fn
+
         add(f"full_step_s{s}", mk_full(s),
             [("ids", i32((s,))), ("valid", f32((s,)))], ["logits"])
+        for b in b_ladder:
+            add(f"full_step_b{b}_s{s}", mk_full_b(s),
+                [("ids", i32((b, s))), ("valid", f32((b, s))),
+                 ("lane_valid", f32((b,)))],
+                ["logits"], optional=True)
 
         for c in c_ladder:
             def mk_win(c_):
@@ -170,9 +210,23 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                     return fwd_window(p, arch, ids, pos, valid, use_pallas)
                 return fn
 
+            def mk_win_b(c_):
+                def fn(ids, pos, valid, lane_valid, *flat):
+                    p = unflatten_params(names, flat)
+                    def one(ids1, pos1, valid1, lv1):
+                        return fwd_window(p, arch, ids1, pos1, valid1 * lv1,
+                                          use_pallas)
+                    return jax.vmap(one)(ids, pos, valid, lane_valid)
+                return fn
+
             add(f"fwd_window_s{s}_c{c}", mk_win(c),
                 [("ids", i32((c,))), ("pos", i32((c,))), ("valid", f32((c,)))],
                 ["logits", "kcache", "vcache"])
+            for b in b_ladder:
+                add(f"fwd_window_b{b}_s{s}_c{c}", mk_win_b(c),
+                    [("ids", i32((b, c))), ("pos", i32((b, c))),
+                     ("valid", f32((b, c))), ("lane_valid", f32((b,)))],
+                    ["logits", "kcache", "vcache"], optional=True)
 
             for r in [r for r in r_ladder if r <= c]:
                 def mk_cached(c_, r_):
@@ -182,6 +236,18 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                                           rvalid, cvalid, kc, vc, use_pallas)
                     return fn
 
+                def mk_cached_b(c_, r_):
+                    def fn(ids_r, pos_r, slot_idx, rvalid, cvalid, kc, vc,
+                           lane_valid, *flat):
+                        p = unflatten_params(names, flat)
+                        def one(ir1, pr1, si1, rv1, cv1, k1, v1, lv1):
+                            return fwd_cached(p, arch, ir1, pr1, si1,
+                                              rv1 * lv1, cv1 * lv1, k1, v1,
+                                              use_pallas)
+                        return jax.vmap(one)(ids_r, pos_r, slot_idx, rvalid,
+                                             cvalid, kc, vc, lane_valid)
+                    return fn
+
                 add(f"fwd_cached_s{s}_c{c}_r{r}", mk_cached(c, r),
                     [("ids_r", i32((r,))), ("pos_r", i32((r,))),
                      ("slot_idx", i32((r,))), ("rvalid", f32((r,))),
@@ -189,6 +255,15 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                      ("kcache", f32((l, c, h, dh))),
                      ("vcache", f32((l, c, h, dh)))],
                     ["logits", "kcache", "vcache"])
+                for b in b_ladder:
+                    add(f"fwd_cached_b{b}_s{s}_c{c}_r{r}", mk_cached_b(c, r),
+                        [("ids_r", i32((b, r))), ("pos_r", i32((b, r))),
+                         ("slot_idx", i32((b, r))), ("rvalid", f32((b, r))),
+                         ("cvalid", f32((b, c))),
+                         ("kcache", f32((b, l, c, h, dh))),
+                         ("vcache", f32((b, l, c, h, dh))),
+                         ("lane_valid", f32((b,)))],
+                        ["logits", "kcache", "vcache"], optional=True)
     return entries
 
 
@@ -250,6 +325,10 @@ def main() -> None:
                     help="comma list or 'all'")
     ap.add_argument("--attn", choices=["pallas", "ref"], default="pallas",
                     help="attention implementation lowered into the HLO")
+    ap.add_argument("--batch-ladder", default="2,4,8",
+                    help="comma list of batch-lane counts for the batched "
+                         "executables (B=1 is always present as the unbatched "
+                         "forms); empty string disables batched lowering")
     ap.add_argument("--train-steps", type=int, default=350)
     ap.add_argument("--retrain", action="store_true",
                     help="retrain even if cached weights exist")
@@ -259,6 +338,7 @@ def main() -> None:
     os.makedirs(out_dir, exist_ok=True)
     zoo = model_zoo()
     wanted = list(zoo) if args.models == "all" else args.models.split(",")
+    batch_ladder = parse_batch_ladder(args.batch_ladder)
 
     # 1. vocabulary (+ golden encode vectors for the rust tokenizer parity test)
     tok = Tokenizer().fit(corpus.all_surface_texts())
@@ -293,7 +373,7 @@ def main() -> None:
         trained[name] = params
         windex = write_weights(params, wpath)
         execs = build_executables(name, arch, params, info["seqs"], out_dir,
-                                  args.attn)
+                                  args.attn, b_ladder=batch_ladder)
         c_l, r_l = ladders(max(info["seqs"]))
         manifest["models"][name] = {
             "arch": arch.to_dict(),
@@ -301,6 +381,8 @@ def main() -> None:
             "seqs": info["seqs"],
             "c_ladder": c_l,
             "r_ladder": r_l,
+            # lanes a single forward can carry; B=1 = the unbatched forms
+            "b_ladder": [1] + batch_ladder,
             "weights_file": os.path.basename(wpath),
             "weights": windex,
             "weight_order": sorted(params),

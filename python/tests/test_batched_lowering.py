@@ -1,0 +1,91 @@
+"""Batched (vmapped) step fns must be lane-wise bit-identical to the solo
+step fns, and padding lanes (lane_valid = 0) must stay finite/inert.
+
+This is the python-side half of the batching determinism story: the rust
+property tests (`rust/tests/batch_props.rs`) prove the scheduler's
+coalesced stepping matches solo stepping on the mock; this file proves the
+lowered batched kernels compute the same numbers per lane as the solo
+kernels they vmap. Runs on the ref attention path (the pallas kernel is
+exercised by test_kernel.py); jax CPU is deterministic, so equality is
+exact, not approximate.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import Arch, fwd_cached, fwd_window, full_step, init_params
+
+S, C, R, B = 64, 64, 16, 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = Arch(d=16, n_layers=1, n_heads=2, dh=8, ffn=32, vocab=32, max_seq=S)
+    params = init_params(jax.random.PRNGKey(0), arch)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, 32)
+    lane_valid = jnp.array([1.0, 0.0])  # lane 1 is a padding lane
+    return arch, params, ids, lane_valid
+
+
+def assert_bitwise(a, b, what):
+    assert jnp.array_equal(a, b), f"{what}: batched lane differs from solo"
+
+
+def test_full_lane_matches_solo(setup):
+    arch, params, ids, lane_valid = setup
+    valid = jnp.ones((B, S), jnp.float32)
+
+    def one(i, v, lv):
+        return full_step(params, arch, i, v * lv, use_pallas=False)
+
+    batched = jax.vmap(one)(ids, valid, lane_valid)
+    solo = full_step(params, arch, ids[0], valid[0], use_pallas=False)
+    assert_bitwise(batched[0], solo, "full logits")
+    assert bool(jnp.isfinite(batched[1]).all()), "padding lane produced non-finite"
+
+
+def test_window_lane_matches_solo(setup):
+    arch, params, ids, lane_valid = setup
+    pos = jnp.tile(jnp.arange(C, dtype=jnp.int32)[None, :], (B, 1))
+    wids = ids[:, :C]
+    valid = jnp.ones((B, C), jnp.float32)
+
+    def one(i, p, v, lv):
+        return fwd_window(params, arch, i, p, v * lv, use_pallas=False)
+
+    bl, bk, bv = jax.vmap(one)(wids, pos, valid, lane_valid)
+    sl, sk, sv = fwd_window(params, arch, wids[0], pos[0], valid[0],
+                            use_pallas=False)
+    assert_bitwise(bl[0], sl, "window logits")
+    assert_bitwise(bk[0], sk, "window kcache")
+    assert_bitwise(bv[0], sv, "window vcache")
+    assert bool(jnp.isfinite(bl[1]).all())
+
+
+def test_cached_lane_matches_solo(setup):
+    arch, params, ids, lane_valid = setup
+    pos = jnp.tile(jnp.arange(C, dtype=jnp.int32)[None, :], (B, 1))
+    wids = ids[:, :C]
+    wvalid = jnp.ones((B, C), jnp.float32)
+    _, sk, sv = fwd_window(params, arch, wids[0], pos[0], wvalid[0],
+                           use_pallas=False)
+    kc = jnp.tile(sk[None], (B, 1, 1, 1, 1))
+    vc = jnp.tile(sv[None], (B, 1, 1, 1, 1))
+    ids_r, pos_r, slot_idx = wids[:, :R], pos[:, :R], pos[:, :R]
+    rvalid = jnp.ones((B, R), jnp.float32)
+    cvalid = jnp.ones((B, C), jnp.float32)
+
+    def one(ir, pr, si, rv, cv, k, v, lv):
+        return fwd_cached(params, arch, ir, pr, si, rv * lv, cv * lv, k, v,
+                          use_pallas=False)
+
+    cl, ck, cv_out = jax.vmap(one)(ids_r, pos_r, slot_idx, rvalid, cvalid,
+                                   kc, vc, lane_valid)
+    sl2, sk2, sv2 = fwd_cached(params, arch, ids_r[0], pos_r[0], slot_idx[0],
+                               rvalid[0], cvalid[0], kc[0], vc[0],
+                               use_pallas=False)
+    assert_bitwise(cl[0], sl2, "cached logits")
+    assert_bitwise(ck[0], sk2, "cached kcache")
+    assert_bitwise(cv_out[0], sv2, "cached vcache")
+    assert bool(jnp.isfinite(cl[1]).all())

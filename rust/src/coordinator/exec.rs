@@ -5,11 +5,23 @@
 //! (N replicas, idle-checkout per step — concurrent callers execute truly
 //! in parallel, one per replica), and [`MockExec`] (deterministic fake
 //! model — lets every coordinator/strategy test run without artifacts).
+//!
+//! Beyond the solo step methods, [`StepExec::execute_batch`] runs several
+//! *compatible* [`StepPlan`]s (same kind + `(s, c, r)` bucket) as one
+//! forward: the engine stacks lane inputs on a leading batch dim and
+//! dispatches the `b{B}`-suffixed executables from the manifest's batch
+//! ladder (falling back to a solo loop when the artifacts don't ship
+//! them); the pool runs a whole batch on ONE checked-out replica; the mock
+//! pays its simulated step cost once per batch, making cross-session
+//! batching measurable in tests.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use xla::Literal;
 
-use crate::runtime::{Arch, Engine, EngineCell, EnginePool, KvCache, Specials};
+use super::plan::{execute_plan, StepOutputs, StepPlan};
+use crate::runtime::{
+    buckets, Arch, BatchedKv, Engine, EngineCell, EnginePool, KvCache, ModelEntry, Specials,
+};
 
 pub trait StepExec {
     fn arch(&self) -> Arch;
@@ -18,6 +30,14 @@ pub trait StepExec {
     fn seqs(&self) -> Vec<usize>;
     fn c_ladder(&self, s: usize) -> Vec<usize>;
     fn r_ladder(&self, s: usize) -> Vec<usize>;
+
+    /// Batch-lane ladder of the executor's batched executables. `[1]` (the
+    /// default) means no hardware batching: `execute_batch` degrades to a
+    /// solo loop and the scheduler's coalescing gains nothing but loses
+    /// nothing either.
+    fn b_ladder(&self) -> Vec<usize> {
+        vec![1]
+    }
 
     fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>>;
 
@@ -28,10 +48,226 @@ pub trait StepExec {
     fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
               slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
               -> Result<(Vec<f32>, KvCache)>;
+
+    /// Execute *compatible* plans (same kind and `(s, c, r)` bucket — the
+    /// scheduler's coalescing invariant), ideally as one batched forward.
+    /// One result per plan, index-aligned. The default loops solo so every
+    /// executor works unchanged; the real engine overrides it to use its
+    /// batched executables (when the artifacts ship them) and the mock
+    /// overrides it to amortize its simulated step cost, which is what the
+    /// batched-throughput tests measure.
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        plans.into_iter().map(|p| execute_plan(self, p)).collect()
+    }
 }
 
 fn ladder_le(ladder: &[usize], s: usize) -> Vec<usize> {
     ladder.iter().copied().filter(|&x| x <= s).collect()
+}
+
+// ---------------------------------------------------------------------------
+// batched execution on the real engine
+// ---------------------------------------------------------------------------
+
+/// Replicate one error message across every lane of a failed batched
+/// forward (`anyhow::Error` is not `Clone`).
+fn fan_error(msg: &str, lanes: usize) -> Vec<Result<StepOutputs>> {
+    (0..lanes).map(|_| Err(anyhow!("batched forward failed: {msg}"))).collect()
+}
+
+/// Run compatible plans as one batched forward on `e` when the manifest
+/// ships the batched executable for their bucket; otherwise loop solo.
+/// Lane inputs are stacked on a leading batch dim, padding lanes carry
+/// all-zero validity plus `lane_valid = 0` so they are inert in-graph.
+fn engine_execute_batch(e: &Engine, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+    let lanes = plans.len();
+    if lanes <= 1 {
+        return plans.into_iter().map(|p| execute_plan(e, p)).collect();
+    }
+    debug_assert!(
+        plans.iter().all(|p| p.compatible(&plans[0])),
+        "execute_batch over incompatible plans"
+    );
+    // copy the bucket key out first so the fallback paths can move `plans`
+    // without a live borrow into it
+    let kind = plans[0].kind();
+    let (s_key, c_key, r_key) = plans[0].bucket();
+    // joint (B, s, c, r) pick: chooses the lane bucket AND validates that
+    // the plans' shape key sits exactly on the artifact ladders — batched
+    // executables only exist at ladder points, so an off-ladder key (or a
+    // single-lane b_ladder) degrades to the solo loop
+    let b = match buckets::pick_bscr(
+        &e.model.b_ladder,
+        &e.model.seqs,
+        &e.model.c_ladder,
+        &e.model.r_ladder,
+        lanes,
+        s_key,
+        c_key.max(1),
+        r_key.max(1),
+    ) {
+        Ok((b, s, c, r))
+            if b > 1
+                && s == s_key
+                && (c_key == 0 || c == c_key)
+                && (r_key == 0 || r == r_key) =>
+        {
+            b
+        }
+        _ => return plans.into_iter().map(|p| execute_plan(e, p)).collect(),
+    };
+    let mut lane_valid = vec![0f32; b];
+    for lv in lane_valid.iter_mut().take(lanes) {
+        *lv = 1.0;
+    }
+    let arch = e.model.arch.clone();
+    match kind {
+        super::plan::ForwardKind::Full => {
+            let s = s_key;
+            let name = ModelEntry::full_step_name_b(b, s);
+            if !e.has_executable(&name) {
+                return plans.into_iter().map(|p| execute_plan(e, p)).collect();
+            }
+            let mut ids = vec![0i32; b * s];
+            let mut valid = vec![0f32; b * s];
+            for (i, p) in plans.iter().enumerate() {
+                let StepPlan::Full { ids: pi, valid: pv, .. } = p else { unreachable!() };
+                ids[i * s..(i + 1) * s].copy_from_slice(pi);
+                valid[i * s..(i + 1) * s].copy_from_slice(pv);
+            }
+            let out = e.run(
+                &name,
+                &[
+                    crate::runtime::In::I32(&ids),
+                    crate::runtime::In::F32(&valid),
+                    crate::runtime::In::F32(&lane_valid),
+                ],
+            );
+            let logits = match out {
+                Ok(o) if !o.is_empty() => match o[0].to_vec::<f32>() {
+                    Ok(l) => l,
+                    Err(err) => return fan_error(&err.to_string(), lanes),
+                },
+                Ok(_) => return fan_error("empty output tuple", lanes),
+                Err(err) => return fan_error(&err.to_string(), lanes),
+            };
+            let per = s * arch.vocab;
+            (0..lanes)
+                .map(|i| Ok(StepOutputs::Logits(logits[i * per..(i + 1) * per].to_vec())))
+                .collect()
+        }
+        super::plan::ForwardKind::Window => {
+            let (s, c) = (s_key, c_key);
+            let name = ModelEntry::fwd_window_name_b(b, s, c);
+            if !e.has_executable(&name) {
+                return plans.into_iter().map(|p| execute_plan(e, p)).collect();
+            }
+            let mut ids = vec![0i32; b * c];
+            let mut pos = vec![0i32; b * c];
+            let mut valid = vec![0f32; b * c];
+            for (i, p) in plans.iter().enumerate() {
+                let StepPlan::Window { ids: pi, pos: pp, valid: pv, .. } = p else {
+                    unreachable!()
+                };
+                ids[i * c..(i + 1) * c].copy_from_slice(pi);
+                pos[i * c..(i + 1) * c].copy_from_slice(pp);
+                valid[i * c..(i + 1) * c].copy_from_slice(pv);
+            }
+            let out = e.run(
+                &name,
+                &[
+                    crate::runtime::In::I32(&ids),
+                    crate::runtime::In::I32(&pos),
+                    crate::runtime::In::F32(&valid),
+                    crate::runtime::In::F32(&lane_valid),
+                ],
+            );
+            split_logits_kv(out, lanes, b, s, c, c * arch.vocab, arch.kv_elems(c))
+        }
+        super::plan::ForwardKind::Cached => {
+            let (s, c, r) = (s_key, c_key, r_key);
+            let name = ModelEntry::fwd_cached_name_b(b, s, c, r);
+            if !e.has_executable(&name) {
+                return plans.into_iter().map(|p| execute_plan(e, p)).collect();
+            }
+            let mut ids_r = vec![0i32; b * r];
+            let mut pos_r = vec![0i32; b * r];
+            // padded lanes scatter out-of-bounds (slot c), like padded slots
+            let mut slot_idx = vec![c as i32; b * r];
+            let mut rvalid = vec![0f32; b * r];
+            let mut cvalid = vec![0f32; b * c];
+            let mut kv_lanes: Vec<&KvCache> = Vec::with_capacity(lanes);
+            for (i, p) in plans.iter().enumerate() {
+                let StepPlan::Cached {
+                    ids_r: pir, pos_r: ppr, slot_idx: psi, rvalid: prv, cvalid: pcv, kv, ..
+                } = p
+                else {
+                    unreachable!()
+                };
+                ids_r[i * r..(i + 1) * r].copy_from_slice(pir);
+                pos_r[i * r..(i + 1) * r].copy_from_slice(ppr);
+                slot_idx[i * r..(i + 1) * r].copy_from_slice(psi);
+                rvalid[i * r..(i + 1) * r].copy_from_slice(prv);
+                cvalid[i * c..(i + 1) * c].copy_from_slice(pcv);
+                kv_lanes.push(kv);
+            }
+            let merged = match KvCache::merge_lanes(&kv_lanes, b) {
+                Ok(m) => m,
+                Err(err) => return fan_error(&err.to_string(), lanes),
+            };
+            let out = e.run(
+                &name,
+                &[
+                    crate::runtime::In::I32(&ids_r),
+                    crate::runtime::In::I32(&pos_r),
+                    crate::runtime::In::I32(&slot_idx),
+                    crate::runtime::In::F32(&rvalid),
+                    crate::runtime::In::F32(&cvalid),
+                    crate::runtime::In::F32(&merged.k),
+                    crate::runtime::In::F32(&merged.v),
+                    crate::runtime::In::F32(&lane_valid),
+                ],
+            );
+            split_logits_kv(out, lanes, b, s, c, r * arch.vocab, arch.kv_elems(c))
+        }
+    }
+}
+
+/// Decompose a batched window/cached output tuple (logits, kcache, vcache)
+/// into per-lane `StepOutputs`.
+fn split_logits_kv(out: Result<Vec<Literal>>, lanes: usize, b: usize, s: usize,
+                   c: usize, logits_per_lane: usize, kv_lane_elems: usize)
+                   -> Vec<Result<StepOutputs>> {
+    let parts = match out {
+        Ok(p) => p,
+        Err(err) => return fan_error(&err.to_string(), lanes),
+    };
+    let unpack = || -> Result<(Vec<f32>, Vec<KvCache>)> {
+        let mut parts = parts;
+        let v = parts.pop().ok_or_else(|| anyhow!("missing vcache output"))?;
+        let k = parts.pop().ok_or_else(|| anyhow!("missing kcache output"))?;
+        let logits = parts
+            .pop()
+            .ok_or_else(|| anyhow!("missing logits output"))?
+            .to_vec::<f32>()?;
+        let batched = BatchedKv::from_flat(
+            b, s, c, kv_lane_elems, k.to_vec::<f32>()?, v.to_vec::<f32>()?,
+        )?;
+        Ok((logits, batched.split(lanes)?))
+    };
+    match unpack() {
+        Ok((logits, kvs)) => kvs
+            .into_iter()
+            .enumerate()
+            .map(|(i, kv)| {
+                Ok(StepOutputs::LogitsKv(
+                    logits[i * logits_per_lane..(i + 1) * logits_per_lane].to_vec(),
+                    kv,
+                ))
+            })
+            .collect(),
+        Err(err) => fan_error(&err.to_string(), lanes),
+    }
 }
 
 impl StepExec for Engine {
@@ -62,6 +298,12 @@ impl StepExec for Engine {
               -> Result<(Vec<f32>, KvCache)> {
         Engine::fwd_cached(self, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
     }
+    fn b_ladder(&self) -> Vec<usize> {
+        self.model.b_ladder.clone()
+    }
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        engine_execute_batch(self, plans)
+    }
 }
 
 impl StepExec for EngineCell {
@@ -91,6 +333,13 @@ impl StepExec for EngineCell {
               slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
               -> Result<(Vec<f32>, KvCache)> {
         self.with(|e| e.fwd_cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv))
+    }
+    fn b_ladder(&self) -> Vec<usize> {
+        self.with(|e| e.model.b_ladder.clone())
+    }
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        // one mutex hold for the whole batch: the point of coalescing
+        self.with(|e| engine_execute_batch(e, plans))
     }
 }
 
@@ -127,6 +376,14 @@ impl StepExec for EnginePool {
             e.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
         })
     }
+    fn b_ladder(&self) -> Vec<usize> {
+        self.cached_b_ladder().to_vec()
+    }
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        // the whole batch occupies ONE replica; other replicas stay free
+        // for other driver workers' batches
+        self.with_replica(|e| e.execute_batch(plans))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -155,9 +412,15 @@ pub struct CallCounts {
     pub full: usize,
     pub window: usize,
     pub cached: usize,
-    /// Total computed token-slots (c for window/full, r for cached) — the
-    /// compute-cost model used by coordinator-level assertions.
+    /// Total computed token-slots (c for window/full, r for cached; per
+    /// lane for batched forwards) — the compute-cost model used by
+    /// coordinator-level assertions.
     pub token_slots: usize,
+    /// Multi-lane `execute_batch` forwards (each counts once in the
+    /// per-kind counter above but carries several lanes).
+    pub batched_forwards: usize,
+    /// Lanes carried by those batched forwards.
+    pub batched_lanes: usize,
 }
 
 impl MockExec {
@@ -208,6 +471,7 @@ impl MockExec {
         KvCache {
             s,
             c,
+            flat: true,
             k: Literal::vec1(&vec![0f32; elems]),
             v: Literal::vec1(&vec![0f32; elems]),
         }
@@ -283,6 +547,66 @@ impl StepExec for MockExec {
         }
         Ok((out, self.mock_kv(s, c)))
     }
+
+    fn b_ladder(&self) -> Vec<usize> {
+        vec![1, 2, 4, 8]
+    }
+
+    /// Real batched execution: per-lane outputs are byte-identical to the
+    /// solo methods (the mock's logits depend only on positions), but the
+    /// simulated step cost is paid ONCE for the whole batch — the
+    /// amortization the batched-throughput tests measure.
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        let lanes = plans.len();
+        if lanes <= 1 {
+            return plans.into_iter().map(|p| execute_plan(self, p)).collect();
+        }
+        debug_assert!(
+            plans.iter().all(|p| p.compatible(&plans[0])),
+            "execute_batch over incompatible plans"
+        );
+        self.simulate_cost();
+        let per_lane_slots = plans[0].slots();
+        let kind = plans[0].kind();
+        {
+            let mut cc = self.calls.lock().unwrap();
+            match kind {
+                super::plan::ForwardKind::Full => cc.full += 1,
+                super::plan::ForwardKind::Window => cc.window += 1,
+                super::plan::ForwardKind::Cached => cc.cached += 1,
+            }
+            cc.token_slots += per_lane_slots * lanes;
+            cc.batched_forwards += 1;
+            cc.batched_lanes += lanes;
+        }
+        plans
+            .into_iter()
+            .map(|p| match p {
+                StepPlan::Full { s, .. } => {
+                    let mut out = Vec::with_capacity(s * self.vocab);
+                    for pos in 0..s {
+                        out.extend(self.row(pos));
+                    }
+                    Ok(StepOutputs::Logits(out))
+                }
+                StepPlan::Window { s, c, pos, .. } => {
+                    let mut out = Vec::with_capacity(c * self.vocab);
+                    for &pp in pos.iter().take(c) {
+                        out.extend(self.row(pp as usize));
+                    }
+                    Ok(StepOutputs::LogitsKv(out, self.mock_kv(s, c)))
+                }
+                StepPlan::Cached { s, c, r, pos_r, kv, .. } => {
+                    assert_eq!(kv.c, c, "cache/bucket mismatch");
+                    let mut out = Vec::with_capacity(r * self.vocab);
+                    for &pp in pos_r.iter().take(r) {
+                        out.extend(self.row(pp as usize));
+                    }
+                    Ok(StepOutputs::LogitsKv(out, self.mock_kv(s, c)))
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -318,5 +642,103 @@ mod tests {
         assert_eq!(c.window, 1);
         assert_eq!(c.cached, 1);
         assert_eq!(c.token_slots, 64 + 64 + 16);
+        assert_eq!(c.batched_forwards, 0);
+    }
+
+    #[test]
+    fn mock_batched_lanes_match_solo_outputs() {
+        let m = MockExec::new(64);
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        let solo = m.full(64, &ids, &valid).unwrap();
+        let plans: Vec<StepPlan> = (0..3)
+            .map(|_| StepPlan::Full { s: 64, ids: ids.clone(), valid: valid.clone() })
+            .collect();
+        let outs = m.execute_batch(plans);
+        assert_eq!(outs.len(), 3);
+        for out in &outs {
+            match out {
+                Ok(o) => assert_eq!(o.logits(), &solo[..], "batched lane diverged"),
+                Err(e) => panic!("batched lane failed: {e}"),
+            }
+        }
+        let c = m.counts();
+        // one solo call + ONE batched forward carrying 3 lanes
+        assert_eq!(c.full, 2);
+        assert_eq!(c.batched_forwards, 1);
+        assert_eq!(c.batched_lanes, 3);
+        assert_eq!(c.token_slots, 64 + 3 * 64);
+    }
+
+    #[test]
+    fn mock_batched_window_kv_per_lane() {
+        let m = MockExec::new(256);
+        let plans: Vec<StepPlan> = (0..2)
+            .map(|_| StepPlan::Window {
+                s: 256,
+                c: 64,
+                ids: vec![1; 64],
+                pos: (0..64).collect(),
+                valid: vec![1.0; 64],
+            })
+            .collect();
+        let outs = m.execute_batch(plans);
+        for out in outs {
+            match out.unwrap() {
+                StepOutputs::LogitsKv(logits, kv) => {
+                    assert_eq!(logits.len(), 64 * m.vocab);
+                    assert_eq!(kv.c, 64);
+                    assert_eq!(kv.s, 256);
+                }
+                StepOutputs::Logits(_) => panic!("window plan must return kv"),
+            }
+        }
+    }
+
+    #[test]
+    fn default_execute_batch_loops_solo() {
+        // an executor that does NOT override execute_batch (the engine-pool
+        // replicas' default) still serves every lane, one forward each
+        struct Plain(MockExec);
+        impl StepExec for Plain {
+            fn arch(&self) -> Arch {
+                self.0.arch()
+            }
+            fn special(&self) -> Specials {
+                self.0.special()
+            }
+            fn seqs(&self) -> Vec<usize> {
+                self.0.seqs()
+            }
+            fn c_ladder(&self, s: usize) -> Vec<usize> {
+                self.0.c_ladder(s)
+            }
+            fn r_ladder(&self, s: usize) -> Vec<usize> {
+                self.0.r_ladder(s)
+            }
+            fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+                self.0.full(s, ids, valid)
+            }
+            fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+                      valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+                self.0.window(s, c, ids, pos, valid)
+            }
+            fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32],
+                      pos_r: &[i32], slot_idx: &[i32], rvalid: &[f32],
+                      cvalid: &[f32], kv: &KvCache) -> Result<(Vec<f32>, KvCache)> {
+                self.0.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+            }
+        }
+        let p = Plain(MockExec::new(64));
+        assert_eq!(p.b_ladder(), vec![1]);
+        let plans: Vec<StepPlan> = (0..2)
+            .map(|_| StepPlan::Full { s: 64, ids: vec![1; 64], valid: vec![1.0; 64] })
+            .collect();
+        let outs = p.execute_batch(plans);
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|o| o.is_ok()));
+        // the default fell back to two solo forwards
+        assert_eq!(p.0.counts().full, 2);
+        assert_eq!(p.0.counts().batched_forwards, 0);
     }
 }

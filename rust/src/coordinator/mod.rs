@@ -4,10 +4,15 @@
 //! * [`window`] — dual-window layout (decoded ∥ external window; far-field
 //!   pruning) and normal-step compute sets.
 //! * [`policies`] — confidence-based decode selection and step schedules.
+//! * [`plan`] — the plan/apply step protocol: declarative forward requests
+//!   ([`plan::StepPlan`]) that strategies emit and executors run, solo or
+//!   batched across sessions.
 //! * [`exec`] — the step-execution interface ([`exec::StepExec`]) strategies
-//!   are written against (engine, engine-cell, mock).
+//!   are written against (engine, engine-cell, mock), including the batched
+//!   entry point ([`exec::StepExec::execute_batch`]).
 
 pub mod exec;
+pub mod plan;
 pub mod policies;
 pub mod state;
 pub mod window;
@@ -15,6 +20,7 @@ pub mod window;
 use std::time::Duration;
 
 pub use exec::{MockExec, StepExec};
+pub use plan::{execute_plan, ForwardKind, Planned, StepOutputs, StepPlan};
 pub use state::SeqState;
 pub use window::{ComputeSet, WindowLayout};
 

@@ -1,0 +1,212 @@
+//! Plan/apply step protocol: declarative forward requests.
+//!
+//! Historically a strategy's `StepMachine::step` *owned* its forward — it
+//! called `exec.full/window/cached` inline, so one step could only ever be
+//! one engine call on behalf of one session. Cross-session batching needs
+//! the opposite factoring: a machine first **plans** (returns a [`StepPlan`]
+//! describing the single forward its next quantum needs — kind, bucket,
+//! input tensors), an executor runs one or many compatible plans as one
+//! engine call, and the machine **applies** the [`StepOutputs`] to commit
+//! decodes. `StepMachine::step` survives as the plan→execute→apply shim, so
+//! solo stepping is byte-identical to the legacy path by construction.
+//!
+//! Plans are self-contained (they own their input buffers, including the KV
+//! cache for cached steps), which is what lets the scheduler move them
+//! between sessions' machines and a shared batched forward. An abandoned
+//! plan is handed back via `StepMachine::cancel` so the KV cache is never
+//! lost to a failed coalescing attempt.
+
+use anyhow::Result;
+
+use crate::runtime::{buckets, KvCache};
+
+use super::exec::StepExec;
+
+/// Forward-pass kind (executable family). Plans of different kinds can
+/// never share a batched forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ForwardKind {
+    Full,
+    Window,
+    Cached,
+}
+
+impl ForwardKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ForwardKind::Full => "full",
+            ForwardKind::Window => "window",
+            ForwardKind::Cached => "cached",
+        }
+    }
+}
+
+/// One declarative forward request: everything the engine needs, nothing
+/// about what the session will do with the result (that context stays in
+/// the machine's pending state between `plan` and `apply`).
+pub enum StepPlan {
+    /// Full-sequence step → logits `[s * vocab]`.
+    Full { s: usize, ids: Vec<i32>, valid: Vec<f32> },
+    /// Window refresh / pruning-only step → logits `[c * vocab]` + fresh KV.
+    Window { s: usize, c: usize, ids: Vec<i32>, pos: Vec<i32>, valid: Vec<f32> },
+    /// Cached normal step: compute `r` slots against the cached `c`-window.
+    /// Owns the session's KV cache while the plan is in flight.
+    Cached {
+        s: usize,
+        c: usize,
+        r: usize,
+        ids_r: Vec<i32>,
+        pos_r: Vec<i32>,
+        slot_idx: Vec<i32>,
+        rvalid: Vec<f32>,
+        cvalid: Vec<f32>,
+        kv: KvCache,
+    },
+}
+
+impl StepPlan {
+    pub fn kind(&self) -> ForwardKind {
+        match self {
+            StepPlan::Full { .. } => ForwardKind::Full,
+            StepPlan::Window { .. } => ForwardKind::Window,
+            StepPlan::Cached { .. } => ForwardKind::Cached,
+        }
+    }
+
+    /// Shape-bucket key `(s, c, r)` (0 for axes the kind doesn't have).
+    /// Two plans may share a batched forward iff kind and bucket match.
+    pub fn bucket(&self) -> (usize, usize, usize) {
+        match self {
+            StepPlan::Full { s, .. } => (*s, 0, 0),
+            StepPlan::Window { s, c, .. } => (*s, *c, 0),
+            StepPlan::Cached { s, c, r, .. } => (*s, *c, *r),
+        }
+    }
+
+    pub fn compatible(&self, other: &StepPlan) -> bool {
+        self.kind() == other.kind() && self.bucket() == other.bucket()
+    }
+
+    /// Token slots this forward computes (the per-lane compute cost: s for
+    /// full, c for window, r for cached).
+    pub fn slots(&self) -> usize {
+        match self {
+            StepPlan::Full { s, .. } => *s,
+            StepPlan::Window { c, .. } => *c,
+            StepPlan::Cached { r, .. } => *r,
+        }
+    }
+
+    /// Live (mask-valid) positions among the computed slots.
+    pub fn used_positions(&self) -> usize {
+        let count = |v: &[f32]| v.iter().filter(|&&x| x > 0.0).count();
+        match self {
+            StepPlan::Full { valid, .. } => count(valid),
+            StepPlan::Window { valid, .. } => count(valid),
+            StepPlan::Cached { rvalid, .. } => count(rvalid),
+        }
+    }
+
+    /// Padding waste of the bucket choice: slots computed but masked off
+    /// (`runtime::buckets::waste` over the bucket and the live count).
+    pub fn padded_positions(&self) -> usize {
+        buckets::waste(self.slots(), self.used_positions())
+    }
+}
+
+/// What came back from the engine for one plan.
+pub enum StepOutputs {
+    /// `Full` plans: logits `[s * vocab]`.
+    Logits(Vec<f32>),
+    /// `Window` / `Cached` plans: logits + the (fresh or updated) KV cache.
+    LogitsKv(Vec<f32>, KvCache),
+}
+
+impl StepOutputs {
+    pub fn logits(&self) -> &[f32] {
+        match self {
+            StepOutputs::Logits(l) => l,
+            StepOutputs::LogitsKv(l, _) => l,
+        }
+    }
+}
+
+/// Outcome of planning one quantum.
+pub enum Planned {
+    /// The machine needs this forward before it can commit.
+    Forward(StepPlan),
+    /// Nothing left to do (the session is already complete).
+    Finished,
+}
+
+/// Execute one plan solo — the universal fallback every `StepExec` supports.
+pub fn execute_plan<E: StepExec + ?Sized>(exec: &E, plan: StepPlan) -> Result<StepOutputs> {
+    match plan {
+        StepPlan::Full { s, ids, valid } => {
+            Ok(StepOutputs::Logits(exec.full(s, &ids, &valid)?))
+        }
+        StepPlan::Window { s, c, ids, pos, valid } => {
+            let (logits, kv) = exec.window(s, c, &ids, &pos, &valid)?;
+            Ok(StepOutputs::LogitsKv(logits, kv))
+        }
+        StepPlan::Cached { s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv } => {
+            let (logits, new_kv) =
+                exec.cached(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &kv)?;
+            Ok(StepOutputs::LogitsKv(logits, new_kv))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+
+    #[test]
+    fn bucket_and_kind_keys() {
+        let f = StepPlan::Full { s: 256, ids: vec![0; 256], valid: vec![1.0; 256] };
+        let w = StepPlan::Window {
+            s: 256,
+            c: 64,
+            ids: vec![0; 64],
+            pos: vec![0; 64],
+            valid: vec![1.0; 64],
+        };
+        assert_eq!(f.kind(), ForwardKind::Full);
+        assert_eq!(f.bucket(), (256, 0, 0));
+        assert_eq!(w.bucket(), (256, 64, 0));
+        assert!(!f.compatible(&w));
+    }
+
+    #[test]
+    fn waste_counts_masked_slots() {
+        let mut valid = vec![0.0; 64];
+        for v in valid.iter_mut().take(40) {
+            *v = 1.0;
+        }
+        let w = StepPlan::Window {
+            s: 256,
+            c: 64,
+            ids: vec![0; 64],
+            pos: vec![0; 64],
+            valid,
+        };
+        assert_eq!(w.slots(), 64);
+        assert_eq!(w.used_positions(), 40);
+        assert_eq!(w.padded_positions(), 24);
+    }
+
+    #[test]
+    fn execute_plan_matches_direct_call() {
+        let m = MockExec::new(64);
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        let direct = m.full(64, &ids, &valid).unwrap();
+        let planned = execute_plan(
+            &m,
+            StepPlan::Full { s: 64, ids: ids.clone(), valid: valid.clone() },
+        )
+        .unwrap();
+        assert_eq!(planned.logits(), &direct[..]);
+    }
+}

@@ -103,11 +103,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
 
     let metrics = Arc::new(Metrics::default());
+    // coalescing width: clamp to the artifacts' batch ladder so the
+    // scheduler never drains more lanes than one forward can carry
+    let b_max = pool.b_ladder().into_iter().max().unwrap_or(1);
+    let max_batch = args.usize_or("max-batch", 1).clamp(1, b_max.max(1));
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
         kv_soft_bytes: args.usize_or("kv-soft-mb", 0) * 1024 * 1024,
         max_sessions: args.usize_or("max-sessions", 64),
+        max_batch,
     };
     let policy_name = sched_cfg.policy.name();
     let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
@@ -133,7 +138,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = server::serve(state, cfg)?;
     info!(
         "ready on {} — POST /generate, GET /metrics, GET /sessions \
-         (policy={policy_name}, replicas={replicas}; ctrl-c to stop)",
+         (policy={policy_name}, replicas={replicas}, max_batch={max_batch}; \
+         ctrl-c to stop)",
         server.addr
     );
     loop {
@@ -271,7 +277,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
                  [--artifacts DIR] [--strategy SPEC] ...\n\
-                 serve flags: [--replicas N] [--policy rr|shortest|deadline] \
+                 serve flags: [--replicas N] [--max-batch B] \
+                 [--policy rr|shortest|deadline] \
                  [--kv-budget-mb N] [--kv-soft-mb N] [--max-sessions N] \
                  [--workers N] [--queue N] [--direct]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \

@@ -80,6 +80,42 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-forward-kind counters: forwards issued, lanes carried (== forwards
+/// unless batched), and position-level padding accounting (used vs padded
+/// slots per lane, from `runtime::buckets::waste` over the chosen bucket) —
+/// the data that makes bucket-ladder tuning data-driven.
+#[derive(Debug, Default)]
+pub struct ForwardKindCounters {
+    pub forwards: AtomicU64,
+    pub lanes: AtomicU64,
+    pub positions_used: AtomicU64,
+    pub positions_padded: AtomicU64,
+}
+
+impl ForwardKindCounters {
+    pub fn note(&self, lanes: usize, used: usize, padded: usize) {
+        self.forwards.fetch_add(1, Ordering::Relaxed);
+        self.lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+        self.positions_used.fetch_add(used as u64, Ordering::Relaxed);
+        self.positions_padded.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("forwards", Json::num(self.forwards.load(Ordering::Relaxed) as f64)),
+            ("lanes", Json::num(self.lanes.load(Ordering::Relaxed) as f64)),
+            (
+                "positions_used",
+                Json::num(self.positions_used.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "positions_padded",
+                Json::num(self.positions_padded.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
 /// Global serving metrics: request counters + latency histogram, plus the
 /// scheduler gauges (active sessions, KV pool occupancy/evictions/
 /// rejections, aggregate step rate).
@@ -104,6 +140,11 @@ pub struct Metrics {
     /// rate window — *recent* throughput, not a lifetime average (f64
     /// bit-pattern; see `util::stats::RateMeter`).
     steps_per_second_bits: AtomicU64,
+    // -- batched-forward accounting (owned by the scheduler's exec path) ------
+    /// Per-kind forward counts + padding-waste counters.
+    pub fwd_full: ForwardKindCounters,
+    pub fwd_window: ForwardKindCounters,
+    pub fwd_cached: ForwardKindCounters,
 }
 
 impl Metrics {
@@ -132,6 +173,22 @@ impl Metrics {
         f64::from_bits(self.steps_per_second_bits.load(Ordering::Relaxed))
     }
 
+    /// Mean lanes per *scheduler dispatch* across all kinds (1.0 = pure
+    /// solo stepping; approaches the scheduler's `max_batch` under
+    /// coalescable load). 0 when no forwards have run. Note this measures
+    /// coalescing, not hardware batching: an executor missing the batched
+    /// executable for a bucket serves the lanes as a solo loop — cross-check
+    /// against the per-replica PJRT `executions` counters when tuning.
+    pub fn batch_occupancy(&self) -> f64 {
+        let kinds = [&self.fwd_full, &self.fwd_window, &self.fwd_cached];
+        let forwards: u64 = kinds.iter().map(|k| k.forwards.load(Ordering::Relaxed)).sum();
+        if forwards == 0 {
+            return 0.0;
+        }
+        let lanes: u64 = kinds.iter().map(|k| k.lanes.load(Ordering::Relaxed)).sum();
+        lanes as f64 / forwards as f64
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("requests_total", Json::num(self.requests_total.load(Ordering::Relaxed) as f64)),
@@ -146,6 +203,15 @@ impl Metrics {
             ("sched_rejections", Json::num(self.sched_rejections.load(Ordering::Relaxed) as f64)),
             ("sched_steps_total", Json::num(self.sched_steps_total.load(Ordering::Relaxed) as f64)),
             ("steps_per_second", Json::num(self.steps_per_second())),
+            ("batch_occupancy", Json::num(self.batch_occupancy())),
+            (
+                "forwards",
+                Json::obj(vec![
+                    ("full", self.fwd_full.to_json()),
+                    ("window", self.fwd_window.to_json()),
+                    ("cached", self.fwd_cached.to_json()),
+                ]),
+            ),
             ("request_latency", self.request_latency.to_json()),
         ])
     }
@@ -190,6 +256,24 @@ mod tests {
         assert_eq!(j.get("kv_pool_bytes").as_i64(), Some(4096));
         assert_eq!(j.get("kv_pool_evictions").as_i64(), Some(2));
         assert_eq!(j.get("steps_per_second").as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn forward_counters_and_occupancy() {
+        let m = Metrics::default();
+        assert_eq!(m.batch_occupancy(), 0.0, "no forwards yet");
+        m.fwd_window.note(4, 200, 56); // one 4-lane batched window forward
+        m.fwd_cached.note(1, 10, 6); // one solo cached forward
+        assert!((m.batch_occupancy() - 2.5).abs() < 1e-9, "{}", m.batch_occupancy());
+        let j = m.to_json();
+        assert_eq!(j.get_path(&["forwards", "window", "forwards"]).as_i64(), Some(1));
+        assert_eq!(j.get_path(&["forwards", "window", "lanes"]).as_i64(), Some(4));
+        assert_eq!(
+            j.get_path(&["forwards", "window", "positions_padded"]).as_i64(),
+            Some(56)
+        );
+        assert_eq!(j.get_path(&["forwards", "cached", "positions_used"]).as_i64(), Some(10));
+        assert_eq!(j.get("batch_occupancy").as_f64(), Some(2.5));
     }
 
     #[test]

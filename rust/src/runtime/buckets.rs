@@ -30,6 +30,20 @@ pub fn pick_cr(c_ladder: &[usize], r_ladder: &[usize], c_need: usize,
     Ok((c, r))
 }
 
+/// Pick `(B, s, c, r)` jointly for a batched cached forward: minimal-fit on
+/// every axis independently, with the cached-executable constraint `r <= c`
+/// (see [`pick_cr`]). `s_ladder` is the artifact sequence-set list; `lanes`
+/// is the number of sessions sharing the forward.
+#[allow(clippy::too_many_arguments)]
+pub fn pick_bscr(b_ladder: &[usize], s_ladder: &[usize], c_ladder: &[usize],
+                 r_ladder: &[usize], lanes: usize, s_need: usize, c_need: usize,
+                 r_need: usize) -> Result<(usize, usize, usize, usize)> {
+    let b = pick(b_ladder, lanes)?;
+    let s = pick(s_ladder, s_need)?;
+    let (c, r) = pick_cr(c_ladder, r_ladder, c_need, r_need)?;
+    Ok((b, s, c, r))
+}
+
 /// Padding waste of a bucket choice (for metrics / perf accounting).
 pub fn waste(bucket: usize, need: usize) -> usize {
     bucket.saturating_sub(need)
@@ -78,6 +92,57 @@ mod tests {
                     if smaller >= need {
                         return Err(format!("{smaller} also fits but {b} chosen"));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_joint_bscr_minimal_fit_all_axes() {
+        const BS: &[usize] = &[1, 2, 4, 8];
+        const SS: &[usize] = &[256, 512];
+        // minimal-fit on an axis: the chosen bucket fits, and no smaller
+        // ladder value that satisfies every constraint also fits
+        prop::check(
+            "bscr-joint-minimal-fit",
+            |rng| {
+                (
+                    1 + rng.usize_below(8),
+                    1 + rng.usize_below(512),
+                    1 + rng.usize_below(256),
+                    1 + rng.usize_below(256),
+                )
+            },
+            |&(lanes, s_need, c_need, r_need)| {
+                let (b, s, c, r) = pick_bscr(BS, SS, CS, RS, lanes, s_need, c_need, r_need)
+                    .map_err(|e| e.to_string())?;
+                if b < lanes || s < s_need || c < c_need || r < r_need {
+                    return Err(format!(
+                        "bucket ({b},{s},{c},{r}) under need ({lanes},{s_need},{c_need},{r_need})"
+                    ));
+                }
+                if r > c {
+                    return Err(format!("r {r} > c {c}"));
+                }
+                let minimal = |ladder: &[usize], chosen: usize, need: usize| {
+                    ladder.iter().all(|&x| x >= chosen || x < need)
+                };
+                if !minimal(BS, b, lanes) {
+                    return Err(format!("b {b} not minimal for {lanes}"));
+                }
+                if !minimal(SS, s, s_need) {
+                    return Err(format!("s {s} not minimal for {s_need}"));
+                }
+                if !minimal(RS, r, r_need) {
+                    return Err(format!("r {r} not minimal for {r_need}"));
+                }
+                // c is minimal subject to both c_need and the widening rule
+                // c >= r: it must equal the smallest ladder value covering
+                // max(c_need, r)
+                let c_min = pick(CS, c_need.max(r)).map_err(|e| e.to_string())?;
+                if c != c_min {
+                    return Err(format!("c {c} != minimal {c_min} for need {c_need}, r {r}"));
                 }
                 Ok(())
             },

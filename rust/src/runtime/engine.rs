@@ -28,6 +28,12 @@ use super::weights::{load_host_weights, param_count};
 pub struct KvCache {
     pub s: usize,
     pub c: usize,
+    /// True when `k`/`v` are rank-1 host literals (a batched forward's
+    /// split lanes, or mock caches) rather than the engine's native
+    /// `[L, c, H, Dh]` tuple outputs. Flat caches are re-dimensioned from
+    /// the manifest spec on upload; native ones pass through as literals
+    /// with no extra host copy.
+    pub flat: bool,
     pub k: Literal,
     pub v: Literal,
 }
@@ -40,6 +46,89 @@ impl KvCache {
 
     pub fn k_host(&self) -> Result<Vec<f32>> {
         Ok(self.k.to_vec::<f32>()?)
+    }
+
+    /// Merge per-lane caches into one batched `[b, L, c, H, Dh]` host tensor
+    /// pair, zero-padding the lanes beyond `lanes.len()` up to the `b`
+    /// bucket. All lanes must share `(s, c)` (scheduler coalescing only
+    /// groups bucket-compatible plans, so this is an invariant, not a
+    /// runtime negotiation).
+    pub fn merge_lanes(lanes: &[&KvCache], b: usize) -> Result<BatchedKv> {
+        let first = lanes.first().ok_or_else(|| anyhow!("merge of zero KV lanes"))?;
+        if lanes.len() > b {
+            return Err(anyhow!("{} KV lanes exceed batch bucket {b}", lanes.len()));
+        }
+        let k0 = first.k_host()?;
+        let lane_elems = k0.len();
+        let mut k = Vec::with_capacity(b * lane_elems);
+        let mut v = Vec::with_capacity(b * lane_elems);
+        for (i, lane) in lanes.iter().enumerate() {
+            if lane.s != first.s || lane.c != first.c {
+                return Err(anyhow!(
+                    "KV lane {i} has (s={}, c={}), lane 0 has (s={}, c={})",
+                    lane.s, lane.c, first.s, first.c
+                ));
+            }
+            let (lk, lv) = (lane.k_host()?, lane.v_host()?);
+            if lk.len() != lane_elems || lv.len() != lane_elems {
+                return Err(anyhow!("KV lane {i} element count mismatch"));
+            }
+            k.extend_from_slice(&lk);
+            v.extend_from_slice(&lv);
+        }
+        k.resize(b * lane_elems, 0.0);
+        v.resize(b * lane_elems, 0.0);
+        Ok(BatchedKv { b, s: first.s, c: first.c, lane_elems, k, v })
+    }
+}
+
+/// A batched KV cache: `b` lanes of `[L, c, H, Dh]` stacked on a leading
+/// batch dim, held as flat host f32 (row-major). Built by
+/// [`KvCache::merge_lanes`] before a batched cached forward and split back
+/// per lane afterwards — the split/merge round trip is byte-identical
+/// (property-tested), which is what keeps solo sessions' caches migratable
+/// across batched and solo quanta.
+pub struct BatchedKv {
+    pub b: usize,
+    pub s: usize,
+    pub c: usize,
+    /// Elements per lane (`L * c * H * Dh`).
+    pub lane_elems: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl BatchedKv {
+    /// Wrap a batched executable's raw KV outputs (`[b, L, c, H, Dh]` flat).
+    pub fn from_flat(b: usize, s: usize, c: usize, lane_elems: usize, k: Vec<f32>,
+                     v: Vec<f32>) -> Result<BatchedKv> {
+        if k.len() != b * lane_elems || v.len() != b * lane_elems {
+            return Err(anyhow!(
+                "batched KV has {}/{} elems, want {} per tensor",
+                k.len(), v.len(), b * lane_elems
+            ));
+        }
+        Ok(BatchedKv { b, s, c, lane_elems, k, v })
+    }
+
+    /// Split the first `n` lanes back into per-lane caches.
+    pub fn split(&self, n: usize) -> Result<Vec<KvCache>> {
+        if n > self.b {
+            return Err(anyhow!("split of {n} lanes from a {}-lane batch", self.b));
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let lo = i * self.lane_elems;
+            let hi = lo + self.lane_elems;
+            out.push(KvCache {
+                s: self.s,
+                c: self.c,
+                flat: true,
+                k: Literal::vec1(&self.k[lo..hi]),
+                v: Literal::vec1(&self.v[lo..hi]),
+            });
+        }
+        Ok(out)
     }
 }
 
@@ -170,6 +259,12 @@ impl Engine {
         Ok(rc)
     }
 
+    /// Whether the manifest ships an executable by this name (batched
+    /// variants are optional: pre-batching artifacts fall back to solo).
+    pub fn has_executable(&self, name: &str) -> bool {
+        self.model.executables.contains_key(name)
+    }
+
     /// Pre-compile a set of executables (boot-time warmup for serving).
     pub fn warmup(&self, names: &[String]) -> Result<()> {
         for n in names {
@@ -283,7 +378,7 @@ impl Engine {
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
         let logits = out.pop().unwrap().to_vec::<f32>()?;
-        Ok((logits, KvCache { s, c, k, v }))
+        Ok((logits, KvCache { s, c, flat: false, k, v }))
     }
 
     /// Normal step: compute `r` slots against the cached `c`-window.
@@ -305,6 +400,15 @@ impl Engine {
             return Err(anyhow!("KV cache has c={}, step wants c={c}", kv.c));
         }
         let name = ModelEntry::fwd_cached_name(s, c, r);
+        // Engine-native caches pass straight through as literals (no host
+        // copy); flat caches (a batched forward's split lanes) are rank-1
+        // and must be re-dimensioned from the manifest spec on upload —
+        // element order is identical either way.
+        let flat_kv = if kv.flat { Some((kv.k_host()?, kv.v_host()?)) } else { None };
+        let (k_in, v_in) = match &flat_kv {
+            Some((kh, vh)) => (In::F32(kh), In::F32(vh)),
+            None => (In::Lit(&kv.k), In::Lit(&kv.v)),
+        };
         let mut out = self.run(
             &name,
             &[
@@ -313,14 +417,14 @@ impl Engine {
                 In::I32(slot_idx),
                 In::F32(rvalid),
                 In::F32(cvalid),
-                In::Lit(&kv.k),
-                In::Lit(&kv.v),
+                k_in,
+                v_in,
             ],
         )?;
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
         let logits = out.pop().unwrap().to_vec::<f32>()?;
-        Ok((logits, KvCache { s, c, k, v }))
+        Ok((logits, KvCache { s, c, flat: false, k, v }))
     }
 }
 

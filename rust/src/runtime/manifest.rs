@@ -73,6 +73,9 @@ pub struct ModelEntry {
     pub seqs: Vec<usize>,
     pub c_ladder: Vec<usize>,
     pub r_ladder: Vec<usize>,
+    /// Batch-lane ladder for the batched executables (leading batch dim).
+    /// `[1]` for pre-batching artifacts — B=1 maps to the unbatched names.
+    pub b_ladder: Vec<usize>,
     pub weights_file: String,
     pub weights: Vec<WeightSpec>,
     pub weight_order: Vec<String>,
@@ -183,6 +186,11 @@ impl Manifest {
                     seqs: usize_arr(m.get("seqs")),
                     c_ladder: usize_arr(m.get("c_ladder")),
                     r_ladder: usize_arr(m.get("r_ladder")),
+                    b_ladder: {
+                        // pre-batching manifests have no b_ladder: solo only
+                        let b = usize_arr(m.get("b_ladder"));
+                        if b.is_empty() { vec![1] } else { b }
+                    },
                     weights_file: m
                         .get("weights_file")
                         .as_str()
@@ -239,6 +247,32 @@ impl ModelEntry {
     pub fn fwd_cached_name(s: usize, c: usize, r: usize) -> String {
         format!("fwd_cached_s{s}_c{c}_r{r}")
     }
+
+    // -- batched variants (leading batch dim B; B=1 is the unbatched name) ----
+
+    pub fn full_step_name_b(b: usize, s: usize) -> String {
+        if b <= 1 {
+            Self::full_step_name(s)
+        } else {
+            format!("full_step_b{b}_s{s}")
+        }
+    }
+
+    pub fn fwd_window_name_b(b: usize, s: usize, c: usize) -> String {
+        if b <= 1 {
+            Self::fwd_window_name(s, c)
+        } else {
+            format!("fwd_window_b{b}_s{s}_c{c}")
+        }
+    }
+
+    pub fn fwd_cached_name_b(b: usize, s: usize, c: usize, r: usize) -> String {
+        if b <= 1 {
+            Self::fwd_cached_name(s, c, r)
+        } else {
+            format!("fwd_cached_b{b}_s{s}_c{c}_r{r}")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -271,6 +305,24 @@ mod tests {
         assert_eq!(
             ModelEntry::fwd_cached_name(512, 256, 48),
             "fwd_cached_s512_c256_r48"
+        );
+    }
+
+    #[test]
+    fn batched_exec_names_collapse_at_b1() {
+        assert_eq!(ModelEntry::full_step_name_b(1, 256), "full_step_s256");
+        assert_eq!(ModelEntry::full_step_name_b(4, 256), "full_step_b4_s256");
+        assert_eq!(
+            ModelEntry::fwd_window_name_b(1, 256, 128),
+            "fwd_window_s256_c128"
+        );
+        assert_eq!(
+            ModelEntry::fwd_window_name_b(8, 256, 128),
+            "fwd_window_b8_s256_c128"
+        );
+        assert_eq!(
+            ModelEntry::fwd_cached_name_b(2, 512, 256, 48),
+            "fwd_cached_b2_s512_c256_r48"
         );
     }
 }

@@ -8,6 +8,6 @@ pub mod manifest;
 pub mod pool;
 pub mod weights;
 
-pub use engine::{Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
+pub use engine::{BatchedKv, Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
 pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};
 pub use pool::{EnginePool, ReplicaStats};

@@ -53,6 +53,7 @@ pub struct EnginePool {
     seqs: Vec<usize>,
     c_ladder: Vec<usize>,
     r_ladder: Vec<usize>,
+    b_ladder: Vec<usize>,
 }
 
 /// RAII checkout: returns the replica to the idle set on drop, waking one
@@ -105,6 +106,7 @@ impl EnginePool {
         // unfiltered ladders; the StepExec impl re-filters per requested s
         let c_ladder = first.c_ladder(usize::MAX);
         let r_ladder = first.r_ladder(usize::MAX);
+        let b_ladder = first.b_ladder();
         let n = replicas.len();
         Ok(Arc::new(EnginePool {
             replicas,
@@ -118,6 +120,7 @@ impl EnginePool {
             seqs,
             c_ladder,
             r_ladder,
+            b_ladder,
         }))
     }
 
@@ -193,6 +196,10 @@ impl EnginePool {
 
     pub(crate) fn cached_r_ladder(&self) -> &[usize] {
         &self.r_ladder
+    }
+
+    pub(crate) fn cached_b_ladder(&self) -> &[usize] {
+        &self.b_ladder
     }
 }
 

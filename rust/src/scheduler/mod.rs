@@ -18,6 +18,13 @@
 //!   sessions' caches;
 //! * [`Ticket`] — completion handle the serving layer blocks on.
 //!
+//! With `max_batch > 1` each quantum **coalesces**: the driver drains up to
+//! `max_batch` policy-ordered sessions whose step plans (see
+//! `coordinator::plan`) share a forward bucket and executes them as one
+//! batched engine call, applying and booking each lane individually —
+//! cross-session hardware batching on top of step-level fairness, with
+//! outputs byte-identical to solo stepping (property-tested per strategy).
+//!
 //! Steps run with the scheduler's run-queue lock **released**, so
 //! submission and introspection (`GET /sessions`) stay responsive while the
 //! engine is busy. `tick()` is public and synchronous: tests drive the
@@ -47,6 +54,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::plan::{execute_plan, ForwardKind, Planned, StepPlan};
 use crate::coordinator::{GenRequest, GenResult, StepExec};
 use crate::metrics::Metrics;
 use crate::strategies::{self, Session, StepOutcome};
@@ -66,6 +74,10 @@ pub struct SchedulerConfig {
     pub kv_soft_bytes: usize,
     /// In-flight session cap; 0 = unlimited.
     pub max_sessions: usize,
+    /// Coalescing width: each `tick` drains up to this many policy-ordered
+    /// sessions whose plans share a forward bucket and executes them as ONE
+    /// engine call (`StepExec::execute_batch`). 1 (or 0) = solo stepping.
+    pub max_batch: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -75,6 +87,7 @@ impl Default for SchedulerConfig {
             kv_budget_bytes: 0,
             kv_soft_bytes: 0,
             max_sessions: 64,
+            max_batch: 1,
         }
     }
 }
@@ -168,6 +181,9 @@ pub struct SessionInfo {
     pub remaining: usize,
     pub gen_len: usize,
     pub age_secs: f64,
+    /// Accumulated engine time (ms). `age_secs * 1000 - busy_ms` is the
+    /// session's queue time — the fairness-vs-load signal per session.
+    pub busy_ms: f64,
     pub kv_bytes: usize,
     pub deadline_in_secs: Option<f64>,
 }
@@ -205,6 +221,9 @@ struct Inner {
 
 pub struct Scheduler {
     exec: Arc<dyn StepExec + Send + Sync>,
+    /// Executor batch-lane ladder, snapshotted at construction (waste
+    /// accounting for whole-lane padding; never contends with steps).
+    b_ladder: Vec<usize>,
     cfg: SchedulerConfig,
     inner: Mutex<Inner>,
     work: Condvar,
@@ -222,8 +241,10 @@ impl Scheduler {
     pub fn new(exec: Arc<dyn StepExec + Send + Sync>, cfg: SchedulerConfig,
                metrics: Arc<Metrics>) -> Arc<Scheduler> {
         let pool = KvPool::new(cfg.kv_budget_bytes);
+        let b_ladder = exec.b_ladder();
         Arc::new(Scheduler {
             exec,
+            b_ladder,
             cfg,
             inner: Mutex::new(Inner {
                 run: VecDeque::new(),
@@ -327,15 +348,8 @@ impl Scheduler {
         Ok(Ticket { id, inner: ticket_inner })
     }
 
-    /// Advance one quantum: pick a session per policy, step it once with the
-    /// run-queue lock released, book the outcome. Safe to call from several
-    /// threads at once — a picked session leaves the run queue for the
-    /// duration of its step, so concurrent ticks always step disjoint
-    /// sessions. Returns the stepped session's id, or `None` when nothing
-    /// is runnable *right now* (other sessions may still be mid-step on
-    /// other threads).
-    pub fn tick(&self) -> Option<u64> {
-        let mut inner = self.inner.lock().unwrap();
+    /// Remove the policy's next session from the run queue.
+    fn pick_active(&self, inner: &mut Inner) -> Option<Active> {
         if inner.run.is_empty() {
             return None;
         }
@@ -349,24 +363,13 @@ impl Scheduler {
             })
             .collect();
         let idx = policy::pick(self.cfg.policy, &views);
-        let mut active = inner.run.remove(idx).expect("picked index in range");
-        // book resident bytes at checkout: mid-step caches must stay visible
-        // to maybe_evict's residency accounting
-        let checkout_bytes = active.session.cache_bytes();
-        inner.stepping += 1;
-        inner.stepping_bytes += checkout_bytes;
-        inner.quantum += 1;
-        active.last_stepped = inner.quantum;
-        drop(inner);
+        inner.run.remove(idx)
+    }
 
-        let outcome = active.session.step(self.exec.as_ref());
+    /// Book one session's quantum outcome under the run-queue lock (shared
+    /// by the solo, batched and plan-time-error paths).
+    fn book(&self, inner: &mut Inner, active: Active, outcome: Result<StepOutcome>) {
         let id = active.id;
-        self.steps_total.fetch_add(1, Ordering::Relaxed);
-
-        let mut inner = self.inner.lock().unwrap();
-        inner.stepping -= 1;
-        inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
-        inner.rate.note(Instant::now());
         match outcome {
             Ok(StepOutcome::Running) => {
                 if self.stop.load(Ordering::Relaxed) {
@@ -402,7 +405,89 @@ impl Scheduler {
                 active.ticket.fulfill(Err(e));
             }
         }
-        self.maybe_evict(&mut inner, id);
+    }
+
+    /// Book one per-kind forward into the metrics counters.
+    fn note_forward(&self, kind: ForwardKind, lanes: usize, used: usize, padded: usize) {
+        let counters = match kind {
+            ForwardKind::Full => &self.metrics.fwd_full,
+            ForwardKind::Window => &self.metrics.fwd_window,
+            ForwardKind::Cached => &self.metrics.fwd_cached,
+        };
+        counters.note(lanes, used, padded);
+    }
+
+    /// Advance one quantum. In solo mode (`max_batch <= 1`, the default)
+    /// this is the classic pick→step→book loop: planning, the forward and
+    /// apply all run with the run-queue lock released, exactly like the
+    /// pre-protocol `Session::step` path. In coalescing mode the quantum
+    /// additionally drains bucket-compatible followers — see
+    /// [`Scheduler::tick_coalesced`].
+    ///
+    /// Safe to call from several threads at once — picked sessions leave
+    /// the run queue for the duration of their step, so concurrent ticks
+    /// always step disjoint sessions. Returns the stepped (leader)
+    /// session's id, or `None` when nothing is runnable *right now* (other
+    /// sessions may still be mid-step on other threads).
+    pub fn tick(&self) -> Option<u64> {
+        let max_batch = self.cfg.max_batch.max(1);
+        if max_batch == 1 {
+            self.tick_solo()
+        } else {
+            self.tick_coalesced(max_batch)
+        }
+    }
+
+    /// Solo quantum: the run-queue lock is held only to pick and to book —
+    /// planning CPU (layout rebuilds, tensor assembly) does not serialize
+    /// against other drivers, submission or `GET /sessions`.
+    fn tick_solo(&self) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut active = self.pick_active(&mut inner)?;
+        let id = active.id;
+        // book resident bytes at checkout: mid-step caches must stay
+        // visible to maybe_evict's residency accounting
+        let checkout_bytes = active.session.cache_bytes();
+        inner.stepping += 1;
+        inner.stepping_bytes += checkout_bytes;
+        inner.quantum += 1;
+        active.last_stepped = inner.quantum;
+        drop(inner);
+
+        let mut forwarded = false;
+        let outcome = match active.session.plan() {
+            // zero-work session (gen_len == 0): finished without an engine call
+            Ok(Planned::Finished) => Ok(StepOutcome::Finished),
+            Ok(Planned::Forward(plan)) => {
+                forwarded = true;
+                self.note_forward(
+                    plan.kind(),
+                    1,
+                    plan.used_positions(),
+                    plan.padded_positions(),
+                );
+                let t0 = Instant::now();
+                let res = execute_plan(self.exec.as_ref(), plan);
+                active.session.add_busy(t0.elapsed());
+                match res {
+                    Ok(out) => active.session.apply(out),
+                    Err(e) => Err(e),
+                }
+            }
+            Err(e) => Err(e),
+        };
+        if forwarded {
+            self.steps_total.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.stepping -= 1;
+        inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
+        if forwarded {
+            inner.rate.note(Instant::now());
+        }
+        self.book(&mut inner, active, outcome);
+        self.maybe_evict(&mut inner, &[id]);
         self.update_gauges(&inner);
         if inner.stepping == 0 {
             // shutdown() may be waiting for mid-step sessions to land
@@ -411,13 +496,169 @@ impl Scheduler {
         Some(id)
     }
 
+    /// Coalesced quantum: pick a leader session per policy, plan it, and
+    /// drain up to `max_batch - 1` further policy-ordered sessions whose
+    /// plans share the leader's forward bucket. The lanes execute as ONE
+    /// engine call with the run-queue lock released (planning stays under
+    /// the lock — it must inspect and mutate the queue to scan candidates;
+    /// sessions whose plans don't match hand their plan back via
+    /// `cancel_plan` and return to the queue front unstepped). Each lane is
+    /// applied and booked individually, so per-session semantics (tickets,
+    /// KV accounting, eviction, policy state) are identical to solo
+    /// stepping — and so are the outputs, by the protocol's construction.
+    fn tick_coalesced(&self, max_batch: usize) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut leader = self.pick_active(&mut inner)?;
+        let leader_id = leader.id;
+        let leader_bytes = leader.session.cache_bytes();
+        inner.quantum += 1;
+        leader.last_stepped = inner.quantum;
+        let leader_plan = match leader.session.plan() {
+            Ok(Planned::Forward(p)) => p,
+            Ok(Planned::Finished) => {
+                // zero-work session (gen_len == 0): book without an engine call
+                self.book(&mut inner, leader, Ok(StepOutcome::Finished));
+                self.maybe_evict(&mut inner, &[leader_id]);
+                self.update_gauges(&inner);
+                return Some(leader_id);
+            }
+            Err(e) => {
+                self.book(&mut inner, leader, Err(e));
+                self.update_gauges(&inner);
+                return Some(leader_id);
+            }
+        };
+
+        // -- coalesce compatible followers (policy order preserved) -----------
+        let mut lanes: Vec<(Active, StepPlan, usize)> =
+            vec![(leader, leader_plan, leader_bytes)];
+        if max_batch > 1 {
+            let mut skipped: Vec<Active> = Vec::new();
+            // bound the scan: a heterogeneous queue must not make one tick
+            // plan/cancel every session while holding the run-queue lock
+            // (submission and /sessions block on it); beyond this many
+            // mismatches the remaining queue is unlikely to fill the batch
+            let max_mismatches = 2 * max_batch;
+            while lanes.len() < max_batch && skipped.len() < max_mismatches {
+                let Some(mut cand) = self.pick_active(&mut inner) else { break };
+                let cand_id = cand.id;
+                let cand_bytes = cand.session.cache_bytes();
+                match cand.session.plan() {
+                    Ok(Planned::Forward(p)) if p.compatible(&lanes[0].1) => {
+                        inner.quantum += 1;
+                        cand.last_stepped = inner.quantum;
+                        lanes.push((cand, p, cand_bytes));
+                    }
+                    Ok(Planned::Forward(p)) => {
+                        // bucket mismatch: hand the plan back, unstepped
+                        cand.session.cancel_plan(p);
+                        skipped.push(cand);
+                    }
+                    Ok(Planned::Finished) => {
+                        self.book(&mut inner, cand, Ok(StepOutcome::Finished));
+                        self.maybe_evict(&mut inner, &[cand_id]);
+                    }
+                    Err(e) => {
+                        self.book(&mut inner, cand, Err(e));
+                    }
+                }
+            }
+            // skipped sessions return to the queue FRONT in pick order, so
+            // their policy position is unchanged for the next tick
+            for a in skipped.into_iter().rev() {
+                inner.run.push_front(a);
+            }
+        }
+
+        // book resident bytes at checkout: mid-step caches must stay visible
+        // to maybe_evict's residency accounting
+        let n_lanes = lanes.len();
+        let checkout_bytes: usize = lanes.iter().map(|l| l.2).sum();
+        inner.stepping += n_lanes;
+        inner.stepping_bytes += checkout_bytes;
+        drop(inner);
+
+        // -- one engine call for all lanes, lock released ---------------------
+        let kind = lanes[0].1.kind();
+        let used: usize = lanes.iter().map(|l| l.1.used_positions()).sum();
+        let mut padded: usize = lanes.iter().map(|l| l.1.padded_positions()).sum();
+        // whole-lane padding: the executor rounds the lane count up to its
+        // b_ladder bucket, and every slot of those padding lanes is waste.
+        // (Computed from the same ladder the engine picks from; like
+        // `batch_occupancy` it assumes batched dispatch — a solo-loop
+        // fallback pads nothing.)
+        if n_lanes > 1 {
+            if let Ok(b) = crate::runtime::buckets::pick(&self.b_ladder, n_lanes) {
+                padded += (b - n_lanes) * lanes[0].1.slots();
+            }
+        }
+        let mut actives: Vec<Active> = Vec::with_capacity(n_lanes);
+        let mut plans: Vec<StepPlan> = Vec::with_capacity(n_lanes);
+        for (a, p, _) in lanes {
+            actives.push(a);
+            plans.push(p);
+        }
+        let t0 = Instant::now();
+        let mut outs = if n_lanes == 1 {
+            vec![execute_plan(self.exec.as_ref(), plans.pop().expect("one plan"))]
+        } else {
+            self.exec.execute_batch(plans)
+        };
+        let fwd_wall = t0.elapsed();
+        if outs.len() != n_lanes {
+            // a misbehaving executor must not strand tickets: every lane
+            // books SOME outcome (excess results are dropped, missing lanes
+            // fail) — the PR-2 every-ticket-resolves invariant holds even
+            // against a broken `execute_batch` override
+            let got = outs.len();
+            outs.truncate(n_lanes);
+            while outs.len() < n_lanes {
+                outs.push(Err(anyhow!(
+                    "executor returned {got} results for {n_lanes} lanes"
+                )));
+            }
+        }
+        self.note_forward(kind, n_lanes, used, padded);
+        self.steps_total.fetch_add(n_lanes as u64, Ordering::Relaxed);
+
+        // apply each lane (commits decodes; booking needs the lock again)
+        let mut landed: Vec<(Active, Result<StepOutcome>)> = Vec::with_capacity(n_lanes);
+        for (mut active, out) in actives.into_iter().zip(outs) {
+            active.session.add_busy(fwd_wall);
+            let outcome = match out {
+                Ok(o) => active.session.apply(o),
+                Err(e) => Err(e),
+            };
+            landed.push((active, outcome));
+        }
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.stepping -= n_lanes;
+        inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
+        let now = Instant::now();
+        let mut stepped_ids = Vec::with_capacity(n_lanes);
+        for (active, outcome) in landed {
+            inner.rate.note(now);
+            stepped_ids.push(active.id);
+            self.book(&mut inner, active, outcome);
+        }
+        self.maybe_evict(&mut inner, &stepped_ids);
+        self.update_gauges(&inner);
+        if inner.stepping == 0 {
+            // shutdown() may be waiting for mid-step sessions to land
+            self.quiesce.notify_all();
+        }
+        Some(leader_id)
+    }
+
     /// Soft-limit eviction: drop resident caches (LRU first, sparing the
-    /// just-stepped session while possible) until under `kv_soft_bytes`.
-    /// Mid-step sessions' bytes (booked at checkout) count toward residency
-    /// but are never victims — their caches are in use on another thread.
-    /// Evicted sessions refresh on their next quantum — correctness is
-    /// preserved, the cost is one extra refresh forward each.
-    fn maybe_evict(&self, inner: &mut Inner, just_stepped: u64) {
+    /// just-stepped sessions — a whole batch's lanes — while possible)
+    /// until under `kv_soft_bytes`. Mid-step sessions' bytes (booked at
+    /// checkout) count toward residency but are never victims — their
+    /// caches are in use on another thread. Evicted sessions refresh on
+    /// their next quantum — correctness is preserved, the cost is one
+    /// extra refresh forward each.
+    fn maybe_evict(&self, inner: &mut Inner, just_stepped: &[u64]) {
         let soft = self.cfg.kv_soft_bytes;
         if soft == 0 {
             return;
@@ -427,7 +668,7 @@ impl Scheduler {
         while resident > soft {
             let mut victim: Option<(usize, u64)> = None;
             for (i, a) in inner.run.iter().enumerate() {
-                if a.session.cache_bytes() == 0 || a.id == just_stepped {
+                if a.session.cache_bytes() == 0 || just_stepped.contains(&a.id) {
                     continue;
                 }
                 // Option::is_none_or would read better but needs Rust 1.82
@@ -491,6 +732,7 @@ impl Scheduler {
                 remaining: a.session.remaining(),
                 gen_len: a.session.req().gen_len,
                 age_secs: a.session.age().as_secs_f64(),
+                busy_ms: a.session.busy().as_secs_f64() * 1e3,
                 kv_bytes: a.session.cache_bytes(),
                 deadline_in_secs: a.deadline.map(|d| {
                     if d > now {
@@ -712,6 +954,58 @@ mod tests {
         let t = s.submit(spec("full", 16)).unwrap();
         s.shutdown(); // no driver spawned; session still queued
         assert!(t.wait().is_err());
+    }
+
+    #[test]
+    fn coalesced_tick_batches_compatible_sessions() {
+        let m = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+            SchedulerConfig { max_batch: 4, ..Default::default() },
+            Arc::clone(&m),
+        );
+        // four identical full-strategy sessions: every plan is Full@s256,
+        // so each tick should carry all four lanes in one forward
+        let tickets: Vec<_> = (0..4).map(|_| s.submit(spec("full", 16)).unwrap()).collect();
+        while s.tick().is_some() {}
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().tokens_generated(), 16);
+        }
+        use std::sync::atomic::Ordering;
+        let forwards = m.fwd_full.forwards.load(Ordering::Relaxed);
+        let lanes = m.fwd_full.lanes.load(Ordering::Relaxed);
+        assert!(forwards > 0);
+        assert_eq!(lanes, 4 * 8, "4 sessions x 8 steps each");
+        assert!(
+            m.batch_occupancy() > 3.9,
+            "identical sessions should fill all 4 lanes: occupancy {}",
+            m.batch_occupancy()
+        );
+    }
+
+    #[test]
+    fn coalescing_skips_incompatible_plans_without_stepping_them() {
+        // a full-strategy leader cannot share a forward with a window
+        // session; the window session must be skipped (not stepped, not
+        // failed) and complete correctly on later ticks
+        let s = mock_sched(SchedulerConfig { max_batch: 4, ..Default::default() });
+        let t_full = s.submit(spec("full", 8)).unwrap();
+        let t_win = s.submit(spec("window", 8)).unwrap();
+        while s.tick().is_some() {}
+        assert_eq!(t_full.wait().unwrap().tokens_generated(), 8);
+        assert_eq!(t_win.wait().unwrap().tokens_generated(), 8);
+    }
+
+    #[test]
+    fn sessions_report_busy_ms() {
+        let s = mock_sched(SchedulerConfig::default());
+        let _t = s.submit(spec("full", 32)).unwrap();
+        s.tick();
+        let rows = s.sessions();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].busy_ms >= 0.0);
+        assert!(rows[0].age_secs >= 0.0);
+        while s.tick().is_some() {}
     }
 
     #[test]

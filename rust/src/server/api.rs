@@ -6,10 +6,11 @@
 //!   tokens_per_sec, strategy, eos}`; `429` on scheduler/KV-pool
 //!   backpressure
 //! * `GET /sessions`  — in-flight scheduler sessions (id, strategy, steps,
-//!   remaining, kv_bytes, age)
+//!   remaining, kv_bytes, age_secs, busy_ms — age minus busy is queue time)
 //! * `GET /metrics`   — serving counters + scheduler gauges + latency
-//!   histogram; with an engine-replica pool, per-replica step/execution
-//!   gauges under `"replicas"`
+//!   histogram + batched-forward accounting (`batch_occupancy`, per-kind
+//!   `forwards` with padding-waste counters); with an engine-replica pool,
+//!   per-replica step/execution gauges under `"replicas"`
 //! * `GET /healthz`   — liveness
 //! * `GET /info`      — model / config / scheduling info
 
@@ -163,6 +164,7 @@ fn sessions_json(st: &AppState) -> Json {
                 ("remaining", Json::num(s.remaining as f64)),
                 ("gen_len", Json::num(s.gen_len as f64)),
                 ("age_secs", Json::num(s.age_secs)),
+                ("busy_ms", Json::num(s.busy_ms)),
                 ("kv_bytes", Json::num(s.kv_bytes as f64)),
             ];
             if let Some(d) = s.deadline_in_secs {

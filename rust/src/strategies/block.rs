@@ -13,10 +13,18 @@ use anyhow::{anyhow, Result};
 use super::machine::{Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{GenRequest, StepExec, WindowLayout};
+use crate::coordinator::{GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout};
 
 pub struct BlockDiffusion {
     pub size: usize,
+}
+
+/// Context carried from `plan` to `apply`: the step's layout and the block
+/// bounds decode selection is restricted to.
+struct BlockPending {
+    layout: WindowLayout,
+    block_start: usize,
+    block_end: usize,
 }
 
 /// Continuation state: the current block's bounds, held fixed until every
@@ -28,12 +36,14 @@ struct BlockMachine {
     schedule: DecodeSchedule,
     c_ladder: Vec<usize>,
     cur_block: Option<(usize, usize)>,
+    pending: Option<BlockPending>,
 }
 
 impl StepMachine for BlockMachine {
-    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+    fn plan(&mut self, core: &mut SessionCore) -> Result<Planned> {
+        debug_assert!(self.pending.is_none(), "plan while a plan is outstanding");
         if core.state.done() {
-            return Ok(StepOutcome::Finished);
+            return Ok(Planned::Finished);
         }
         core.cap_guard()?;
         // keep the block while anything below its end is undecoded,
@@ -52,13 +62,24 @@ impl StepMachine for BlockMachine {
         // attention sees only [0, block_end): prefix + current block
         let positions: Vec<usize> = (0..block_end).collect();
         let layout = WindowLayout::from_positions(&core.state, positions, &self.c_ladder)?;
-        let (logits, _kv) = exec.window(
-            core.req.s,
-            layout.c,
-            &layout.ids_padded(&core.state),
-            &layout.pos_padded(),
-            &layout.cvalid,
-        )?;
+        let plan = StepPlan::Window {
+            s: core.req.s,
+            c: layout.c,
+            ids: layout.ids_padded(&core.state),
+            pos: layout.pos_padded(),
+            valid: layout.cvalid.clone(),
+        };
+        self.pending = Some(BlockPending { layout, block_start, block_end });
+        Ok(Planned::Forward(plan))
+    }
+
+    fn apply(&mut self, core: &mut SessionCore, out: StepOutputs) -> Result<StepOutcome> {
+        let BlockPending { layout, block_start, block_end } = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("apply without an outstanding plan"))?;
+        // the block baseline never reuses KV: outputs' cache is dropped
+        let logits = out.logits();
         core.counts.window += 1;
         core.counts.token_slots += layout.c;
         let block_cands: Vec<usize> = core
@@ -79,6 +100,10 @@ impl StepMachine for BlockMachine {
         core.step += 1;
         Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
     }
+
+    fn cancel(&mut self, _plan: StepPlan) {
+        self.pending = None;
+    }
 }
 
 impl Strategy for BlockDiffusion {
@@ -95,6 +120,7 @@ impl Strategy for BlockDiffusion {
             schedule: DecodeSchedule::fixed(req.tokens_per_step),
             c_ladder: exec.c_ladder(req.s),
             cur_block: None,
+            pending: None,
         };
         Ok(Session::new(self.name(), core, Box::new(machine)))
     }

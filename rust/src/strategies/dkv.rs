@@ -15,7 +15,9 @@ use anyhow::{anyhow, Result};
 use super::machine::{kv_slot_bytes, Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{ComputeSet, GenRequest, StepExec, WindowLayout};
+use crate::coordinator::{
+    ComputeSet, GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout,
+};
 use crate::runtime::{buckets, KvCache};
 
 pub struct DkvCache {
@@ -32,6 +34,14 @@ struct DkvState {
     refresh_step: usize, // decodes since here are uncached
 }
 
+/// Context carried from `plan` to `apply`.
+enum DkvPending {
+    /// Refresh over the live layout: decode among all undecoded positions.
+    Refresh { undecoded: Vec<usize> },
+    /// Normal cached step; the layout KV moved into the plan.
+    Normal { cs: ComputeSet },
+}
+
 struct DkvMachine {
     interval: usize,
     vocab: usize,
@@ -40,12 +50,14 @@ struct DkvMachine {
     r_ladder: Vec<usize>,
     kv_slot_bytes: usize,
     cur: Option<DkvState>,
+    pending: Option<DkvPending>,
 }
 
 impl StepMachine for DkvMachine {
-    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+    fn plan(&mut self, core: &mut SessionCore) -> Result<Planned> {
+        debug_assert!(self.pending.is_none(), "plan while a plan is outstanding");
         if core.state.done() {
-            return Ok(StepOutcome::Finished);
+            return Ok(Planned::Finished);
         }
         core.cap_guard()?;
         // at most one rebuild / forced-refresh retry is ever needed per
@@ -70,14 +82,60 @@ impl StepMachine for DkvMachine {
             let undecoded = core.state.undecoded();
             let do_refresh = st.kv.is_none() || (core.step - st.refresh_step) >= self.interval;
 
-            let picked = if do_refresh {
-                let (logits, fresh) = exec.window(
-                    core.req.s,
-                    st.layout.c,
-                    &st.layout.ids_padded(&core.state),
-                    &st.layout.pos_padded(),
-                    &st.layout.cvalid,
-                )?;
+            if do_refresh {
+                let plan = StepPlan::Window {
+                    s: core.req.s,
+                    c: st.layout.c,
+                    ids: st.layout.ids_padded(&core.state),
+                    pos: st.layout.pos_padded(),
+                    valid: st.layout.cvalid.clone(),
+                };
+                self.pending = Some(DkvPending::Refresh { undecoded });
+                return Ok(Planned::Forward(plan));
+            }
+            // compute = undecoded + decoded-after-refresh (delayed write)
+            let recent = core.state.decoded_since(st.refresh_step);
+            let cs = match ComputeSet::build(&core.state, &st.layout, &undecoded,
+                                             &recent, &self.r_ladder) {
+                Ok(cs) if buckets::pick(&self.r_ladder, cs.positions.len()).is_ok()
+                    && cs.r <= st.layout.c =>
+                {
+                    cs
+                }
+                _ => {
+                    st.kv = None; // force refresh on the next attempt
+                    continue;
+                }
+            };
+            let kv = st.kv.take().unwrap();
+            let plan = StepPlan::Cached {
+                s: core.req.s,
+                c: st.layout.c,
+                r: cs.r,
+                ids_r: cs.ids_r.clone(),
+                pos_r: cs.pos_r.clone(),
+                slot_idx: cs.slot_idx.clone(),
+                rvalid: cs.rvalid.clone(),
+                cvalid: st.layout.cvalid.clone(),
+                kv,
+            };
+            self.pending = Some(DkvPending::Normal { cs });
+            return Ok(Planned::Forward(plan));
+        }
+        Err(anyhow!("dkv made no progress at step {}", core.step))
+    }
+
+    fn apply(&mut self, core: &mut SessionCore, out: StepOutputs) -> Result<StepOutcome> {
+        let pending = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("apply without an outstanding plan"))?;
+        let st = self.cur.as_mut().expect("layout present while a plan is outstanding");
+        let picked = match pending {
+            DkvPending::Refresh { undecoded } => {
+                let StepOutputs::LogitsKv(logits, fresh) = out else {
+                    return Err(anyhow!("dkv refresh expects logits + kv"));
+                };
                 core.counts.window += 1;
                 core.counts.token_slots += st.layout.c;
                 st.kv = Some(fresh);
@@ -87,26 +145,11 @@ impl StepMachine for DkvMachine {
                     (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
                 }));
                 select_top_k(cands, self.schedule.at(core.step))
-            } else {
-                // compute = undecoded + decoded-after-refresh (delayed write)
-                let recent = core.state.decoded_since(st.refresh_step);
-                let cs = match ComputeSet::build(&core.state, &st.layout, &undecoded,
-                                                 &recent, &self.r_ladder) {
-                    Ok(cs) if buckets::pick(&self.r_ladder, cs.positions.len()).is_ok()
-                        && cs.r <= st.layout.c =>
-                    {
-                        cs
-                    }
-                    _ => {
-                        st.kv = None; // force refresh on the next attempt
-                        continue;
-                    }
+            }
+            DkvPending::Normal { cs } => {
+                let StepOutputs::LogitsKv(logits, new_kv) = out else {
+                    return Err(anyhow!("dkv cached step expects logits + kv"));
                 };
-                let cache = st.kv.as_ref().unwrap();
-                let (logits, new_kv) = exec.cached(
-                    core.req.s, st.layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
-                    &cs.rvalid, &st.layout.cvalid, cache,
-                )?;
                 core.counts.cached += 1;
                 core.counts.token_slots += cs.r;
                 st.kv = Some(new_kv);
@@ -118,16 +161,24 @@ impl StepMachine for DkvMachine {
                         .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
                 );
                 select_top_k(cands, self.schedule.at(core.step))
-            };
-
-            if picked.is_empty() {
-                return Err(anyhow!("no candidates at step {}", core.step));
             }
-            commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
-            core.step += 1;
-            return Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running });
+        };
+
+        if picked.is_empty() {
+            return Err(anyhow!("no candidates at step {}", core.step));
         }
-        Err(anyhow!("dkv made no progress at step {}", core.step))
+        commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+        core.step += 1;
+        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
+    }
+
+    fn cancel(&mut self, plan: StepPlan) {
+        if let StepPlan::Cached { kv, .. } = plan {
+            if let Some(st) = self.cur.as_mut() {
+                st.kv = Some(kv);
+            }
+        }
+        self.pending = None;
     }
 
     fn cache_bytes(&self) -> usize {
@@ -162,6 +213,7 @@ impl Strategy for DkvCache {
             r_ladder: exec.r_ladder(req.s),
             kv_slot_bytes: kv_slot_bytes(&exec.arch()),
             cur: None,
+            pending: None,
         };
         Ok(Session::new(self.name(), core, Box::new(machine)))
     }

@@ -16,7 +16,9 @@ use anyhow::{anyhow, Result};
 use super::machine::{kv_slot_bytes, Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{ComputeSet, GenRequest, StepExec, WindowLayout};
+use crate::coordinator::{
+    ComputeSet, GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout,
+};
 use crate::runtime::{buckets, KvCache};
 
 pub struct FastDllmPrefix {
@@ -30,13 +32,29 @@ pub struct FastDllmDual {
 /// Continuation state between a block-boundary refresh and the block's
 /// normal steps. Dropped (forcing a fresh refresh) when the block completes,
 /// the live region shrinks, or the compute set overflows the buckets.
+/// `kv` is `None` only while a cached plan is in flight (the cache travels
+/// inside the plan).
 struct FdPhase {
     block_start: usize,
     block_end: usize,
     live_end: usize,
     layout: WindowLayout,
-    kv: KvCache,
+    kv: Option<KvCache>,
     block_decoded: Vec<usize>,
+}
+
+/// Context carried from `plan` to `apply`.
+enum FdPending {
+    /// Block-boundary refresh; `apply` installs the new phase.
+    Refresh {
+        block_start: usize,
+        block_end: usize,
+        live_end: usize,
+        layout: WindowLayout,
+    },
+    /// Normal in-block step; the first `n_block` compute positions are the
+    /// block's undecoded set (decode selection is restricted to them).
+    Normal { cs: ComputeSet, n_block: usize },
 }
 
 /// Shared block-walk machine; `dual` selects the compute-set rule.
@@ -49,66 +67,18 @@ struct FastDllmMachine {
     r_ladder: Vec<usize>,
     kv_slot_bytes: usize,
     phase: Option<FdPhase>,
-}
-
-impl FastDllmMachine {
-    /// Block-boundary refresh over the whole live sequence: one committed
-    /// step, then the new phase is installed.
-    fn refresh_step(&mut self, core: &mut SessionCore, exec: &dyn StepExec)
-                    -> Result<StepOutcome> {
-        let frontier = core.state.frontier().expect("not done");
-        let block_start = core.state.prompt_len
-            + ((frontier - core.state.prompt_len) / self.block) * self.block;
-        let live_end = core.state.live_end();
-        let block_end = (block_start + self.block).min(live_end);
-        let positions: Vec<usize> = (0..live_end).collect();
-        let layout = WindowLayout::from_positions(&core.state, positions, &self.c_ladder)?;
-        let (logits, kv) = exec.window(
-            core.req.s,
-            layout.c,
-            &layout.ids_padded(&core.state),
-            &layout.pos_padded(),
-            &layout.cvalid,
-        )?;
-        core.counts.window += 1;
-        core.counts.token_slots += layout.c;
-        let block_cands: Vec<usize> = core
-            .state
-            .undecoded()
-            .into_iter()
-            .filter(|&p| p >= block_start && p < block_end)
-            .collect();
-        let cands = candidates(block_cands.iter().map(|&p| {
-            let slot = layout.slot(p).expect("in layout");
-            (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
-        }));
-        let picked = select_top_k(cands, self.schedule.at(core.step));
-        if picked.is_empty() {
-            return Err(anyhow!("no candidates at refresh step {}", core.step));
-        }
-        commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
-        let block_decoded: Vec<usize> = picked.iter().map(|c| c.pos).collect();
-        core.step += 1;
-        self.phase = Some(FdPhase {
-            block_start,
-            block_end,
-            live_end,
-            layout,
-            kv,
-            block_decoded,
-        });
-        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
-    }
+    pending: Option<FdPending>,
 }
 
 impl StepMachine for FastDllmMachine {
-    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+    fn plan(&mut self, core: &mut SessionCore) -> Result<Planned> {
+        debug_assert!(self.pending.is_none(), "plan while a plan is outstanding");
         if core.state.done() {
-            return Ok(StepOutcome::Finished);
+            return Ok(Planned::Finished);
         }
         core.cap_guard()?;
-        // a dropped phase resolves to a refresh, which always commits; two
-        // attempts suffice, 3 is one of safety margin
+        // a dropped phase resolves to a refresh plan; two attempts suffice,
+        // 3 is one of safety margin
         for _attempt in 0..3 {
             let stale = match &self.phase {
                 None => true,
@@ -124,7 +94,25 @@ impl StepMachine for FastDllmMachine {
             };
             if stale {
                 self.phase = None;
-                return self.refresh_step(core, exec);
+                // block-boundary refresh over the whole live sequence
+                let frontier = core.state.frontier().expect("not done");
+                let block_start = core.state.prompt_len
+                    + ((frontier - core.state.prompt_len) / self.block) * self.block;
+                let live_end = core.state.live_end();
+                let block_end = (block_start + self.block).min(live_end);
+                let positions: Vec<usize> = (0..live_end).collect();
+                let layout =
+                    WindowLayout::from_positions(&core.state, positions, &self.c_ladder)?;
+                let plan = StepPlan::Window {
+                    s: core.req.s,
+                    c: layout.c,
+                    ids: layout.ids_padded(&core.state),
+                    pos: layout.pos_padded(),
+                    valid: layout.cvalid.clone(),
+                };
+                self.pending =
+                    Some(FdPending::Refresh { block_start, block_end, live_end, layout });
+                return Ok(Planned::Forward(plan));
             }
             // -- normal step within the current block ------------------------
             let ph = self.phase.as_mut().unwrap();
@@ -153,38 +141,105 @@ impl StepMachine for FastDllmMachine {
                     continue;
                 }
             };
-            let (logits, new_kv) = exec.cached(
-                core.req.s, ph.layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
-                &cs.rvalid, &ph.layout.cvalid, &ph.kv,
-            )?;
-            core.counts.cached += 1;
-            core.counts.token_slots += cs.r;
-            ph.kv = new_kv;
-            // decode only within the block (block_undecoded is a prefix of
-            // the compute positions by construction)
-            let cands = candidates(
-                cs.positions[..block_undecoded.len()]
-                    .iter()
-                    .copied()
-                    .enumerate()
-                    .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
-            );
-            let picked = select_top_k(cands, self.schedule.at(core.step));
-            if picked.is_empty() {
-                return Err(anyhow!("no block candidates at step {}", core.step));
-            }
-            commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
-            ph.block_decoded.extend(picked.iter().map(|c| c.pos));
-            core.step += 1;
-            return Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running });
+            let kv = ph.kv.take().expect("refresh precedes normal steps");
+            let plan = StepPlan::Cached {
+                s: core.req.s,
+                c: ph.layout.c,
+                r: cs.r,
+                ids_r: cs.ids_r.clone(),
+                pos_r: cs.pos_r.clone(),
+                slot_idx: cs.slot_idx.clone(),
+                rvalid: cs.rvalid.clone(),
+                cvalid: ph.layout.cvalid.clone(),
+                kv,
+            };
+            self.pending = Some(FdPending::Normal { cs, n_block: block_undecoded.len() });
+            return Ok(Planned::Forward(plan));
         }
         Err(anyhow!("fastdllm made no progress at step {}", core.step))
+    }
+
+    fn apply(&mut self, core: &mut SessionCore, out: StepOutputs) -> Result<StepOutcome> {
+        let pending = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("apply without an outstanding plan"))?;
+        match pending {
+            FdPending::Refresh { block_start, block_end, live_end, layout } => {
+                let StepOutputs::LogitsKv(logits, kv) = out else {
+                    return Err(anyhow!("fastdllm refresh expects logits + kv"));
+                };
+                core.counts.window += 1;
+                core.counts.token_slots += layout.c;
+                let block_cands: Vec<usize> = core
+                    .state
+                    .undecoded()
+                    .into_iter()
+                    .filter(|&p| p >= block_start && p < block_end)
+                    .collect();
+                let cands = candidates(block_cands.iter().map(|&p| {
+                    let slot = layout.slot(p).expect("in layout");
+                    (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
+                }));
+                let picked = select_top_k(cands, self.schedule.at(core.step));
+                if picked.is_empty() {
+                    return Err(anyhow!("no candidates at refresh step {}", core.step));
+                }
+                commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+                let block_decoded: Vec<usize> = picked.iter().map(|c| c.pos).collect();
+                core.step += 1;
+                self.phase = Some(FdPhase {
+                    block_start,
+                    block_end,
+                    live_end,
+                    layout,
+                    kv: Some(kv),
+                    block_decoded,
+                });
+            }
+            FdPending::Normal { cs, n_block } => {
+                let StepOutputs::LogitsKv(logits, new_kv) = out else {
+                    return Err(anyhow!("fastdllm cached step expects logits + kv"));
+                };
+                let ph = self.phase.as_mut().expect("phase present for a normal step");
+                core.counts.cached += 1;
+                core.counts.token_slots += cs.r;
+                ph.kv = Some(new_kv);
+                // decode only within the block (block_undecoded is a prefix
+                // of the compute positions by construction)
+                let cands = candidates(
+                    cs.positions[..n_block]
+                        .iter()
+                        .copied()
+                        .enumerate()
+                        .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
+                );
+                let picked = select_top_k(cands, self.schedule.at(core.step));
+                if picked.is_empty() {
+                    return Err(anyhow!("no block candidates at step {}", core.step));
+                }
+                commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+                ph.block_decoded.extend(picked.iter().map(|c| c.pos));
+                core.step += 1;
+            }
+        }
+        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
+    }
+
+    fn cancel(&mut self, plan: StepPlan) {
+        if let StepPlan::Cached { kv, .. } = plan {
+            if let Some(ph) = self.phase.as_mut() {
+                ph.kv = Some(kv);
+            }
+        }
+        self.pending = None;
     }
 
     fn cache_bytes(&self) -> usize {
         self.phase
             .as_ref()
-            .map(|ph| ph.kv.c * self.kv_slot_bytes)
+            .and_then(|ph| ph.kv.as_ref())
+            .map(|kv| kv.c * self.kv_slot_bytes)
             .unwrap_or(0)
     }
 
@@ -207,6 +262,7 @@ fn start_blockwise(exec: &dyn StepExec, req: &GenRequest, name: String, block: u
         r_ladder: exec.r_ladder(req.s),
         kv_slot_bytes: kv_slot_bytes(&exec.arch()),
         phase: None,
+        pending: None,
     };
     Ok(Session::new(name, core, Box::new(machine)))
 }

@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 use super::machine::{Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{GenRequest, StepExec};
+use crate::coordinator::{GenRequest, Planned, StepExec, StepOutputs, StepPlan};
 
 pub struct FullBaseline;
 
@@ -21,12 +21,20 @@ struct FullMachine {
 }
 
 impl StepMachine for FullMachine {
-    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+    fn plan(&mut self, core: &mut SessionCore) -> Result<Planned> {
         if core.state.done() {
-            return Ok(StepOutcome::Finished);
+            return Ok(Planned::Finished);
         }
         core.cap_guard()?;
-        let logits = exec.full(core.req.s, &core.state.ids, &core.state.full_valid())?;
+        Ok(Planned::Forward(StepPlan::Full {
+            s: core.req.s,
+            ids: core.state.ids.clone(),
+            valid: core.state.full_valid(),
+        }))
+    }
+
+    fn apply(&mut self, core: &mut SessionCore, out: StepOutputs) -> Result<StepOutcome> {
+        let logits = out.logits();
         core.counts.full += 1;
         core.counts.token_slots += core.req.s;
         let undecoded = core.state.undecoded();

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::plan::{execute_plan, Planned, StepOutputs, StepPlan};
 use crate::coordinator::{GenRequest, GenResult, SeqState, StepCounts, StepExec};
 
 /// Result of advancing a session by one quantum.
@@ -33,12 +34,45 @@ pub enum StepOutcome {
 /// Strategy-specific continuation state (phase layouts, KV caches, block
 /// cursors). Implementations live next to their strategy.
 ///
+/// Written against the **plan/apply protocol** (`coordinator::plan`): one
+/// quantum is `plan` (build the single forward request this step needs —
+/// cheap, no engine calls, but may rebuild phase layouts) → execute (solo
+/// or batched with other sessions' compatible plans) → `apply` (install
+/// outputs, commit decodes, bump `core.step`). `step` is the provided
+/// solo shim and is byte-identical to the pre-protocol code path.
+///
 /// Not `Send` by itself: KV caches hold `xla::Literal`s. [`Session`] asserts
 /// `Send` (see its safety comment), which is the single choke point.
 pub trait StepMachine {
-    /// Advance one diffusion step: run forward(s), commit decodes, bump
-    /// `core.step`. Must return `Finished` exactly when `core.state.done()`.
-    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome>;
+    /// Build the next quantum's forward request. Must return `Finished`
+    /// exactly when `core.state.done()`. May mutate continuation state
+    /// (phase rebuilds) — replanning after `cancel` must be deterministic:
+    /// same state in, same plan out.
+    fn plan(&mut self, core: &mut SessionCore) -> Result<Planned>;
+
+    /// Consume the forward outputs for the plan issued by the last `plan`
+    /// call: commit decodes, install the returned KV cache, bump
+    /// `core.step`.
+    fn apply(&mut self, core: &mut SessionCore, out: StepOutputs) -> Result<StepOutcome>;
+
+    /// Hand an unexecuted plan back (a batched coalescing attempt didn't
+    /// include it). Machines whose plans carry their KV cache must restore
+    /// it; state must end up exactly as if `plan` was never called.
+    fn cancel(&mut self, plan: StepPlan) {
+        drop(plan);
+    }
+
+    /// Advance one diffusion step solo: plan → execute → apply. Provided;
+    /// strategies only implement the protocol methods.
+    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+        match self.plan(core)? {
+            Planned::Finished => Ok(StepOutcome::Finished),
+            Planned::Forward(plan) => {
+                let out = execute_plan(exec, plan)?;
+                self.apply(core, out)
+            }
+        }
+    }
 
     /// Bytes of phase-level KV cache currently resident for this session
     /// (0 when between phases or for cache-less strategies).
@@ -128,6 +162,51 @@ impl Session {
                 Err(e)
             }
         }
+    }
+
+    /// Plan the next quantum's forward (no engine calls). A planning error
+    /// kills the session, like a step error.
+    pub fn plan(&mut self) -> Result<Planned> {
+        if self.finished {
+            return Ok(Planned::Finished);
+        }
+        let t0 = Instant::now();
+        let out = self.machine.plan(&mut self.core);
+        self.busy += t0.elapsed();
+        if out.is_err() {
+            self.finished = true;
+        }
+        out
+    }
+
+    /// Apply forward outputs for this session's outstanding plan.
+    pub fn apply(&mut self, out: StepOutputs) -> Result<StepOutcome> {
+        let t0 = Instant::now();
+        let r = self.machine.apply(&mut self.core, out);
+        self.busy += t0.elapsed();
+        match r {
+            Ok(StepOutcome::Finished) => {
+                self.finished = true;
+                Ok(StepOutcome::Finished)
+            }
+            Ok(StepOutcome::Running) => Ok(StepOutcome::Running),
+            Err(e) => {
+                self.finished = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Hand an unexecuted plan back to the machine (coalescing skipped this
+    /// session); state is restored as if `plan` was never called.
+    pub fn cancel_plan(&mut self, plan: StepPlan) {
+        self.machine.cancel(plan);
+    }
+
+    /// Attribute engine time spent on this session's behalf (the scheduler
+    /// books a batched forward's wall time against every lane it carried).
+    pub fn add_busy(&mut self, d: Duration) {
+        self.busy += d;
     }
 
     pub fn is_finished(&self) -> bool {
@@ -236,6 +315,49 @@ mod tests {
             assert!(now < last, "remaining went {last} -> {now}");
             last = now;
         }
+    }
+
+    #[test]
+    fn plan_cancel_replan_is_deterministic() {
+        // cancelling a plan (batched coalescing skipped this session) must
+        // leave the machine exactly as before: replanning yields the same
+        // forward request and the session completes identically to solo —
+        // including for cached plans, which carry the KV cache by value
+        use crate::coordinator::Planned;
+        use crate::strategies::WindowDiffusion;
+
+        let m = MockExec::new(256);
+        let req = GenRequest::new(vec![10, 11, 12, 13], 48, 256);
+        let solo = WindowDiffusion::default().generate(&m, &req).unwrap();
+
+        let m2 = MockExec::new(256);
+        let mut s = WindowDiffusion::default().start(&m2, &req).unwrap();
+        let mut quanta = 0;
+        loop {
+            // plan, cancel, then replan — both plans must describe the same
+            // forward (kind + bucket); then execute the second one
+            let first = match s.plan().unwrap() {
+                Planned::Forward(p) => p,
+                Planned::Finished => break,
+            };
+            let key = (first.kind(), first.bucket());
+            s.cancel_plan(first);
+            let second = match s.plan().unwrap() {
+                Planned::Forward(p) => p,
+                Planned::Finished => panic!("finished after cancel"),
+            };
+            assert_eq!(key, (second.kind(), second.bucket()), "replan diverged");
+            let out = crate::coordinator::execute_plan(&m2, second).unwrap();
+            if s.apply(out).unwrap() == StepOutcome::Finished {
+                break;
+            }
+            quanta += 1;
+            assert!(quanta < 1000, "runaway session");
+        }
+        let r = s.into_result();
+        assert_eq!(r.generated(), solo.generated(), "cancel/replan changed output");
+        assert_eq!(r.steps, solo.steps);
+        assert_eq!(r.counts, solo.counts, "cancel/replan changed step accounting");
     }
 
     #[test]

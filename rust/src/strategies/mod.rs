@@ -32,10 +32,13 @@ pub use window::{WdConfig, WindowDiffusion};
 use crate::coordinator::policies::Candidate;
 use crate::coordinator::{GenRequest, GenResult, SeqState, StepExec};
 
-/// A decoding strategy, written as a resumable step-machine.
+/// A decoding strategy, written as a resumable step-machine over the
+/// plan/apply protocol (`coordinator::plan`).
 ///
 /// `start` captures all per-request state in a [`Session`]; each
-/// `Session::step` advances one diffusion step. `generate` is the
+/// `Session::step` advances one diffusion step (internally
+/// plan → execute → apply, which is also what lets the scheduler batch
+/// compatible plans across sessions into one forward). `generate` is the
 /// run-to-completion compat shim (eval harness, benches, CLI) and is
 /// byte-identical to driving `step` in a loop — it *is* that loop.
 pub trait Strategy: Send + Sync {

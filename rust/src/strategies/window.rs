@@ -25,7 +25,9 @@ use anyhow::{anyhow, Result};
 use super::machine::{kv_slot_bytes, Session, SessionCore, StepMachine, StepOutcome};
 use super::{commit, Strategy};
 use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
-use crate::coordinator::{ComputeSet, GenRequest, StepExec, WindowLayout};
+use crate::coordinator::{
+    ComputeSet, GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout,
+};
 use crate::runtime::{buckets, KvCache};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -76,6 +78,15 @@ struct WdPhase {
     step_in_phase: usize,
 }
 
+/// Context carried from `plan` to `apply` (what the outputs mean).
+enum WdPending {
+    /// Refresh / pruning-only step: decode among `active` via layout slots.
+    Refresh { active: Vec<usize> },
+    /// Normal cached step: decode among the compute set's active prefix.
+    /// The phase KV moved into the plan; `apply` installs the returned one.
+    Normal { cs: ComputeSet },
+}
+
 struct WindowMachine {
     cfg: WdConfig,
     vocab: usize,
@@ -84,16 +95,18 @@ struct WindowMachine {
     r_ladder: Vec<usize>,
     kv_slot_bytes: usize,
     phase: Option<WdPhase>,
+    pending: Option<WdPending>,
 }
 
 impl StepMachine for WindowMachine {
-    fn step(&mut self, core: &mut SessionCore, exec: &dyn StepExec) -> Result<StepOutcome> {
+    fn plan(&mut self, core: &mut SessionCore) -> Result<Planned> {
+        debug_assert!(self.pending.is_none(), "plan while a plan is outstanding");
         if core.state.done() {
-            return Ok(StepOutcome::Finished);
+            return Ok(Planned::Finished);
         }
         core.cap_guard()?;
         let phase_len = if self.cfg.cache { self.cfg.refresh } else { 1 };
-        // A quantum needs at most one phase rebuild before it can commit: a
+        // A quantum needs at most one phase rebuild before it can plan: a
         // fresh phase always contains the internal window and its refresh
         // step always decodes. Three attempts is one of safety margin.
         for _attempt in 0..3 {
@@ -120,15 +133,62 @@ impl StepMachine for WindowMachine {
                 continue;
             }
 
-            let picked = if ph.step_in_phase == 0 || !self.cfg.cache {
+            if ph.step_in_phase == 0 || !self.cfg.cache {
                 // refresh step (or pruning-only step): full window forward
-                let (logits, fresh_kv) = exec.window(
-                    core.req.s,
-                    ph.layout.c,
-                    &ph.layout.ids_padded(&core.state),
-                    &ph.layout.pos_padded(),
-                    &ph.layout.cvalid,
-                )?;
+                let plan = StepPlan::Window {
+                    s: core.req.s,
+                    c: ph.layout.c,
+                    ids: ph.layout.ids_padded(&core.state),
+                    pos: ph.layout.pos_padded(),
+                    valid: ph.layout.cvalid.clone(),
+                };
+                self.pending = Some(WdPending::Refresh { active });
+                return Ok(Planned::Forward(plan));
+            }
+            // normal step: recompute actives + in-phase decoded only
+            let cs = match ComputeSet::build(&core.state, &ph.layout, &active,
+                                             &ph.phase_decoded, &self.r_ladder) {
+                Ok(cs) if cs.r <= ph.layout.c
+                    && buckets::pick(&self.r_ladder, cs.positions.len()).is_ok() =>
+                {
+                    cs
+                }
+                _ => {
+                    // compute set outgrew buckets -> new phase
+                    self.phase = None;
+                    continue;
+                }
+            };
+            let kv = ph.kv.take().expect("refresh precedes normal steps");
+            let plan = StepPlan::Cached {
+                s: core.req.s,
+                c: ph.layout.c,
+                r: cs.r,
+                ids_r: cs.ids_r.clone(),
+                pos_r: cs.pos_r.clone(),
+                slot_idx: cs.slot_idx.clone(),
+                rvalid: cs.rvalid.clone(),
+                cvalid: ph.layout.cvalid.clone(),
+                kv,
+            };
+            self.pending = Some(WdPending::Normal { cs });
+            return Ok(Planned::Forward(plan));
+        }
+        // safety: a phase that makes zero progress would loop forever
+        Err(anyhow!("phase made no progress at step {}", core.step))
+    }
+
+    fn apply(&mut self, core: &mut SessionCore, out: StepOutputs) -> Result<StepOutcome> {
+        let pending = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("apply without an outstanding plan"))?;
+        let ph = self.phase.as_mut().expect("phase present while a plan is outstanding");
+        let picked = match pending {
+            WdPending::Refresh { active } => {
+                let StepOutputs::LogitsKv(logits, fresh_kv) = out else {
+                    return Err(anyhow!("window refresh expects logits + kv"));
+                };
                 core.counts.window += 1;
                 core.counts.token_slots += ph.layout.c;
                 ph.kv = Some(fresh_kv);
@@ -140,26 +200,11 @@ impl StepMachine for WindowMachine {
                     (p, &logits[slot * self.vocab..(slot + 1) * self.vocab])
                 }));
                 select_top_k(cands, self.schedule.at(core.step))
-            } else {
-                // normal step: recompute actives + in-phase decoded only
-                let cs = match ComputeSet::build(&core.state, &ph.layout, &active,
-                                                 &ph.phase_decoded, &self.r_ladder) {
-                    Ok(cs) if cs.r <= ph.layout.c
-                        && buckets::pick(&self.r_ladder, cs.positions.len()).is_ok() =>
-                    {
-                        cs
-                    }
-                    _ => {
-                        // compute set outgrew buckets -> new phase
-                        self.phase = None;
-                        continue;
-                    }
+            }
+            WdPending::Normal { cs } => {
+                let StepOutputs::LogitsKv(logits, new_kv) = out else {
+                    return Err(anyhow!("cached step expects logits + kv"));
                 };
-                let cache = ph.kv.as_ref().expect("refresh precedes normal steps");
-                let (logits, new_kv) = exec.cached(
-                    core.req.s, ph.layout.c, cs.r, &cs.ids_r, &cs.pos_r, &cs.slot_idx,
-                    &cs.rvalid, &ph.layout.cvalid, cache,
-                )?;
                 core.counts.cached += 1;
                 core.counts.token_slots += cs.r;
                 ph.kv = Some(new_kv);
@@ -171,21 +216,30 @@ impl StepMachine for WindowMachine {
                         .map(|(row, p)| (p, &logits[row * self.vocab..(row + 1) * self.vocab])),
                 );
                 select_top_k(cands, self.schedule.at(core.step))
-            };
+            }
+        };
 
-            if picked.is_empty() {
-                return Err(anyhow!("no candidates at step {}", core.step));
-            }
-            commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
-            for c in &picked {
-                ph.phase_decoded.push(c.pos);
-            }
-            ph.step_in_phase += 1;
-            core.step += 1;
-            return Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running });
+        if picked.is_empty() {
+            return Err(anyhow!("no candidates at step {}", core.step));
         }
-        // safety: a phase that makes zero progress would loop forever
-        Err(anyhow!("phase made no progress at step {}", core.step))
+        commit(&mut core.state, &picked, core.step, core.req.adaptive)?;
+        for c in &picked {
+            ph.phase_decoded.push(c.pos);
+        }
+        ph.step_in_phase += 1;
+        core.step += 1;
+        Ok(if core.state.done() { StepOutcome::Finished } else { StepOutcome::Running })
+    }
+
+    fn cancel(&mut self, plan: StepPlan) {
+        // restore the KV cache a cached plan carried; replanning from here
+        // is deterministic (state is exactly as before `plan`)
+        if let StepPlan::Cached { kv, .. } = plan {
+            if let Some(ph) = self.phase.as_mut() {
+                ph.kv = Some(kv);
+            }
+        }
+        self.pending = None;
     }
 
     fn cache_bytes(&self) -> usize {
@@ -223,6 +277,7 @@ impl Strategy for WindowDiffusion {
             r_ladder: exec.r_ladder(req.s),
             kv_slot_bytes: kv_slot_bytes(&exec.arch()),
             phase: None,
+            pending: None,
         };
         Ok(Session::new(self.name(), core, Box::new(machine)))
     }
