@@ -17,9 +17,14 @@
 //! replica count. Then a **micro-batch A/B**: the scheduler workload at
 //! coalescing widths B ∈ {1, 4, 8}, reporting steps/sec and
 //! `batch_occupancy` (mean lanes per forward; the mid-flight `/sessions`
-//! probe also tables per-session `age_secs` vs `busy_ms`). Finally
-//! demonstrates KV-pool admission control: a server with a tiny
-//! `kv_budget_bytes` answers `429` instead of overcommitting.
+//! probe also tables per-session `age_secs` vs `busy_ms`). Then a
+//! **load-adaptive coalescing A/B**: a heterogeneous workload whose window
+//! geometries land on *different* `(s, c, r)` buckets, served at fixed
+//! B=1, fixed B=8 (exact-bucket coalescing only) and
+//! `--batch-policy adaptive` with cross-bucket promotion — steps/sec,
+//! occupancy and `promoted_lanes` side by side. Finally demonstrates
+//! KV-pool admission control: a server with a tiny `kv_budget_bytes`
+//! answers `429` instead of overcommitting.
 //!
 //! Runs against the trained sim model when artifacts exist, otherwise falls
 //! back to the deterministic mock model so the comparison runs anywhere (the
@@ -37,7 +42,7 @@ use window_diffusion::coordinator::{MockExec, StepExec};
 use window_diffusion::eval;
 use window_diffusion::metrics::Metrics;
 use window_diffusion::runtime::{Engine, EngineCell, EnginePool, Manifest};
-use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig};
+use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::api::AppState;
 use window_diffusion::server::http::{http_get, http_post};
 use window_diffusion::server::{serve, ServerConfig};
@@ -426,6 +431,79 @@ fn main() -> anyhow::Result<()> {
         sp1,
         spb,
         spb / sp1.max(1e-9),
+    );
+
+    // -- phase 5: load-adaptive + cross-bucket coalescing A/B ------------------
+    // a deliberately heterogeneous workload: two window geometries that land
+    // on DIFFERENT c buckets (w64 at gen 96 needs c=128, w16 fits c=64) plus
+    // full-strategy sessions. Exact-bucket coalescing (fixed B) mostly fails
+    // to pair lanes here; the adaptive governor + cross-bucket promotion
+    // (--coalesce-waste-pct) is what fills forwards back up.
+    let hetero_bodies: Vec<(String, usize)> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            let (strategy, gen_len) = match i % 4 {
+                0 => ("window:w_ex=64,a=16", LONG_GEN),
+                1 => ("window:w_ex=16,a=4", LONG_GEN),
+                2 => ("full", SHORT_GEN),
+                _ => ("window:w_ex=16,a=4", SHORT_GEN),
+            };
+            let body = Json::obj(vec![
+                ("prompt", Json::str(prompt.clone())),
+                ("gen_len", Json::num(gen_len as f64)),
+                ("strategy", Json::str(strategy)),
+                ("adaptive", Json::Bool(false)),
+            ]);
+            (body.to_string(), gen_len)
+        })
+        .collect();
+    let coalesce_cfgs: [(&str, SchedulerConfig); 3] = [
+        ("hetero[fixed B=1]", SchedulerConfig { max_batch: 1, ..Default::default() }),
+        ("hetero[fixed B=8]", SchedulerConfig { max_batch: 8, ..Default::default() }),
+        (
+            "hetero[adaptive]",
+            SchedulerConfig {
+                max_batch: 8,
+                batch_policy: BatchPolicy::Adaptive,
+                coalesce_waste_pct: 50,
+                ..Default::default()
+            },
+        ),
+    ];
+    let mut hetero_phases: Vec<(PhaseStats, f64, u64)> = Vec::new();
+    for (label, cfg) in coalesce_cfgs {
+        let exec_b = make_batch_exec()?;
+        let st = build_state(exec_b, None, tok.clone(), model_name, cfg, 1, false);
+        let metrics_b = Arc::clone(&st.metrics);
+        let phase = run_phase(label, st, &hetero_bodies, concurrency)?;
+        hetero_phases.push((
+            phase,
+            metrics_b.batch_occupancy(),
+            metrics_b
+                .promoted_lanes
+                .load(std::sync::atomic::Ordering::Relaxed),
+        ));
+    }
+    println!("\n--- load-adaptive coalescing (heterogeneous buckets, 1 driver) ---");
+    for (p, occ, promoted) in &hetero_phases {
+        print_phase(p);
+        println!(
+            "  {}: {:.1} steps/sec, batch_occupancy={occ:.2}, promoted_lanes={promoted}",
+            p.label,
+            p.steps_per_sec()
+        );
+    }
+    let (solo_sps, fixed8_occ, adaptive_sps, adaptive_occ) = (
+        hetero_phases[0].0.steps_per_sec(),
+        hetero_phases[1].1,
+        hetero_phases[2].0.steps_per_sec(),
+        hetero_phases[2].1,
+    );
+    println!(
+        "adaptive vs fixed B=1: {solo_sps:.1} -> {adaptive_sps:.1} steps/sec ({:.2}x); \
+         occupancy vs fixed B=8: {fixed8_occ:.2} -> {adaptive_occ:.2}",
+        adaptive_sps / solo_sps.max(1e-9),
     );
 
     // -- KV-pool admission control: tiny budget answers 429 --------------------

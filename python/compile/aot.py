@@ -25,6 +25,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import sys
 import time
 
@@ -93,6 +94,71 @@ def parse_batch_ladder(spec: str) -> list[int]:
 
 
 # ---------------------------------------------------------------------------
+# bucket pruning (--prune-buckets)
+# ---------------------------------------------------------------------------
+#
+# The batch ladder multiplies AOT lowering time (~4x executables), yet a
+# production deployment dispatches only a handful of (B, s, c, r) combos.
+# The rust scheduler counts every dispatch per bucket and exports them on
+# GET /metrics as `forwards.<kind>.buckets` keyed by the batched-executable
+# *suffix* (`b{B}_s{S}[_c{C}[_r{R}]]`). Feeding that dump back in via
+# `--prune-buckets` skips lowering batched combos that were never hit; the
+# manifest records them under "pruned" and the rust engine's batched
+# dispatch (which probes `has_executable` before stacking lanes) falls back
+# to its solo loop for those buckets instead of erroring. B=1 forms are
+# never pruned — they ARE the fallback.
+
+#: A bucket key / executable name ending in the batched suffix.
+_BUCKET_KEY_RE = re.compile(r"(?:^|_)(b\d+_s\d+(?:_c\d+)?(?:_r\d+)?)$")
+
+
+def batched_suffix(b: int, s: int, c: int | None = None,
+                   r: int | None = None) -> str:
+    """Bucket key of one batched executable (`b4_s256_c64_r16`, ...)."""
+    key = f"b{b}_s{s}"
+    if c is not None:
+        key += f"_c{c}"
+    if r is not None:
+        key += f"_r{r}"
+    return key
+
+
+def parse_prune_dump(obj) -> set[str]:
+    """Extract the *hit* bucket keys from a forward-count dump.
+
+    Accepts any of: the full ``GET /metrics`` JSON, its ``forwards``
+    sub-object, or a flat ``{key: count}`` map — keys may be bare bucket
+    keys or full executable names (``fwd_cached_b4_s256_c64_r16``). Any
+    numeric leaf with a positive count whose key ends in a batched suffix
+    counts as a hit; everything else is ignored.
+    """
+    hits: set[str] = set()
+
+    def note(key, count) -> None:
+        if not isinstance(key, str) or not isinstance(count, (int, float)):
+            return
+        if isinstance(count, bool) or count <= 0:
+            return
+        m = _BUCKET_KEY_RE.search(key)
+        if m:
+            hits.add(m.group(1))
+
+    def walk(o) -> None:
+        if isinstance(o, dict):
+            for k, v in o.items():
+                if isinstance(v, (dict, list)):
+                    walk(v)
+                else:
+                    note(k, v)
+        elif isinstance(o, list):
+            for v in o:
+                walk(v)
+
+    walk(obj)
+    return hits
+
+
+# ---------------------------------------------------------------------------
 # HLO text lowering
 # ---------------------------------------------------------------------------
 
@@ -144,7 +210,8 @@ def lower_exec(fn, step_specs: list[tuple[str, object]],
 
 def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                       out_dir: str, attn: str, b_ladder: list[int] | None = None,
-                      log=print) -> list[dict]:
+                      hit_buckets: set[str] | None = None,
+                      log=print) -> tuple[list[dict], list[str]]:
     """Lower the full/window/cached executable matrix for one model.
 
     With a non-empty ``b_ladder``, each (variant, bucket) additionally gets
@@ -155,6 +222,11 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
     (DESIGN.md §"Batched execution"). A batched variant that fails to lower
     (e.g. a kernel without a batching rule) is skipped with a warning: the
     rust engine falls back to solo loops for buckets it can't find.
+
+    With ``hit_buckets`` (from ``--prune-buckets``), batched combos whose
+    suffix is absent from the set are not lowered at all; their names are
+    returned as the second element for the manifest's "pruned" record.
+    Returns ``(manifest entries, pruned executable names)``.
     """
     use_pallas = attn == "pallas"
     b_ladder = b_ladder or []
@@ -163,6 +235,7 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
     l, h, dh = arch.n_layers, arch.n_heads, arch.dh
     os.makedirs(os.path.join(out_dir, name), exist_ok=True)
     entries = []
+    pruned: list[str] = []
 
     def add(exec_name, fn, step_specs, out_names, optional=False):
         t0 = time.time()
@@ -177,6 +250,13 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
         e["name"] = exec_name
         entries.append(e)
         log(f"  [aot] {name}/{exec_name} ({time.time() - t0:.1f}s)")
+
+    def add_batched(exec_name, key, fn, step_specs, out_names):
+        """Lower a batched (B > 1) variant unless its bucket was pruned."""
+        if hit_buckets is not None and key not in hit_buckets:
+            pruned.append(exec_name)
+            return
+        add(exec_name, fn, step_specs, out_names, optional=True)
 
     for s in seqs:
         c_ladder, r_ladder = ladders(s)
@@ -198,10 +278,10 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
         add(f"full_step_s{s}", mk_full(s),
             [("ids", i32((s,))), ("valid", f32((s,)))], ["logits"])
         for b in b_ladder:
-            add(f"full_step_b{b}_s{s}", mk_full_b(s),
-                [("ids", i32((b, s))), ("valid", f32((b, s))),
-                 ("lane_valid", f32((b,)))],
-                ["logits"], optional=True)
+            add_batched(f"full_step_b{b}_s{s}", batched_suffix(b, s), mk_full_b(s),
+                        [("ids", i32((b, s))), ("valid", f32((b, s))),
+                         ("lane_valid", f32((b,)))],
+                        ["logits"])
 
         for c in c_ladder:
             def mk_win(c_):
@@ -223,10 +303,11 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                 [("ids", i32((c,))), ("pos", i32((c,))), ("valid", f32((c,)))],
                 ["logits", "kcache", "vcache"])
             for b in b_ladder:
-                add(f"fwd_window_b{b}_s{s}_c{c}", mk_win_b(c),
-                    [("ids", i32((b, c))), ("pos", i32((b, c))),
-                     ("valid", f32((b, c))), ("lane_valid", f32((b,)))],
-                    ["logits", "kcache", "vcache"], optional=True)
+                add_batched(f"fwd_window_b{b}_s{s}_c{c}", batched_suffix(b, s, c),
+                            mk_win_b(c),
+                            [("ids", i32((b, c))), ("pos", i32((b, c))),
+                             ("valid", f32((b, c))), ("lane_valid", f32((b,)))],
+                            ["logits", "kcache", "vcache"])
 
             for r in [r for r in r_ladder if r <= c]:
                 def mk_cached(c_, r_):
@@ -256,15 +337,19 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
                      ("vcache", f32((l, c, h, dh)))],
                     ["logits", "kcache", "vcache"])
                 for b in b_ladder:
-                    add(f"fwd_cached_b{b}_s{s}_c{c}_r{r}", mk_cached_b(c, r),
-                        [("ids_r", i32((b, r))), ("pos_r", i32((b, r))),
-                         ("slot_idx", i32((b, r))), ("rvalid", f32((b, r))),
-                         ("cvalid", f32((b, c))),
-                         ("kcache", f32((b, l, c, h, dh))),
-                         ("vcache", f32((b, l, c, h, dh))),
-                         ("lane_valid", f32((b,)))],
-                        ["logits", "kcache", "vcache"], optional=True)
-    return entries
+                    add_batched(f"fwd_cached_b{b}_s{s}_c{c}_r{r}",
+                                batched_suffix(b, s, c, r), mk_cached_b(c, r),
+                                [("ids_r", i32((b, r))), ("pos_r", i32((b, r))),
+                                 ("slot_idx", i32((b, r))), ("rvalid", f32((b, r))),
+                                 ("cvalid", f32((b, c))),
+                                 ("kcache", f32((b, l, c, h, dh))),
+                                 ("vcache", f32((b, l, c, h, dh))),
+                                 ("lane_valid", f32((b,)))],
+                                ["logits", "kcache", "vcache"])
+    if pruned:
+        log(f"  [aot] {name}: pruned {len(pruned)} never-dispatched batched "
+            f"combos (--prune-buckets)")
+    return entries, pruned
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +414,13 @@ def main() -> None:
                     help="comma list of batch-lane counts for the batched "
                          "executables (B=1 is always present as the unbatched "
                          "forms); empty string disables batched lowering")
+    ap.add_argument("--prune-buckets", default=None, metavar="COUNTS_JSON",
+                    help="production per-kind forward-count dump (the GET "
+                         "/metrics JSON, its 'forwards' object, or a flat "
+                         "{key: count} map): batched (B>1) combos absent "
+                         "from it are not lowered; the manifest records "
+                         "them under 'pruned' and the engine falls back to "
+                         "solo dispatch for those buckets")
     ap.add_argument("--train-steps", type=int, default=350)
     ap.add_argument("--retrain", action="store_true",
                     help="retrain even if cached weights exist")
@@ -339,6 +431,21 @@ def main() -> None:
     zoo = model_zoo()
     wanted = list(zoo) if args.models == "all" else args.models.split(",")
     batch_ladder = parse_batch_ladder(args.batch_ladder)
+    hit_buckets = None
+    if args.prune_buckets:
+        with open(args.prune_buckets) as f:
+            hit_buckets = parse_prune_dump(json.load(f))
+        print(f"[aot] prune: {len(hit_buckets)} batched bucket keys observed "
+              f"in {args.prune_buckets}")
+        if len(wanted) > 1:
+            # the /metrics counters carry no model dimension: one server's
+            # dump says nothing about models it never served, so applying it
+            # across the zoo prunes their batched combos on zero evidence
+            print(f"[aot] prune WARNING: one forward-count dump applied to "
+                  f"{len(wanted)} models ({','.join(wanted)}); models the "
+                  f"dump's server never ran will lose ALL batched combos "
+                  f"(solo fallback). Pass --models <served-model> to scope "
+                  f"pruning to the model the dump describes.")
 
     # 1. vocabulary (+ golden encode vectors for the rust tokenizer parity test)
     tok = Tokenizer().fit(corpus.all_surface_texts())
@@ -372,8 +479,9 @@ def main() -> None:
         assert set(params) == set(param_shapes(arch)), "weight/arch mismatch"
         trained[name] = params
         windex = write_weights(params, wpath)
-        execs = build_executables(name, arch, params, info["seqs"], out_dir,
-                                  args.attn, b_ladder=batch_ladder)
+        execs, pruned = build_executables(name, arch, params, info["seqs"], out_dir,
+                                          args.attn, b_ladder=batch_ladder,
+                                          hit_buckets=hit_buckets)
         c_l, r_l = ladders(max(info["seqs"]))
         manifest["models"][name] = {
             "arch": arch.to_dict(),
@@ -383,6 +491,9 @@ def main() -> None:
             "r_ladder": r_l,
             # lanes a single forward can carry; B=1 = the unbatched forms
             "b_ladder": [1] + batch_ladder,
+            # batched combos skipped by --prune-buckets: the engine serves
+            # these buckets with its solo fallback instead of erroring
+            "pruned": pruned,
             "weights_file": os.path.basename(wpath),
             "weights": windex,
             "weight_order": sorted(params),

@@ -1,0 +1,69 @@
+"""`aot.py --prune-buckets` helpers: dump parsing + bucket-key matching.
+
+The dump comes from the rust scheduler's per-bucket forward counters on
+``GET /metrics`` (``forwards.<kind>.buckets``); these tests pin the accepted
+shapes and the suffix grammar so the rust `bucket_key` (scheduler/mod.rs)
+and the python side can never drift apart silently.
+"""
+
+from compile.aot import batched_suffix, parse_prune_dump
+
+
+def test_batched_suffix_grammar():
+    assert batched_suffix(4, 256) == "b4_s256"
+    assert batched_suffix(4, 256, 128) == "b4_s256_c128"
+    assert batched_suffix(8, 512, 256, 48) == "b8_s512_c256_r48"
+
+
+def test_parse_flat_bucket_keys():
+    hits = parse_prune_dump({"b4_s256_c64_r16": 12, "b2_s256": 1})
+    assert hits == {"b4_s256_c64_r16", "b2_s256"}
+
+
+def test_parse_full_executable_names():
+    hits = parse_prune_dump({
+        "fwd_cached_b4_s256_c64_r16": 3,
+        "full_step_b2_s256": 7,
+        "fwd_window_b8_s256_c128": 2,
+    })
+    assert hits == {"b4_s256_c64_r16", "b2_s256", "b8_s256_c128"}
+
+
+def test_parse_metrics_shape():
+    # the nested GET /metrics layout: forwards.<kind>.buckets
+    metrics = {
+        "requests_total": 40,
+        "forwards": {
+            "cached": {
+                "forwards": 30,
+                "buckets": {"b1_s256_c64_r16": 20, "b4_s256_c64_r16": 10},
+            },
+            "window": {"forwards": 6, "buckets": {"b4_s256_c128": 6}},
+            "full": {"forwards": 4, "buckets": {}},
+        },
+    }
+    hits = parse_prune_dump(metrics)
+    # b1 keys are harmless to collect but only B>1 combos are ever lowered
+    assert "b4_s256_c64_r16" in hits
+    assert "b4_s256_c128" in hits
+    # plain counters ("forwards": 30) must not poison the hit set
+    assert all(h.startswith("b") for h in hits)
+
+
+def test_zero_counts_and_junk_ignored():
+    hits = parse_prune_dump({
+        "b4_s256_c64_r16": 0,          # never dispatched -> not a hit
+        "b2_s256": -3,                 # nonsense count
+        "steps_per_second": 41.5,      # gauge, not a bucket key
+        "batched": True,               # bool leaf
+        "note": "b4_s256",             # non-numeric leaf
+    })
+    assert hits == set()
+
+
+def test_prune_decision_round_trip():
+    # the decision aot.py makes per batched combo: lower iff key in hits
+    hits = parse_prune_dump({"fwd_cached_b4_s256_c64_r16": 5})
+    assert batched_suffix(4, 256, 64, 16) in hits
+    assert batched_suffix(8, 256, 64, 16) not in hits
+    assert batched_suffix(4, 256, 128, 16) not in hits

@@ -1,0 +1,145 @@
+//! Perf-trajectory baseline for the scheduler's coalescing path: solo
+//! (`max_batch 1`) vs fixed-width vs load-adaptive + cross-bucket
+//! coalescing on the compute-bound mock (per-forward sleep, amortized
+//! across lanes by the batched mock). No artifacts needed, so this is the
+//! one bench CI runs end to end; it emits `BENCH_4.json` at the repo root
+//! — steps/sec + occupancy per config — so future PRs diff scheduler perf
+//! against a machine-readable baseline instead of folklore.
+//!
+//! The workload is deliberately heterogeneous (two window geometries on
+//! different `c` buckets plus full-strategy sessions): the regime where
+//! exact-bucket coalescing degenerates toward solo occupancy and the
+//! ISSUE-4 machinery (adaptive width + lane promotion) earns its keep.
+//!
+//! ```bash
+//! cargo bench --bench sched_coalescing
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::scheduler::{
+    BatchPolicy, Scheduler, SchedulerConfig, SubmitSpec,
+};
+use window_diffusion::util::json::Json;
+
+const STEP_DELAY: Duration = Duration::from_millis(2);
+
+/// (strategy spec, gen_len) per session — cycled to build the workload.
+const WORKLOAD: &[(&str, usize)] = &[
+    ("window:w_ex=64,a=16", 96), // layout needs c=128 at this gen length
+    ("window:w_ex=16,a=4", 96),  // fits c=64 -> only promotion can pair it
+    ("full", 24),
+    ("window:w_ex=16,a=4", 48),
+];
+
+struct RunResult {
+    label: &'static str,
+    steps_per_sec: f64,
+    occupancy: f64,
+    promoted_lanes: u64,
+    wall_secs: f64,
+}
+
+fn run_config(label: &'static str, cfg: SchedulerConfig, n_sessions: usize) -> RunResult {
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> =
+        Arc::new(MockExec::new(256).with_step_delay(STEP_DELAY));
+    let sched = Scheduler::new(exec, cfg, Arc::clone(&metrics));
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n_sessions)
+        .map(|i| {
+            let (spec, gen) = WORKLOAD[i % WORKLOAD.len()];
+            let mut req = GenRequest::new(vec![10, 11, 12, 13], gen, 256);
+            req.adaptive = false;
+            sched
+                .submit(SubmitSpec { strategy: spec.into(), req, deadline: None })
+                .expect("admit")
+        })
+        .collect();
+    while sched.tick().is_some() {}
+    for t in tickets {
+        t.wait().expect("bench workload completes");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    RunResult {
+        label,
+        steps_per_sec: metrics.sched_steps_total.load(Ordering::Relaxed) as f64
+            / wall.max(1e-9),
+        occupancy: metrics.batch_occupancy(),
+        promoted_lanes: metrics.promoted_lanes.load(Ordering::Relaxed),
+        wall_secs: wall,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_sessions = bench_support::bench_n(12);
+    let configs: [(&'static str, SchedulerConfig); 3] = [
+        ("solo", SchedulerConfig { max_batch: 1, ..Default::default() }),
+        ("fixed-b8", SchedulerConfig { max_batch: 8, ..Default::default() }),
+        (
+            "adaptive",
+            SchedulerConfig {
+                max_batch: 8,
+                batch_policy: BatchPolicy::Adaptive,
+                coalesce_waste_pct: 50,
+                ..Default::default()
+            },
+        ),
+    ];
+
+    println!("sched_coalescing: {n_sessions} heterogeneous sessions, {STEP_DELAY:?}/forward");
+    bench_support::hr(72);
+    let mut results = Vec::new();
+    for (label, cfg) in configs {
+        let r = run_config(label, cfg, n_sessions);
+        println!(
+            "{:<10} {:>8.1} steps/s  occupancy={:<5.2} promoted={:<4} wall={:.2}s",
+            r.label, r.steps_per_sec, r.occupancy, r.promoted_lanes, r.wall_secs
+        );
+        results.push(r);
+    }
+    bench_support::hr(72);
+    let solo = results[0].steps_per_sec;
+    let adaptive = results[2].steps_per_sec;
+    println!(
+        "adaptive vs solo: {:.2}x; occupancy fixed-b8 {:.2} -> adaptive {:.2}",
+        bench_support::speedup(solo, adaptive),
+        results[1].occupancy,
+        results[2].occupancy,
+    );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("sched_coalescing")),
+        ("issue", Json::num(4.0)),
+        ("n_sessions", Json::num(n_sessions as f64)),
+        ("step_delay_ms", Json::num(STEP_DELAY.as_secs_f64() * 1e3)),
+        (
+            "configs",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("label", Json::str(r.label)),
+                            ("steps_per_sec", Json::num(r.steps_per_sec)),
+                            ("batch_occupancy", Json::num(r.occupancy)),
+                            ("promoted_lanes", Json::num(r.promoted_lanes as f64)),
+                            ("wall_secs", Json::num(r.wall_secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedup_adaptive_vs_solo",
+            Json::num(bench_support::speedup(solo, adaptive)),
+        ),
+    ]);
+    bench_support::write_bench_json("BENCH_4.json", &payload)?;
+    Ok(())
+}

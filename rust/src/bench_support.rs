@@ -79,6 +79,21 @@ impl Csv {
     }
 }
 
+/// Write a perf-trajectory baseline JSON (`BENCH_<n>.json`) at the repo
+/// root. `cargo bench` runs with CWD = `rust/`, so the default directory is
+/// the parent; `WD_BENCH_JSON_DIR` overrides it (CI artifacts, scratch
+/// runs). These files are the cross-PR perf record: each scheduler-path PR
+/// appends one — and COMMITS it (they are deliberately not gitignored) —
+/// so the next session can diff steps/sec and occupancy against a
+/// known-good machine-readable baseline instead of a discarded CI log.
+pub fn write_bench_json(name: &str, j: &crate::util::json::Json) -> Result<PathBuf> {
+    let dir = std::env::var("WD_BENCH_JSON_DIR").unwrap_or_else(|_| "..".into());
+    let path = PathBuf::from(dir).join(name);
+    std::fs::write(&path, j.to_string())?;
+    eprintln!("[bench] wrote {}", path.display());
+    Ok(path)
+}
+
 pub fn speedup(base: f64, x: f64) -> f64 {
     if base <= 0.0 {
         0.0

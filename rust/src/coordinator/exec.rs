@@ -50,11 +50,13 @@ pub trait StepExec {
               -> Result<(Vec<f32>, KvCache)>;
 
     /// Execute *compatible* plans (same kind and `(s, c, r)` bucket — the
-    /// scheduler's coalescing invariant), ideally as one batched forward.
-    /// One result per plan, index-aligned. The default loops solo so every
-    /// executor works unchanged; the real engine overrides it to use its
-    /// batched executables (when the artifacts ship them) and the mock
-    /// overrides it to amortize its simulated step cost, which is what the
+    /// scheduler's coalescing invariant; cross-bucket-promoted lanes arrive
+    /// here already padded onto the leader's bucket, so executors never see
+    /// mixed shapes), ideally as one batched forward. One result per plan,
+    /// index-aligned. The default loops solo so every executor works
+    /// unchanged; the real engine overrides it to use its batched
+    /// executables (when the artifacts ship them) and the mock overrides it
+    /// to amortize its simulated step cost, which is what the
     /// batched-throughput tests measure.
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         plans.into_iter().map(|p| execute_plan(self, p)).collect()

@@ -20,7 +20,7 @@ pub mod window;
 use std::time::Duration;
 
 pub use exec::{MockExec, StepExec};
-pub use plan::{execute_plan, ForwardKind, Planned, StepOutputs, StepPlan};
+pub use plan::{execute_plan, ForwardKind, Planned, Promotion, StepOutputs, StepPlan};
 pub use state::SeqState;
 pub use window::{ComputeSet, WindowLayout};
 

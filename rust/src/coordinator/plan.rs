@@ -16,9 +16,9 @@
 //! plan is handed back via `StepMachine::cancel` so the KV cache is never
 //! lost to a failed coalescing attempt.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::runtime::{buckets, KvCache};
+use crate::runtime::{buckets, Arch, KvCache};
 
 use super::exec::StepExec;
 
@@ -62,6 +62,14 @@ pub enum StepPlan {
         cvalid: Vec<f32>,
         kv: KvCache,
     },
+}
+
+impl std::fmt::Debug for StepPlan {
+    /// Kind + bucket only: input tensors (and the KV cache) are bulk data
+    /// that would drown any log or assertion message.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "StepPlan::{}{:?}", self.kind().name(), self.bucket())
+    }
 }
 
 impl StepPlan {
@@ -111,6 +119,135 @@ impl StepPlan {
     /// (`runtime::buckets::waste` over the bucket and the live count).
     pub fn padded_positions(&self) -> usize {
         buckets::waste(self.slots(), self.used_positions())
+    }
+
+    /// Extra padded positions joining `leader`'s lane set would cost this
+    /// plan, or `None` when it cannot join at all (different kind, different
+    /// sequence set, or a bucket axis that would have to shrink). `Some(0)`
+    /// means the plans are already [`compatible`](StepPlan::compatible).
+    pub fn promote_cost_into(&self, leader: &StepPlan) -> Option<usize> {
+        if self.kind() != leader.kind() {
+            return None;
+        }
+        buckets::promote_cost(leader.bucket(), self.bucket())
+    }
+
+    /// Re-bucket this plan up into `leader`'s `(s, c, r)` bucket so the two
+    /// can share one batched forward: input tensors are zero-padded onto the
+    /// larger axes, validity masks are zero-extended (the added slots are
+    /// inert in-graph), the drop-scatter marker (`slot_idx == c`) moves to
+    /// the new capacity, and a cached plan's KV cache is re-dimensioned via
+    /// [`KvCache::rebucket_c`]. Returns the promoted plan plus the
+    /// [`Promotion`] record the scheduler needs to slice the outputs back
+    /// (`Promotion::demote`); on a non-promotable pairing the original plan
+    /// comes back untouched (hand it to `cancel_plan`).
+    pub fn promote_into(self, leader: &StepPlan, arch: &Arch)
+                        -> std::result::Result<(StepPlan, Promotion), Box<StepPlan>> {
+        let kind = self.kind();
+        let (from, to) = (self.bucket(), leader.bucket());
+        let extra = match self.promote_cost_into(leader) {
+            // cost 0 == already compatible: nothing to promote
+            Some(cost) if cost > 0 => cost,
+            _ => return Err(Box::new(self)),
+        };
+        let promo = Promotion { kind, from, to, extra_positions: extra };
+        match self {
+            // full plans share a bucket iff s matches, which is cost 0
+            StepPlan::Full { .. } => Err(Box::new(self)),
+            StepPlan::Window { s, c: _, mut ids, mut pos, mut valid } => {
+                let (_, c_to, _) = to;
+                ids.resize(c_to, 0);
+                pos.resize(c_to, 0);
+                valid.resize(c_to, 0.0);
+                Ok((StepPlan::Window { s, c: c_to, ids, pos, valid }, promo))
+            }
+            StepPlan::Cached {
+                s, c, r, mut ids_r, mut pos_r, mut slot_idx, mut rvalid,
+                mut cvalid, kv,
+            } => {
+                let (_, c_to, r_to) = to;
+                // re-dimension the cache first: it only borrows, so a
+                // failure can still hand the original plan back untouched.
+                // An r-only promotion leaves c alone — don't pay a whole-KV
+                // host copy for a no-op re-dimension on the hot path.
+                let kv = if kv.c == c_to {
+                    kv
+                } else {
+                    match kv.rebucket_c(c_to, arch) {
+                        Ok(grown) => grown,
+                        Err(_) => {
+                            return Err(Box::new(StepPlan::Cached {
+                                s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv,
+                            }))
+                        }
+                    }
+                };
+                // rows that dropped their scatter at the old capacity must
+                // keep dropping at the new one (slot c is now a real slot)
+                for si in slot_idx.iter_mut() {
+                    if *si >= c as i32 {
+                        *si = c_to as i32;
+                    }
+                }
+                ids_r.resize(r_to, 0);
+                pos_r.resize(r_to, 0);
+                slot_idx.resize(r_to, c_to as i32);
+                rvalid.resize(r_to, 0.0);
+                cvalid.resize(c_to, 0.0);
+                Ok((
+                    StepPlan::Cached {
+                        s, c: c_to, r: r_to, ids_r, pos_r, slot_idx, rvalid,
+                        cvalid, kv,
+                    },
+                    promo,
+                ))
+            }
+        }
+    }
+}
+
+/// Record of a cross-bucket promotion: the lane *executed* at bucket `to`
+/// (the leader's), but the session planned — and must observe — bucket
+/// `from`. [`Promotion::demote`] performs the observation-side slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Promotion {
+    pub kind: ForwardKind,
+    pub from: (usize, usize, usize),
+    pub to: (usize, usize, usize),
+    /// Extra padded positions the promotion added
+    /// ([`buckets::promote_cost`]) — the waste the scheduler books against
+    /// its coalesce-waste ceiling.
+    pub extra_positions: usize,
+}
+
+impl Promotion {
+    /// Slice a promoted lane's outputs back to the original bucket: logits
+    /// keep the first `c`/`r` rows (padding rows sit strictly after the
+    /// live ones — `promote_into` only ever appends), the returned KV is
+    /// re-dimensioned back down. `apply` then sees byte-for-byte what a
+    /// solo forward at `from` would have produced.
+    pub fn demote(&self, out: StepOutputs, vocab: usize, arch: &Arch) -> Result<StepOutputs> {
+        let (_, c_from, r_from) = self.from;
+        let keep_rows = match self.kind {
+            ForwardKind::Full => return Ok(out),
+            ForwardKind::Window => c_from,
+            ForwardKind::Cached => r_from,
+        };
+        let StepOutputs::LogitsKv(logits, kv) = out else {
+            return Err(anyhow!("promoted {} lane expects logits + kv", self.kind.name()));
+        };
+        let keep = keep_rows * vocab;
+        if logits.len() < keep {
+            return Err(anyhow!(
+                "promoted lane returned {} logits, need {keep}",
+                logits.len()
+            ));
+        }
+        let logits = logits[..keep].to_vec();
+        // r-only promotions never changed c: hand the cache back as-is
+        // instead of paying a whole-KV host copy for a no-op re-dimension
+        let kv = if kv.c == c_from { kv } else { kv.rebucket_c(c_from, arch)? };
+        Ok(StepOutputs::LogitsKv(logits, kv))
     }
 }
 
@@ -194,6 +331,98 @@ mod tests {
         assert_eq!(w.slots(), 64);
         assert_eq!(w.used_positions(), 40);
         assert_eq!(w.padded_positions(), 24);
+    }
+
+    fn window_plan(c: usize) -> StepPlan {
+        StepPlan::Window {
+            s: 256,
+            c,
+            ids: vec![1; c],
+            pos: (0..c as i32).collect(),
+            valid: vec![1.0; c],
+        }
+    }
+
+    #[test]
+    fn promote_window_matches_solo_after_demote() {
+        let m = MockExec::new(256);
+        let arch = m.arch();
+        let solo = execute_plan(&m, window_plan(64)).unwrap();
+        let leader = window_plan(128);
+        let (promoted, promo) = window_plan(64).promote_into(&leader, &arch).unwrap();
+        assert!(promoted.compatible(&leader), "promotion must land on the leader bucket");
+        assert_eq!(promo.extra_positions, 64);
+        assert_eq!(promo.from, (256, 64, 0));
+        let out = execute_plan(&m, promoted).unwrap();
+        let demoted = promo.demote(out, m.vocab, &arch).unwrap();
+        let (StepOutputs::LogitsKv(sl, sk), StepOutputs::LogitsKv(dl, dk)) = (solo, demoted)
+        else {
+            panic!("window plans return logits + kv");
+        };
+        assert_eq!(sl, dl, "demoted logits diverged from solo");
+        assert_eq!(dk.c, 64);
+        assert_eq!(sk.k_host().unwrap(), dk.k_host().unwrap());
+        assert_eq!(sk.v_host().unwrap(), dk.v_host().unwrap());
+    }
+
+    #[test]
+    fn promote_cached_remaps_drop_slots_and_rebuckets_kv() {
+        let m = MockExec::new(256);
+        let arch = m.arch();
+        let mk_cached = |c: usize, r: usize| {
+            let StepOutputs::LogitsKv(_, kv) = execute_plan(&m, window_plan(c)).unwrap()
+            else {
+                panic!("window returns kv")
+            };
+            StepPlan::Cached {
+                s: 256,
+                c,
+                r,
+                ids_r: vec![1; r],
+                pos_r: (0..r as i32).collect(),
+                // last row dropped its scatter (marker == c)
+                slot_idx: (0..r as i32 - 1).chain([c as i32]).collect(),
+                rvalid: vec![1.0; r],
+                cvalid: vec![1.0; c],
+                kv,
+            }
+        };
+        let solo = execute_plan(&m, mk_cached(64, 16)).unwrap();
+        let leader = mk_cached(128, 32);
+        let (promoted, promo) = mk_cached(64, 16).promote_into(&leader, &arch).unwrap();
+        assert!(promoted.compatible(&leader));
+        assert_eq!(promo.extra_positions, (128 - 64) + (32 - 16));
+        let StepPlan::Cached { ref slot_idx, ref kv, .. } = promoted else { unreachable!() };
+        assert_eq!(kv.c, 128, "cache must be re-dimensioned to the leader window");
+        assert_eq!(slot_idx[15], 128, "old drop marker (64) must move to the new c");
+        assert!(slot_idx[16..].iter().all(|&s| s == 128), "padded rows must drop");
+        assert!(slot_idx[..15].iter().all(|&s| s < 64), "live scatters unchanged");
+        let out = execute_plan(&m, promoted).unwrap();
+        let demoted = promo.demote(out, m.vocab, &arch).unwrap();
+        let (StepOutputs::LogitsKv(sl, sk), StepOutputs::LogitsKv(dl, dk)) = (solo, demoted)
+        else {
+            panic!("cached plans return logits + kv");
+        };
+        assert_eq!(sl, dl, "demoted cached logits diverged from solo");
+        assert_eq!(dk.c, 64);
+        assert_eq!(sk.k_host().unwrap(), dk.k_host().unwrap());
+    }
+
+    #[test]
+    fn promote_refuses_cross_kind_shrink_and_exact_match() {
+        let m = MockExec::new(256);
+        let arch = m.arch();
+        let full = StepPlan::Full { s: 256, ids: vec![0; 256], valid: vec![1.0; 256] };
+        // cross-kind
+        assert_eq!(window_plan(64).promote_cost_into(&full), None);
+        assert!(window_plan(64).promote_into(&full, &arch).is_err());
+        // shrink
+        assert_eq!(window_plan(128).promote_cost_into(&window_plan(64)), None);
+        assert!(window_plan(128).promote_into(&window_plan(64), &arch).is_err());
+        // exact match is compatible, not a promotion
+        assert_eq!(window_plan(64).promote_cost_into(&window_plan(64)), Some(0));
+        let back = window_plan(64).promote_into(&window_plan(64), &arch);
+        assert!(back.is_err(), "zero-cost promote must hand the plan back");
     }
 
     #[test]

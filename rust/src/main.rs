@@ -20,7 +20,7 @@ use window_diffusion::coordinator::{GenRequest, StepExec};
 use window_diffusion::eval::{self, EvalOptions};
 use window_diffusion::metrics::Metrics;
 use window_diffusion::runtime::{Engine, EnginePool, Manifest};
-use window_diffusion::scheduler::{Policy, Scheduler, SchedulerConfig};
+use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::{self, api::AppState, ServerConfig};
 use window_diffusion::strategies;
 use window_diffusion::tokenizer::Tokenizer;
@@ -106,15 +106,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // coalescing width: clamp to the artifacts' batch ladder so the
     // scheduler never drains more lanes than one forward can carry
     let b_max = pool.b_ladder().into_iter().max().unwrap_or(1);
-    let max_batch = args.usize_or("max-batch", 1).clamp(1, b_max.max(1));
+    let batch_policy = BatchPolicy::from_name(args.get("batch-policy").unwrap_or("fixed"))?;
+    // adaptive mode governs the width itself, so --max-batch defaults to
+    // the ladder ceiling there (it remains the operator cap either way)
+    let default_b = if batch_policy == BatchPolicy::Adaptive { b_max } else { 1 };
+    let max_batch = args.usize_or("max-batch", default_b).clamp(1, b_max.max(1));
+    // cross-bucket promotion is on by default under adaptive (half the
+    // leader bucket may be padding), off under fixed (exact PR-3 behavior)
+    let default_waste = if batch_policy == BatchPolicy::Adaptive { 50 } else { 0 };
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
         kv_soft_bytes: args.usize_or("kv-soft-mb", 0) * 1024 * 1024,
         max_sessions: args.usize_or("max-sessions", 64),
         max_batch,
+        batch_policy,
+        coalesce_waste_pct: args.usize_or("coalesce-waste-pct", default_waste).min(100),
     };
     let policy_name = sched_cfg.policy.name();
+    let batch_policy_name = sched_cfg.batch_policy.name();
     let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
     // one driver worker per replica: K sessions step in parallel
     scheduler.spawn_workers(replicas);
@@ -138,8 +148,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = server::serve(state, cfg)?;
     info!(
         "ready on {} — POST /generate, GET /metrics, GET /sessions \
-         (policy={policy_name}, replicas={replicas}, max_batch={max_batch}; \
-         ctrl-c to stop)",
+         (policy={policy_name}, replicas={replicas}, max_batch={max_batch}, \
+         batch_policy={batch_policy_name}; ctrl-c to stop)",
         server.addr
     );
     loop {
@@ -278,6 +288,7 @@ fn main() -> Result<()> {
                 "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
                  [--artifacts DIR] [--strategy SPEC] ...\n\
                  serve flags: [--replicas N] [--max-batch B] \
+                 [--batch-policy fixed|adaptive] [--coalesce-waste-pct P] \
                  [--policy rr|shortest|deadline] \
                  [--kv-budget-mb N] [--kv-soft-mb N] [--max-sessions N] \
                  [--workers N] [--queue N] [--direct]\n\

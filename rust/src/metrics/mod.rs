@@ -90,6 +90,11 @@ pub struct ForwardKindCounters {
     pub lanes: AtomicU64,
     pub positions_used: AtomicU64,
     pub positions_padded: AtomicU64,
+    /// Forward counts per dispatched bucket, keyed by the batched-executable
+    /// suffix (`b{B}_s{S}[_c{C}[_r{R}]]`). This is the dump
+    /// `compile/aot.py --prune-buckets` consumes to skip lowering
+    /// never-dispatched (B, s, c, r) combinations.
+    buckets: Mutex<std::collections::HashMap<String, u64>>,
 }
 
 impl ForwardKindCounters {
@@ -100,7 +105,20 @@ impl ForwardKindCounters {
         self.positions_padded.fetch_add(padded as u64, Ordering::Relaxed);
     }
 
+    /// Book one forward against its dispatched bucket key.
+    pub fn note_bucket(&self, key: String) {
+        *self.buckets.lock().unwrap().entry(key).or_insert(0) += 1;
+    }
+
     fn to_json(&self) -> Json {
+        // BTreeMap: bucket keys serialize in sorted (deterministic) order
+        let by_bucket: std::collections::BTreeMap<String, Json> = self
+            .buckets
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+            .collect();
         Json::obj(vec![
             ("forwards", Json::num(self.forwards.load(Ordering::Relaxed) as f64)),
             ("lanes", Json::num(self.lanes.load(Ordering::Relaxed) as f64)),
@@ -112,6 +130,7 @@ impl ForwardKindCounters {
                 "positions_padded",
                 Json::num(self.positions_padded.load(Ordering::Relaxed) as f64),
             ),
+            ("buckets", Json::Obj(by_bucket)),
         ])
     }
 }
@@ -145,6 +164,29 @@ pub struct Metrics {
     pub fwd_full: ForwardKindCounters,
     pub fwd_window: ForwardKindCounters,
     pub fwd_cached: ForwardKindCounters,
+    // -- adaptive coalescing (owned by the scheduler's batch governor) --------
+    /// Current coalescing width target: the `BatchGovernor`'s latest
+    /// decision under `--batch-policy adaptive`, or the static `max_batch`
+    /// under `fixed`.
+    pub batch_width: AtomicU64,
+    /// Lanes admitted to a batch by cross-bucket promotion (padding a
+    /// sub-bucket plan up to the leader's bucket).
+    pub promoted_lanes: AtomicU64,
+    /// Extra padded positions those promotions added (the price paid for
+    /// the occupancy they bought — compare against `positions_used`).
+    pub promoted_padded_slots: AtomicU64,
+    /// Padded positions that exist ONLY because of coalescing: whole-lane
+    /// padding (lane count rounded up to the `b_ladder` rung) plus
+    /// promotion padding. Excludes each plan's own bucket-mask waste,
+    /// which a solo forward pays identically — this is the signal the
+    /// governor's waste ceiling judges, so narrowing is only ever blamed
+    /// for padding narrowing can actually remove.
+    pub coalesce_padded_slots: AtomicU64,
+    /// Lanes per forward over the scheduler's trailing rate window (f64
+    /// bit-pattern, like `steps_per_second`). Unlike `batch_occupancy`
+    /// (a lifetime mean), this recovers after a burst drains — the gauge
+    /// the governor's feedback loop is tested against.
+    batch_occupancy_recent_bits: AtomicU64,
 }
 
 impl Metrics {
@@ -171,6 +213,14 @@ impl Metrics {
 
     pub fn steps_per_second(&self) -> f64 {
         f64::from_bits(self.steps_per_second_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set_batch_occupancy_recent(&self, v: f64) {
+        self.batch_occupancy_recent_bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn batch_occupancy_recent(&self) -> f64 {
+        f64::from_bits(self.batch_occupancy_recent_bits.load(Ordering::Relaxed))
     }
 
     /// Mean lanes per *scheduler dispatch* across all kinds (1.0 = pure
@@ -204,6 +254,20 @@ impl Metrics {
             ("sched_steps_total", Json::num(self.sched_steps_total.load(Ordering::Relaxed) as f64)),
             ("steps_per_second", Json::num(self.steps_per_second())),
             ("batch_occupancy", Json::num(self.batch_occupancy())),
+            ("batch_occupancy_recent", Json::num(self.batch_occupancy_recent())),
+            ("batch_width", Json::num(self.batch_width.load(Ordering::Relaxed) as f64)),
+            (
+                "promoted_lanes",
+                Json::num(self.promoted_lanes.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "promoted_padded_slots",
+                Json::num(self.promoted_padded_slots.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "coalesce_padded_slots",
+                Json::num(self.coalesce_padded_slots.load(Ordering::Relaxed) as f64),
+            ),
             (
                 "forwards",
                 Json::obj(vec![
@@ -274,6 +338,28 @@ mod tests {
         );
         assert_eq!(j.get_path(&["forwards", "cached", "positions_used"]).as_i64(), Some(10));
         assert_eq!(j.get("batch_occupancy").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn adaptive_coalescing_gauges_export() {
+        let m = Metrics::default();
+        m.batch_width.store(4, Ordering::Relaxed);
+        m.promoted_lanes.store(3, Ordering::Relaxed);
+        m.promoted_padded_slots.store(144, Ordering::Relaxed);
+        m.coalesce_padded_slots.store(400, Ordering::Relaxed);
+        m.set_batch_occupancy_recent(2.75);
+        m.fwd_cached.note_bucket("b4_s256_c64_r16".into());
+        m.fwd_cached.note_bucket("b4_s256_c64_r16".into());
+        let j = m.to_json();
+        assert_eq!(j.get("batch_width").as_i64(), Some(4));
+        assert_eq!(j.get("promoted_lanes").as_i64(), Some(3));
+        assert_eq!(j.get("promoted_padded_slots").as_i64(), Some(144));
+        assert_eq!(j.get("coalesce_padded_slots").as_i64(), Some(400));
+        assert_eq!(j.get("batch_occupancy_recent").as_f64(), Some(2.75));
+        assert_eq!(
+            j.get_path(&["forwards", "cached", "buckets", "b4_s256_c64_r16"]).as_i64(),
+            Some(2)
+        );
     }
 
     #[test]

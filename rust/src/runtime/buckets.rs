@@ -49,6 +49,42 @@ pub fn waste(bucket: usize, need: usize) -> usize {
     bucket.saturating_sub(need)
 }
 
+/// Total padded positions a `(s, c, r)` bucket key occupies — the common
+/// currency for promote-cost accounting. Cached keys pay both the window
+/// (`c`) and compute (`r`) axes, window keys pay `c`, full keys pay `s`
+/// (their only axis).
+pub fn bucket_positions(bucket: (usize, usize, usize)) -> usize {
+    let (s, c, r) = bucket;
+    if c > 0 {
+        c + r
+    } else {
+        s
+    }
+}
+
+/// Promote-fit: the joint-pick companion for cross-bucket coalescing
+/// (`pick_bscr` chooses a bucket for one plan; `promote_cost` decides
+/// whether a *candidate* bucket can be padded up into an *incumbent* lane
+/// set's bucket). A candidate is a sub-bucket of the incumbent iff the
+/// sequence set matches exactly (s defines the executable family and the
+/// position space) and every other axis grows — padding is only ever
+/// additive, validity masks keep the added slots inert. Returns the extra
+/// padded positions the promotion costs ([`bucket_positions`] delta;
+/// `Some(0)` for an exact match), or `None` when the candidate cannot join.
+pub fn promote_cost(incumbent: (usize, usize, usize),
+                    candidate: (usize, usize, usize)) -> Option<usize> {
+    let ((si, ci, ri), (sc, cc, rc)) = (incumbent, candidate);
+    // s must match exactly; a zero axis on one side must be zero on the
+    // other (same forward kind shape), and nonzero axes may only grow
+    if si != sc || (ci == 0) != (cc == 0) || (ri == 0) != (rc == 0) {
+        return None;
+    }
+    if cc > ci || rc > ri {
+        return None;
+    }
+    Some(bucket_positions(incumbent) - bucket_positions(candidate))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +179,64 @@ mod tests {
                 let c_min = pick(CS, c_need.max(r)).map_err(|e| e.to_string())?;
                 if c != c_min {
                     return Err(format!("c {c} != minimal {c_min} for need {c_need}, r {r}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn promote_cost_sub_buckets_only() {
+        // exact match is a zero-cost promote (== compatible)
+        assert_eq!(promote_cost((256, 128, 32), (256, 128, 32)), Some(0));
+        // r grows: cost is the extra compute slots
+        assert_eq!(promote_cost((256, 128, 32), (256, 128, 16)), Some(16));
+        // c grows: cost is the extra window slots
+        assert_eq!(promote_cost((256, 128, 0), (256, 64, 0)), Some(64));
+        // both grow
+        assert_eq!(promote_cost((256, 128, 32), (256, 64, 16)), Some(80));
+        // full plans (c = r = 0) only ever match exactly
+        assert_eq!(promote_cost((256, 0, 0), (256, 0, 0)), Some(0));
+        assert_eq!(promote_cost((512, 0, 0), (256, 0, 0)), None);
+        // s mismatch, shrink, or kind-shape mismatch never promote
+        assert_eq!(promote_cost((512, 128, 32), (256, 128, 32)), None);
+        assert_eq!(promote_cost((256, 64, 16), (256, 128, 16)), None);
+        assert_eq!(promote_cost((256, 128, 16), (256, 128, 32)), None);
+        assert_eq!(promote_cost((256, 128, 32), (256, 128, 0)), None);
+        assert_eq!(promote_cost((256, 128, 0), (256, 0, 0)), None);
+    }
+
+    #[test]
+    fn prop_promote_cost_is_positions_delta() {
+        prop::check(
+            "promote-cost-delta",
+            |rng| {
+                let pick3 = |rng: &mut crate::util::rng::Rng, l: &[usize]| {
+                    l[rng.usize_below(l.len())]
+                };
+                let s = [256usize, 512][rng.usize_below(2)];
+                let ci = pick3(rng, CS);
+                let cc = pick3(rng, CS);
+                let ri = pick3(rng, RS);
+                let rc = pick3(rng, RS);
+                (s, ci, cc, ri, rc)
+            },
+            |&(s, ci, cc, ri, rc)| {
+                match promote_cost((s, ci, ri), (s, cc, rc)) {
+                    Some(cost) => {
+                        if cc > ci || rc > ri {
+                            return Err("shrinking promote admitted".into());
+                        }
+                        let want = (ci - cc) + (ri - rc);
+                        if cost != want {
+                            return Err(format!("cost {cost} != delta {want}"));
+                        }
+                    }
+                    None => {
+                        if cc <= ci && rc <= ri {
+                            return Err("grow-only candidate refused".into());
+                        }
+                    }
                 }
                 Ok(())
             },

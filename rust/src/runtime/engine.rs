@@ -48,6 +48,53 @@ impl KvCache {
         Ok(self.k.to_vec::<f32>()?)
     }
 
+    /// Re-bucket this cache onto a different window capacity: grow pads
+    /// each layer's `[c, H, Dh]` block with zero slots (the promoted slots
+    /// carry `cvalid = 0`, so they are inert in-graph), shrink truncates
+    /// back to the original slots (discarding anything a promoted forward
+    /// wrote into the padding region). Layout is `[L, c, H, Dh]`, so the
+    /// copy is per-layer; the result is always a flat host cache. The
+    /// grow→shrink round trip is byte-identical on the live slots, which is
+    /// what keeps cross-bucket-promoted sessions byte-identical to solo.
+    pub fn rebucket_c(&self, new_c: usize, arch: &Arch) -> Result<KvCache> {
+        if new_c == self.c {
+            return Ok(KvCache {
+                s: self.s,
+                c: self.c,
+                flat: true,
+                k: Literal::vec1(&self.k_host()?),
+                v: Literal::vec1(&self.v_host()?),
+            });
+        }
+        let slot = arch.n_heads * arch.dh;
+        let (old_block, new_block) = (self.c * slot, new_c * slot);
+        let copy = self.c.min(new_c) * slot;
+        let (k, v) = (self.k_host()?, self.v_host()?);
+        if k.len() != arch.n_layers * old_block || v.len() != k.len() {
+            return Err(anyhow!(
+                "KV cache has {} elems, arch says {} for c={}",
+                k.len(),
+                arch.n_layers * old_block,
+                self.c
+            ));
+        }
+        let mut nk = vec![0f32; arch.n_layers * new_block];
+        let mut nv = vec![0f32; arch.n_layers * new_block];
+        for l in 0..arch.n_layers {
+            nk[l * new_block..l * new_block + copy]
+                .copy_from_slice(&k[l * old_block..l * old_block + copy]);
+            nv[l * new_block..l * new_block + copy]
+                .copy_from_slice(&v[l * old_block..l * old_block + copy]);
+        }
+        Ok(KvCache {
+            s: self.s,
+            c: new_c,
+            flat: true,
+            k: Literal::vec1(&nk),
+            v: Literal::vec1(&nv),
+        })
+    }
+
     /// Merge per-lane caches into one batched `[b, L, c, H, Dh]` host tensor
     /// pair, zero-padding the lanes beyond `lanes.len()` up to the `b`
     /// bucket. All lanes must share `(s, c)` (scheduler coalescing only
@@ -220,6 +267,14 @@ impl Engine {
             bytes as f64 / 1e6,
             model.executables.len()
         );
+        if !model.pruned.is_empty() {
+            crate::info!(
+                "engine {}: {} batched combos pruned at lowering time \
+                 (--prune-buckets); those buckets dispatch solo",
+                model_name,
+                model.pruned.len()
+            );
+        }
         Ok(Engine {
             client,
             model,
@@ -462,5 +517,61 @@ impl EngineCell {
     /// this engine (steps are ms-scale at sim-model size).
     pub fn stats(&self) -> EngineStatsSnapshot {
         self.with(|e| e.stats.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_arch() -> Arch {
+        Arch { d: 8, n_layers: 2, n_heads: 1, dh: 4, ffn: 16, vocab: 16, max_seq: 256 }
+    }
+
+    fn ramp_cache(c: usize, arch: &Arch) -> KvCache {
+        let elems = arch.kv_elems(c);
+        let k: Vec<f32> = (0..elems).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..elems).map(|i| (i as f32) * 0.5 - 3.0).collect();
+        KvCache { s: 256, c, flat: true, k: Literal::vec1(&k), v: Literal::vec1(&v) }
+    }
+
+    #[test]
+    fn rebucket_c_grow_pads_per_layer_with_zeros() {
+        let arch = tiny_arch();
+        let orig = ramp_cache(64, &arch);
+        let grown = orig.rebucket_c(128, &arch).unwrap();
+        assert_eq!(grown.c, 128);
+        let slot = arch.n_heads * arch.dh;
+        let (ok, gk) = (orig.k_host().unwrap(), grown.k_host().unwrap());
+        assert_eq!(gk.len(), arch.kv_elems(128));
+        for l in 0..arch.n_layers {
+            let live = &gk[l * 128 * slot..l * 128 * slot + 64 * slot];
+            assert_eq!(live, &ok[l * 64 * slot..(l + 1) * 64 * slot]);
+            let pad = &gk[l * 128 * slot + 64 * slot..(l + 1) * 128 * slot];
+            assert!(pad.iter().all(|&x| x == 0.0), "layer {l} padding not zero");
+        }
+    }
+
+    #[test]
+    fn rebucket_c_round_trip_is_byte_identical() {
+        let arch = tiny_arch();
+        let orig = ramp_cache(64, &arch);
+        let back = orig
+            .rebucket_c(192, &arch)
+            .unwrap()
+            .rebucket_c(64, &arch)
+            .unwrap();
+        assert_eq!(back.c, 64);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&orig.k_host().unwrap()), bits(&back.k_host().unwrap()));
+        assert_eq!(bits(&orig.v_host().unwrap()), bits(&back.v_host().unwrap()));
+    }
+
+    #[test]
+    fn rebucket_c_rejects_mismatched_arch() {
+        let arch = tiny_arch();
+        let mut wrong = ramp_cache(64, &arch);
+        wrong.c = 128; // lies about its capacity
+        assert!(wrong.rebucket_c(64, &arch).is_err());
     }
 }

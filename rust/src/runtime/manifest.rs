@@ -76,6 +76,12 @@ pub struct ModelEntry {
     /// Batch-lane ladder for the batched executables (leading batch dim).
     /// `[1]` for pre-batching artifacts — B=1 maps to the unbatched names.
     pub b_ladder: Vec<usize>,
+    /// Batched executables the AOT pipeline skipped via `--prune-buckets`
+    /// (never dispatched in the production forward-count dump). Purely
+    /// informational on the rust side: batched dispatch probes
+    /// `has_executable` before stacking lanes, so a pruned bucket serves
+    /// through the solo fallback instead of erroring.
+    pub pruned: Vec<String>,
     pub weights_file: String,
     pub weights: Vec<WeightSpec>,
     pub weight_order: Vec<String>,
@@ -191,6 +197,15 @@ impl Manifest {
                         let b = usize_arr(m.get("b_ladder"));
                         if b.is_empty() { vec![1] } else { b }
                     },
+                    pruned: m
+                        .get("pruned")
+                        .as_arr()
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|x| x.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
                     weights_file: m
                         .get("weights_file")
                         .as_str()
@@ -306,6 +321,59 @@ mod tests {
             ModelEntry::fwd_cached_name(512, 256, 48),
             "fwd_cached_s512_c256_r48"
         );
+    }
+
+    #[test]
+    fn manifest_parses_pruned_and_defaults_empty() {
+        let dir = std::env::temp_dir().join(format!("wdm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "attn": "ref",
+            "special": {"pad": 0, "mask": 1, "eos": 2},
+            "vocab_file": "vocab.json",
+            "tasks_dir": "tasks",
+            "models": {
+                "toy": {
+                    "arch": {"d": 8, "n_layers": 1, "n_heads": 1, "dh": 8,
+                             "ffn": 16, "vocab": 16, "max_seq": 256},
+                    "format": "base",
+                    "seqs": [256],
+                    "c_ladder": [64],
+                    "r_ladder": [16],
+                    "b_ladder": [1, 4],
+                    "pruned": ["fwd_cached_b4_s256_c64_r16"],
+                    "weights_file": "w.bin",
+                    "weights": [],
+                    "weight_order": [],
+                    "executables": []
+                },
+                "old": {
+                    "arch": {"d": 8, "n_layers": 1, "n_heads": 1, "dh": 8,
+                             "ffn": 16, "vocab": 16, "max_seq": 256},
+                    "format": "base",
+                    "seqs": [256],
+                    "c_ladder": [64],
+                    "r_ladder": [16],
+                    "weights_file": "w.bin",
+                    "weights": [],
+                    "weight_order": [],
+                    "executables": []
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.pruned, vec!["fwd_cached_b4_s256_c64_r16".to_string()]);
+        assert_eq!(toy.b_ladder, vec![1, 4]);
+        // a pruned executable is simply absent: batched dispatch probes
+        // has_executable and degrades to the solo loop, never an error
+        assert!(toy.exec_spec("fwd_cached_b4_s256_c64_r16").is_err());
+        // pre-pruning manifests: field defaults to empty
+        let old = m.model("old").unwrap();
+        assert!(old.pruned.is_empty());
+        assert_eq!(old.b_ladder, vec![1]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -78,6 +78,8 @@ mod tests {
             seqs: vec![8],
             c_ladder: vec![8],
             r_ladder: vec![8],
+            b_ladder: vec![1],
+            pruned: Vec::new(),
             weights_file: dir.join("w.bin").file_name().unwrap().to_str().unwrap().into(),
             weights: specs,
             weight_order: order.into_iter().map(String::from).collect(),

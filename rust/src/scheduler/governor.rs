@@ -1,0 +1,494 @@
+//! Load-adaptive coalescing width: the per-tick `B` decision.
+//!
+//! PR 3's `--max-batch` is static: a lightly-loaded server pays coalescing
+//! overhead (planning under the run-queue lock, whole-lane padding) for
+//! batches that never fill, and a bursty one is capped below what the
+//! hardware could carry. The [`BatchGovernor`] picks the width per tick
+//! from three signals the scheduler already measures:
+//!
+//! * **queue depth** — the supply of coalescable work *right now*: B=1 when
+//!   the queue is short (latency-optimal; solo ticks keep planning off the
+//!   run-queue lock entirely), widening along the artifact `b_ladder` as
+//!   depth grows;
+//! * **trailing occupancy** (lanes per forward over a short window, from
+//!   the per-kind [`ForwardKindCounters`]) — when the traffic is too
+//!   heterogeneous to actually fill the width we are running, narrow a
+//!   rung instead of burning bounded-scan budget every tick;
+//! * **trailing coalescing waste** — when padding that exists *only
+//!   because of coalescing* (whole padding lanes + cross-bucket
+//!   promotions; never the plans' own bucket-mask waste, which solo
+//!   forwards pay identically) eats more than the configured ceiling of
+//!   the computed slots, narrow a rung.
+//!
+//! Widening reacts immediately (a burst should not wait out a timer);
+//! narrowing is hysteresis-gated (`dwell`) so the width doesn't flap
+//! around a noisy threshold. The clock is injected into every decision,
+//! so unit tests drive the policy deterministically without sleeping.
+//!
+//! [`ForwardKindCounters`]: crate::metrics::ForwardKindCounters
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use crate::metrics::Metrics;
+
+/// How the scheduler picks its per-tick coalescing width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Always `max_batch` (the PR-3 behavior).
+    Fixed,
+    /// [`BatchGovernor`]-driven: queue depth + trailing occupancy/waste.
+    Adaptive,
+}
+
+impl BatchPolicy {
+    pub fn from_name(name: &str) -> anyhow::Result<BatchPolicy> {
+        Ok(match name {
+            "fixed" => BatchPolicy::Fixed,
+            "adaptive" => BatchPolicy::Adaptive,
+            other => {
+                return Err(anyhow::anyhow!(
+                    "unknown batch policy '{other}' (fixed | adaptive)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicy::Fixed => "fixed",
+            BatchPolicy::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Cumulative forward counters summed across kinds — the governor's raw
+/// feedback signal, snapshotted from [`Metrics`] each decision.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub forwards: u64,
+    pub lanes: u64,
+    pub positions_used: u64,
+    pub positions_padded: u64,
+    /// Coalescing-induced padding only (whole-lane + promotion). The waste
+    /// verdict judges this, NOT `positions_padded`: per-lane bucket-mask
+    /// waste is width-independent — a solo forward pays it identically —
+    /// so narrowing over it would suppress batching on low-density traffic
+    /// that actually coalesces perfectly.
+    pub coalesce_padded: u64,
+}
+
+impl CounterSnapshot {
+    pub fn of(m: &Metrics) -> CounterSnapshot {
+        let mut s = CounterSnapshot::default();
+        for k in [&m.fwd_full, &m.fwd_window, &m.fwd_cached] {
+            s.forwards += k.forwards.load(Ordering::Relaxed);
+            s.lanes += k.lanes.load(Ordering::Relaxed);
+            s.positions_used += k.positions_used.load(Ordering::Relaxed);
+            s.positions_padded += k.positions_padded.load(Ordering::Relaxed);
+        }
+        s.coalesce_padded = m.coalesce_padded_slots.load(Ordering::Relaxed);
+        s
+    }
+}
+
+pub struct GovernorConfig {
+    /// Ascending batch-lane ladder (the executor's `b_ladder`); widths are
+    /// always ladder rungs, never in-between values the artifacts can't
+    /// dispatch.
+    pub b_ladder: Vec<usize>,
+    /// Operator cap on the width (`--max-batch`).
+    pub max_batch: usize,
+    /// Trailing window for the occupancy/waste feedback.
+    pub window: Duration,
+    /// Minimum time between *narrowing* decisions (hysteresis). Widening
+    /// is never gated.
+    pub dwell: Duration,
+    /// Narrow a rung when trailing occupancy falls below this fraction of
+    /// the current width (the traffic isn't coalescing).
+    pub occupancy_floor: f64,
+    /// Narrow a rung when trailing *coalescing-induced* padding (whole
+    /// lanes + promotions; see [`CounterSnapshot::coalesce_padded`])
+    /// exceeds this percentage of all computed positions. 0 disables the
+    /// waste feedback.
+    pub waste_ceiling_pct: usize,
+}
+
+impl GovernorConfig {
+    pub fn new(b_ladder: Vec<usize>, max_batch: usize) -> GovernorConfig {
+        let mut b_ladder = b_ladder;
+        b_ladder.sort_unstable();
+        b_ladder.dedup();
+        if b_ladder.is_empty() {
+            b_ladder.push(1);
+        }
+        GovernorConfig {
+            b_ladder,
+            max_batch: max_batch.max(1),
+            window: Duration::from_millis(500),
+            dwell: Duration::from_millis(200),
+            occupancy_floor: 0.5,
+            waste_ceiling_pct: 0,
+        }
+    }
+}
+
+/// Picks the coalescing width for each scheduler tick. All state lives
+/// here (the scheduler holds it behind a mutex); every decision takes the
+/// clock as an argument, so the policy is a pure function of its inputs —
+/// deterministic under test.
+/// How long a feedback-imposed width cap outlives the decision that set it,
+/// in dwell units. Without this memory the depth target would re-widen one
+/// tick after every feedback narrowing and the width would oscillate
+/// (wide → under-occupied → narrow → depth re-widens → …) instead of
+/// settling; with it, the governor holds the narrowed rung and only
+/// *probes* wide again once per interval to notice when the traffic mix
+/// has become coalescable again.
+const CAP_PROBE_DWELLS: u32 = 4;
+
+pub struct BatchGovernor {
+    cfg: GovernorConfig,
+    width: usize,
+    /// Last time the width moved (either direction). Narrowing is gated on
+    /// `dwell` elapsing since this; widening never is.
+    last_change: Option<Instant>,
+    /// Feedback cap: `(rung, expiry)` set when trailing occupancy/waste say
+    /// the running width isn't earning its keep. Bounds the depth target
+    /// until it expires (see [`CAP_PROBE_DWELLS`]).
+    cap: Option<(usize, Instant)>,
+    /// (time, cumulative counters) ring pruned to `window`: trailing
+    /// occupancy/waste are deltas between the newest and oldest entries.
+    history: VecDeque<(Instant, CounterSnapshot)>,
+}
+
+impl BatchGovernor {
+    pub fn new(cfg: GovernorConfig) -> BatchGovernor {
+        BatchGovernor {
+            cfg,
+            width: 1,
+            last_change: None,
+            cap: None,
+            history: VecDeque::new(),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Largest ladder rung `<= need`, clamped by `max_batch` (always at
+    /// least 1 — the ladder's floor rung).
+    fn rung_for(&self, need: usize) -> usize {
+        self.cfg
+            .b_ladder
+            .iter()
+            .copied()
+            .filter(|&b| b <= need.max(1) && b <= self.cfg.max_batch)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Next rung strictly below `w` (1 when none).
+    fn rung_below(&self, w: usize) -> usize {
+        self.cfg
+            .b_ladder
+            .iter()
+            .copied()
+            .filter(|&b| b < w)
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Trailing (occupancy, coalesce-waste %, forwards) over the history
+    /// window — which only ever spans forwards run at the *current* width
+    /// (the window resets on every width change; see `reset_window`).
+    fn trailing(&self) -> (f64, f64, u64) {
+        let (Some((_, oldest)), Some((_, newest))) =
+            (self.history.front(), self.history.back())
+        else {
+            return (0.0, 0.0, 0);
+        };
+        let forwards = newest.forwards.saturating_sub(oldest.forwards);
+        if forwards == 0 {
+            return (0.0, 0.0, 0);
+        }
+        let lanes = newest.lanes.saturating_sub(oldest.lanes);
+        let used = newest.positions_used.saturating_sub(oldest.positions_used);
+        let padded = newest.positions_padded.saturating_sub(oldest.positions_padded);
+        let coalesce = newest.coalesce_padded.saturating_sub(oldest.coalesce_padded);
+        let occ = lanes as f64 / forwards as f64;
+        let total = used + padded;
+        let waste_pct =
+            if total == 0 { 0.0 } else { coalesce as f64 * 100.0 / total as f64 };
+        (occ, waste_pct, forwards)
+    }
+
+    /// Restart the feedback window from `now` — called on every width
+    /// change so verdicts only ever judge forwards run at the width they
+    /// are about to narrow (stale pre-widen solo forwards must not walk a
+    /// perfectly coalescable burst back toward solo).
+    fn reset_window(&mut self, now: Instant, counters: CounterSnapshot) {
+        self.history.clear();
+        self.history.push_back((now, counters));
+    }
+
+    /// Decide the coalescing width for the tick happening at `now`, given
+    /// the current run-queue depth and a fresh counter snapshot.
+    pub fn decide(&mut self, now: Instant, queue_depth: usize,
+                  counters: CounterSnapshot) -> usize {
+        // book the snapshot, prune the window
+        self.history.push_back((now, counters));
+        while matches!(
+            self.history.front(),
+            Some((t, _)) if now.saturating_duration_since(*t) > self.cfg.window
+        ) {
+            // keep one entry older than the window so deltas span the full
+            // window rather than shrinking toward zero under sparse ticks
+            if self.history.len() <= 2 {
+                break;
+            }
+            self.history.pop_front();
+        }
+
+        // supply-side target: how much coalescable work is queued right now
+        let mut target = self.rung_for(queue_depth);
+
+        // feedback: the width we have been running is not earning its keep.
+        // The verdict is remembered as a cap (not applied once and
+        // forgotten) — otherwise the depth target would re-widen on the
+        // very next tick and the width would oscillate instead of settling
+        // on the rung the traffic can actually fill.
+        if let Some((_, until)) = self.cap {
+            if now >= until {
+                self.cap = None; // probe wide again
+            }
+        }
+        let (occ, waste_pct, forwards) = self.trailing();
+        if self.width > 1 && forwards > 0 {
+            let under_occupied = occ < self.cfg.occupancy_floor * self.width as f64;
+            let too_wasteful = self.cfg.waste_ceiling_pct > 0
+                && waste_pct > self.cfg.waste_ceiling_pct as f64;
+            if under_occupied || too_wasteful {
+                let rung = self.rung_below(self.width);
+                let until = now + self.cfg.dwell * CAP_PROBE_DWELLS;
+                self.cap = Some(match self.cap {
+                    // repeated verdicts tighten the cap, never loosen it
+                    Some((c, _)) => (c.min(rung), until),
+                    None => (rung, until),
+                });
+            }
+        }
+        if let Some((rung, _)) = self.cap {
+            target = target.min(rung);
+        }
+
+        if target > self.width {
+            // widen immediately: a burst should not wait out a timer
+            self.width = target;
+            self.last_change = Some(now);
+            self.reset_window(now, counters);
+        } else if target < self.width {
+            // narrow only once the dwell has elapsed since the width last
+            // moved, so a widen→narrow cycle can't flap within the dwell
+            #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
+            let held = self
+                .last_change
+                .map_or(true, |t| now.saturating_duration_since(t) >= self.cfg.dwell);
+            if held {
+                self.width = target;
+                self.last_change = Some(now);
+                self.reset_window(now, counters);
+            }
+        }
+        self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gov(max_batch: usize) -> BatchGovernor {
+        let mut cfg = GovernorConfig::new(vec![1, 2, 4, 8], max_batch);
+        cfg.window = Duration::from_millis(400);
+        cfg.dwell = Duration::from_millis(100);
+        BatchGovernor::new(cfg)
+    }
+
+    fn snap(forwards: u64, lanes: u64, used: u64, padded: u64) -> CounterSnapshot {
+        CounterSnapshot {
+            forwards,
+            lanes,
+            positions_used: used,
+            positions_padded: padded,
+            coalesce_padded: 0,
+        }
+    }
+
+    #[test]
+    fn short_queue_stays_solo() {
+        let t0 = Instant::now();
+        let mut g = gov(8);
+        assert_eq!(g.decide(t0, 0, snap(0, 0, 0, 0)), 1);
+        assert_eq!(g.decide(t0 + Duration::from_millis(10), 1, snap(1, 1, 64, 0)), 1);
+    }
+
+    #[test]
+    fn deep_queue_widens_immediately_along_the_ladder() {
+        let t0 = Instant::now();
+        let mut g = gov(8);
+        assert_eq!(g.decide(t0, 3, snap(0, 0, 0, 0)), 2, "depth 3 -> rung 2");
+        // burst: depth 9 jumps straight to the top rung, no dwell
+        assert_eq!(g.decide(t0 + Duration::from_millis(1), 9, snap(0, 0, 0, 0)), 8);
+    }
+
+    #[test]
+    fn max_batch_caps_the_ladder() {
+        let t0 = Instant::now();
+        let mut g = gov(4);
+        assert_eq!(g.decide(t0, 64, snap(0, 0, 0, 0)), 4);
+    }
+
+    #[test]
+    fn narrowing_waits_out_the_dwell_then_recovers_to_solo() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8);
+        assert_eq!(g.decide(at(0), 16, snap(0, 0, 0, 0)), 8);
+        // queue drained: target is 1, but the dwell (100ms since the widen
+        // at t=0) holds the width wide
+        assert_eq!(g.decide(at(10), 0, snap(4, 32, 900, 0)), 8);
+        assert_eq!(g.decide(at(50), 0, snap(6, 40, 1100, 0)), 8);
+        // dwell elapsed: narrow to solo
+        assert_eq!(g.decide(at(120), 0, snap(6, 40, 1100, 0)), 1);
+        // wedged-wide regression: it must STAY narrow while the queue is idle
+        assert_eq!(g.decide(at(400), 0, snap(6, 40, 1100, 0)), 1);
+    }
+
+    #[test]
+    fn rewiden_after_narrow_is_immediate() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8);
+        g.decide(at(0), 16, snap(0, 0, 0, 0));
+        assert_eq!(g.width(), 8);
+        // dwell elapsed -> narrow to solo
+        assert_eq!(g.decide(at(150), 0, snap(0, 0, 0, 0)), 1);
+        // a fresh burst one tick later re-widens with no dwell at all
+        assert_eq!(g.decide(at(151), 8, snap(0, 0, 0, 0)), 8);
+        // and the following narrow is gated from the widen at 151ms
+        assert_eq!(g.decide(at(200), 0, snap(0, 0, 0, 0)), 8);
+        assert_eq!(g.decide(at(260), 0, snap(0, 0, 0, 0)), 1);
+    }
+
+    #[test]
+    fn low_trailing_occupancy_steps_down_one_rung() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8);
+        g.decide(at(0), 16, snap(0, 0, 0, 0));
+        assert_eq!(g.width(), 8);
+        // deep queue but forwards only ever carry ~1.5 lanes (heterogeneous
+        // traffic): occupancy 12/8 = 1.5 < 0.5 * 8 -> step down to rung 4,
+        // not all the way to 1 (the queue is still deep)
+        assert_eq!(g.decide(at(150), 16, snap(8, 12, 800, 100)), 4);
+    }
+
+    #[test]
+    fn waste_ceiling_steps_down_one_rung() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut cfg = GovernorConfig::new(vec![1, 2, 4, 8], 8);
+        cfg.dwell = Duration::from_millis(50);
+        cfg.waste_ceiling_pct = 40;
+        let mut g = BatchGovernor::new(cfg);
+        g.decide(at(0), 16, snap(0, 0, 0, 0));
+        assert_eq!(g.width(), 8);
+        // occupancy is healthy (8 lanes/forward) but COALESCING-induced
+        // padding (whole lanes + promotions) eats 60% of the computed
+        // positions -> the waste ceiling narrows a rung
+        let wasteful = CounterSnapshot { coalesce_padded: 600, ..snap(4, 32, 400, 600) };
+        assert_eq!(g.decide(at(100), 16, wasteful), 4);
+    }
+
+    #[test]
+    fn intrinsic_mask_padding_never_narrows() {
+        // per-lane bucket-mask waste is width-independent (a solo forward
+        // pays it too): 90% positions_padded with ZERO coalesce_padded must
+        // not fire the waste ceiling — the regression that suppressed
+        // batching on low-density cached traffic
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut cfg = GovernorConfig::new(vec![1, 2, 4, 8], 8);
+        cfg.dwell = Duration::from_millis(50);
+        cfg.waste_ceiling_pct = 40;
+        let mut g = BatchGovernor::new(cfg);
+        g.decide(at(0), 16, snap(0, 0, 0, 0));
+        assert_eq!(g.width(), 8);
+        // occupancy full (8 lanes/forward), masks 90% padded, no coalesce
+        // padding: the width must hold
+        assert_eq!(g.decide(at(100), 16, snap(4, 32, 60, 540)), 8);
+        assert_eq!(g.decide(at(200), 16, snap(8, 64, 120, 1080)), 8);
+    }
+
+    #[test]
+    fn widen_resets_feedback_window() {
+        // dense solo traffic fills the window with occ≈1 forwards; a burst
+        // then widens. The stale pre-widen data must not produce a narrow
+        // verdict — only forwards run at the new width are judged.
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8); // dwell 100ms, window 400ms
+        assert_eq!(g.decide(at(0), 1, snap(0, 0, 0, 0)), 1);
+        assert_eq!(g.decide(at(50), 1, snap(50, 50, 800, 0)), 1);
+        assert_eq!(g.decide(at(100), 1, snap(100, 100, 1600, 0)), 1);
+        // burst arrives: widen immediately (this resets the window)
+        assert_eq!(g.decide(at(150), 16, snap(120, 120, 2000, 0)), 8);
+        // post-widen forwards fill all 8 lanes; without the reset the
+        // trailing occupancy would still read ~1 and narrow right here
+        assert_eq!(g.decide(at(260), 16, snap(121, 128, 2100, 0)), 8);
+    }
+
+    #[test]
+    fn feedback_cap_settles_instead_of_oscillating() {
+        // regression: a feedback narrowing used to be undone by the depth
+        // target on the very next tick (wide -> under-occupied -> narrow ->
+        // depth re-widens -> ...). The cap must hold the narrowed rung for
+        // its probe interval, tighten under repeated verdicts, and only
+        // re-widen once it expires.
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8); // dwell 100ms, window 400ms -> cap lasts 400ms
+        g.decide(at(0), 16, snap(0, 0, 0, 0));
+        assert_eq!(g.width(), 8);
+        // persistent ~1.5 lanes/forward on a deep queue: narrow a rung
+        assert_eq!(g.decide(at(120), 16, snap(8, 12, 800, 0)), 4);
+        // the deep queue must NOT re-widen while the cap holds
+        assert_eq!(g.decide(at(130), 16, snap(9, 13, 900, 0)), 4);
+        // still under-occupied at 4: cap tightens, width follows after dwell
+        assert_eq!(g.decide(at(240), 16, snap(12, 17, 1200, 0)), 2);
+        // occupancy ~1.5 fills width 2 (>= floor): settled, no more verdicts
+        assert_eq!(g.decide(at(350), 16, snap(16, 23, 1500, 0)), 2);
+        // cap expired: probe wide again to notice a changed traffic mix
+        assert_eq!(g.decide(at(900), 16, snap(16, 23, 1500, 0)), 8);
+    }
+
+    #[test]
+    fn ladder_rungs_only() {
+        let t0 = Instant::now();
+        let mut cfg = GovernorConfig::new(vec![1, 4], 8);
+        cfg.dwell = Duration::ZERO;
+        let mut g = BatchGovernor::new(cfg);
+        // depth 3 sits between rungs: width must be a real rung (1), never 3
+        assert_eq!(g.decide(t0, 3, snap(0, 0, 0, 0)), 1);
+        assert_eq!(g.decide(t0 + Duration::from_millis(1), 5, snap(0, 0, 0, 0)), 4);
+    }
+
+    #[test]
+    fn degenerate_ladder_pins_solo() {
+        let t0 = Instant::now();
+        let mut g = BatchGovernor::new(GovernorConfig::new(vec![], 8));
+        assert_eq!(g.decide(t0, 100, snap(0, 0, 0, 0)), 1);
+    }
+}

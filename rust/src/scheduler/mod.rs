@@ -24,6 +24,12 @@
 //! batched engine call, applying and booking each lane individually —
 //! cross-session hardware batching on top of step-level fairness, with
 //! outputs byte-identical to solo stepping (property-tested per strategy).
+//! The width itself is load-adaptive under `--batch-policy adaptive` (the
+//! [`governor`] picks it per tick from queue depth and trailing
+//! occupancy/waste), and with `--coalesce-waste-pct > 0` a candidate whose
+//! bucket is a *sub-bucket* of the leader's joins by padding its plan up
+//! (cross-bucket promotion; outputs are sliced back before `apply`, so
+//! parity with solo still holds).
 //!
 //! Steps run with the scheduler's run-queue lock **released**, so
 //! submission and introspection (`GET /sessions`) stay responsive while the
@@ -40,9 +46,11 @@
 //! [`EngineCell`]: crate::runtime::EngineCell
 //! [`EnginePool`]: crate::runtime::EnginePool
 
+pub mod governor;
 pub mod kvpool;
 pub mod policy;
 
+pub use governor::{BatchGovernor, BatchPolicy, CounterSnapshot, GovernorConfig};
 pub use kvpool::{KvPool, PoolExhausted};
 pub use policy::Policy;
 
@@ -54,9 +62,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::plan::{execute_plan, ForwardKind, Planned, StepPlan};
+use crate::coordinator::plan::{execute_plan, ForwardKind, Planned, Promotion, StepPlan};
 use crate::coordinator::{GenRequest, GenResult, StepExec};
 use crate::metrics::Metrics;
+use crate::runtime::{buckets, Arch};
+use crate::strategies::machine::kv_slot_bytes;
 use crate::strategies::{self, Session, StepOutcome};
 use crate::util::stats::RateMeter;
 use crate::util::threadpool::ThreadPool;
@@ -64,6 +74,22 @@ use crate::util::threadpool::ThreadPool;
 /// Trailing window for the `steps_per_second` gauge (recent throughput, not
 /// a lifetime average — see [`RateMeter`]).
 const STEP_RATE_WINDOW: Duration = Duration::from_secs(2);
+
+/// Per-bucket forward-count key: the batched-executable *suffix* for a
+/// dispatch (`b{B}_s{S}[_c{C}[_r{R}]]`), so a production `/metrics` dump
+/// maps 1:1 onto the names `aot.py` lowers — the input to
+/// `--prune-buckets`.
+fn bucket_key(b: usize, bucket: (usize, usize, usize)) -> String {
+    let (s, c, r) = bucket;
+    let mut key = format!("b{b}_s{s}");
+    if c > 0 {
+        key.push_str(&format!("_c{c}"));
+    }
+    if r > 0 {
+        key.push_str(&format!("_r{r}"));
+    }
+    key
+}
 
 pub struct SchedulerConfig {
     pub policy: Policy,
@@ -77,7 +103,19 @@ pub struct SchedulerConfig {
     /// Coalescing width: each `tick` drains up to this many policy-ordered
     /// sessions whose plans share a forward bucket and executes them as ONE
     /// engine call (`StepExec::execute_batch`). 1 (or 0) = solo stepping.
+    /// Under [`BatchPolicy::Adaptive`] this is the *ceiling*; the
+    /// [`BatchGovernor`] picks the per-tick width underneath it.
     pub max_batch: usize,
+    /// How the per-tick width is chosen: `Fixed` always uses `max_batch`
+    /// (the PR-3 behavior); `Adaptive` lets the governor move along the
+    /// executor's `b_ladder` with load.
+    pub batch_policy: BatchPolicy,
+    /// Cross-bucket coalescing ceiling: a candidate whose plan is a
+    /// sub-bucket of the leader's may pad up ("promote") into the leader's
+    /// bucket when the extra padded positions stay within this percentage
+    /// of the leader bucket's total positions. 0 disables promotion
+    /// (exact-bucket coalescing only — the PR-3 behavior).
+    pub coalesce_waste_pct: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -88,6 +126,8 @@ impl Default for SchedulerConfig {
             kv_soft_bytes: 0,
             max_sessions: 64,
             max_batch: 1,
+            batch_policy: BatchPolicy::Fixed,
+            coalesce_waste_pct: 0,
         }
     }
 }
@@ -217,6 +257,10 @@ struct Inner {
     quantum: u64,
     /// Steps-per-second over a trailing window (not a lifetime average).
     rate: RateMeter,
+    /// Engine dispatches over the same window — with `lane_rate`, the
+    /// `batch_occupancy_recent` gauge (lanes per forward, recent only).
+    fwd_rate: RateMeter,
+    lane_rate: RateMeter,
 }
 
 pub struct Scheduler {
@@ -224,6 +268,11 @@ pub struct Scheduler {
     /// Executor batch-lane ladder, snapshotted at construction (waste
     /// accounting for whole-lane padding; never contends with steps).
     b_ladder: Vec<usize>,
+    /// Architecture snapshot (promoted-lane output demotion needs vocab and
+    /// KV dims; never contends with steps).
+    arch: Arch,
+    /// Present under `BatchPolicy::Adaptive`: the per-tick width decision.
+    governor: Option<Mutex<BatchGovernor>>,
     cfg: SchedulerConfig,
     inner: Mutex<Inner>,
     work: Condvar,
@@ -242,9 +291,28 @@ impl Scheduler {
                metrics: Arc<Metrics>) -> Arc<Scheduler> {
         let pool = KvPool::new(cfg.kv_budget_bytes);
         let b_ladder = exec.b_ladder();
+        let arch = exec.arch();
+        let governor = match cfg.batch_policy {
+            BatchPolicy::Fixed => None,
+            BatchPolicy::Adaptive => {
+                let mut gcfg = GovernorConfig::new(b_ladder.clone(), cfg.max_batch.max(1));
+                gcfg.waste_ceiling_pct = cfg.coalesce_waste_pct;
+                Some(Mutex::new(BatchGovernor::new(gcfg)))
+            }
+        };
+        metrics.batch_width.store(
+            match cfg.batch_policy {
+                BatchPolicy::Fixed => cfg.max_batch.max(1) as u64,
+                BatchPolicy::Adaptive => 1,
+            },
+            Ordering::Relaxed,
+        );
+        let t0 = Instant::now();
         Arc::new(Scheduler {
             exec,
             b_ladder,
+            arch,
+            governor,
             cfg,
             inner: Mutex::new(Inner {
                 run: VecDeque::new(),
@@ -253,7 +321,9 @@ impl Scheduler {
                 admitting: 0,
                 pool,
                 quantum: 0,
-                rate: RateMeter::new(STEP_RATE_WINDOW, Instant::now()),
+                rate: RateMeter::new(STEP_RATE_WINDOW, t0),
+                fwd_rate: RateMeter::new(STEP_RATE_WINDOW, t0),
+                lane_rate: RateMeter::new(STEP_RATE_WINDOW, t0),
             }),
             work: Condvar::new(),
             quiesce: Condvar::new(),
@@ -267,6 +337,10 @@ impl Scheduler {
 
     pub fn policy(&self) -> Policy {
         self.cfg.policy
+    }
+
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.cfg.batch_policy
     }
 
     /// Admit a session. Admission checks (saturation, KV budget) run
@@ -407,22 +481,58 @@ impl Scheduler {
         }
     }
 
-    /// Book one per-kind forward into the metrics counters.
-    fn note_forward(&self, kind: ForwardKind, lanes: usize, used: usize, padded: usize) {
+    /// Book one per-kind forward into the metrics counters. `b` is the
+    /// dispatched lane bucket (the `b_ladder` rung the lane count rounded
+    /// up to; 1 for solo) — together with the plan's `(s, c, r)` bucket it
+    /// keys the per-bucket forward counts that `aot.py --prune-buckets`
+    /// consumes.
+    fn note_forward(&self, kind: ForwardKind, lanes: usize, used: usize, padded: usize,
+                    b: usize, bucket: (usize, usize, usize)) {
         let counters = match kind {
             ForwardKind::Full => &self.metrics.fwd_full,
             ForwardKind::Window => &self.metrics.fwd_window,
             ForwardKind::Cached => &self.metrics.fwd_cached,
         };
         counters.note(lanes, used, padded);
+        // per-bucket dispatch counts exist to drive `--prune-buckets`, which
+        // only ever prunes batched (B > 1) combos — solo dispatches skip the
+        // map so the hot solo path stays free of the lock + key allocation
+        if b > 1 {
+            counters.note_bucket(bucket_key(b, bucket));
+        }
     }
 
-    /// Advance one quantum. In solo mode (`max_batch <= 1`, the default)
-    /// this is the classic pick→step→book loop: planning, the forward and
-    /// apply all run with the run-queue lock released, exactly like the
-    /// pre-protocol `Session::step` path. In coalescing mode the quantum
-    /// additionally drains bucket-compatible followers — see
+    /// Cross-bucket admission rule: `candidate` may pad up into `leader`'s
+    /// bucket iff promotion is enabled (`coalesce_waste_pct > 0`), the
+    /// candidate is a strict sub-bucket, and the extra padded positions stay
+    /// within the configured percentage of the leader bucket's total
+    /// positions — so padding can never exceed the (bounded) win of sharing
+    /// one forward.
+    fn promotion_admissible(&self, candidate: &StepPlan, leader: &StepPlan) -> bool {
+        if self.cfg.coalesce_waste_pct == 0 {
+            return false;
+        }
+        match candidate.promote_cost_into(leader) {
+            Some(extra) if extra > 0 => {
+                let total = buckets::bucket_positions(leader.bucket());
+                extra * 100 <= self.cfg.coalesce_waste_pct * total
+            }
+            _ => false,
+        }
+    }
+
+    /// Advance one quantum. In solo mode (width 1) this is the classic
+    /// pick→step→book loop: planning, the forward and apply all run with
+    /// the run-queue lock released, exactly like the pre-protocol
+    /// `Session::step` path. In coalescing mode the quantum additionally
+    /// drains bucket-compatible (or promotable) followers — see
     /// [`Scheduler::tick_coalesced`].
+    ///
+    /// The width is `max_batch` under [`BatchPolicy::Fixed`]; under
+    /// [`BatchPolicy::Adaptive`] the [`BatchGovernor`] picks it per tick
+    /// from queue depth and the trailing occupancy/waste counters — a
+    /// short queue degrades to solo ticks, which keeps planning off the
+    /// run-queue lock exactly when latency matters most.
     ///
     /// Safe to call from several threads at once — picked sessions leave
     /// the run queue for the duration of their step, so concurrent ticks
@@ -430,11 +540,20 @@ impl Scheduler {
     /// session's id, or `None` when nothing is runnable *right now* (other
     /// sessions may still be mid-step on other threads).
     pub fn tick(&self) -> Option<u64> {
-        let max_batch = self.cfg.max_batch.max(1);
-        if max_batch == 1 {
+        let width = match &self.governor {
+            None => self.cfg.max_batch.max(1),
+            Some(g) => {
+                let depth = self.inner.lock().unwrap().run.len();
+                let snap = CounterSnapshot::of(&self.metrics);
+                let w = g.lock().unwrap().decide(Instant::now(), depth, snap);
+                self.metrics.batch_width.store(w as u64, Ordering::Relaxed);
+                w
+            }
+        };
+        if width <= 1 {
             self.tick_solo()
         } else {
-            self.tick_coalesced(max_batch)
+            self.tick_coalesced(width)
         }
     }
 
@@ -465,6 +584,8 @@ impl Scheduler {
                     1,
                     plan.used_positions(),
                     plan.padded_positions(),
+                    1,
+                    plan.bucket(),
                 );
                 let t0 = Instant::now();
                 let res = execute_plan(self.exec.as_ref(), plan);
@@ -484,7 +605,10 @@ impl Scheduler {
         inner.stepping -= 1;
         inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
         if forwarded {
-            inner.rate.note(Instant::now());
+            let now = Instant::now();
+            inner.rate.note(now);
+            inner.fwd_rate.note(now);
+            inner.lane_rate.note(now);
         }
         self.book(&mut inner, active, outcome);
         self.maybe_evict(&mut inner, &[id]);
@@ -498,14 +622,20 @@ impl Scheduler {
 
     /// Coalesced quantum: pick a leader session per policy, plan it, and
     /// drain up to `max_batch - 1` further policy-ordered sessions whose
-    /// plans share the leader's forward bucket. The lanes execute as ONE
-    /// engine call with the run-queue lock released (planning stays under
-    /// the lock — it must inspect and mutate the queue to scan candidates;
-    /// sessions whose plans don't match hand their plan back via
-    /// `cancel_plan` and return to the queue front unstepped). Each lane is
-    /// applied and booked individually, so per-session semantics (tickets,
-    /// KV accounting, eviction, policy state) are identical to solo
-    /// stepping — and so are the outputs, by the protocol's construction.
+    /// plans share the leader's forward bucket — or, with a non-zero
+    /// `coalesce_waste_pct`, whose plans are a *sub-bucket* of it: such a
+    /// candidate pads its plan up to the leader's bucket
+    /// (`StepPlan::promote_into`) and its outputs are sliced back to the
+    /// original shape before `apply` (`Promotion::demote`), so the
+    /// session's strategy state stays byte-identical to solo. The lanes
+    /// execute as ONE engine call with the run-queue lock released
+    /// (planning stays under the lock — it must inspect and mutate the
+    /// queue to scan candidates; sessions whose plans don't match hand
+    /// their plan back via `cancel_plan` and return to the queue front
+    /// unstepped). Each lane is applied and booked individually, so
+    /// per-session semantics (tickets, KV accounting, eviction, policy
+    /// state) are identical to solo stepping — and so are the outputs, by
+    /// the protocol's construction.
     fn tick_coalesced(&self, max_batch: usize) -> Option<u64> {
         let mut inner = self.inner.lock().unwrap();
         let mut leader = self.pick_active(&mut inner)?;
@@ -530,8 +660,8 @@ impl Scheduler {
         };
 
         // -- coalesce compatible followers (policy order preserved) -----------
-        let mut lanes: Vec<(Active, StepPlan, usize)> =
-            vec![(leader, leader_plan, leader_bytes)];
+        let mut lanes: Vec<(Active, StepPlan, usize, Option<Promotion>)> =
+            vec![(leader, leader_plan, leader_bytes, None)];
         if max_batch > 1 {
             let mut skipped: Vec<Active> = Vec::new();
             // bound the scan: a heterogeneous queue must not make one tick
@@ -547,12 +677,50 @@ impl Scheduler {
                     Ok(Planned::Forward(p)) if p.compatible(&lanes[0].1) => {
                         inner.quantum += 1;
                         cand.last_stepped = inner.quantum;
-                        lanes.push((cand, p, cand_bytes));
+                        lanes.push((cand, p, cand_bytes, None));
                     }
                     Ok(Planned::Forward(p)) => {
-                        // bucket mismatch: hand the plan back, unstepped
-                        cand.session.cancel_plan(p);
-                        skipped.push(cand);
+                        // bucket mismatch: a sub-bucket plan may still join
+                        // by padding up to the leader's bucket, if the
+                        // extra padding stays under the waste ceiling;
+                        // otherwise hand the plan back, unstepped
+                        if self.promotion_admissible(&p, &lanes[0].1) {
+                            match p.promote_into(&lanes[0].1, &self.arch) {
+                                Ok((promoted, promo)) => {
+                                    inner.quantum += 1;
+                                    cand.last_stepped = inner.quantum;
+                                    self.metrics
+                                        .promoted_lanes
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    self.metrics.promoted_padded_slots.fetch_add(
+                                        promo.extra_positions as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                    // a promoted cached plan carries its KV
+                                    // re-dimensioned UP to the leader's
+                                    // window for the forward's duration —
+                                    // book the grown size, or maybe_evict's
+                                    // residency undercounts exactly when
+                                    // promotion adds memory pressure
+                                    let lane_bytes = match promo.kind {
+                                        ForwardKind::Cached => {
+                                            cand_bytes
+                                                + (promo.to.1 - promo.from.1)
+                                                    * kv_slot_bytes(&self.arch)
+                                        }
+                                        _ => cand_bytes,
+                                    };
+                                    lanes.push((cand, promoted, lane_bytes, Some(promo)));
+                                }
+                                Err(original) => {
+                                    cand.session.cancel_plan(*original);
+                                    skipped.push(cand);
+                                }
+                            }
+                        } else {
+                            cand.session.cancel_plan(p);
+                            skipped.push(cand);
+                        }
                     }
                     Ok(Planned::Finished) => {
                         self.book(&mut inner, cand, Ok(StepOutcome::Finished));
@@ -580,6 +748,7 @@ impl Scheduler {
 
         // -- one engine call for all lanes, lock released ---------------------
         let kind = lanes[0].1.kind();
+        let bucket = lanes[0].1.bucket();
         let used: usize = lanes.iter().map(|l| l.1.used_positions()).sum();
         let mut padded: usize = lanes.iter().map(|l| l.1.padded_positions()).sum();
         // whole-lane padding: the executor rounds the lane count up to its
@@ -587,16 +756,30 @@ impl Scheduler {
         // (Computed from the same ladder the engine picks from; like
         // `batch_occupancy` it assumes batched dispatch — a solo-loop
         // fallback pads nothing.)
+        let mut b_dispatch = 1;
+        // coalescing-induced padding only (whole-lane + promotion): the
+        // governor's waste ceiling judges THIS, not the plans' own
+        // bucket-mask waste, which narrowing could never remove
+        let mut coalesce_padded: usize =
+            lanes.iter().flat_map(|l| &l.3).map(|p| p.extra_positions).sum();
         if n_lanes > 1 {
-            if let Ok(b) = crate::runtime::buckets::pick(&self.b_ladder, n_lanes) {
-                padded += (b - n_lanes) * lanes[0].1.slots();
+            if let Ok(b) = buckets::pick(&self.b_ladder, n_lanes) {
+                let whole_lane = (b - n_lanes) * lanes[0].1.slots();
+                padded += whole_lane;
+                coalesce_padded += whole_lane;
+                b_dispatch = b;
             }
         }
+        self.metrics
+            .coalesce_padded_slots
+            .fetch_add(coalesce_padded as u64, Ordering::Relaxed);
         let mut actives: Vec<Active> = Vec::with_capacity(n_lanes);
         let mut plans: Vec<StepPlan> = Vec::with_capacity(n_lanes);
-        for (a, p, _) in lanes {
+        let mut promos: Vec<Option<Promotion>> = Vec::with_capacity(n_lanes);
+        for (a, p, _, promo) in lanes {
             actives.push(a);
             plans.push(p);
+            promos.push(promo);
         }
         let t0 = Instant::now();
         let mut outs = if n_lanes == 1 {
@@ -618,15 +801,27 @@ impl Scheduler {
                 )));
             }
         }
-        self.note_forward(kind, n_lanes, used, padded);
+        self.note_forward(kind, n_lanes, used, padded, b_dispatch, bucket);
         self.steps_total.fetch_add(n_lanes as u64, Ordering::Relaxed);
 
-        // apply each lane (commits decodes; booking needs the lock again)
+        // apply each lane (commits decodes; booking needs the lock again);
+        // promoted lanes slice their outputs back to the planned shape
+        // first, so `apply` observes exactly what solo execution would have
+        // returned
         let mut landed: Vec<(Active, Result<StepOutcome>)> = Vec::with_capacity(n_lanes);
-        for (mut active, out) in actives.into_iter().zip(outs) {
+        for ((mut active, out), promo) in actives.into_iter().zip(outs).zip(promos) {
             active.session.add_busy(fwd_wall);
             let outcome = match out {
-                Ok(o) => active.session.apply(o),
+                Ok(o) => {
+                    let demoted = match &promo {
+                        Some(p) => p.demote(o, self.arch.vocab, &self.arch),
+                        None => Ok(o),
+                    };
+                    match demoted {
+                        Ok(o) => active.session.apply(o),
+                        Err(e) => Err(e),
+                    }
+                }
                 Err(e) => Err(e),
             };
             landed.push((active, outcome));
@@ -636,6 +831,8 @@ impl Scheduler {
         inner.stepping -= n_lanes;
         inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
         let now = Instant::now();
+        inner.fwd_rate.note(now);
+        inner.lane_rate.note_n(now, n_lanes as u64);
         let mut stepped_ids = Vec::with_capacity(n_lanes);
         for (active, outcome) in landed {
             inner.rate.note(now);
@@ -704,16 +901,35 @@ impl Scheduler {
         m.kv_pool_rejections.store(inner.pool.rejections(), Ordering::Relaxed);
         m.sched_steps_total
             .store(self.steps_total.load(Ordering::Relaxed), Ordering::Relaxed);
-        m.set_steps_per_second(inner.rate.rate(Instant::now()));
+        let now = Instant::now();
+        m.set_steps_per_second(inner.rate.rate(now));
+        m.set_batch_occupancy_recent(Self::recent_occupancy(inner, now));
     }
 
-    /// Recompute the `steps_per_second` gauge at read time. The booking path
-    /// only refreshes gauges on activity, so without this an idle scheduler
-    /// would report its last busy-window rate forever; the `/metrics`
+    /// Lanes per forward over the trailing rate window: both meters share
+    /// the window, so the divisors cancel and the ratio is exactly
+    /// `lanes / forwards` among recent dispatches (0 when idle — unlike
+    /// the lifetime-mean `batch_occupancy`, this recovers after a burst).
+    fn recent_occupancy(inner: &Inner, now: Instant) -> f64 {
+        let fwd = inner.fwd_rate.rate(now);
+        if fwd > 0.0 {
+            inner.lane_rate.rate(now) / fwd
+        } else {
+            0.0
+        }
+    }
+
+    /// Recompute the windowed gauges (`steps_per_second`,
+    /// `batch_occupancy_recent`) at read time. The booking path only
+    /// refreshes gauges on activity, so without this an idle scheduler
+    /// would report its last busy-window values forever; the `/metrics`
     /// handler calls this before serializing.
     pub fn refresh_rate_gauge(&self) {
         let inner = self.inner.lock().unwrap();
-        self.metrics.set_steps_per_second(inner.rate.rate(Instant::now()));
+        let now = Instant::now();
+        self.metrics.set_steps_per_second(inner.rate.rate(now));
+        self.metrics
+            .set_batch_occupancy_recent(Self::recent_occupancy(&inner, now));
     }
 
     /// Snapshot of in-flight sessions (`GET /sessions`). A session that is
@@ -994,6 +1210,180 @@ mod tests {
         while s.tick().is_some() {}
         assert_eq!(t_full.wait().unwrap().tokens_generated(), 8);
         assert_eq!(t_win.wait().unwrap().tokens_generated(), 8);
+    }
+
+    #[test]
+    fn bucket_key_matches_executable_suffixes() {
+        assert_eq!(bucket_key(1, (256, 0, 0)), "b1_s256");
+        assert_eq!(bucket_key(4, (256, 128, 0)), "b4_s256_c128");
+        assert_eq!(bucket_key(8, (512, 256, 48)), "b8_s512_c256_r48");
+    }
+
+    /// Regression (ISSUE 4): `tick_coalesced`'s bounded scan hands skipped
+    /// sessions back to the queue *front* in pick order. Under the deadline
+    /// policy the next tick's leader must still be the earliest-deadline
+    /// session — skipped sessions are neither stepped, lost, nor demoted
+    /// behind later-deadline work.
+    #[test]
+    fn mismatch_requeue_preserves_deadline_order() {
+        let s = mock_sched(SchedulerConfig {
+            policy: Policy::Deadline,
+            max_batch: 4,
+            ..Default::default()
+        });
+        // alternating kinds so every coalescing scan skips someone; deadlines
+        // are strictly increasing in submission order; the leader's request
+        // is sized to finish in one tick so the earliest-deadline *skipped*
+        // session must lead tick 2
+        let mut tickets = Vec::new();
+        let mut ids = Vec::new();
+        let specs = ["full", "window", "full", "window", "full"];
+        let gens = [2usize, 32, 32, 32, 32];
+        for (i, strat) in specs.iter().enumerate() {
+            let t = s
+                .submit(SubmitSpec {
+                    strategy: (*strat).into(),
+                    req: GenRequest::new(vec![10, 11, 12, 13], gens[i], 256),
+                    deadline: Some(Duration::from_secs(10 + i as u64)),
+                })
+                .unwrap();
+            ids.push(t.id);
+            tickets.push(t);
+        }
+        // tick 1: leader is the earliest deadline (full, finishes); the
+        // window sessions mismatch and are skipped back to the front
+        assert_eq!(s.tick(), Some(ids[0]));
+        let steps: std::collections::HashMap<u64, usize> =
+            s.sessions().into_iter().map(|r| (r.id, r.steps)).collect();
+        assert!(!steps.contains_key(&ids[0]), "leader finished and left the queue");
+        assert_eq!(steps[&ids[1]], 0, "skipped session was stepped");
+        assert_eq!(steps[&ids[3]], 0, "skipped session was stepped");
+        assert_eq!(steps[&ids[2]], 1, "compatible follower did not coalesce");
+        assert_eq!(steps[&ids[4]], 1, "compatible follower did not coalesce");
+        // tick 2: EDF order is intact — the earliest-deadline skipped
+        // session leads, not whoever happens to sit at the queue front
+        assert_eq!(s.tick(), Some(ids[1]));
+        while s.tick().is_some() {}
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn cross_bucket_promotion_fills_lanes_and_completes() {
+        let m = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+            SchedulerConfig {
+                max_batch: 2,
+                coalesce_waste_pct: 60,
+                ..Default::default()
+            },
+            Arc::clone(&m),
+        );
+        // different window configs bucket onto different c ladders: at
+        // gen 96 the w64 layout holds 4 + 64 slots (c=128) while the w16
+        // layout holds 4 + 16 (c=64) — exact-bucket coalescing can never
+        // pair them, promotion pads the small plan up into the leader's
+        let t_big = s.submit(spec("window:w_ex=64,a=16", 96)).unwrap();
+        let t_small = s.submit(spec("window:w_ex=16,a=4", 96)).unwrap();
+        while s.tick().is_some() {}
+        assert_eq!(t_big.wait().unwrap().tokens_generated(), 96);
+        assert_eq!(t_small.wait().unwrap().tokens_generated(), 96);
+        use std::sync::atomic::Ordering;
+        assert!(
+            m.promoted_lanes.load(Ordering::Relaxed) > 0,
+            "no lane was promoted across buckets"
+        );
+        assert!(
+            m.promoted_padded_slots.load(Ordering::Relaxed) > 0,
+            "promotions must book their padding cost"
+        );
+        assert!(
+            m.batch_occupancy() > 1.0,
+            "promotion should lift occupancy above solo: {}",
+            m.batch_occupancy()
+        );
+    }
+
+    #[test]
+    fn promotion_disabled_by_default_keeps_exact_bucket_coalescing() {
+        let m = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+            SchedulerConfig { max_batch: 2, ..Default::default() },
+            Arc::clone(&m),
+        );
+        // same mismatched-bucket workload as the promotion test (gen 96:
+        // w64 -> c=128, w16 -> c=64), but with the default waste_pct=0
+        let t1 = s.submit(spec("window:w_ex=64,a=16", 96)).unwrap();
+        let t2 = s.submit(spec("window:w_ex=16,a=4", 96)).unwrap();
+        while s.tick().is_some() {}
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+        use std::sync::atomic::Ordering;
+        assert_eq!(
+            m.promoted_lanes.load(Ordering::Relaxed),
+            0,
+            "waste_pct=0 must never promote"
+        );
+    }
+
+    /// ISSUE 4 satellite: the windowed gauges must *recover* after a burst
+    /// drains — `batch_width` narrows back to solo and
+    /// `batch_occupancy_recent` decays to zero (then reads ~1 under solo
+    /// traffic), while the lifetime `batch_occupancy` stays wedged at the
+    /// burst's mean. Uses real time: the governor dwell (200ms) and the
+    /// 2s rate window are what's under test.
+    #[test]
+    fn adaptive_gauges_recover_after_burst_drains() {
+        let m = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+            SchedulerConfig {
+                max_batch: 8,
+                batch_policy: BatchPolicy::Adaptive,
+                ..Default::default()
+            },
+            Arc::clone(&m),
+        );
+        use std::sync::atomic::Ordering;
+        // burst: 8 identical sessions coalesce wide
+        let tickets: Vec<_> = (0..8).map(|_| s.submit(spec("full", 16)).unwrap()).collect();
+        while s.tick().is_some() {}
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // occupancy > 1 is only possible if the governor widened past solo
+        // (more robust than asserting on the width gauge itself, which may
+        // already have narrowed by the time the drain loop exits)
+        assert!(
+            m.batch_occupancy_recent() > 1.5,
+            "burst occupancy not visible in the windowed gauge: {}",
+            m.batch_occupancy_recent()
+        );
+        // idle past the rate window (2s): the windowed gauge must decay to
+        // zero at read time while the lifetime mean stays at the burst's
+        std::thread::sleep(Duration::from_millis(2200));
+        s.refresh_rate_gauge();
+        assert_eq!(m.batch_occupancy_recent(), 0.0, "windowed gauge wedged wide");
+        assert!(m.batch_occupancy() > 1.5, "lifetime mean should retain the burst");
+        // trickle traffic: one session at a time — the governor (dwell long
+        // since elapsed) must narrow back to solo width and the windowed
+        // occupancy must read ~1, not the burst's mean
+        let t = s.submit(spec("full", 8)).unwrap();
+        while s.tick().is_some() {}
+        t.wait().unwrap();
+        assert_eq!(
+            m.batch_width.load(Ordering::Relaxed),
+            1,
+            "governor stayed wedged wide after the burst drained"
+        );
+        let recent = m.batch_occupancy_recent();
+        assert!(
+            recent > 0.0 && recent < 1.5,
+            "windowed occupancy should read ~solo, got {recent}"
+        );
     }
 
     #[test]

@@ -8,9 +8,13 @@
 //! * `GET /sessions`  — in-flight scheduler sessions (id, strategy, steps,
 //!   remaining, kv_bytes, age_secs, busy_ms — age minus busy is queue time)
 //! * `GET /metrics`   — serving counters + scheduler gauges + latency
-//!   histogram + batched-forward accounting (`batch_occupancy`, per-kind
-//!   `forwards` with padding-waste counters); with an engine-replica pool,
-//!   per-replica step/execution gauges under `"replicas"`
+//!   histogram + batched-forward accounting (`batch_occupancy` and the
+//!   windowed `batch_occupancy_recent`, per-kind `forwards` with
+//!   padding-waste and per-bucket dispatch counters — the
+//!   `aot.py --prune-buckets` input) + adaptive-coalescing gauges
+//!   (`batch_policy`, `batch_width`, `promoted_lanes`,
+//!   `promoted_padded_slots`); with an engine-replica pool, per-replica
+//!   step/execution gauges under `"replicas"`
 //! * `GET /healthz`   — liveness
 //! * `GET /info`      — model / config / scheduling info
 
@@ -205,10 +209,19 @@ fn replicas_json(pool: &EnginePool) -> Json {
 }
 
 fn metrics_json(st: &AppState) -> Json {
-    // the booking path only updates the rate gauge on activity; recompute at
-    // read time so an idle server reports a decayed (eventually zero) rate
+    // the booking path only updates the rate gauges on activity; recompute
+    // at read time so an idle server reports decayed (eventually zero)
+    // step-rate and recent-occupancy values
     st.scheduler.refresh_rate_gauge();
     let mut j = st.metrics.to_json();
+    if let Json::Obj(fields) = &mut j {
+        // which width policy produced the occupancy numbers above — the
+        // label that makes fixed-vs-adaptive A/B dumps self-describing
+        fields.insert(
+            "batch_policy".into(),
+            Json::str(st.scheduler.batch_policy().name()),
+        );
+    }
     if let (Some(pool), Json::Obj(fields)) = (&st.pool, &mut j) {
         fields.insert("replica_count".into(), Json::num(pool.replicas() as f64));
         fields.insert("replicas".into(), replicas_json(pool));
@@ -244,6 +257,7 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("s", Json::num(st.s as f64)),
                 ("vocab", Json::num(st.tokenizer.len() as f64)),
                 ("policy", Json::str(st.scheduler.policy().name())),
+                ("batch_policy", Json::str(st.scheduler.batch_policy().name())),
                 ("replicas", Json::num(
                     st.pool.as_ref().map_or(1, |p| p.replicas()) as f64,
                 )),
@@ -366,6 +380,21 @@ mod tests {
         let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("policy").as_str(), Some("round-robin"));
         assert!(j.get("sessions").as_arr().is_some());
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn metrics_and_info_expose_batch_policy() {
+        let st = mock_state(false);
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(mj.get("batch_policy").as_str(), Some("fixed"));
+        assert_eq!(mj.get("batch_width").as_i64(), Some(1));
+        assert_eq!(mj.get("promoted_lanes").as_i64(), Some(0));
+        assert!(mj.get("batch_occupancy_recent").as_f64().is_some());
+        let i = get(&st, "/info");
+        let ij = parse(std::str::from_utf8(&i.body).unwrap()).unwrap();
+        assert_eq!(ij.get("batch_policy").as_str(), Some("fixed"));
         st.scheduler.shutdown();
     }
 

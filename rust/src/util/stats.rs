@@ -141,10 +141,19 @@ impl RateMeter {
 
     /// Book one event at time `now`.
     pub fn note(&mut self, now: Instant) {
+        self.note_n(now, 1);
+    }
+
+    /// Book `n` events at time `now` (e.g. one batched forward carrying
+    /// `n` lanes) — one bucket update instead of `n`.
+    pub fn note_n(&mut self, now: Instant, n: u64) {
+        if n == 0 {
+            return;
+        }
         let idx = self.granule_of(now);
         match self.buckets.back_mut() {
-            Some((i, n)) if *i == idx => *n += 1,
-            _ => self.buckets.push_back((idx, 1)),
+            Some((i, cnt)) if *i == idx => *cnt += n,
+            _ => self.buckets.push_back((idx, n)),
         }
         let cutoff = self.cutoff(idx);
         while matches!(self.buckets.front(), Some((i, _)) if *i < cutoff) {
@@ -324,6 +333,23 @@ mod tests {
         assert!(r > 50.0, "rate did not recover after idle: {r}");
         let lifetime = 400.0 / 600.2;
         assert!(r > 10.0 * lifetime, "windowed rate should dwarf lifetime avg");
+    }
+
+    #[test]
+    fn rate_meter_note_n_equals_n_notes() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut a = RateMeter::new(Duration::from_secs(2), t0);
+        let mut b = RateMeter::new(Duration::from_secs(2), t0);
+        for i in 0..10 {
+            a.note_n(at(i * 20), 4);
+            for _ in 0..4 {
+                b.note(at(i * 20));
+            }
+        }
+        assert_eq!(a.rate(at(250)), b.rate(at(250)));
+        a.note_n(at(300), 0); // zero events: a no-op, not an empty bucket
+        assert_eq!(a.rate(at(350)), b.rate(at(350)));
     }
 
     #[test]

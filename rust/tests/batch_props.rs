@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
 use window_diffusion::metrics::Metrics;
 use window_diffusion::runtime::KvCache;
-use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::scheduler::{BatchPolicy, Scheduler, SchedulerConfig, SubmitSpec};
 use window_diffusion::strategies;
 use window_diffusion::util::prop;
 use window_diffusion::util::rng::Rng;
@@ -140,6 +140,108 @@ fn prop_mixed_strategy_batched_parity() {
     });
 }
 
+/// ISSUE 4: the parity pillars again, but with cross-bucket promotion
+/// enabled (`coalesce_waste_pct`) so sub-bucket plans pad up into the
+/// leader's bucket mid-batch. Every strategy family, four different random
+/// sessions at once: outputs, step counts and cost accounting must still be
+/// byte-identical to solo — the demote slice has to hand `apply` exactly
+/// what a solo forward would have.
+#[test]
+fn prop_promoted_batched_parity_per_strategy() {
+    prop::check_seeded(
+        "promoted-parity",
+        0x9407,
+        6,
+        |rng| (0..4).map(|_| random_req(rng)).collect::<Vec<_>>(),
+        |reqs| {
+            for spec in SPECS {
+                let sched = Scheduler::new(
+                    Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+                    SchedulerConfig {
+                        max_batch: 4,
+                        coalesce_waste_pct: 80,
+                        ..Default::default()
+                    },
+                    Arc::new(Metrics::default()),
+                );
+                let tickets: Vec<_> = reqs
+                    .iter()
+                    .map(|r| sched.submit(submit(spec, r)).expect("admit"))
+                    .collect();
+                while sched.tick().is_some() {}
+                for (req, ticket) in reqs.iter().zip(tickets) {
+                    let solo = strategies::from_name(spec)
+                        .unwrap()
+                        .generate(&MockExec::new(256), req)
+                        .map_err(|e| format!("{spec} solo: {e}"))?;
+                    let batched =
+                        ticket.wait().map_err(|e| format!("{spec} promoted: {e}"))?;
+                    if batched.generated() != solo.generated() {
+                        return Err(format!("{spec}: promoted run diverged from solo"));
+                    }
+                    if batched.steps != solo.steps {
+                        return Err(format!(
+                            "{spec}: promoted steps {} != solo {}",
+                            batched.steps, solo.steps
+                        ));
+                    }
+                    if batched.counts != solo.counts {
+                        return Err(format!(
+                            "{spec}: promoted counts {:?} != solo {:?}",
+                            batched.counts, solo.counts
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deterministic promoted-lane parity: geometries chosen so buckets MUST
+/// differ (w64 at gen 96 plans c=128 refreshes, w16 plans c=64) — the
+/// batch provably contains promoted lanes (counter-checked), and every
+/// session still matches its solo run byte for byte.
+#[test]
+fn promoted_lanes_in_the_mix_preserve_solo_outputs() {
+    let specs = [
+        "window:w_ex=64,a=16",
+        "window:w_ex=16,a=4",
+        "window-nocache:w_ex=16,a=4",
+        "full",
+    ];
+    let mut req = GenRequest::new(vec![10, 11, 12, 13], 96, 256);
+    req.tokens_per_step = 1;
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(
+        Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+        SchedulerConfig { max_batch: 4, coalesce_waste_pct: 60, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let tickets: Vec<_> = specs
+        .iter()
+        .map(|spec| sched.submit(submit(spec, &req)).expect("admit"))
+        .collect();
+    while sched.tick().is_some() {}
+    for (spec, ticket) in specs.iter().zip(tickets) {
+        let solo = strategies::from_name(spec)
+            .unwrap()
+            .generate(&MockExec::new(256), &req)
+            .unwrap();
+        let batched = ticket.wait().unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(
+            batched.generated(),
+            solo.generated(),
+            "{spec}: promoted-batch run diverged from solo"
+        );
+        assert_eq!(batched.steps, solo.steps, "{spec}: step count diverged");
+    }
+    assert!(
+        metrics.promoted_lanes.load(Ordering::Relaxed) > 0,
+        "bucket-mismatched geometries must exercise promotion"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // 2. coalescing fills lanes + waste accounting
 // ---------------------------------------------------------------------------
@@ -238,6 +340,73 @@ fn batched_throughput_at_least_solo() {
     assert!(
         batched >= 1.5 * solo,
         "batched {batched:.1} steps/s < 1.5x solo {solo:.1} steps/s"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 4 acceptance: adaptive + cross-bucket on heterogeneous load
+// ---------------------------------------------------------------------------
+
+/// Run a deliberately heterogeneous mixed-strategy workload (two window
+/// geometries on different `c` buckets + full-strategy sessions, all
+/// compute-bound at 2 ms per forward) under one scheduler config; return
+/// (steps/sec, lifetime batch_occupancy, promoted_lanes).
+fn hetero_run(cfg: SchedulerConfig) -> (f64, f64, u64) {
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> =
+        Arc::new(MockExec::new(256).with_step_delay(Duration::from_millis(2)));
+    let sched = Scheduler::new(exec, cfg, Arc::clone(&metrics));
+    let specs = ["window:w_ex=64,a=16", "window:w_ex=16,a=4", "full"];
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..12)
+        .map(|i| {
+            let spec = specs[i % specs.len()];
+            let gen = if spec == "full" { 24 } else { 96 };
+            let mut req = GenRequest::new(vec![10, 11, 12, 13], gen, 256);
+            req.tokens_per_step = 1;
+            sched
+                .submit(SubmitSpec { strategy: spec.into(), req, deadline: None })
+                .expect("admit")
+        })
+        .collect();
+    while sched.tick().is_some() {}
+    for t in tickets {
+        t.wait().expect("hetero workload completes");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (
+        metrics.sched_steps_total.load(Ordering::Relaxed) as f64 / wall.max(1e-9),
+        metrics.batch_occupancy(),
+        metrics.promoted_lanes.load(Ordering::Relaxed),
+    )
+}
+
+/// ISSUE 4 acceptance: on the heterogeneous mixed-strategy mock workload,
+/// adaptive + cross-bucket coalescing sustains ≥ 1.5x the steps/sec of
+/// fixed `--max-batch 1` AND strictly higher occupancy than fixed
+/// `--max-batch 8` (exact-bucket coalescing only) on the same trace — the
+/// two regressions a static width cannot win at once.
+#[test]
+fn adaptive_cross_bucket_beats_fixed_on_heterogeneous_load() {
+    let (solo_sps, _, _) = hetero_run(SchedulerConfig { max_batch: 1, ..Default::default() });
+    let (_, fixed8_occ, fixed8_promoted) =
+        hetero_run(SchedulerConfig { max_batch: 8, ..Default::default() });
+    let (adaptive_sps, adaptive_occ, adaptive_promoted) = hetero_run(SchedulerConfig {
+        max_batch: 8,
+        batch_policy: BatchPolicy::Adaptive,
+        coalesce_waste_pct: 60,
+        ..Default::default()
+    });
+    assert_eq!(fixed8_promoted, 0, "fixed config must stay exact-bucket");
+    assert!(adaptive_promoted > 0, "heterogeneous buckets must trigger promotion");
+    assert!(
+        adaptive_sps >= 1.5 * solo_sps,
+        "adaptive {adaptive_sps:.1} steps/s < 1.5x solo {solo_sps:.1} steps/s"
+    );
+    assert!(
+        adaptive_occ > fixed8_occ,
+        "adaptive occupancy {adaptive_occ:.2} not above exact-bucket fixed-8 \
+         {fixed8_occ:.2}"
     );
 }
 
