@@ -336,6 +336,17 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(4)
         .clamp(1, hw.max(1));
+    // mock pools share ONE in-memory weight bank across replicas, exactly
+    // like `EnginePool::load`'s default shared mode over real artifacts —
+    // the bank gauges below report host residency either way
+    let mock_bank = Arc::new(window_diffusion::runtime::WeightBank::from_host_params(
+        "mock",
+        vec![window_diffusion::runtime::HostParam {
+            name: "embed".into(),
+            shape: vec![64, 16],
+            data: vec![0.01; 1024],
+        }],
+    ));
     let make_pool = |k: usize| -> anyhow::Result<Arc<EnginePool>> {
         match &manifest {
             Some(m) => EnginePool::load(m, "dream-sim-instruct", k),
@@ -343,7 +354,9 @@ fn main() -> anyhow::Result<()> {
                 (0..k)
                     .map(|_| {
                         Arc::new(
-                            MockExec::new(256).with_step_delay(Duration::from_millis(1)),
+                            MockExec::new(256)
+                                .with_step_delay(Duration::from_millis(1))
+                                .with_weight_bank(Arc::clone(&mock_bank)),
                         ) as Arc<dyn StepExec + Send + Sync>
                     })
                     .collect(),
@@ -359,6 +372,13 @@ fn main() -> anyhow::Result<()> {
         let mut pool_phases = Vec::new();
         for k in [1usize, n_replicas] {
             let pool = make_pool(k)?;
+            println!(
+                "pool[{k} replicas]: weight bank {} — {} host bytes total, \
+                 {} per replica upload",
+                pool.bank_mode(),
+                pool.weight_bytes_host(),
+                pool.weight_bytes_per_replica(),
+            );
             let exec_k: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
             let st = build_state(
                 exec_k,

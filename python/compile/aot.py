@@ -356,7 +356,47 @@ def build_executables(name: str, arch: Arch, params: dict, seqs: list[int],
 # weights + goldens
 # ---------------------------------------------------------------------------
 
-def write_weights(params: dict, path: str) -> list[dict]:
+def validate_offset_table(index: list[dict], total_bytes: int) -> None:
+    """Enforce the manifest offset-table grammar (ISSUE 5).
+
+    The rust ``WeightBank`` memory-maps ``weights_<model>.bin`` and slices
+    parameters straight out of the mapping using this table, so the grammar
+    is a wire contract (mirrored by ``runtime/weights.rs::
+    validate_offset_table``; pinned by ``tests/test_offset_table.py``):
+
+    * ``offset`` is a **byte** offset into the flat little-endian f32
+      stream, 4-byte aligned;
+    * ``size`` is the element count and equals ``prod(shape)`` (scalars: 1);
+    * entries appear in file order and tile the file **contiguously** —
+      first at 0, no gaps, no overlap, ending at ``total_bytes``.
+    """
+    off = 0
+    for e in index:
+        elems = 1
+        for d in e["shape"]:
+            elems *= d
+        if max(elems, 1) != e["size"]:
+            raise ValueError(f"param {e['name']}: shape {e['shape']} has "
+                             f"{elems} elems but size={e['size']}")
+        if e["offset"] % 4:
+            raise ValueError(f"param {e['name']}: byte offset {e['offset']} "
+                             f"not 4-aligned")
+        if e["offset"] != off:
+            raise ValueError(f"param {e['name']}: offset {e['offset']} leaves "
+                             f"a gap or overlap (expected {off})")
+        off += e["size"] * 4
+    if off != total_bytes:
+        raise ValueError(f"offset table tiles {off} bytes, bank has "
+                         f"{total_bytes}")
+
+
+def write_weights(params: dict, path: str) -> tuple[list[dict], int]:
+    """Write the flat f32 bank and return ``(offset table, total bytes)``.
+
+    The table's byte offsets are what lets the rust side mmap the bank and
+    slice parameters with no re-parse; see :func:`validate_offset_table`
+    for the grammar it guarantees.
+    """
     names, flat = flatten_params(params)
     index, off = [], 0
     with open(path, "wb") as f:
@@ -366,7 +406,8 @@ def write_weights(params: dict, path: str) -> list[dict]:
             index.append({"name": n, "shape": list(a.shape), "offset": off,
                           "size": int(a.size)})
             off += a.size * 4
-    return index
+    validate_offset_table(index, off)
+    return index, off
 
 
 def write_golden(tok: Tokenizer, zoo: dict, trained: dict, out_dir: str) -> None:
@@ -478,7 +519,7 @@ def main() -> None:
             np.savez(npz, **{k: np.asarray(v) for k, v in params.items()})
         assert set(params) == set(param_shapes(arch)), "weight/arch mismatch"
         trained[name] = params
-        windex = write_weights(params, wpath)
+        windex, wbytes = write_weights(params, wpath)
         execs, pruned = build_executables(name, arch, params, info["seqs"], out_dir,
                                           args.attn, b_ladder=batch_ladder,
                                           hit_buckets=hit_buckets)
@@ -495,6 +536,9 @@ def main() -> None:
             # these buckets with its solo fallback instead of erroring
             "pruned": pruned,
             "weights_file": os.path.basename(wpath),
+            # total bank length: lets the rust WeightBank cross-check its
+            # mmap against the manifest without summing the offset table
+            "weight_bytes": wbytes,
             "weights": windex,
             "weight_order": sorted(params),
             "executables": execs,

@@ -1,0 +1,107 @@
+"""Manifest offset-table grammar: `write_weights`' index is the table the
+rust ``WeightBank`` uses to slice parameters straight out of a memory-mapped
+``weights_<model>.bin`` with no re-parse.
+
+These tests pin the grammar against the rust parser
+(``runtime/weights.rs::validate_offset_table``): byte offsets, 4-byte
+alignment, contiguous ascending tiling, ``size == prod(shape)``, and
+``weight_order`` (sorted names) being a permutation of the table's names.
+Drift on either side is a load-time error there and a red test here.
+"""
+
+import numpy as np
+import pytest
+
+from compile.aot import validate_offset_table, write_weights
+
+
+def _params():
+    return {
+        "b_second": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "a_first": np.linspace(-1.0, 1.0, 5).astype(np.float32),
+        "c_scalar": np.array(2.5, dtype=np.float32),
+    }
+
+
+def test_write_weights_emits_contiguous_byte_offsets(tmp_path):
+    path = str(tmp_path / "w.bin")
+    index, total = write_weights(_params(), path)
+    # file order is flatten_params order == sorted names
+    assert [e["name"] for e in index] == ["a_first", "b_second", "c_scalar"]
+    assert index[0]["offset"] == 0
+    # offsets are BYTES: each entry starts where the previous ended
+    assert index[1]["offset"] == index[0]["size"] * 4
+    assert index[2]["offset"] == index[1]["offset"] + index[1]["size"] * 4
+    assert total == sum(e["size"] for e in index) * 4
+    # and the file is exactly the table's span
+    assert (tmp_path / "w.bin").stat().st_size == total
+    # scalars record size 1 (shape [])
+    assert index[2]["shape"] == []
+    assert index[2]["size"] == 1
+
+
+def test_index_slices_the_bank_without_reparse(tmp_path):
+    # the mmap contract: reading [offset, offset + size*4) out of the raw
+    # file and casting to little-endian f32 reproduces each array exactly
+    params = _params()
+    path = str(tmp_path / "w.bin")
+    index, _ = write_weights(params, path)
+    blob = (tmp_path / "w.bin").read_bytes()
+    for e in index:
+        lo = e["offset"]
+        hi = lo + e["size"] * 4
+        got = np.frombuffer(blob[lo:hi], dtype="<f4").reshape(e["shape"])
+        np.testing.assert_array_equal(
+            got, np.asarray(params[e["name"]], np.float32)
+        )
+
+
+def test_weight_order_is_a_permutation_of_the_table(tmp_path):
+    # the manifest's weight_order (sorted names) must resolve 1:1 into the
+    # table — the rust loader rejects anything else
+    params = _params()
+    index, _ = write_weights(params, str(tmp_path / "w.bin"))
+    assert sorted(e["name"] for e in index) == sorted(params)
+
+
+def test_validate_rejects_gap():
+    index = [
+        {"name": "a", "shape": [2], "offset": 0, "size": 2},
+        {"name": "b", "shape": [2], "offset": 16, "size": 2},  # gap: expected 8
+    ]
+    with pytest.raises(ValueError, match="gap or overlap"):
+        validate_offset_table(index, 24)
+
+
+def test_validate_rejects_overlap():
+    index = [
+        {"name": "a", "shape": [4], "offset": 0, "size": 4},
+        {"name": "b", "shape": [4], "offset": 8, "size": 4},  # overlaps a
+    ]
+    with pytest.raises(ValueError, match="gap or overlap"):
+        validate_offset_table(index, 24)
+
+
+def test_validate_rejects_misalignment():
+    index = [{"name": "a", "shape": [4], "offset": 2, "size": 4}]
+    with pytest.raises(ValueError, match="not 4-aligned"):
+        validate_offset_table(index, 18)
+
+
+def test_validate_rejects_shape_size_mismatch():
+    index = [{"name": "a", "shape": [2, 3], "offset": 0, "size": 4}]
+    with pytest.raises(ValueError, match="elems but size"):
+        validate_offset_table(index, 16)
+
+
+def test_validate_rejects_total_mismatch():
+    index = [{"name": "a", "shape": [4], "offset": 0, "size": 4}]
+    with pytest.raises(ValueError, match="tiles 16 bytes"):
+        validate_offset_table(index, 20)
+
+
+def test_validate_accepts_the_emitted_grammar(tmp_path):
+    index, total = write_weights(_params(), str(tmp_path / "w.bin"))
+    # write_weights already validates; re-validating the emitted table is
+    # the round-trip the rust loader performs at every engine boot
+    validate_offset_table(index, total)

@@ -1,0 +1,184 @@
+//! Perf/memory trajectory for the replica pool under the shared weight
+//! bank (ISSUE 5): steps/sec and host-weight residency at 1 vs N replicas,
+//! shared vs copy banks, on the compute-bound mock (per-forward sleep).
+//! No artifacts needed, so CI runs it end to end; it emits `BENCH_5.json`
+//! at the repo root — extending the `BENCH_*.json` series started by
+//! `sched_coalescing` (BENCH_4) instead of re-deriving baselines.
+//!
+//! The claim under measurement: with the bank shared, scaling replicas
+//! multiplies throughput (one driver per replica) while host weight bytes
+//! stay FLAT; `copy` mode buys the same steps/sec for N× the memory.
+//!
+//! ```bash
+//! cargo bench --bench pool_scaling
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{EnginePool, HostParam, WeightBank};
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::util::json::Json;
+
+const STEP_DELAY: Duration = Duration::from_millis(2);
+
+/// A bank big enough that the flat-vs-linear story shows up in MBs-ish
+/// numbers while staying trivial to build (16k f32 = 64 KiB).
+fn mock_bank() -> Arc<WeightBank> {
+    let data: Vec<f32> = (0..16_384).map(|i| ((i % 401) as f32) * 1e-4).collect();
+    Arc::new(WeightBank::from_host_params(
+        "mock",
+        vec![HostParam { name: "embed".into(), shape: vec![128, 128], data }],
+    ))
+}
+
+fn build_pool(replicas: usize, shared: bool) -> Arc<EnginePool> {
+    let bank = mock_bank();
+    let mocks = (0..replicas)
+        .map(|_| {
+            let b = if shared { Arc::clone(&bank) } else { mock_bank() };
+            Arc::new(MockExec::new(256).with_step_delay(STEP_DELAY).with_weight_bank(b))
+                as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(mocks).unwrap()
+}
+
+struct RunResult {
+    label: String,
+    replicas: usize,
+    bank_mode: String,
+    steps_per_sec: f64,
+    weight_bytes_host: usize,
+    weight_bytes_per_replica: usize,
+    wall_secs: f64,
+}
+
+fn run_config(label: &str, replicas: usize, shared: bool, n_sessions: usize) -> RunResult {
+    let pool = build_pool(replicas, shared);
+    let bank_mode = pool.bank_mode().to_string();
+    let weight_bytes_host = pool.weight_bytes_host();
+    let weight_bytes_per_replica = pool.weight_bytes_per_replica();
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> = pool;
+    let sched = Scheduler::new(exec, SchedulerConfig::default(), Arc::clone(&metrics));
+    // one driver worker per replica — the serve-layer wiring
+    sched.spawn_workers(replicas);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n_sessions)
+        .map(|i| {
+            let gen = if i % 2 == 0 { 24 } else { 48 };
+            let spec = if i % 4 == 3 { "window" } else { "full" };
+            let mut req = GenRequest::new(vec![10, 11, 12, 13], gen, 256);
+            req.adaptive = false;
+            sched
+                .submit(SubmitSpec { strategy: spec.into(), req, deadline: None })
+                .expect("admit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("bench workload completes");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    RunResult {
+        label: label.to_string(),
+        replicas,
+        bank_mode,
+        steps_per_sec: metrics.sched_steps_total.load(Ordering::Relaxed) as f64
+            / wall.max(1e-9),
+        weight_bytes_host,
+        weight_bytes_per_replica,
+        wall_secs: wall,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n_replicas: usize = std::env::var("WD_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .clamp(1, hw.max(1))
+        .max(2);
+    let n_sessions = bench_support::bench_n(16);
+
+    println!(
+        "pool_scaling: {n_sessions} sessions, {STEP_DELAY:?}/forward, \
+         1 vs {n_replicas} replicas, shared vs copy bank"
+    );
+    bench_support::hr(78);
+    let configs = [
+        ("1-shared".to_string(), 1usize, true),
+        (format!("{n_replicas}-shared"), n_replicas, true),
+        (format!("{n_replicas}-copy"), n_replicas, false),
+    ];
+    let mut results = Vec::new();
+    for (label, replicas, shared) in configs {
+        let r = run_config(&label, replicas, shared, n_sessions);
+        println!(
+            "{:<10} {:>8.1} steps/s  host_weights={:>8}B  per_replica={:>8}B  \
+             bank={:<6} wall={:.2}s",
+            r.label,
+            r.steps_per_sec,
+            r.weight_bytes_host,
+            r.weight_bytes_per_replica,
+            r.bank_mode,
+            r.wall_secs
+        );
+        results.push(r);
+    }
+    bench_support::hr(78);
+    let base = results[0].steps_per_sec;
+    let scaled = results[1].steps_per_sec;
+    println!(
+        "{n_replicas}-replica shared vs 1-replica: {:.2}x steps/sec at {:.2}x host weight \
+         bytes (copy mode: {:.2}x bytes for the same work)",
+        bench_support::speedup(base, scaled),
+        results[1].weight_bytes_host as f64 / results[0].weight_bytes_host.max(1) as f64,
+        results[2].weight_bytes_host as f64 / results[0].weight_bytes_host.max(1) as f64,
+    );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("pool_scaling")),
+        ("issue", Json::num(5.0)),
+        ("n_sessions", Json::num(n_sessions as f64)),
+        ("step_delay_ms", Json::num(STEP_DELAY.as_secs_f64() * 1e3)),
+        ("replicas", Json::num(n_replicas as f64)),
+        (
+            "configs",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("label", Json::str(r.label.clone())),
+                            ("replicas", Json::num(r.replicas as f64)),
+                            ("bank_mode", Json::str(r.bank_mode.clone())),
+                            ("steps_per_sec", Json::num(r.steps_per_sec)),
+                            (
+                                "weight_bytes_host",
+                                Json::num(r.weight_bytes_host as f64),
+                            ),
+                            (
+                                "weight_bytes_per_replica",
+                                Json::num(r.weight_bytes_per_replica as f64),
+                            ),
+                            ("wall_secs", Json::num(r.wall_secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedup_shared_vs_solo",
+            Json::num(bench_support::speedup(base, scaled)),
+        ),
+    ]);
+    bench_support::write_bench_json("BENCH_5.json", &payload)?;
+    Ok(())
+}

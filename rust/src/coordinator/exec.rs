@@ -15,12 +15,15 @@
 //! pays its simulated step cost once per batch, making cross-session
 //! batching measurable in tests.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 use xla::Literal;
 
 use super::plan::{execute_plan, StepOutputs, StepPlan};
 use crate::runtime::{
     buckets, Arch, BatchedKv, Engine, EngineCell, EnginePool, KvCache, ModelEntry, Specials,
+    WeightBank,
 };
 
 pub trait StepExec {
@@ -37,6 +40,14 @@ pub trait StepExec {
     /// nothing either.
     fn b_ladder(&self) -> Vec<usize> {
         vec![1]
+    }
+
+    /// The host [`WeightBank`] this executor's parameters live in, when it
+    /// has one (`None` for bank-less executors — plain mocks). Pools dedupe
+    /// these by `Arc` identity for the `weight_bytes_host` /
+    /// `bank_mode` gauges: replicas sharing one bank report its bytes once.
+    fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        None
     }
 
     fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>>;
@@ -303,6 +314,9 @@ impl StepExec for Engine {
     fn b_ladder(&self) -> Vec<usize> {
         self.model.b_ladder.clone()
     }
+    fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        Some(Engine::weight_bank(self))
+    }
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         engine_execute_batch(self, plans)
     }
@@ -338,6 +352,9 @@ impl StepExec for EngineCell {
     }
     fn b_ladder(&self) -> Vec<usize> {
         self.with(|e| e.model.b_ladder.clone())
+    }
+    fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        self.with(|e| Some(e.weight_bank()))
     }
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         // one mutex hold for the whole batch: the point of coalescing
@@ -381,6 +398,10 @@ impl StepExec for EnginePool {
     fn b_ladder(&self) -> Vec<usize> {
         self.cached_b_ladder().to_vec()
     }
+    fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        // construction-time snapshot (replica 0's bank) — no checkout
+        EnginePool::weight_bank(self)
+    }
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         // the whole batch occupies ONE replica; other replicas stay free
         // for other driver workers' batches
@@ -406,6 +427,11 @@ pub struct MockExec {
     /// this to make mock workloads compute-bound, so speedups from stepping
     /// sessions concurrently are measurable and robust.
     pub step_delay: Option<std::time::Duration>,
+    /// Bank-backed variant (ISSUE 5): when set, every logit row folds in a
+    /// value read straight out of the shared [`WeightBank`], so pool tests
+    /// exercise the zero-copy sharing path — and shared-vs-copy output
+    /// parity actually depends on the bank bytes — without artifacts.
+    bank: Option<Arc<WeightBank>>,
     pub calls: std::sync::Mutex<CallCounts>,
 }
 
@@ -427,7 +453,14 @@ pub struct CallCounts {
 
 impl MockExec {
     pub fn new(s: usize) -> MockExec {
-        MockExec { vocab: 16, s, eos_at: None, step_delay: None, calls: Default::default() }
+        MockExec {
+            vocab: 16,
+            s,
+            eos_at: None,
+            step_delay: None,
+            bank: None,
+            calls: Default::default(),
+        }
     }
 
     pub fn with_eos_at(mut self, pos: usize) -> MockExec {
@@ -438,6 +471,32 @@ impl MockExec {
     pub fn with_step_delay(mut self, d: std::time::Duration) -> MockExec {
         self.step_delay = Some(d);
         self
+    }
+
+    /// Bank-backed mock: logit rows read through `bank` (see the `bank`
+    /// field). Replicas built over one `Arc` exercise the shared path;
+    /// replicas with their own equal-content banks model `copy` mode.
+    pub fn with_weight_bank(mut self, bank: Arc<WeightBank>) -> MockExec {
+        self.bank = Some(bank);
+        self
+    }
+
+    /// Per-position perturbation read out of the bank (0 when bank-less).
+    /// Kept small relative to the row margins so decode order is still the
+    /// prefix-local caricature the strategy tests rely on.
+    fn bank_bias(&self, pos: usize) -> f32 {
+        match &self.bank {
+            None => 0.0,
+            Some(b) if b.params_len() == 0 => 0.0,
+            Some(b) => {
+                let p = b.param(0);
+                if p.data.is_empty() {
+                    0.0
+                } else {
+                    p.data[pos % p.data.len()]
+                }
+            }
+        }
     }
 
     fn simulate_cost(&self) {
@@ -454,11 +513,13 @@ impl MockExec {
     }
 
     /// Logit row for a position: peak at token_at(pos), margin shrinking
-    /// with position (prefix-local confidence).
+    /// with position (prefix-local confidence), perturbed by the bank when
+    /// one is attached (the peak stays the max: |bias| stays well under the
+    /// smallest margin).
     fn row(&self, pos: usize) -> Vec<f32> {
         let mut row = vec![0f32; self.vocab];
         let margin = 8.0 - 6.0 * (pos as f32 / self.s as f32);
-        row[self.token_at(pos) as usize] = margin;
+        row[self.token_at(pos) as usize] = margin + self.bank_bias(pos);
         row
     }
 
@@ -554,6 +615,10 @@ impl StepExec for MockExec {
         vec![1, 2, 4, 8]
     }
 
+    fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        self.bank.clone()
+    }
+
     /// Real batched execution: per-lane outputs are byte-identical to the
     /// solo methods (the mock's logits depend only on positions), but the
     /// simulated step cost is paid ONCE for the whole batch — the
@@ -623,6 +688,36 @@ mod tests {
         let (_, c10) = crate::coordinator::policies::score_row(row(10));
         let (_, c200) = crate::coordinator::policies::score_row(row(200));
         assert!(c10 > c200);
+    }
+
+    #[test]
+    fn mock_bank_bias_reads_through_the_shared_bank() {
+        use crate::runtime::weights::HostParam;
+        let bank = Arc::new(WeightBank::from_host_params(
+            "mock",
+            vec![HostParam {
+                name: "bias".into(),
+                shape: vec![4],
+                data: vec![0.25, -0.25, 0.5, 0.0],
+            }],
+        ));
+        let plain = MockExec::new(64);
+        let banked = MockExec::new(64).with_weight_bank(Arc::clone(&bank));
+        assert!(plain.weight_bank().is_none());
+        let got = banked.weight_bank().expect("banked mock exposes its bank");
+        assert!(Arc::ptr_eq(&got, &bank), "mock must hand back the SAME bank");
+        // rows differ from the bank-less mock exactly by the bank value
+        let p = plain.full(64, &vec![1; 64], &vec![1.0; 64]).unwrap();
+        let b = banked.full(64, &vec![1; 64], &vec![1.0; 64]).unwrap();
+        let peak = |logits: &[f32], pos: usize| logits[pos * 16 + banked.token_at(pos) as usize];
+        assert_eq!(peak(&b, 0) - peak(&p, 0), 0.25);
+        assert_eq!(peak(&b, 1) - peak(&p, 1), -0.25);
+        assert_eq!(peak(&b, 3), peak(&p, 3));
+        // two mocks over the SAME bank produce byte-identical rows (the
+        // sharing invariant pool conformance scales up)
+        let banked2 = MockExec::new(64).with_weight_bank(Arc::clone(&bank));
+        let b2 = banked2.full(64, &vec![1; 64], &vec![1.0; 64]).unwrap();
+        assert_eq!(b, b2);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use window_diffusion::analysis;
 use window_diffusion::coordinator::{GenRequest, StepExec};
 use window_diffusion::eval::{self, EvalOptions};
 use window_diffusion::metrics::Metrics;
-use window_diffusion::runtime::{Engine, EnginePool, Manifest};
+use window_diffusion::runtime::{BankMode, Engine, EnginePool, Manifest};
 use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::{self, api::AppState, ServerConfig};
 use window_diffusion::strategies;
@@ -90,15 +90,23 @@ fn load_engine(args: &Args) -> Result<(Manifest, Engine, Tokenizer)> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let (manifest, model, tok) = load_manifest(args)?;
 
-    // engine-replica pool: N weight copies, N concurrent steps. Clamped by
-    // the host's parallelism — more replicas than cores only burns memory.
+    // engine-replica pool: N concurrent steps over one shared host weight
+    // bank (default) — replica count is bounded by compute, so clamp to
+    // the host's parallelism; `--weight-bank copy` restores the
+    // one-host-copy-per-replica behavior for A/B measurement.
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let want = args.usize_or("replicas", 1).max(1);
     let replicas = want.min(hw);
     if replicas < want {
         info!("--replicas {want} clamped to {replicas} (available_parallelism)");
     }
-    let pool = EnginePool::load(&manifest, &model, replicas)?;
+    let bank_mode = BankMode::from_name(args.get("weight-bank").unwrap_or("shared"))?;
+    let pool = EnginePool::load_with_mode(&manifest, &model, replicas, bank_mode)?;
+    info!(
+        "weight bank: {} — {:.1} MB host-resident across {replicas} replica(s)",
+        pool.bank_mode(),
+        pool.weight_bytes_host() as f64 / 1e6
+    );
     let s = args.usize_or("s", pool.seqs()[0]);
     let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
 
@@ -287,7 +295,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
                  [--artifacts DIR] [--strategy SPEC] ...\n\
-                 serve flags: [--replicas N] [--max-batch B] \
+                 serve flags: [--replicas N] [--weight-bank shared|copy] \
+                 [--max-batch B] \
                  [--batch-policy fixed|adaptive] [--coalesce-waste-pct P] \
                  [--policy rr|shortest|deadline] \
                  [--kv-budget-mb N] [--kv-soft-mb N] [--max-sessions N] \

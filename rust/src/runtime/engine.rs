@@ -21,7 +21,7 @@ use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::manifest::{Arch, Manifest, ModelEntry, Specials};
-use super::weights::{load_host_weights, param_count};
+use super::weights::{param_count, WeightBank};
 
 /// Per-request KV cache state: per-layer K/V for a `c`-slot window layout,
 /// held host-side between steps and re-uploaded per call.
@@ -240,31 +240,65 @@ pub struct Engine {
     pub special: Specials,
     root: PathBuf,
     weights: Vec<PjRtBuffer>,
+    /// Host parameter bank the device buffers were uploaded from. Shared
+    /// (`Arc`) across the replicas of a pool in `BankMode::Shared`; the
+    /// engine never mutates it. Held for the engine's lifetime so
+    /// residency accounting (`weight_bytes_host`) can see it — on the
+    /// default mmap path that pins only file-backed pages (no private
+    /// memory), and in copy mode the pinned private heap copy is exactly
+    /// the residency the copy/shared A/B exists to measure.
+    bank: Arc<WeightBank>,
     execs: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     pub stats: EngineStats,
 }
 
 impl Engine {
+    /// Load one engine with its own private weight bank (single-engine
+    /// callers: `generate`, `eval`, benches). Pools that want host-side
+    /// weight sharing load the bank once and use [`Engine::load_with_bank`]
+    /// per replica.
     pub fn load(manifest: &Manifest, model_name: &str) -> Result<Engine> {
+        let model = manifest.model(model_name)?;
+        let bank = Arc::new(WeightBank::load(&manifest.root, model)?);
+        Engine::load_with_bank(manifest, model_name, &bank)
+    }
+
+    /// Load an engine that uploads its device weights from `bank` — the
+    /// replica half of the shared-bank story: host parameters are read
+    /// zero-copy out of the (possibly memory-mapped) bank, and only the
+    /// device-resident upload is per-replica state.
+    pub fn load_with_bank(
+        manifest: &Manifest,
+        model_name: &str,
+        bank: &Arc<WeightBank>,
+    ) -> Result<Engine> {
         let model = manifest.model(model_name)?.clone();
+        if bank.model() != model_name {
+            return Err(anyhow!(
+                "weight bank holds '{}', engine wants '{model_name}'",
+                bank.model()
+            ));
+        }
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let host = load_host_weights(&manifest.root, &model)?;
-        let mut weights = Vec::with_capacity(host.len());
+        let mut weights = Vec::with_capacity(bank.params_len());
         let mut bytes = 0u64;
-        for p in &host {
-            let dims: Vec<usize> = if p.shape.is_empty() { vec![1] } else { p.shape.clone() };
+        for i in 0..bank.params_len() {
+            let p = bank.param(i);
+            let dims: Vec<usize> =
+                if p.shape.is_empty() { vec![1] } else { p.shape.to_vec() };
             weights.push(
                 client
-                    .buffer_from_host_buffer(&p.data, &dims, None)
+                    .buffer_from_host_buffer(p.data, &dims, None)
                     .with_context(|| format!("uploading weight {}", p.name))?,
             );
             bytes += (p.data.len() * 4) as u64;
         }
         crate::info!(
-            "engine {}: {} params ({:.1} MB) uploaded, {} executables available",
+            "engine {}: {} params ({:.1} MB) uploaded (bank {}), {} executables available",
             model_name,
             param_count(&model),
             bytes as f64 / 1e6,
+            if bank.is_mapped() { "mmap" } else { "heap" },
             model.executables.len()
         );
         if !model.pruned.is_empty() {
@@ -281,6 +315,7 @@ impl Engine {
             special: manifest.special,
             root: manifest.root.clone(),
             weights,
+            bank: Arc::clone(bank),
             execs: RefCell::new(HashMap::new()),
             stats: EngineStats::default(),
         })
@@ -288,6 +323,11 @@ impl Engine {
 
     pub fn arch(&self) -> &Arch {
         &self.model.arch
+    }
+
+    /// The host bank this engine's device weights were uploaded from.
+    pub fn weight_bank(&self) -> Arc<WeightBank> {
+        Arc::clone(&self.bank)
     }
 
     /// Lazily compile an executable by manifest name.

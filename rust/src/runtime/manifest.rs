@@ -83,6 +83,13 @@ pub struct ModelEntry {
     /// through the solo fallback instead of erroring.
     pub pruned: Vec<String>,
     pub weights_file: String,
+    /// Total byte length of the weight bank file, recorded by `aot.py` so
+    /// mmap-backed loading can cross-check the file without summing the
+    /// offset table. 0 for pre-offset-table manifests (the sum of the
+    /// `weights` sizes is then the only source of truth).
+    pub weight_bytes: usize,
+    /// Per-parameter offset table (byte offsets into `weights_file`;
+    /// contiguous, validated by `runtime::weights::validate_offset_table`).
     pub weights: Vec<WeightSpec>,
     pub weight_order: Vec<String>,
     pub executables: HashMap<String, ExecSpec>,
@@ -211,6 +218,7 @@ impl Manifest {
                         .as_str()
                         .unwrap_or_default()
                         .to_string(),
+                    weight_bytes: m.get("weight_bytes").as_usize().unwrap_or(0),
                     weights,
                     weight_order,
                     executables,
@@ -343,6 +351,7 @@ mod tests {
                     "b_ladder": [1, 4],
                     "pruned": ["fwd_cached_b4_s256_c64_r16"],
                     "weights_file": "w.bin",
+                    "weight_bytes": 4096,
                     "weights": [],
                     "weight_order": [],
                     "executables": []
@@ -366,6 +375,7 @@ mod tests {
         let toy = m.model("toy").unwrap();
         assert_eq!(toy.pruned, vec!["fwd_cached_b4_s256_c64_r16".to_string()]);
         assert_eq!(toy.b_ladder, vec![1, 4]);
+        assert_eq!(toy.weight_bytes, 4096);
         // a pruned executable is simply absent: batched dispatch probes
         // has_executable and degrades to the solo loop, never an error
         assert!(toy.exec_spec("fwd_cached_b4_s256_c64_r16").is_err());
@@ -373,6 +383,8 @@ mod tests {
         let old = m.model("old").unwrap();
         assert!(old.pruned.is_empty());
         assert_eq!(old.b_ladder, vec![1]);
+        // pre-offset-table manifests: no recorded bank length
+        assert_eq!(old.weight_bytes, 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

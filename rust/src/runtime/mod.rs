@@ -11,3 +11,4 @@ pub mod weights;
 pub use engine::{BatchedKv, Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
 pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};
 pub use pool::{EnginePool, ReplicaStats};
+pub use weights::{BankMode, HostParam, WeightBank};

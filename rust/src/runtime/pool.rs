@@ -14,8 +14,14 @@
 //! is snapshotted from replica 0 at construction so metadata queries never
 //! contend with in-flight steps.
 //!
-//! The memory tradeoff is explicit: N replicas hold N copies of the weights
-//! (see DESIGN.md §"Serving at scale" — replica sizing).
+//! Host weights are NOT duplicated per replica: under the default
+//! [`BankMode::Shared`] all replicas upload their device copies from ONE
+//! `Arc`-shared [`WeightBank`] (memory-mapped when possible), so host
+//! weight residency stays flat as `--replicas` grows and replica count is
+//! bounded by compute, not memory. `BankMode::Copy` restores the
+//! one-bank-per-replica behavior for A/B measurement; either way the
+//! per-replica *device* upload is the only duplicated weight state (see
+//! DESIGN.md §"Weight bank").
 //!
 //! [`EngineCell`]: super::engine::EngineCell
 
@@ -26,6 +32,7 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{Engine, EngineCell, EngineStatsSnapshot};
 use super::manifest::{Arch, Manifest, Specials};
+use super::weights::{distinct_banks, host_bytes_of, BankMode, WeightBank};
 use crate::coordinator::StepExec;
 
 /// Per-replica observability row (`GET /metrics` → `replicas`).
@@ -47,6 +54,18 @@ pub struct EnginePool {
     available: Condvar,
     /// Per-replica step counters (lock-free; safe to read from `/metrics`).
     steps: Vec<AtomicU64>,
+    // -- weight-bank accounting (snapshotted at construction) -----------------
+    /// Replica-0 host bank (metadata / further sharing); `None` for
+    /// bank-less replicas (plain mocks).
+    bank: Option<Arc<WeightBank>>,
+    /// Host bytes resident across all *distinct* banks (Arc identity):
+    /// flat under `shared`, linear in N under `copy`.
+    weight_bytes_host: usize,
+    /// Device-upload bytes each replica pays (== one bank's size).
+    weight_bytes_per_replica: usize,
+    /// `"shared"` (one bank for all replicas), `"copy"` (a bank per
+    /// replica), or `"none"` (bank-less replicas).
+    bank_mode: &'static str,
     // -- metadata snapshot (replica 0 at construction) ------------------------
     arch: Arch,
     special: Specials,
@@ -75,27 +94,79 @@ impl EnginePool {
     /// aggregation is unavailable on this path — use [`EnginePool::load`]
     /// for real engines.
     pub fn new(replicas: Vec<Arc<dyn StepExec + Send + Sync>>) -> Result<Arc<EnginePool>> {
-        EnginePool::build(replicas, Vec::new())
+        EnginePool::build(replicas, Vec::new(), None)
     }
 
-    /// Load `n` engine replicas of one model: each gets its own PJRT client
-    /// and device-resident weight copy.
+    /// Load `n` engine replicas of one model under the default
+    /// [`BankMode::Shared`]: the host bank is loaded ONCE (mmap when
+    /// possible) and every replica uploads its device copy from it.
     pub fn load(manifest: &Manifest, model_name: &str, n: usize) -> Result<Arc<EnginePool>> {
+        EnginePool::load_with_mode(manifest, model_name, n, BankMode::Shared)
+    }
+
+    /// Load `n` engine replicas with an explicit weight-bank mode: each
+    /// replica always gets its own PJRT client and device-resident weight
+    /// copy; `mode` decides whether the *host* bank behind those uploads is
+    /// shared (flat memory) or per-replica (the pre-bank behavior, kept for
+    /// A/B measurement).
+    pub fn load_with_mode(
+        manifest: &Manifest,
+        model_name: &str,
+        n: usize,
+        mode: BankMode,
+    ) -> Result<Arc<EnginePool>> {
         let n = n.max(1);
         let mut cells = Vec::with_capacity(n);
         let mut replicas: Vec<Arc<dyn StepExec + Send + Sync>> = Vec::with_capacity(n);
+        let shared_bank = match mode {
+            BankMode::Shared => {
+                let bank =
+                    Arc::new(WeightBank::load(&manifest.root, manifest.model(model_name)?)?);
+                crate::info!(
+                    "engine pool: shared weight bank for {model_name}: {:.1} MB ({})",
+                    bank.total_bytes() as f64 / 1e6,
+                    if bank.is_mapped() { "mmap" } else { "heap" }
+                );
+                Some(bank)
+            }
+            BankMode::Copy => None,
+        };
         for i in 0..n {
-            crate::info!("engine pool: loading replica {}/{n} of {model_name}", i + 1);
-            let cell = EngineCell::new(Engine::load(manifest, model_name)?);
+            crate::info!(
+                "engine pool: loading replica {}/{n} of {model_name} ({})",
+                i + 1,
+                mode.name()
+            );
+            let engine = match &shared_bank {
+                Some(bank) => Engine::load_with_bank(manifest, model_name, bank)?,
+                // copy mode decodes a PRIVATE heap bank per replica: a
+                // mapped "copy" of the same artifact file would share
+                // page-cache pages with its siblings and the copy/shared
+                // memory A/B would measure nothing
+                None => {
+                    let bank = Arc::new(WeightBank::load_heap(
+                        &manifest.root,
+                        manifest.model(model_name)?,
+                    )?);
+                    Engine::load_with_bank(manifest, model_name, &bank)?
+                }
+            };
+            let cell = EngineCell::new(engine);
             replicas.push(Arc::clone(&cell) as Arc<dyn StepExec + Send + Sync>);
             cells.push(cell);
         }
-        EnginePool::build(replicas, cells)
+        EnginePool::build(replicas, cells, Some(mode))
     }
 
+    /// `mode`: the operator-requested bank mode, when one was requested —
+    /// it labels the `bank_mode` gauge verbatim (a 1-replica `copy` pool
+    /// must report "copy", not whatever the Arc-distinctness of one bank
+    /// happens to look like). `None` (pre-built replicas) derives the
+    /// label from distinctness instead.
     fn build(
         replicas: Vec<Arc<dyn StepExec + Send + Sync>>,
         cells: Vec<Arc<EngineCell>>,
+        mode: Option<BankMode>,
     ) -> Result<Arc<EnginePool>> {
         let first = replicas
             .first()
@@ -108,6 +179,24 @@ impl EnginePool {
         let r_ladder = first.r_ladder(usize::MAX);
         let b_ladder = first.b_ladder();
         let n = replicas.len();
+        // weight-bank accounting: distinct banks (by Arc identity) is what
+        // separates shared pools (1 bank, flat memory) from copy pools
+        // (N banks, linear memory). An explicitly requested mode labels the
+        // gauge verbatim; derivation only covers pre-built replica sets,
+        // where a 1-replica pool reports "shared" (one resident bank).
+        let banks: Vec<Arc<WeightBank>> =
+            replicas.iter().filter_map(|r| r.weight_bank()).collect();
+        let bank_mode = if banks.is_empty() {
+            "none"
+        } else {
+            match mode {
+                Some(m) => m.name(),
+                None if distinct_banks(&banks).len() == 1 => "shared",
+                None => "copy",
+            }
+        };
+        let weight_bytes_host = host_bytes_of(&banks);
+        let weight_bytes_per_replica = banks.first().map_or(0, |b| b.total_bytes());
         Ok(Arc::new(EnginePool {
             replicas,
             cells,
@@ -115,6 +204,10 @@ impl EnginePool {
             idle: Mutex::new((0..n).rev().collect()),
             available: Condvar::new(),
             steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            bank: banks.into_iter().next(),
+            weight_bytes_host,
+            weight_bytes_per_replica,
+            bank_mode,
             arch,
             special,
             seqs,
@@ -144,6 +237,31 @@ impl EnginePool {
 
     pub fn replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    // -- weight-bank gauges (construction-time snapshots; never contend) ------
+
+    /// Host bytes resident across all distinct weight banks: flat in the
+    /// replica count under `shared`, linear under `copy` — the
+    /// `weight_bytes_host` gauge on `GET /metrics`.
+    pub fn weight_bytes_host(&self) -> usize {
+        self.weight_bytes_host
+    }
+
+    /// Device-upload bytes each replica pays (one bank's size; 0 for
+    /// bank-less replicas).
+    pub fn weight_bytes_per_replica(&self) -> usize {
+        self.weight_bytes_per_replica
+    }
+
+    /// `"shared"` | `"copy"` | `"none"` — see [`BankMode`].
+    pub fn bank_mode(&self) -> &'static str {
+        self.bank_mode
+    }
+
+    /// Replica-0 host bank, when the replicas are bank-backed.
+    pub fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        self.bank.clone()
     }
 
     /// Steps executed per replica (index-aligned with replica ids).

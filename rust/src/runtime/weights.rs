@@ -1,14 +1,65 @@
-//! Weight bank loading: `weights_<model>.bin` is a flat little-endian f32
-//! stream; the manifest records (name, shape, offset, size) per parameter.
-//! Weights are uploaded to device once per engine and stay resident.
+//! Weight bank loading and sharing: `weights_<model>.bin` is a flat
+//! little-endian f32 stream; the manifest records (name, shape, offset,
+//! size) per parameter — the **offset table** — so any slice of the bank
+//! can be addressed without re-parsing the stream.
+//!
+//! Pre-ISSUE-5, every engine replica re-read and re-decoded the whole bank
+//! into its own heap copy: an N-replica pool held N host copies of the
+//! weights, so replica count was bounded by memory, not compute. The
+//! [`WeightBank`] fixes the host side of that: parameters are loaded
+//! **once** — memory-mapped straight from the artifact file when the
+//! platform allows it, falling back to a single heap load — and shared
+//! read-only across replicas via `Arc`. Per-replica *device* uploads remain
+//! the only duplicated state (each replica owns a `PjRtClient`; see
+//! DESIGN.md §"Weight bank").
+//!
+//! Sharing invariants: a bank is immutable after construction (no interior
+//! mutability anywhere, so [`WeightBank::param`] hands out plain `&[f32]`
+//! slices — concurrent replicas read it without any lock), and its
+//! parameters are ordered exactly by the manifest `weight_order`, which is
+//! the order every executable expects its weight operands in.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::manifest::ModelEntry;
 
-/// One named parameter on the host.
+/// How an [`EnginePool`](super::pool::EnginePool) provisions host weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankMode {
+    /// One host bank per replica (the pre-ISSUE-5 behavior; host memory
+    /// grows linearly with the replica count).
+    Copy,
+    /// One host bank `Arc`-shared by every replica (host memory stays flat;
+    /// the default).
+    Shared,
+}
+
+impl BankMode {
+    pub fn from_name(name: &str) -> Result<BankMode> {
+        Ok(match name {
+            "copy" => BankMode::Copy,
+            "shared" => BankMode::Shared,
+            other => {
+                return Err(anyhow!(
+                    "unknown weight-bank mode '{other}' (shared | copy)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BankMode::Copy => "copy",
+            BankMode::Shared => "shared",
+        }
+    }
+}
+
+/// One named parameter on the host (materialized copy — see
+/// [`WeightBank::param`] for the zero-copy view).
 #[derive(Debug, Clone)]
 pub struct HostParam {
     pub name: String,
@@ -16,52 +67,431 @@ pub struct HostParam {
     pub data: Vec<f32>,
 }
 
-/// Read + validate the model's weight bank, in manifest `weight_order`.
-pub fn load_host_weights(root: &Path, model: &ModelEntry) -> Result<Vec<HostParam>> {
-    let path = root.join(&model.weights_file);
-    let bytes = std::fs::read(&path)
-        .with_context(|| format!("reading weight bank {}", path.display()))?;
-    let total: usize = model.weights.iter().map(|w| w.size).sum();
-    if bytes.len() != total * 4 {
-        return Err(anyhow!(
-            "weight bank {}: {} bytes, manifest expects {}",
-            path.display(),
-            bytes.len(),
-            total * 4
-        ));
+/// Zero-copy view of one bank parameter, in manifest `weight_order`.
+pub struct ParamView<'a> {
+    pub name: &'a str,
+    pub shape: &'a [usize],
+    pub data: &'a [f32],
+}
+
+/// Per-parameter addressing into the bank, resolved once at load.
+struct BankParam {
+    name: String,
+    shape: Vec<usize>,
+    /// Element (not byte) offset into the bank — byte offset / 4.
+    elem_off: usize,
+    elems: usize,
+}
+
+enum Storage {
+    /// Decoded f32 on the heap: the fallback (and the only path for
+    /// in-memory banks built from [`HostParam`]s).
+    Heap(Vec<f32>),
+    /// The artifact file mapped read-only: zero host copies at all. Only
+    /// sound where the raw little-endian bytes ARE the in-memory f32
+    /// layout, so this variant exists only on little-endian unix.
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    Mapped(mapped::MappedFile),
+}
+
+/// Host parameter bank for one model: loaded once, shared read-only.
+pub struct WeightBank {
+    model: String,
+    params: Vec<BankParam>,
+    storage: Storage,
+    total_bytes: usize,
+}
+
+impl WeightBank {
+    /// Load the model's bank from the artifact dir: memory-mapped when the
+    /// platform allows it, otherwise one heap decode. Validates the
+    /// manifest offset table either way (see [`validate_offset_table`]).
+    pub fn load(root: &Path, model: &ModelEntry) -> Result<WeightBank> {
+        WeightBank::load_impl(root, model, true)
     }
+
+    /// Load the bank as a **private heap copy**, never mmap. This is what
+    /// [`BankMode::Copy`](super::pool::EnginePool::load_with_mode) uses per
+    /// replica: mapped "copies" of one artifact file would all share the
+    /// same page-cache pages, so only a real decode reproduces the
+    /// pre-bank N-private-copies memory regime the copy/shared A/B is
+    /// supposed to measure.
+    pub fn load_heap(root: &Path, model: &ModelEntry) -> Result<WeightBank> {
+        WeightBank::load_impl(root, model, false)
+    }
+
+    fn load_impl(root: &Path, model: &ModelEntry, allow_mmap: bool) -> Result<WeightBank> {
+        let path = root.join(&model.weights_file);
+        // open FIRST and size the bank off the fd: the mapped length must
+        // come from the same file object that gets mapped, or a concurrent
+        // artifact rewrite between a path-stat and the map would SIGBUS on
+        // first touch instead of erroring here
+        let file = std::fs::File::open(&path)
+            .with_context(|| format!("opening weight bank {}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat weight bank {}", path.display()))?
+            .len() as usize;
+        validate_offset_table(model, file_len)?;
+        let params = bank_params(model);
+
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        {
+            if file_len > 0 && allow_mmap {
+                match mapped::MappedFile::map(&file, file_len) {
+                    Ok(map) => {
+                        return Ok(WeightBank {
+                            model: model.name.clone(),
+                            params,
+                            storage: Storage::Mapped(map),
+                            total_bytes: file_len,
+                        });
+                    }
+                    Err(e) => {
+                        crate::debug!(
+                            "weight bank {}: mmap failed ({e}); heap fallback",
+                            path.display()
+                        );
+                    }
+                }
+            }
+        }
+        let _ = allow_mmap; // no mmap on this target
+        drop(file);
+
+        // heap fallback: one read + decode for the whole bank
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weight bank {}", path.display()))?;
+        if bytes.len() != file_len {
+            return Err(anyhow!(
+                "weight bank {} changed size mid-load ({} -> {} bytes)",
+                path.display(),
+                file_len,
+                bytes.len()
+            ));
+        }
+        let mut data = vec![0f32; bytes.len() / 4];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(WeightBank {
+            model: model.name.clone(),
+            params,
+            storage: Storage::Heap(data),
+            total_bytes: file_len,
+        })
+    }
+
+    /// In-memory bank from pre-built parameters (mock executors, tests,
+    /// benches — the sharing path without artifacts). Parameter order is
+    /// preserved; offsets are assigned contiguously.
+    pub fn from_host_params(model: &str, params: Vec<HostParam>) -> WeightBank {
+        let mut views = Vec::with_capacity(params.len());
+        let mut data = Vec::new();
+        for p in params {
+            views.push(BankParam {
+                name: p.name,
+                shape: p.shape,
+                elem_off: data.len(),
+                elems: p.data.len(),
+            });
+            data.extend_from_slice(&p.data);
+        }
+        let total_bytes = data.len() * 4;
+        WeightBank {
+            model: model.to_string(),
+            params: views,
+            storage: Storage::Heap(data),
+            total_bytes,
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Number of parameters (== manifest `weight_order` length).
+    pub fn params_len(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Host bytes resident for this bank (mapped or heap).
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    /// Whether the bank reads straight out of the mapped artifact file
+    /// (false = heap fallback / in-memory bank).
+    pub fn is_mapped(&self) -> bool {
+        match &self.storage {
+            Storage::Heap(_) => false,
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Storage::Mapped(_) => true,
+        }
+    }
+
+    /// Zero-copy view of parameter `i` in manifest `weight_order` — the
+    /// order executables expect their weight operands in. No lock anywhere
+    /// on this path: the bank is immutable, so concurrent replica uploads
+    /// and mid-step reads never serialize.
+    pub fn param(&self, i: usize) -> ParamView<'_> {
+        let p = &self.params[i];
+        let data: &[f32] = match &self.storage {
+            Storage::Heap(v) => &v[p.elem_off..p.elem_off + p.elems],
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Storage::Mapped(m) => {
+                let bytes = m.bytes();
+                let start = p.elem_off * 4;
+                debug_assert!(start + p.elems * 4 <= bytes.len());
+                // Sound: the mapping is page-aligned and the offset table
+                // is validated 4-byte aligned + in-bounds at load; on this
+                // cfg the file bytes are the native f32 representation.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        bytes.as_ptr().add(start) as *const f32,
+                        p.elems,
+                    )
+                }
+            }
+        };
+        ParamView { name: &p.name, shape: &p.shape, data }
+    }
+}
+
+/// Resolve the manifest specs into bank addressing, in `weight_order`.
+/// Callers must have run [`validate_offset_table`] first (names resolve,
+/// offsets aligned and in-bounds).
+fn bank_params(model: &ModelEntry) -> Vec<BankParam> {
     let by_name: std::collections::HashMap<_, _> =
         model.weights.iter().map(|w| (w.name.as_str(), w)).collect();
-    let mut out = Vec::with_capacity(model.weight_order.len());
-    for name in &model.weight_order {
-        let spec = by_name
-            .get(name.as_str())
-            .ok_or_else(|| anyhow!("weight_order names unknown param '{name}'"))?;
+    model
+        .weight_order
+        .iter()
+        .map(|name| {
+            let spec = by_name[name.as_str()];
+            BankParam {
+                name: name.clone(),
+                shape: spec.shape.clone(),
+                elem_off: spec.offset / 4,
+                elems: spec.size,
+            }
+        })
+        .collect()
+}
+
+/// Validate the manifest's weight **offset table** against the byte length
+/// of the bank file. The grammar (emitted by `python/compile/aot.py::
+/// write_weights`, pinned on the python side by `tests/test_offset_table.py`):
+///
+/// * offsets are **bytes** into the flat little-endian f32 stream, 4-byte
+///   aligned, and every `[offset, offset + size*4)` range is in bounds;
+/// * each param's `size` equals the product of its `shape` (scalars: 1);
+/// * sorted by offset, the entries **tile the file contiguously** — first
+///   at 0, no gaps, no overlap, ending exactly at the file length (which
+///   must also match the manifest's `weight_bytes` when recorded);
+/// * `weight_order` is a permutation of the table's names (it orders
+///   uploads; the table orders the file).
+///
+/// mmap slicing relies on every one of these, so violations are load-time
+/// errors rather than silent tensor corruption.
+pub fn validate_offset_table(model: &ModelEntry, bank_bytes: usize) -> Result<()> {
+    let total_elems: usize = model.weights.iter().map(|w| w.size).sum();
+    if bank_bytes != total_elems * 4 {
+        return Err(anyhow!(
+            "weight bank for {}: {} bytes, offset table expects {}",
+            model.name,
+            bank_bytes,
+            total_elems * 4
+        ));
+    }
+    if model.weight_bytes > 0 && model.weight_bytes != bank_bytes {
+        return Err(anyhow!(
+            "weight bank for {}: {} bytes, manifest weight_bytes says {}",
+            model.name,
+            bank_bytes,
+            model.weight_bytes
+        ));
+    }
+    for spec in &model.weights {
         let elems: usize = spec.shape.iter().product::<usize>().max(1);
         if elems != spec.size {
             return Err(anyhow!(
-                "param {name}: shape {:?} has {elems} elems but size={}",
+                "param {}: shape {:?} has {elems} elems but size={}",
+                spec.name,
                 spec.shape,
                 spec.size
             ));
         }
-        let start = spec.offset;
-        let end = start + spec.size * 4;
-        if end > bytes.len() {
-            return Err(anyhow!("param {name}: range {start}..{end} out of bounds"));
+        if spec.offset % 4 != 0 {
+            return Err(anyhow!(
+                "param {}: byte offset {} not 4-aligned",
+                spec.name,
+                spec.offset
+            ));
         }
-        let mut data = vec![0f32; spec.size];
-        for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        if spec.offset + spec.size * 4 > bank_bytes {
+            return Err(anyhow!(
+                "param {}: range {}..{} out of bounds ({bank_bytes} bytes)",
+                spec.name,
+                spec.offset,
+                spec.offset + spec.size * 4
+            ));
         }
-        out.push(HostParam { name: name.clone(), shape: spec.shape.clone(), data });
     }
-    Ok(out)
+    // contiguity: sorted by offset, entries tile the file exactly
+    let mut by_off: Vec<&super::manifest::WeightSpec> = model.weights.iter().collect();
+    by_off.sort_by_key(|w| w.offset);
+    let mut expect = 0usize;
+    for spec in by_off {
+        if spec.offset != expect {
+            return Err(anyhow!(
+                "param {}: offset {} leaves a gap or overlap (expected {expect})",
+                spec.name,
+                spec.offset
+            ));
+        }
+        expect += spec.size * 4;
+    }
+    if expect != bank_bytes {
+        return Err(anyhow!(
+            "offset table tiles {expect} bytes, bank has {bank_bytes}"
+        ));
+    }
+    // weight_order must be a permutation of the table's names
+    if model.weight_order.len() != model.weights.len() {
+        return Err(anyhow!(
+            "weight_order has {} names, offset table has {}",
+            model.weight_order.len(),
+            model.weights.len()
+        ));
+    }
+    let names: std::collections::HashSet<&str> =
+        model.weights.iter().map(|w| w.name.as_str()).collect();
+    if names.len() != model.weights.len() {
+        return Err(anyhow!("offset table has duplicate param names"));
+    }
+    for name in &model.weight_order {
+        if !names.contains(name.as_str()) {
+            return Err(anyhow!("weight_order names unknown param '{name}'"));
+        }
+    }
+    Ok(())
+}
+
+/// Read + validate the model's weight bank, materialized per-param (compat
+/// shim over [`WeightBank::load`] — engine uploads use the zero-copy bank
+/// directly).
+pub fn load_host_weights(root: &Path, model: &ModelEntry) -> Result<Vec<HostParam>> {
+    let bank = WeightBank::load(root, model)?;
+    Ok((0..bank.params_len())
+        .map(|i| {
+            let v = bank.param(i);
+            HostParam {
+                name: v.name.to_string(),
+                shape: v.shape.to_vec(),
+                data: v.data.to_vec(),
+            }
+        })
+        .collect())
 }
 
 /// Parameter count of the model (for logging / README numbers).
 pub fn param_count(model: &ModelEntry) -> usize {
     model.weights.iter().map(|w| w.size).sum()
+}
+
+/// The distinct banks in `banks`, by `Arc` identity — a shared pool's N
+/// replicas contribute ONE bank, a copy pool's contribute N. Single source
+/// of truth for both the `bank_mode` derivation and the byte sum, so the
+/// two gauges can never disagree about what "distinct" means.
+pub fn distinct_banks<'a>(banks: &'a [Arc<WeightBank>]) -> Vec<&'a Arc<WeightBank>> {
+    let mut uniq: Vec<&Arc<WeightBank>> = Vec::new();
+    for b in banks {
+        if !uniq.iter().any(|x| Arc::ptr_eq(x, b)) {
+            uniq.push(b);
+        }
+    }
+    uniq
+}
+
+/// Resident host bytes across the distinct banks — the `weight_bytes_host`
+/// gauge.
+pub fn host_bytes_of(banks: &[Arc<WeightBank>]) -> usize {
+    distinct_banks(banks).iter().map(|b| b.total_bytes()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// mmap (raw bindings — libc is not in the offline crate set, but std links
+// the platform libc, so declaring the two symbols we use is enough)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod mapped {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    use anyhow::{anyhow, Result};
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A read-only, private mapping of an immutable artifact file.
+    pub struct MappedFile {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // Sound: the mapping is PROT_READ and the bank never exposes `&mut` —
+    // shared cross-thread access is plain immutable reads.
+    unsafe impl Send for MappedFile {}
+    unsafe impl Sync for MappedFile {}
+
+    impl MappedFile {
+        pub fn map(file: &File, len: usize) -> Result<MappedFile> {
+            if len == 0 {
+                return Err(anyhow!("mmap of an empty file"));
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 || ptr.is_null() {
+                return Err(anyhow!("mmap({len} bytes) failed"));
+            }
+            Ok(MappedFile { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for MappedFile {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -81,23 +511,29 @@ mod tests {
             b_ladder: vec![1],
             pruned: Vec::new(),
             weights_file: dir.join("w.bin").file_name().unwrap().to_str().unwrap().into(),
+            weight_bytes: 0,
             weights: specs,
             weight_order: order.into_iter().map(String::from).collect(),
             executables: HashMap::new(),
         }
     }
 
-    #[test]
-    fn roundtrip_two_params() {
-        let dir = std::env::temp_dir().join(format!("wdw-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let a: Vec<f32> = (0..6).map(|x| x as f32).collect();
-        let b: Vec<f32> = (0..4).map(|x| 10.0 + x as f32).collect();
+    fn write_bank(dir: &Path, values: &[f32]) {
+        std::fs::create_dir_all(dir).unwrap();
         let mut bytes = Vec::new();
-        for v in a.iter().chain(b.iter()) {
+        for v in values {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         std::fs::write(dir.join("w.bin"), &bytes).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_two_params() {
+        let dir = std::env::temp_dir().join(format!("wdw-{}", std::process::id()));
+        let a: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let b: Vec<f32> = (0..4).map(|x| 10.0 + x as f32).collect();
+        let all: Vec<f32> = a.iter().chain(b.iter()).copied().collect();
+        write_bank(&dir, &all);
         let specs = vec![
             WeightSpec { name: "a".into(), shape: vec![2, 3], offset: 0, size: 6 },
             WeightSpec { name: "b".into(), shape: vec![4], offset: 24, size: 4 },
@@ -121,5 +557,133 @@ mod tests {
         let m = entry(&dir, specs, vec!["a"]);
         assert!(load_host_weights(&dir, &m).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bank_views_match_host_params_bitwise() {
+        // the mapped fast path and the decoded heap path must read the
+        // SAME bytes — this is the parity that makes `shared` mode safe
+        let dir = std::env::temp_dir().join(format!("wdw3-{}", std::process::id()));
+        let vals: Vec<f32> = (0..12).map(|x| (x as f32) * 0.25 - 1.0).collect();
+        write_bank(&dir, &vals);
+        let specs = vec![
+            WeightSpec { name: "a".into(), shape: vec![8], offset: 0, size: 8 },
+            WeightSpec { name: "b".into(), shape: vec![4], offset: 32, size: 4 },
+        ];
+        let m = entry(&dir, specs, vec!["a", "b"]);
+        let bank = WeightBank::load(&dir, &m).unwrap();
+        assert_eq!(bank.model(), "toy");
+        assert_eq!(bank.params_len(), 2);
+        assert_eq!(bank.total_bytes(), 48);
+        if cfg!(all(unix, target_endian = "little", target_pointer_width = "64")) {
+            assert!(bank.is_mapped(), "expected the mmap fast path here");
+        }
+        // the heap loader must never map, whatever the platform — that is
+        // what makes BankMode::Copy a real memory A/B
+        let heap = WeightBank::load_heap(&dir, &m).unwrap();
+        assert!(!heap.is_mapped());
+        assert_eq!(heap.total_bytes(), bank.total_bytes());
+        let host = load_host_weights(&dir, &m).unwrap();
+        for (i, hp) in host.iter().enumerate() {
+            let v = bank.param(i);
+            assert_eq!(v.name, hp.name);
+            assert_eq!(v.shape, &hp.shape[..]);
+            let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(v.data), bits(&hp.data), "param {i} diverged");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn offset_table_rejects_overlap_and_gap() {
+        let dir = std::env::temp_dir().join(format!("wdw4-{}", std::process::id()));
+        write_bank(&dir, &[0.0f32; 8]);
+        // overlap: both params claim offset 0; totals still match the file
+        let m = entry(
+            &dir,
+            vec![
+                WeightSpec { name: "a".into(), shape: vec![4], offset: 0, size: 4 },
+                WeightSpec { name: "b".into(), shape: vec![4], offset: 0, size: 4 },
+            ],
+            vec!["a", "b"],
+        );
+        assert!(WeightBank::load(&dir, &m).is_err(), "overlapping offsets accepted");
+        // gap-then-overlap tiling: b starts mid-a (offset 4, expected 8)
+        // with totals and bounds both fine — only the contiguity sweep
+        // can catch it
+        write_bank(&dir, &[0.0f32; 4]);
+        let m = entry(
+            &dir,
+            vec![
+                WeightSpec { name: "a".into(), shape: vec![2], offset: 0, size: 2 },
+                WeightSpec { name: "b".into(), shape: vec![2], offset: 4, size: 2 },
+            ],
+            vec!["a", "b"],
+        );
+        assert!(WeightBank::load(&dir, &m).is_err(), "non-contiguous tiling accepted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn offset_table_rejects_misalignment_and_bad_order() {
+        let dir = std::env::temp_dir().join(format!("wdw5-{}", std::process::id()));
+        write_bank(&dir, &[0.0f32; 4]);
+        let mis = entry(
+            &dir,
+            vec![WeightSpec { name: "a".into(), shape: vec![4], offset: 2, size: 4 }],
+            vec!["a"],
+        );
+        assert!(WeightBank::load(&dir, &mis).is_err(), "misaligned offset accepted");
+        let bad_order = entry(
+            &dir,
+            vec![WeightSpec { name: "a".into(), shape: vec![4], offset: 0, size: 4 }],
+            vec!["zzz"],
+        );
+        assert!(WeightBank::load(&dir, &bad_order).is_err(), "unknown order name accepted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn weight_bytes_cross_checked_when_recorded() {
+        let dir = std::env::temp_dir().join(format!("wdw6-{}", std::process::id()));
+        write_bank(&dir, &[1.0f32; 4]);
+        let mut m = entry(
+            &dir,
+            vec![WeightSpec { name: "a".into(), shape: vec![4], offset: 0, size: 4 }],
+            vec!["a"],
+        );
+        m.weight_bytes = 16;
+        assert!(WeightBank::load(&dir, &m).is_ok());
+        m.weight_bytes = 20; // manifest lies about the bank size
+        assert!(WeightBank::load(&dir, &m).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_host_params_is_contiguous_and_shared() {
+        let bank = Arc::new(WeightBank::from_host_params(
+            "mock",
+            vec![
+                HostParam { name: "w0".into(), shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] },
+                HostParam { name: "w1".into(), shape: vec![3], data: vec![5.0, 6.0, 7.0] },
+            ],
+        ));
+        assert_eq!(bank.params_len(), 2);
+        assert_eq!(bank.total_bytes(), 7 * 4);
+        assert!(!bank.is_mapped());
+        assert_eq!(bank.param(0).data, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(bank.param(1).name, "w1");
+        assert_eq!(bank.param(1).data, &[5.0, 6.0, 7.0]);
+        // host-byte accounting dedupes by Arc identity (shared vs copy)
+        let shared = vec![Arc::clone(&bank), Arc::clone(&bank), Arc::clone(&bank)];
+        assert_eq!(host_bytes_of(&shared), 28);
+        let copy = vec![
+            Arc::clone(&bank),
+            Arc::new(WeightBank::from_host_params(
+                "mock",
+                vec![HostParam { name: "w".into(), shape: vec![7], data: vec![0.0; 7] }],
+            )),
+        ];
+        assert_eq!(host_bytes_of(&copy), 56);
     }
 }

@@ -113,6 +113,12 @@ pub struct GovernorConfig {
     /// exceeds this percentage of all computed positions. 0 disables the
     /// waste feedback.
     pub waste_ceiling_pct: usize,
+    /// Deadline-pressure horizon (EDF policy only): a queued session whose
+    /// deadline falls within this much of "now" counts as *urgent*, and
+    /// the tick width drops to the smallest rung that still seats every
+    /// urgent lane — a lower-latency tick even at depth. See
+    /// [`BatchGovernor::decide_deadline`].
+    pub deadline_slack: Duration,
 }
 
 impl GovernorConfig {
@@ -130,6 +136,7 @@ impl GovernorConfig {
             dwell: Duration::from_millis(200),
             occupancy_floor: 0.5,
             waste_ceiling_pct: 0,
+            deadline_slack: Duration::from_millis(100),
         }
     }
 }
@@ -200,6 +207,27 @@ impl BatchGovernor {
             .unwrap_or(1)
     }
 
+    /// SMALLEST ladder rung `>= need` within the `max_batch` cap — the
+    /// lowest-latency width that still seats `need` lanes in one tick.
+    /// Falls back to the largest admissible rung when `need` overflows the
+    /// ladder (then several ticks are unavoidable anyway).
+    fn rung_at_least(&self, need: usize) -> usize {
+        self.cfg
+            .b_ladder
+            .iter()
+            .copied()
+            .filter(|&b| b <= self.cfg.max_batch && b >= need.max(1))
+            .min()
+            .unwrap_or_else(|| self.rung_for(need))
+    }
+
+    /// Deadline-pressure horizon (see [`GovernorConfig::deadline_slack`]) —
+    /// the scheduler uses it to count urgent sessions before calling
+    /// [`BatchGovernor::decide_deadline`].
+    pub fn deadline_slack(&self) -> Duration {
+        self.cfg.deadline_slack
+    }
+
     /// Trailing (occupancy, coalesce-waste %, forwards) over the history
     /// window — which only ever spans forwards run at the *current* width
     /// (the window resets on every width change; see `reset_window`).
@@ -237,6 +265,23 @@ impl BatchGovernor {
     /// the current run-queue depth and a fresh counter snapshot.
     pub fn decide(&mut self, now: Instant, queue_depth: usize,
                   counters: CounterSnapshot) -> usize {
+        self.decide_deadline(now, queue_depth, 0, counters)
+    }
+
+    /// Deadline-aware width decision (ISSUE 5): `urgent` is the number of
+    /// queued sessions whose deadline falls within
+    /// [`GovernorConfig::deadline_slack`] of `now` (0 outside the EDF
+    /// policy, which makes this identical to [`BatchGovernor::decide`]).
+    ///
+    /// With `urgent > 0` the supply-side depth target is replaced by the
+    /// **smallest rung seating every urgent lane** — the lowest-latency
+    /// tick that still clears them all (one urgent lane at depth 16 ticks
+    /// solo; three tick at rung 4). Deadline pressure applies
+    /// *immediately in both directions* and overrides the feedback cap: a
+    /// lane about to miss its deadline can wait out neither the narrowing
+    /// dwell nor an occupancy verdict.
+    pub fn decide_deadline(&mut self, now: Instant, queue_depth: usize,
+                           urgent: usize, counters: CounterSnapshot) -> usize {
         // book the snapshot, prune the window
         self.history.push_back((now, counters));
         while matches!(
@@ -251,8 +296,14 @@ impl BatchGovernor {
             self.history.pop_front();
         }
 
-        // supply-side target: how much coalescable work is queued right now
-        let mut target = self.rung_for(queue_depth);
+        // supply-side target: how much coalescable work is queued right
+        // now — or, under deadline pressure, the smallest rung that still
+        // seats every urgent lane
+        let mut target = if urgent > 0 {
+            self.rung_at_least(urgent)
+        } else {
+            self.rung_for(queue_depth)
+        };
 
         // feedback: the width we have been running is not earning its keep.
         // The verdict is remembered as a cap (not applied once and
@@ -279,8 +330,12 @@ impl BatchGovernor {
                 });
             }
         }
-        if let Some((rung, _)) = self.cap {
-            target = target.min(rung);
+        // the feedback cap is a throughput verdict; deadline pressure is a
+        // latency obligation and outranks it
+        if urgent == 0 {
+            if let Some((rung, _)) = self.cap {
+                target = target.min(rung);
+            }
         }
 
         if target > self.width {
@@ -290,12 +345,13 @@ impl BatchGovernor {
             self.reset_window(now, counters);
         } else if target < self.width {
             // narrow only once the dwell has elapsed since the width last
-            // moved, so a widen→narrow cycle can't flap within the dwell
+            // moved, so a widen→narrow cycle can't flap within the dwell —
+            // unless a deadline is on the line, which cannot wait it out
             #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
             let held = self
                 .last_change
                 .map_or(true, |t| now.saturating_duration_since(t) >= self.cfg.dwell);
-            if held {
+            if held || urgent > 0 {
                 self.width = target;
                 self.last_change = Some(now);
                 self.reset_window(now, counters);
@@ -472,6 +528,65 @@ mod tests {
         assert_eq!(g.decide(at(350), 16, snap(16, 23, 1500, 0)), 2);
         // cap expired: probe wide again to notice a changed traffic mix
         assert_eq!(g.decide(at(900), 16, snap(16, 23, 1500, 0)), 8);
+    }
+
+    /// ISSUE 5 satellite: under the EDF policy a near-deadline lane at
+    /// depth narrows the tick to the SMALLEST rung that still seats every
+    /// urgent lane — immediately, dwell or no dwell (injected clock).
+    #[test]
+    fn near_deadline_narrows_to_smallest_satisfying_rung() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8); // dwell 100ms
+        // deep queue, no pressure: top rung
+        assert_eq!(g.decide_deadline(at(0), 16, 0, snap(0, 0, 0, 0)), 8);
+        // ONE urgent lane at depth 16: solo tick, and it must NOT wait out
+        // the 100ms dwell since the widen at t=0
+        assert_eq!(g.decide_deadline(at(10), 16, 1, snap(2, 16, 200, 0)), 1);
+        // three urgent lanes: the smallest rung seating all three is 4 —
+        // not 8 (needless latency) and not 2 (would split them)
+        assert_eq!(g.decide_deadline(at(20), 16, 3, snap(3, 17, 260, 0)), 4);
+        // urgency beyond the ladder: the largest admissible rung
+        assert_eq!(g.decide_deadline(at(30), 64, 50, snap(4, 21, 500, 0)), 8);
+        // pressure clears: the depth target resumes (widening stays
+        // immediate, so the deep queue goes straight back to the top rung)
+        assert_eq!(g.decide_deadline(at(40), 16, 0, snap(5, 29, 760, 0)), 8);
+    }
+
+    #[test]
+    fn deadline_pressure_overrides_feedback_cap() {
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut g = gov(8); // dwell 100ms -> cap holds 400ms
+        g.decide(at(0), 16, snap(0, 0, 0, 0));
+        assert_eq!(g.width(), 8);
+        // under-occupied at depth: the feedback cap narrows a rung
+        assert_eq!(g.decide(at(120), 16, snap(8, 12, 800, 0)), 4);
+        // 8 urgent lanes arrive while the cap holds: the latency
+        // obligation outranks the throughput verdict — full width now
+        // (counters unchanged: no forwards ran in between, so no fresh
+        // occupancy verdict muddies the cap under test)
+        assert_eq!(g.decide_deadline(at(130), 16, 8, snap(8, 12, 800, 0)), 8);
+        // pressure gone: the remembered cap reasserts itself once the
+        // dwell (from the widen at t=130) elapses
+        assert_eq!(g.decide_deadline(at(135), 16, 0, snap(8, 12, 800, 0)), 8);
+        assert_eq!(g.decide_deadline(at(240), 16, 0, snap(8, 12, 800, 0)), 4);
+    }
+
+    #[test]
+    fn zero_urgent_is_exactly_the_plain_decision() {
+        // decide() delegates with urgent = 0: same inputs, same widths
+        let t0 = Instant::now();
+        let at = |ms: u64| t0 + Duration::from_millis(ms);
+        let mut a = gov(8);
+        let mut b = gov(8);
+        for (ms, depth) in [(0u64, 3usize), (50, 9), (180, 0), (400, 16)] {
+            let s = snap(depth as u64, depth as u64, 100, 0);
+            assert_eq!(
+                a.decide(at(ms), depth, s),
+                b.decide_deadline(at(ms), depth, 0, s)
+            );
+        }
     }
 
     #[test]

@@ -273,6 +273,10 @@ pub struct Scheduler {
     arch: Arch,
     /// Present under `BatchPolicy::Adaptive`: the per-tick width decision.
     governor: Option<Mutex<BatchGovernor>>,
+    /// Deadline-pressure horizon copied from the governor's config: queued
+    /// sessions due within this of "now" count as urgent and narrow the
+    /// tick (EDF policy + adaptive width only).
+    deadline_slack: Duration,
     cfg: SchedulerConfig,
     inner: Mutex<Inner>,
     work: Condvar,
@@ -292,11 +296,13 @@ impl Scheduler {
         let pool = KvPool::new(cfg.kv_budget_bytes);
         let b_ladder = exec.b_ladder();
         let arch = exec.arch();
+        let mut deadline_slack = Duration::ZERO;
         let governor = match cfg.batch_policy {
             BatchPolicy::Fixed => None,
             BatchPolicy::Adaptive => {
                 let mut gcfg = GovernorConfig::new(b_ladder.clone(), cfg.max_batch.max(1));
                 gcfg.waste_ceiling_pct = cfg.coalesce_waste_pct;
+                deadline_slack = gcfg.deadline_slack;
                 Some(Mutex::new(BatchGovernor::new(gcfg)))
             }
         };
@@ -313,6 +319,7 @@ impl Scheduler {
             b_ladder,
             arch,
             governor,
+            deadline_slack,
             cfg,
             inner: Mutex::new(Inner {
                 run: VecDeque::new(),
@@ -543,9 +550,39 @@ impl Scheduler {
         let width = match &self.governor {
             None => self.cfg.max_batch.max(1),
             Some(g) => {
-                let depth = self.inner.lock().unwrap().run.len();
+                // urgent = queued sessions due within the deadline slack
+                // (EDF only — other policies don't track deadlines): the
+                // governor trades the depth target for the smallest rung
+                // that still seats them (ROADMAP "governor-driven deadline
+                // awareness")
+                let (depth, urgent) = {
+                    let inner = self.inner.lock().unwrap();
+                    let depth = inner.run.len();
+                    let mut urgent = 0usize;
+                    if self.cfg.policy == Policy::Deadline {
+                        // the EDF picker already walks the whole queue
+                        // under this lock every tick, so counting here
+                        // adds no new complexity class — and the count
+                        // stops early once it saturates the ladder
+                        // (rung_at_least is constant beyond max_batch)
+                        let horizon = Instant::now() + self.deadline_slack;
+                        let cap = self.cfg.max_batch.max(1);
+                        for a in inner.run.iter() {
+                            if a.deadline.is_some_and(|d| d <= horizon) {
+                                urgent += 1;
+                                if urgent >= cap {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    (depth, urgent)
+                };
                 let snap = CounterSnapshot::of(&self.metrics);
-                let w = g.lock().unwrap().decide(Instant::now(), depth, snap);
+                let w = g
+                    .lock()
+                    .unwrap()
+                    .decide_deadline(Instant::now(), depth, urgent, snap);
                 self.metrics.batch_width.store(w as u64, Ordering::Relaxed);
                 w
             }
@@ -1327,6 +1364,59 @@ mod tests {
             0,
             "waste_pct=0 must never promote"
         );
+    }
+
+    /// ISSUE 5 satellite: under `--policy deadline` + adaptive width, a
+    /// near-deadline session at depth narrows the tick to the smallest
+    /// satisfying rung — the urgent lane gets a solo (lowest-latency)
+    /// quantum even though the queue depth alone would widen to the top
+    /// rung; once the pressure clears, the depth target resumes.
+    #[test]
+    fn deadline_pressure_narrows_adaptive_tick() {
+        let m = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+            SchedulerConfig {
+                policy: Policy::Deadline,
+                max_batch: 8,
+                batch_policy: BatchPolicy::Adaptive,
+                ..Default::default()
+            },
+            Arc::clone(&m),
+        );
+        // one already-due session (deadline ZERO is inside any slack)
+        // among seven identical deadline-less ones
+        let urgent = s
+            .submit(SubmitSpec {
+                strategy: "full".into(),
+                req: GenRequest::new(vec![10, 11, 12, 13], 2, 256),
+                deadline: Some(Duration::ZERO),
+            })
+            .unwrap();
+        let urgent_id = urgent.id;
+        let rest: Vec<_> = (0..7).map(|_| s.submit(spec("full", 16)).unwrap()).collect();
+        use std::sync::atomic::Ordering;
+        // tick 1: depth 8 would widen to rung 8, but the due lane forces
+        // the smallest satisfying rung (solo) and EDF makes it the leader
+        assert_eq!(s.tick(), Some(urgent_id), "EDF must lead with the due session");
+        assert_eq!(
+            m.batch_width.load(Ordering::Relaxed),
+            1,
+            "near-deadline lane must narrow the tick to solo"
+        );
+        assert_eq!(urgent.wait().unwrap().tokens_generated(), 2, "urgent lane finished");
+        // tick 2: pressure cleared — the depth target (7 queued) resumes
+        // and widens immediately to its rung
+        assert!(s.tick().is_some());
+        assert_eq!(
+            m.batch_width.load(Ordering::Relaxed),
+            4,
+            "depth target should resume once the deadline pressure clears"
+        );
+        while s.tick().is_some() {}
+        for t in rest {
+            t.wait().unwrap();
+        }
     }
 
     /// ISSUE 4 satellite: the windowed gauges must *recover* after a burst

@@ -14,7 +14,9 @@
 //!   `aot.py --prune-buckets` input) + adaptive-coalescing gauges
 //!   (`batch_policy`, `batch_width`, `promoted_lanes`,
 //!   `promoted_padded_slots`); with an engine-replica pool, per-replica
-//!   step/execution gauges under `"replicas"`
+//!   step/execution gauges under `"replicas"` plus the weight-bank
+//!   residency gauges (`bank_mode`, `weight_bytes_host`,
+//!   `weight_bytes_per_replica`)
 //! * `GET /healthz`   — liveness
 //! * `GET /info`      — model / config / scheduling info
 
@@ -225,6 +227,18 @@ fn metrics_json(st: &AppState) -> Json {
     if let (Some(pool), Json::Obj(fields)) = (&st.pool, &mut j) {
         fields.insert("replica_count".into(), Json::num(pool.replicas() as f64));
         fields.insert("replicas".into(), replicas_json(pool));
+        // weight-bank residency gauges (ISSUE 5): host bytes stay flat in
+        // the replica count under `shared` and grow linearly under `copy`
+        // — the memory-regression tests pin exactly these numbers
+        fields.insert("bank_mode".into(), Json::str(pool.bank_mode()));
+        fields.insert(
+            "weight_bytes_host".into(),
+            Json::num(pool.weight_bytes_host() as f64),
+        );
+        fields.insert(
+            "weight_bytes_per_replica".into(),
+            Json::num(pool.weight_bytes_per_replica() as f64),
+        );
         // aggregate PJRT counters across replicas (absent on mock pools)
         if let Some(agg) = pool.engine_stats() {
             fields.insert(
@@ -260,6 +274,9 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("batch_policy", Json::str(st.scheduler.batch_policy().name())),
                 ("replicas", Json::num(
                     st.pool.as_ref().map_or(1, |p| p.replicas()) as f64,
+                )),
+                ("bank_mode", Json::str(
+                    st.pool.as_ref().map_or("none", |p| p.bank_mode()),
                 )),
                 ("direct", Json::Bool(st.direct)),
             ])
@@ -420,8 +437,19 @@ mod tests {
 
     #[test]
     fn metrics_and_info_expose_replica_pool() {
+        use crate::runtime::{HostParam, WeightBank};
+        // bank-backed replicas: the pool reports the SHARED bank's bytes
+        // once, however many replicas upload from it
+        let bank = Arc::new(WeightBank::from_host_params(
+            "mock",
+            vec![HostParam { name: "w".into(), shape: vec![16], data: vec![0.01; 16] }],
+        ));
+        let bank_bytes = bank.total_bytes();
         let replicas = (0..2)
-            .map(|_| Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>)
+            .map(|_| {
+                Arc::new(MockExec::new(256).with_weight_bank(Arc::clone(&bank)))
+                    as Arc<dyn StepExec + Send + Sync>
+            })
             .collect();
         let pool = EnginePool::new(replicas).unwrap();
         let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
@@ -457,10 +485,17 @@ mod tests {
         let i = get(&st, "/info");
         let ij = parse(std::str::from_utf8(&i.body).unwrap()).unwrap();
         assert_eq!(ij.get("replicas").as_usize(), Some(2));
+        assert_eq!(ij.get("bank_mode").as_str(), Some("shared"));
 
         let m = get(&st, "/metrics");
         let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
         assert_eq!(mj.get("replica_count").as_usize(), Some(2));
+        assert_eq!(mj.get("bank_mode").as_str(), Some("shared"));
+        assert_eq!(mj.get("weight_bytes_host").as_usize(), Some(bank_bytes));
+        assert_eq!(
+            mj.get("weight_bytes_per_replica").as_usize(),
+            Some(bank_bytes)
+        );
         let rows = mj.get("replicas").as_arr().expect("replicas array");
         assert_eq!(rows.len(), 2);
         let steps: u64 = rows
