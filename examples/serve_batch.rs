@@ -47,6 +47,7 @@ use window_diffusion::server::api::AppState;
 use window_diffusion::server::http::{http_get, http_post};
 use window_diffusion::server::{serve, ServerConfig};
 use window_diffusion::tokenizer::Tokenizer;
+use window_diffusion::trace::TraceMode;
 use window_diffusion::util::json::{parse, Json};
 use window_diffusion::util::stats::Summary;
 use window_diffusion::util::threadpool::parallel_map;
@@ -110,7 +111,9 @@ fn build_state(
 }
 
 /// Mid-flight `/sessions` table: queue time (age minus busy) vs engine time
-/// per live session.
+/// per live session; with `--trace ring` the recorder-sourced `queue_ms`
+/// and `ttft_ms` columns fill in (printed as `-` when the trace is off or
+/// the first token has not committed yet).
 fn print_sessions_table(label: &str, body: &str) {
     let Ok(j) = parse(body) else { return };
     let Some(rows) = j.get("sessions").as_arr() else { return };
@@ -118,15 +121,22 @@ fn print_sessions_table(label: &str, body: &str) {
     if rows.is_empty() {
         return;
     }
-    println!("  {:>4} {:<22} {:>5} {:>9} {:>9}", "id", "strategy", "steps", "age_s", "busy_ms");
+    println!(
+        "  {:>4} {:<22} {:>5} {:>9} {:>9} {:>9} {:>9}",
+        "id", "strategy", "steps", "age_s", "busy_ms", "queue_ms", "ttft_ms"
+    );
     for r in rows {
+        let opt_ms =
+            |k: &str| r.get(k).as_f64().map_or("-".to_string(), |v| format!("{v:.2}"));
         println!(
-            "  {:>4} {:<22} {:>5} {:>9.3} {:>9.2}",
+            "  {:>4} {:<22} {:>5} {:>9.3} {:>9.2} {:>9} {:>9}",
             r.get("id").as_usize().unwrap_or(0),
             r.get("strategy").as_str().unwrap_or("?"),
             r.get("steps").as_usize().unwrap_or(0),
             r.get("age_secs").as_f64().unwrap_or(0.0),
             r.get("busy_ms").as_f64().unwrap_or(0.0),
+            opt_ms("queue_ms"),
+            opt_ms("ttft_ms"),
         );
     }
 }
@@ -299,6 +309,8 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     // -- phase 2: step-level scheduler (round-robin) ---------------------------
+    // ring tracing on: the mid-flight /sessions probe shows recorder-sourced
+    // queue_ms/ttft_ms next to the derived age/busy columns
     let sched = run_phase(
         "scheduler[rr]",
         build_state(
@@ -306,7 +318,11 @@ fn main() -> anyhow::Result<()> {
             None,
             tok.clone(),
             model_name,
-            SchedulerConfig { policy: Policy::RoundRobin, ..Default::default() },
+            SchedulerConfig {
+                policy: Policy::RoundRobin,
+                trace: TraceMode::Ring,
+                ..Default::default()
+            },
             1,
             false,
         ),

@@ -1,0 +1,232 @@
+//! Latency replay harness (ISSUE 6): a mixed request corpus — short and
+//! long generations, bursty arrivals, deadline-bound sessions — replayed
+//! through the ring-traced scheduler on the compute-bound mock
+//! (per-forward sleep). No artifacts needed, so CI runs it end to end; it
+//! emits `BENCH_6.json` at the repo root, extending the `BENCH_*.json`
+//! series (BENCH_4 coalescing, BENCH_5 replica scaling) with the latency
+//! trajectory: TTFT p50/p99, request p50/p99, and the per-stage breakdown
+//! from the trace recorder.
+//!
+//! Second phase: the trace-overhead smoke check. The same saturated
+//! workload runs under `--trace off` and `--trace ring`; the ring recorder
+//! is atomics-only on the hot path, so its steps/sec must stay within 10%
+//! of the off baseline (asserted — CI fails on regressions).
+//!
+//! ```bash
+//! cargo bench --bench latency_replay
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::EnginePool;
+use window_diffusion::scheduler::{BatchPolicy, Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::trace::TraceMode;
+use window_diffusion::util::json::Json;
+use window_diffusion::util::stats::Summary;
+
+const STEP_DELAY: Duration = Duration::from_millis(2);
+const SHORT_GEN: usize = 16;
+const LONG_GEN: usize = 96;
+const BURSTS: usize = 3;
+const BURST_GAP: Duration = Duration::from_millis(20);
+
+fn mock_pool(replicas: usize, delay: Duration) -> Arc<EnginePool> {
+    let mocks = (0..replicas)
+        .map(|_| {
+            Arc::new(MockExec::new(256).with_step_delay(delay))
+                as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(mocks).unwrap()
+}
+
+/// One corpus request: alternating short/long, window/full, every fourth
+/// deadline-bound (what the deadline policy would act on; here it exercises
+/// the deadline plumbing under replay).
+fn corpus_spec(i: usize) -> SubmitSpec {
+    let gen = if i % 2 == 0 { SHORT_GEN } else { LONG_GEN };
+    let strategy = if i % 4 == 3 { "window" } else { "full" };
+    let mut req = GenRequest::new(vec![10, 11, 12, 13], gen, 256);
+    req.adaptive = false;
+    SubmitSpec {
+        strategy: strategy.into(),
+        req,
+        deadline: (i % 4 == 1).then_some(Duration::from_millis(800)),
+    }
+}
+
+fn pctl_ms(s: &Option<Summary>, f: impl Fn(&Summary) -> f64) -> f64 {
+    s.as_ref().map_or(f64::NAN, |s| f(s) * 1e3)
+}
+
+/// Phase 2 helper: saturated no-burst corpus, trace off vs ring, steps/sec.
+fn overhead_run(trace: TraceMode, n_sessions: usize) -> f64 {
+    let pool = mock_pool(2, STEP_DELAY);
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig { trace, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    if let Some(tr) = sched.trace() {
+        pool.attach_trace(Arc::clone(tr));
+    }
+    sched.spawn_workers(2);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n_sessions)
+        .map(|i| {
+            let mut req = GenRequest::new(vec![10, 11, 12, 13], 32, 256);
+            req.adaptive = false;
+            let spec = SubmitSpec {
+                strategy: if i % 2 == 0 { "full".into() } else { "window".into() },
+                req,
+                deadline: None,
+            };
+            sched.submit(spec).expect("admit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("overhead workload completes");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    metrics.sched_steps_total.load(Ordering::Relaxed) as f64 / wall.max(1e-9)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_requests = bench_support::bench_n(24).max(BURSTS);
+    let per_burst = n_requests.div_ceil(BURSTS);
+
+    println!(
+        "latency_replay: {n_requests} requests ({SHORT_GEN}/{LONG_GEN} tok mixed, \
+         {BURSTS} bursts, every 4th deadline-bound), {STEP_DELAY:?}/forward, \
+         2 replicas, adaptive B<=4, --trace ring"
+    );
+    bench_support::hr(78);
+
+    // -- phase 1: traced replay of the mixed corpus ----------------------------
+    let pool = mock_pool(2, STEP_DELAY);
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            max_batch: 4,
+            batch_policy: BatchPolicy::Adaptive,
+            coalesce_waste_pct: 50,
+            trace: TraceMode::Ring,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    let tr = Arc::clone(sched.trace().expect("ring mode holds a recorder"));
+    pool.attach_trace(Arc::clone(&tr));
+    sched.spawn_workers(2);
+
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n_requests);
+    for burst in 0..BURSTS {
+        for i in (burst * per_burst)..((burst + 1) * per_burst).min(n_requests) {
+            tickets.push(sched.submit(corpus_spec(i)).expect("admit"));
+        }
+        if burst + 1 < BURSTS {
+            std::thread::sleep(BURST_GAP);
+        }
+    }
+    let mut request_secs = Vec::with_capacity(tickets.len());
+    for t in tickets {
+        let r = t.wait().expect("replay workload completes");
+        request_secs.push(r.wall.as_secs_f64());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    let steps_per_sec =
+        metrics.sched_steps_total.load(Ordering::Relaxed) as f64 / wall.max(1e-9);
+
+    let req = Some(Summary::of(&request_secs));
+    let ttft = tr.stages.ttft.summary();
+    let interstep = tr.stages.interstep.summary();
+    println!(
+        "replay: wall={wall:.2}s  {steps_per_sec:.1} steps/s  \
+         ttft p50={:.2}ms p99={:.2}ms  request p50={:.2}ms p99={:.2}ms  \
+         interstep p50={:.2}ms",
+        pctl_ms(&ttft, |s| s.p50),
+        pctl_ms(&ttft, |s| s.p99),
+        pctl_ms(&req, |s| s.p50),
+        pctl_ms(&req, |s| s.p99),
+        pctl_ms(&interstep, |s| s.p50),
+    );
+    println!(
+        "stage breakdown: queue={} plan={} forward={} apply={} pool_wait={} \
+         spans={} (ring cap {})",
+        tr.stages.queue.count(),
+        tr.stages.plan.count(),
+        tr.stages.forward.count(),
+        tr.stages.apply.count(),
+        tr.stages.pool_wait.count(),
+        tr.recorded(),
+        tr.capacity(),
+    );
+    anyhow::ensure!(
+        tr.stages.ttft.count() as usize == n_requests,
+        "every request must record exactly one TTFT sample ({} != {n_requests})",
+        tr.stages.ttft.count(),
+    );
+
+    // -- phase 2: trace-overhead smoke check (off vs ring) ---------------------
+    let n_overhead = bench_support::bench_n(24);
+    let off_sps = overhead_run(TraceMode::Off, n_overhead);
+    let ring_sps = overhead_run(TraceMode::Ring, n_overhead);
+    let ratio = bench_support::speedup(off_sps, ring_sps);
+    println!(
+        "overhead: off={off_sps:.1} steps/s  ring={ring_sps:.1} steps/s  \
+         ratio={ratio:.3} (floor 0.90)"
+    );
+    anyhow::ensure!(
+        ratio >= 0.90,
+        "--trace ring costs more than 10% steps/sec vs off ({ratio:.3})"
+    );
+    bench_support::hr(78);
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("latency_replay")),
+        ("issue", Json::num(6.0)),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("step_delay_ms", Json::num(STEP_DELAY.as_secs_f64() * 1e3)),
+        ("bursts", Json::num(BURSTS as f64)),
+        ("short_gen", Json::num(SHORT_GEN as f64)),
+        ("long_gen", Json::num(LONG_GEN as f64)),
+        ("steps_per_sec", Json::num(steps_per_sec)),
+        (
+            "ttft_ms",
+            Json::obj(vec![
+                ("p50", Json::num(pctl_ms(&ttft, |s| s.p50))),
+                ("p99", Json::num(pctl_ms(&ttft, |s| s.p99))),
+            ]),
+        ),
+        (
+            "request_ms",
+            Json::obj(vec![
+                ("p50", Json::num(pctl_ms(&req, |s| s.p50))),
+                ("p99", Json::num(pctl_ms(&req, |s| s.p99))),
+            ]),
+        ),
+        ("stages", tr.stages_json()),
+        (
+            "trace_overhead",
+            Json::obj(vec![
+                ("off_steps_per_sec", Json::num(off_sps)),
+                ("ring_steps_per_sec", Json::num(ring_sps)),
+                ("ratio", Json::num(ratio)),
+            ]),
+        ),
+    ]);
+    bench_support::write_bench_json("BENCH_6.json", &payload)?;
+    Ok(())
+}

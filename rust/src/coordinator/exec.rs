@@ -364,7 +364,13 @@ impl StepExec for EngineCell {
 
 /// Each forward checks out an idle replica (blocking while all are busy);
 /// metadata comes from the pool's construction-time snapshot, so it never
-/// contends with in-flight steps.
+/// contends with in-flight steps. When a [`TraceRecorder`] is attached to
+/// the pool, every forward routed here gets a `pool_wait` span (time spent
+/// waiting for an idle replica) and an `exec` span on the replica's trace
+/// track — forward *wall* time is recorded by the scheduler, so the two
+/// decompose a forward into wait vs. on-replica execution.
+///
+/// [`TraceRecorder`]: crate::trace::TraceRecorder
 impl StepExec for EnginePool {
     fn arch(&self) -> Arch {
         self.cached_arch().clone()

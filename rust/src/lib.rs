@@ -22,6 +22,8 @@
 //! * [`eval`] — task suites, graders, accuracy/throughput harness;
 //! * [`analysis`] — Fig. 2/3/4 token-level probes;
 //! * [`server`] — HTTP front end, connection admission, scheduler bridge;
+//! * [`trace`] — step-lifecycle span recorder: stage histograms, TTFT,
+//!   Chrome-trace export (`GET /trace`);
 //! * [`util`] — std-only substrates (JSON, RNG, stats, pool, mini-proptest).
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for
@@ -37,4 +39,5 @@ pub mod scheduler;
 pub mod server;
 pub mod strategies;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;

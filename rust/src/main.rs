@@ -24,6 +24,7 @@ use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfi
 use window_diffusion::server::{self, api::AppState, ServerConfig};
 use window_diffusion::strategies;
 use window_diffusion::tokenizer::Tokenizer;
+use window_diffusion::trace::TraceMode;
 use window_diffusion::{info, util};
 
 /// Tiny argv parser: positionals + `--key value` / `--key=value` / `--flag`.
@@ -122,6 +123,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // cross-bucket promotion is on by default under adaptive (half the
     // leader bucket may be padding), off under fixed (exact PR-3 behavior)
     let default_waste = if batch_policy == BatchPolicy::Adaptive { 50 } else { 0 };
+    // --trace ring turns on the step-lifecycle span recorder (GET /trace,
+    // latency_stages on GET /metrics); off is the zero-overhead default
+    let trace_arg = args.get("trace").unwrap_or("off");
+    let trace = TraceMode::from_name(trace_arg)
+        .ok_or_else(|| anyhow!("--trace must be 'off' or 'ring', got '{trace_arg}'"))?;
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
@@ -130,10 +136,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch,
         batch_policy,
         coalesce_waste_pct: args.usize_or("coalesce-waste-pct", default_waste).min(100),
+        trace,
     };
     let policy_name = sched_cfg.policy.name();
     let batch_policy_name = sched_cfg.batch_policy.name();
     let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
+    // replica checkout waits + on-replica exec spans land in the same ring
+    if let Some(tr) = scheduler.trace() {
+        pool.attach_trace(Arc::clone(tr));
+        info!("trace: ring recorder on — GET /trace for the Perfetto export");
+    }
     // one driver worker per replica: K sessions step in parallel
     scheduler.spawn_workers(replicas);
     let state = Arc::new(AppState {
@@ -300,7 +312,7 @@ fn main() -> Result<()> {
                  [--batch-policy fixed|adaptive] [--coalesce-waste-pct P] \
                  [--policy rr|shortest|deadline] \
                  [--kv-budget-mb N] [--kv-soft-mb N] [--max-sessions N] \
-                 [--workers N] [--queue N] [--direct]\n\
+                 [--workers N] [--queue N] [--direct] [--trace off|ring]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \
                  window-nocache | block[:size=32] | dkv[:interval=4] | \
                  fastdllm-prefix | fastdllm-dual"

@@ -14,8 +14,29 @@ pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum_us: AtomicU64,
-    /// raw samples for exact percentiles (bounded ring)
-    samples: Mutex<Vec<f64>>,
+    /// Raw samples for exact percentiles: a bounded ring. Once the vec
+    /// reaches `MAX_SAMPLES` the write cursor wraps and overwrites the
+    /// oldest sample, so percentiles track the trailing window instead of
+    /// freezing on the first 4096 recordings.
+    samples: Mutex<SampleRing>,
+}
+
+#[derive(Debug, Default)]
+struct SampleRing {
+    buf: Vec<f64>,
+    /// next write position (== buf.len() until the first wrap)
+    next: usize,
+}
+
+impl SampleRing {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < MAX_SAMPLES {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % MAX_SAMPLES;
+    }
 }
 
 const NBUCKETS: usize = 28;
@@ -27,7 +48,7 @@ impl Default for LatencyHistogram {
             buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
-            samples: Mutex::new(Vec::new()),
+            samples: Mutex::new(SampleRing::default()),
         }
     }
 }
@@ -39,10 +60,7 @@ impl LatencyHistogram {
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
-        let mut s = self.samples.lock().unwrap();
-        if s.len() < MAX_SAMPLES {
-            s.push(d.as_secs_f64());
-        }
+        self.samples.lock().unwrap().push(d.as_secs_f64());
     }
 
     pub fn count(&self) -> u64 {
@@ -59,10 +77,10 @@ impl LatencyHistogram {
 
     pub fn summary(&self) -> Option<Summary> {
         let s = self.samples.lock().unwrap();
-        if s.is_empty() {
+        if s.buf.is_empty() {
             None
         } else {
-            Some(Summary::of(&s))
+            Some(Summary::of(&s.buf))
         }
     }
 
@@ -73,7 +91,9 @@ impl LatencyHistogram {
         ];
         if let Some(s) = self.summary() {
             fields.push(("p50", Json::num(s.p50)));
+            fields.push(("p90", Json::num(s.p90)));
             fields.push(("p95", Json::num(s.p95)));
+            fields.push(("p99", Json::num(s.p99)));
             fields.push(("max", Json::num(s.max)));
         }
         Json::obj(fields)
@@ -294,6 +314,41 @@ mod tests {
         assert!((h.mean_secs() - 0.02).abs() < 1e-3);
         let s = h.summary().unwrap();
         assert!(s.max >= 0.029);
+    }
+
+    #[test]
+    fn histogram_samples_are_a_real_ring() {
+        let h = LatencyHistogram::default();
+        // Fill the ring with slow samples, then overwrite with fast ones.
+        for _ in 0..MAX_SAMPLES {
+            h.record(Duration::from_millis(100));
+        }
+        let frozen = h.summary().unwrap();
+        assert!(frozen.p50 > 0.05, "pre-wrap p50: {}", frozen.p50);
+        for _ in 0..MAX_SAMPLES {
+            h.record(Duration::from_millis(1));
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, MAX_SAMPLES, "ring stays bounded");
+        assert!(s.p50 < 0.01, "p50 froze on the first {MAX_SAMPLES} samples: {}", s.p50);
+        assert!(s.p99 < 0.01, "p99 froze: {}", s.p99);
+        assert_eq!(h.count(), 2 * MAX_SAMPLES as u64, "count is lifetime, not ring");
+    }
+
+    #[test]
+    fn histogram_exports_tail_percentiles() {
+        let h = LatencyHistogram::default();
+        for i in 1..=100u64 {
+            h.record(Duration::from_millis(i));
+        }
+        let j = h.to_json();
+        let near = |k: &str, want: f64| {
+            let got = j.get(k).as_f64().unwrap();
+            assert!((got - want).abs() < 1e-9, "{k}: {got} != {want}");
+        };
+        near("p50", 0.051);
+        near("p90", 0.090);
+        near("p99", 0.099);
     }
 
     #[test]

@@ -26,7 +26,8 @@
 //! [`EngineCell`]: super::engine::EngineCell
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -34,6 +35,7 @@ use super::engine::{Engine, EngineCell, EngineStatsSnapshot};
 use super::manifest::{Arch, Manifest, Specials};
 use super::weights::{distinct_banks, host_bytes_of, BankMode, WeightBank};
 use crate::coordinator::StepExec;
+use crate::trace::TraceRecorder;
 
 /// Per-replica observability row (`GET /metrics` → `replicas`).
 #[derive(Debug, Clone)]
@@ -54,6 +56,9 @@ pub struct EnginePool {
     available: Condvar,
     /// Per-replica step counters (lock-free; safe to read from `/metrics`).
     steps: Vec<AtomicU64>,
+    /// Optional span recorder (see [`EnginePool::attach_trace`]). Unattached
+    /// pools pay one atomic load per checkout and nothing else.
+    trace: OnceLock<Arc<TraceRecorder>>,
     // -- weight-bank accounting (snapshotted at construction) -----------------
     /// Replica-0 host bank (metadata / further sharing); `None` for
     /// bank-less replicas (plain mocks).
@@ -204,6 +209,7 @@ impl EnginePool {
             idle: Mutex::new((0..n).rev().collect()),
             available: Condvar::new(),
             steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            trace: OnceLock::new(),
             bank: banks.into_iter().next(),
             weight_bytes_host,
             weight_bytes_per_replica,
@@ -217,10 +223,23 @@ impl EnginePool {
         }))
     }
 
+    /// Attach a span recorder: every subsequent checkout records its wait
+    /// for an idle replica (`pool_wait`, attributed to the replica it got)
+    /// and every `with_replica` body records an `exec` span on that
+    /// replica's track. First attach wins; later calls are no-ops.
+    pub fn attach_trace(&self, tr: Arc<TraceRecorder>) {
+        let _ = self.trace.set(tr);
+    }
+
     fn checkout(&self) -> Checkout<'_> {
+        let t0 = self.trace.get().map(|_| Instant::now());
         let mut idle = self.idle.lock().unwrap();
         loop {
             if let Some(idx) = idle.pop() {
+                drop(idle);
+                if let (Some(tr), Some(t0)) = (self.trace.get(), t0) {
+                    tr.pool_wait(idx as u32, t0, Instant::now());
+                }
                 return Checkout { pool: self, idx };
             }
             idle = self.available.wait(idle).unwrap();
@@ -232,7 +251,12 @@ impl EnginePool {
     pub fn with_replica<R>(&self, f: impl FnOnce(&dyn StepExec) -> R) -> R {
         let co = self.checkout();
         self.steps[co.idx].fetch_add(1, Ordering::Relaxed);
-        f(self.replicas[co.idx].as_ref())
+        let t0 = self.trace.get().map(|_| Instant::now());
+        let r = f(self.replicas[co.idx].as_ref());
+        if let (Some(tr), Some(t0)) = (self.trace.get(), t0) {
+            tr.exec_span(co.idx as u32, t0, Instant::now());
+        }
+        r
     }
 
     pub fn replicas(&self) -> usize {
@@ -370,6 +394,23 @@ mod tests {
         assert!(p.replica_steps().iter().sum::<u64>() > 0);
         // mock replicas have no PJRT counters
         assert!(p.engine_stats().is_none());
+    }
+
+    #[test]
+    fn attached_trace_records_checkout_and_exec_spans() {
+        use crate::trace::{Stage, TraceRecorder};
+        let p = mock_pool(2);
+        let tr = Arc::new(TraceRecorder::new());
+        p.attach_trace(Arc::clone(&tr));
+        let ids = vec![1i32; 256];
+        let valid = vec![1.0f32; 256];
+        p.full(256, &ids, &valid).unwrap();
+        p.full(256, &ids, &valid).unwrap();
+        assert_eq!(tr.stages.pool_wait.count(), 2, "one checkout wait per forward");
+        let ev = tr.events();
+        let execs: Vec<_> = ev.iter().filter(|e| e.stage == Stage::Exec).collect();
+        assert_eq!(execs.len(), 2, "one exec span per forward");
+        assert!(execs.iter().all(|e| e.replica.is_some()), "exec spans carry replica ids");
     }
 
     /// Two calls that *must* overlap: a barrier inside the executor

@@ -167,6 +167,12 @@ pub struct BatchGovernor {
     /// (time, cumulative counters) ring pruned to `window`: trailing
     /// occupancy/waste are deltas between the newest and oldest entries.
     history: VecDeque<(Instant, CounterSnapshot)>,
+    /// `(from, to)` of the most recent decision that moved the width, held
+    /// until [`BatchGovernor::take_transition`] consumes it — the trace
+    /// recorder's width-change event source (exact under the scheduler's
+    /// governor mutex, unlike diffing the `batch_width` gauge, which
+    /// concurrent drivers could interleave).
+    last_transition: Option<(usize, usize)>,
 }
 
 impl BatchGovernor {
@@ -177,7 +183,16 @@ impl BatchGovernor {
             last_change: None,
             cap: None,
             history: VecDeque::new(),
+            last_transition: None,
         }
+    }
+
+    /// Consume the most recent width transition, if any decision since the
+    /// last call moved the width. Call under the same lock as `decide*` —
+    /// transitions are not queued, so an unconsumed one is overwritten by
+    /// the next move.
+    pub fn take_transition(&mut self) -> Option<(usize, usize)> {
+        self.last_transition.take()
     }
 
     pub fn width(&self) -> usize {
@@ -340,6 +355,7 @@ impl BatchGovernor {
 
         if target > self.width {
             // widen immediately: a burst should not wait out a timer
+            self.last_transition = Some((self.width, target));
             self.width = target;
             self.last_change = Some(now);
             self.reset_window(now, counters);
@@ -352,6 +368,7 @@ impl BatchGovernor {
                 .last_change
                 .map_or(true, |t| now.saturating_duration_since(t) >= self.cfg.dwell);
             if held || urgent > 0 {
+                self.last_transition = Some((self.width, target));
                 self.width = target;
                 self.last_change = Some(now);
                 self.reset_window(now, counters);
@@ -388,6 +405,20 @@ mod tests {
         let mut g = gov(8);
         assert_eq!(g.decide(t0, 0, snap(0, 0, 0, 0)), 1);
         assert_eq!(g.decide(t0 + Duration::from_millis(10), 1, snap(1, 1, 64, 0)), 1);
+    }
+
+    #[test]
+    fn width_transitions_are_consumable_once() {
+        let t0 = Instant::now();
+        let mut g = gov(8);
+        assert_eq!(g.take_transition(), None, "no decision yet");
+        // depth 9 widens 1 -> 8 immediately
+        assert_eq!(g.decide(t0, 9, snap(0, 0, 0, 0)), 8);
+        assert_eq!(g.take_transition(), Some((1, 8)));
+        assert_eq!(g.take_transition(), None, "transition consumed");
+        // same width again: no new transition
+        assert_eq!(g.decide(t0 + Duration::from_millis(1), 9, snap(1, 8, 64, 0)), 8);
+        assert_eq!(g.take_transition(), None);
     }
 
     #[test]

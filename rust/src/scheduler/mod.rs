@@ -62,12 +62,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::plan::{execute_plan, ForwardKind, Planned, Promotion, StepPlan};
+use crate::coordinator::plan::{
+    execute_plan, ForwardKind, Planned, Promotion, StepOutputs, StepPlan,
+};
 use crate::coordinator::{GenRequest, GenResult, StepExec};
 use crate::metrics::Metrics;
 use crate::runtime::{buckets, Arch};
 use crate::strategies::machine::kv_slot_bytes;
 use crate::strategies::{self, Session, StepOutcome};
+use crate::trace::{TraceMode, TraceRecorder};
 use crate::util::stats::RateMeter;
 use crate::util::threadpool::ThreadPool;
 
@@ -116,6 +119,11 @@ pub struct SchedulerConfig {
     /// of the leader bucket's total positions. 0 disables promotion
     /// (exact-bucket coalescing only — the PR-3 behavior).
     pub coalesce_waste_pct: usize,
+    /// Step-lifecycle tracing (`serve --trace {off,ring}`). `Off` (the
+    /// default) holds no recorder and adds no timestamp reads to the step
+    /// path; `Ring` records spans into a bounded ring (`GET /trace`) and
+    /// feeds the per-stage latency histograms on `GET /metrics`.
+    pub trace: TraceMode,
 }
 
 impl Default for SchedulerConfig {
@@ -128,6 +136,7 @@ impl Default for SchedulerConfig {
             max_batch: 1,
             batch_policy: BatchPolicy::Fixed,
             coalesce_waste_pct: 0,
+            trace: TraceMode::Off,
         }
     }
 }
@@ -226,6 +235,12 @@ pub struct SessionInfo {
     pub busy_ms: f64,
     pub kv_bytes: usize,
     pub deadline_in_secs: Option<f64>,
+    /// Accumulated run-queue wait (ms), including time in the queue right
+    /// now — from the trace recorder; `None` under `--trace off`.
+    pub queue_ms: Option<f64>,
+    /// Admit → first committed token (ms); `None` until the first token
+    /// lands or under `--trace off`.
+    pub ttft_ms: Option<f64>,
 }
 
 struct Active {
@@ -288,6 +303,10 @@ pub struct Scheduler {
     metrics: Arc<Metrics>,
     steps_total: AtomicU64,
     drivers: Mutex<Option<ThreadPool>>,
+    /// Present under `--trace ring`; `None` is the zero-overhead off mode
+    /// (every record site is gated on this Option, including its
+    /// `Instant::now()` reads).
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Scheduler {
@@ -314,6 +333,10 @@ impl Scheduler {
             Ordering::Relaxed,
         );
         let t0 = Instant::now();
+        let trace = match cfg.trace {
+            TraceMode::Off => None,
+            TraceMode::Ring => Some(Arc::new(TraceRecorder::new())),
+        };
         Arc::new(Scheduler {
             exec,
             b_ladder,
@@ -339,6 +362,7 @@ impl Scheduler {
             metrics,
             steps_total: AtomicU64::new(0),
             drivers: Mutex::new(None),
+            trace,
         })
     }
 
@@ -348,6 +372,12 @@ impl Scheduler {
 
     pub fn batch_policy(&self) -> BatchPolicy {
         self.cfg.batch_policy
+    }
+
+    /// The step-lifecycle trace recorder (`Some` under `--trace ring`) —
+    /// the `/trace` and `/metrics` handlers read it.
+    pub fn trace(&self) -> Option<&Arc<TraceRecorder>> {
+        self.trace.as_ref()
     }
 
     /// Admit a session. Admission checks (saturation, KV budget) run
@@ -422,6 +452,9 @@ impl Scheduler {
             deadline: spec.deadline.map(|d| Instant::now() + d),
             last_stepped: 0,
         });
+        if let Some(tr) = &self.trace {
+            tr.admit(id, Instant::now());
+        }
         self.update_gauges(&inner);
         // notify while holding the lock: a driver cannot miss the wakeup
         self.work.notify_one();
@@ -459,10 +492,16 @@ impl Scheduler {
                     // dead queue — fail it instead
                     inner.pool.release(id);
                     self.metrics.record_request(Duration::ZERO, 0, 0, false);
+                    if let Some(tr) = &self.trace {
+                        tr.finished(id);
+                    }
                     active.ticket.fulfill(Err(anyhow!(
                         "scheduler shut down mid-generation"
                     )));
                 } else {
+                    if let Some(tr) = &self.trace {
+                        tr.requeued(id, Instant::now());
+                    }
                     inner.run.push_back(active);
                     // another driver may be parked with an empty queue
                     self.work.notify_one();
@@ -470,6 +509,9 @@ impl Scheduler {
             }
             Ok(StepOutcome::Finished) => {
                 inner.pool.release(id);
+                if let Some(tr) = &self.trace {
+                    tr.finished(id);
+                }
                 let Active { session, ticket, .. } = active;
                 let result = session.into_result();
                 self.metrics.record_request(
@@ -483,9 +525,32 @@ impl Scheduler {
             Err(e) => {
                 inner.pool.release(id);
                 self.metrics.record_request(Duration::ZERO, 0, 0, false);
+                if let Some(tr) = &self.trace {
+                    tr.finished(id);
+                }
                 active.ticket.fulfill(Err(e));
             }
         }
+    }
+
+    /// Apply a step's outputs, recording the apply span and — when newly
+    /// decoded positions landed — a commit event (the first commit closes
+    /// the session's TTFT window). A plain `Session::apply` under
+    /// `--trace off`.
+    fn apply_traced(&self, active: &mut Active, out: StepOutputs) -> Result<StepOutcome> {
+        let Some(tr) = &self.trace else {
+            return active.session.apply(out);
+        };
+        let rem_before = active.session.remaining();
+        let a0 = Instant::now();
+        let r = active.session.apply(out);
+        let now = Instant::now();
+        tr.apply(active.id, a0, now);
+        let rem_after = active.session.remaining();
+        if rem_after < rem_before {
+            tr.commit(active.id, (rem_before - rem_after) as u32, now);
+        }
+        r
     }
 
     /// Book one per-kind forward into the metrics counters. `b` is the
@@ -579,10 +644,16 @@ impl Scheduler {
                     (depth, urgent)
                 };
                 let snap = CounterSnapshot::of(&self.metrics);
-                let w = g
-                    .lock()
-                    .unwrap()
-                    .decide_deadline(Instant::now(), depth, urgent, snap);
+                let w = {
+                    let mut gov = g.lock().unwrap();
+                    let w = gov.decide_deadline(Instant::now(), depth, urgent, snap);
+                    if let Some(tr) = &self.trace {
+                        if let Some((from, to)) = gov.take_transition() {
+                            tr.width_change(from, to, Instant::now());
+                        }
+                    }
+                    w
+                };
                 self.metrics.batch_width.store(w as u64, Ordering::Relaxed);
                 w
             }
@@ -608,16 +679,25 @@ impl Scheduler {
         inner.stepping_bytes += checkout_bytes;
         inner.quantum += 1;
         active.last_stepped = inner.quantum;
+        if let Some(tr) = &self.trace {
+            tr.picked(id, Instant::now());
+        }
         drop(inner);
 
         let mut forwarded = false;
-        let outcome = match active.session.plan() {
+        let plan_start = self.trace.as_ref().map(|_| Instant::now());
+        let planned = active.session.plan();
+        if let (Some(tr), Some(p0)) = (&self.trace, plan_start) {
+            tr.plan(id, p0, Instant::now());
+        }
+        let outcome = match planned {
             // zero-work session (gen_len == 0): finished without an engine call
             Ok(Planned::Finished) => Ok(StepOutcome::Finished),
             Ok(Planned::Forward(plan)) => {
                 forwarded = true;
+                let kind = plan.kind();
                 self.note_forward(
-                    plan.kind(),
+                    kind,
                     1,
                     plan.used_positions(),
                     plan.padded_positions(),
@@ -627,8 +707,11 @@ impl Scheduler {
                 let t0 = Instant::now();
                 let res = execute_plan(self.exec.as_ref(), plan);
                 active.session.add_busy(t0.elapsed());
+                if let Some(tr) = &self.trace {
+                    tr.forward(kind, id, 1, t0, Instant::now());
+                }
                 match res {
-                    Ok(out) => active.session.apply(out),
+                    Ok(out) => self.apply_traced(&mut active, out),
                     Err(e) => Err(e),
                 }
             }
@@ -680,7 +763,15 @@ impl Scheduler {
         let leader_bytes = leader.session.cache_bytes();
         inner.quantum += 1;
         leader.last_stepped = inner.quantum;
-        let leader_plan = match leader.session.plan() {
+        if let Some(tr) = &self.trace {
+            tr.picked(leader_id, Instant::now());
+        }
+        let plan_start = self.trace.as_ref().map(|_| Instant::now());
+        let leader_planned = leader.session.plan();
+        if let (Some(tr), Some(p0)) = (&self.trace, plan_start) {
+            tr.plan(leader_id, p0, Instant::now());
+        }
+        let leader_plan = match leader_planned {
             Ok(Planned::Forward(p)) => p,
             Ok(Planned::Finished) => {
                 // zero-work session (gen_len == 0): book without an engine call
@@ -699,6 +790,7 @@ impl Scheduler {
         // -- coalesce compatible followers (policy order preserved) -----------
         let mut lanes: Vec<(Active, StepPlan, usize, Option<Promotion>)> =
             vec![(leader, leader_plan, leader_bytes, None)];
+        let scan_start = self.trace.as_ref().map(|_| Instant::now());
         if max_batch > 1 {
             let mut skipped: Vec<Active> = Vec::new();
             // bound the scan: a heterogeneous queue must not make one tick
@@ -710,7 +802,15 @@ impl Scheduler {
                 let Some(mut cand) = self.pick_active(&mut inner) else { break };
                 let cand_id = cand.id;
                 let cand_bytes = cand.session.cache_bytes();
-                match cand.session.plan() {
+                if let Some(tr) = &self.trace {
+                    tr.picked(cand_id, Instant::now());
+                }
+                let cand_plan_start = self.trace.as_ref().map(|_| Instant::now());
+                let cand_planned = cand.session.plan();
+                if let (Some(tr), Some(p0)) = (&self.trace, cand_plan_start) {
+                    tr.plan(cand_id, p0, Instant::now());
+                }
+                match cand_planned {
                     Ok(Planned::Forward(p)) if p.compatible(&lanes[0].1) => {
                         inner.quantum += 1;
                         cand.last_stepped = inner.quantum;
@@ -771,8 +871,14 @@ impl Scheduler {
             // skipped sessions return to the queue FRONT in pick order, so
             // their policy position is unchanged for the next tick
             for a in skipped.into_iter().rev() {
+                if let Some(tr) = &self.trace {
+                    tr.requeued(a.id, Instant::now());
+                }
                 inner.run.push_front(a);
             }
+        }
+        if let (Some(tr), Some(s0)) = (&self.trace, scan_start) {
+            tr.coalesce(leader_id, lanes.len() as u32, s0, Instant::now());
         }
 
         // book resident bytes at checkout: mid-step caches must stay visible
@@ -825,6 +931,12 @@ impl Scheduler {
             self.exec.execute_batch(plans)
         };
         let fwd_wall = t0.elapsed();
+        if let Some(tr) = &self.trace {
+            // a coalesced batch is ONE span on the leader's track, lane
+            // count annotated — this is what makes governor width decisions
+            // visually auditable in Perfetto
+            tr.forward(kind, leader_id, n_lanes as u32, t0, t0 + fwd_wall);
+        }
         if outs.len() != n_lanes {
             // a misbehaving executor must not strand tickets: every lane
             // books SOME outcome (excess results are dropped, missing lanes
@@ -855,7 +967,7 @@ impl Scheduler {
                         None => Ok(o),
                     };
                     match demoted {
-                        Ok(o) => active.session.apply(o),
+                        Ok(o) => self.apply_traced(&mut active, o),
                         Err(e) => Err(e),
                     }
                 }
@@ -922,6 +1034,9 @@ impl Scheduler {
             let a = &mut inner.run[idx];
             let freed = a.session.cache_bytes();
             a.session.evict_cache();
+            if let Some(tr) = &self.trace {
+                tr.evict(a.id, Instant::now());
+            }
             inner.pool.note_eviction();
             resident = resident.saturating_sub(freed);
         }
@@ -978,22 +1093,33 @@ impl Scheduler {
         inner
             .run
             .iter()
-            .map(|a| SessionInfo {
-                id: a.id,
-                strategy: a.session.strategy.clone(),
-                steps: a.session.steps(),
-                remaining: a.session.remaining(),
-                gen_len: a.session.req().gen_len,
-                age_secs: a.session.age().as_secs_f64(),
-                busy_ms: a.session.busy().as_secs_f64() * 1e3,
-                kv_bytes: a.session.cache_bytes(),
-                deadline_in_secs: a.deadline.map(|d| {
-                    if d > now {
-                        (d - now).as_secs_f64()
-                    } else {
-                        -((now - d).as_secs_f64())
-                    }
-                }),
+            .map(|a| {
+                let (queue_ms, ttft_ms) = match &self.trace {
+                    Some(tr) => match tr.session_timing(a.id, now) {
+                        Some((q, t)) => (Some(q), t),
+                        None => (None, None),
+                    },
+                    None => (None, None),
+                };
+                SessionInfo {
+                    id: a.id,
+                    strategy: a.session.strategy.clone(),
+                    steps: a.session.steps(),
+                    remaining: a.session.remaining(),
+                    gen_len: a.session.req().gen_len,
+                    age_secs: a.session.age().as_secs_f64(),
+                    busy_ms: a.session.busy().as_secs_f64() * 1e3,
+                    kv_bytes: a.session.cache_bytes(),
+                    deadline_in_secs: a.deadline.map(|d| {
+                        if d > now {
+                            (d - now).as_secs_f64()
+                        } else {
+                            -((now - d).as_secs_f64())
+                        }
+                    }),
+                    queue_ms,
+                    ttft_ms,
+                }
             })
             .collect()
     }
@@ -1073,6 +1199,9 @@ impl Scheduler {
             // book the failure like any other error path so /metrics stays
             // consistent with the 500s the waiting clients observe
             self.metrics.record_request(Duration::ZERO, 0, 0, false);
+            if let Some(tr) = &self.trace {
+                tr.finished(active.id);
+            }
             active.ticket.fulfill(Err(anyhow!("scheduler shut down")));
         }
         self.update_gauges(&inner);
@@ -1485,7 +1614,77 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert!(rows[0].busy_ms >= 0.0);
         assert!(rows[0].age_secs >= 0.0);
+        // --trace off (the default): no recorder, no per-session timing
+        assert!(s.trace().is_none());
+        assert!(rows[0].queue_ms.is_none());
+        assert!(rows[0].ttft_ms.is_none());
         while s.tick().is_some() {}
+    }
+
+    #[test]
+    fn trace_ring_records_lifecycle_and_ttft() {
+        use crate::trace::Stage;
+        let s = mock_sched(SchedulerConfig {
+            trace: TraceMode::Ring,
+            ..Default::default()
+        });
+        let t = s.submit(spec("full", 16)).unwrap();
+        s.tick(); // first quantum commits the first tokens (full: 2/step)
+        let rows = s.sessions();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].queue_ms.is_some(), "queue_ms missing under --trace ring");
+        assert!(rows[0].ttft_ms.is_some(), "first commit landed; ttft must be set");
+        while s.tick().is_some() {}
+        t.wait().unwrap();
+        let tr = s.trace().expect("ring mode holds a recorder");
+        let ev = tr.events();
+        for want in [
+            Stage::Admit,
+            Stage::QueueWait,
+            Stage::Plan,
+            Stage::Forward,
+            Stage::Apply,
+            Stage::Commit,
+        ] {
+            assert!(ev.iter().any(|e| e.stage == want), "missing stage {want:?}");
+        }
+        assert_eq!(tr.stages.ttft.count(), 1, "one session, one TTFT sample");
+        assert!(tr.stages.queue.count() >= 1);
+        assert!(tr.stages.forward_full.count() >= 1);
+        assert!(
+            tr.stages.interstep.count() >= 1,
+            "an 8-step generation must record inter-step latency"
+        );
+        let j = tr.chrome_json();
+        assert!(!j.get("traceEvents").as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn trace_ring_coalesced_forward_is_one_span_with_lanes() {
+        use crate::trace::Stage;
+        let s = mock_sched(SchedulerConfig {
+            max_batch: 4,
+            trace: TraceMode::Ring,
+            ..Default::default()
+        });
+        let tickets: Vec<_> = (0..4).map(|_| s.submit(spec("full", 16)).unwrap()).collect();
+        while s.tick().is_some() {}
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let tr = s.trace().unwrap();
+        let ev = tr.events();
+        let wide = ev
+            .iter()
+            .find(|e| e.stage == Stage::Forward && e.lanes == 4)
+            .expect("no 4-lane coalesced forward span recorded");
+        assert_eq!(wide.kind, Some(ForwardKind::Full));
+        assert!(
+            ev.iter().any(|e| e.stage == Stage::Coalesce && e.lanes == 4),
+            "coalescing scan span missing"
+        );
+        // four sessions → four TTFT samples, one per first commit
+        assert_eq!(tr.stages.ttft.count(), 4);
     }
 
     #[test]

@@ -6,14 +6,20 @@
 //!   tokens_per_sec, strategy, eos}`; `429` on scheduler/KV-pool
 //!   backpressure
 //! * `GET /sessions`  — in-flight scheduler sessions (id, strategy, steps,
-//!   remaining, kv_bytes, age_secs, busy_ms — age minus busy is queue time)
+//!   remaining, kv_bytes, age_secs, busy_ms — age minus busy is queue time;
+//!   with `--trace ring`, recorder-sourced `queue_ms` and `ttft_ms`)
+//! * `GET /trace`     — the step-lifecycle span ring as Chrome trace-event
+//!   JSON (`{"traceEvents":[...]}`, loadable in Perfetto /
+//!   `chrome://tracing`); empty under `--trace off`
 //! * `GET /metrics`   — serving counters + scheduler gauges + latency
 //!   histogram + batched-forward accounting (`batch_occupancy` and the
 //!   windowed `batch_occupancy_recent`, per-kind `forwards` with
 //!   padding-waste and per-bucket dispatch counters — the
 //!   `aot.py --prune-buckets` input) + adaptive-coalescing gauges
 //!   (`batch_policy`, `batch_width`, `promoted_lanes`,
-//!   `promoted_padded_slots`); with an engine-replica pool, per-replica
+//!   `promoted_padded_slots`); with `--trace ring`, per-stage latency
+//!   histograms + TTFT/inter-step under `"latency_stages"` (p50/p90/p99);
+//!   with an engine-replica pool, per-replica
 //!   step/execution gauges under `"replicas"` plus the weight-bank
 //!   residency gauges (`bank_mode`, `weight_bytes_host`,
 //!   `weight_bytes_per_replica`)
@@ -173,6 +179,13 @@ fn sessions_json(st: &AppState) -> Json {
                 ("busy_ms", Json::num(s.busy_ms)),
                 ("kv_bytes", Json::num(s.kv_bytes as f64)),
             ];
+            // recorder-sourced timing (absent under --trace off)
+            if let Some(q) = s.queue_ms {
+                fields.push(("queue_ms", Json::num(q)));
+            }
+            if let Some(t) = s.ttft_ms {
+                fields.push(("ttft_ms", Json::num(t)));
+            }
             if let Some(d) = s.deadline_in_secs {
                 fields.push(("deadline_in_secs", Json::num(d)));
             }
@@ -224,6 +237,11 @@ fn metrics_json(st: &AppState) -> Json {
             Json::str(st.scheduler.batch_policy().name()),
         );
     }
+    // per-stage latency histograms + TTFT/inter-step (only with a recorder;
+    // --trace off keeps /metrics byte-compatible with the pre-trace shape)
+    if let (Some(tr), Json::Obj(fields)) = (st.scheduler.trace(), &mut j) {
+        fields.insert("latency_stages".into(), tr.stages_json());
+    }
     if let (Some(pool), Json::Obj(fields)) = (&st.pool, &mut j) {
         fields.insert("replica_count".into(), Json::num(pool.replicas() as f64));
         fields.insert("replicas".into(), replicas_json(pool));
@@ -263,6 +281,13 @@ pub fn route(st: &AppState, req: &Request) -> Response {
         ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#.to_string()),
         ("GET", "/metrics") => Response::json(200, metrics_json(st).to_string()),
         ("GET", "/sessions") => Response::json(200, sessions_json(st).to_string()),
+        ("GET", "/trace") => {
+            let body = match st.scheduler.trace() {
+                Some(tr) => tr.chrome_json().to_string(),
+                None => r#"{"traceEvents":[]}"#.to_string(),
+            };
+            Response::json(200, body)
+        }
         ("GET", "/info") => Response::json(
             200,
             Json::obj(vec![
@@ -311,18 +336,31 @@ mod tests {
     use super::*;
     use crate::coordinator::MockExec;
     use crate::scheduler::SchedulerConfig;
+    use crate::trace::TraceMode;
 
     /// Full AppState over the mock executor — the whole route surface is
-    /// testable without artifacts.
+    /// testable without artifacts. Trace mode is `ring` so the `/trace` and
+    /// `latency_stages` surfaces are exercised end to end.
     fn mock_state(direct: bool) -> Arc<AppState> {
+        mock_state_cfg(direct, true)
+    }
+
+    /// `spawn: false` leaves the scheduler driverless so tests can `tick()`
+    /// by hand and observe deterministic mid-flight state.
+    fn mock_state_cfg(direct: bool, spawn: bool) -> Arc<AppState> {
         let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
         let metrics = Arc::new(Metrics::default());
         let scheduler = Scheduler::new(
             Arc::clone(&exec),
-            SchedulerConfig::default(),
+            SchedulerConfig {
+                trace: TraceMode::Ring,
+                ..Default::default()
+            },
             Arc::clone(&metrics),
         );
-        scheduler.spawn();
+        if spawn {
+            scheduler.spawn();
+        }
         let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
             .iter()
             .map(|s| s.to_string())
@@ -412,6 +450,91 @@ mod tests {
         let i = get(&st, "/info");
         let ij = parse(std::str::from_utf8(&i.body).unwrap()).unwrap();
         assert_eq!(ij.get("batch_policy").as_str(), Some("fixed"));
+        st.scheduler.shutdown();
+    }
+
+    /// Pins the Chrome trace-event shape: every event must carry
+    /// name/ph/ts/pid/tid (what Perfetto's importer requires), and a served
+    /// request must yield at least one complete ("X") span.
+    #[test]
+    fn trace_route_emits_chrome_trace_json() {
+        let st = mock_state(false);
+        let resp = post(&st, r#"{"prompt":"w1 w2 w3","gen_len":16,"strategy":"window"}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let t = get(&st, "/trace");
+        assert_eq!(t.status, 200);
+        let j = parse(std::str::from_utf8(&t.body).unwrap()).unwrap();
+        let events = j.get("traceEvents").as_arr().expect("traceEvents array");
+        assert!(!events.is_empty(), "served a request but recorded no spans");
+        for e in events {
+            for field in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(
+                    !matches!(e.get(field), Json::Null),
+                    "trace event missing '{field}': {}",
+                    e.to_string()
+                );
+            }
+        }
+        assert!(
+            events.iter().any(|e| e.get("ph").as_str() == Some("X")),
+            "no complete spans in the export"
+        );
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn metrics_expose_latency_stages_with_tail_percentiles() {
+        let st = mock_state(false);
+        let resp = post(&st, r#"{"prompt":"w1 w2","gen_len":16,"strategy":"full"}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        let stages = mj.get("latency_stages");
+        assert!(!matches!(stages, Json::Null), "latency_stages missing under ring trace");
+        for k in ["queue", "plan", "forward", "apply", "ttft", "interstep"] {
+            assert!(
+                stages.get(k).get("count").as_i64().is_some(),
+                "missing stage histogram '{k}'"
+            );
+        }
+        assert!(stages.get("ttft").get("count").as_i64().unwrap_or(0) >= 1);
+        assert!(stages.get("forward").get("p99").as_f64().is_some());
+        assert!(
+            stages
+                .get_path(&["forward_by_kind", "full", "count"])
+                .as_i64()
+                .unwrap_or(0)
+                >= 1,
+            "full-strategy request must account under forward_by_kind.full"
+        );
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn sessions_rows_carry_queue_and_ttft_under_ring_trace() {
+        let st = mock_state_cfg(false, false); // no drivers: tick by hand
+        let spec = SubmitSpec {
+            strategy: "full".into(),
+            req: GenRequest::new(vec![10, 11, 12], 16, 256),
+            deadline: None,
+        };
+        let _t = st.scheduler.submit(spec).unwrap();
+        st.scheduler.tick(); // first step commits → ttft is known
+        let resp = get(&st, "/sessions");
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let rows = j.get("sessions").as_arr().expect("sessions array");
+        assert_eq!(rows.len(), 1);
+        assert!(
+            rows[0].get("queue_ms").as_f64().is_some(),
+            "queue_ms missing: {}",
+            rows[0].to_string()
+        );
+        assert!(
+            rows[0].get("ttft_ms").as_f64().is_some(),
+            "ttft_ms missing: {}",
+            rows[0].to_string()
+        );
+        while st.scheduler.tick().is_some() {}
         st.scheduler.shutdown();
     }
 

@@ -1,0 +1,816 @@
+//! Step-lifecycle tracing: a bounded, lock-free-on-the-hot-path span
+//! recorder threaded through the request path (admit → queue-wait → plan →
+//! coalesce → pool-checkout wait → forward → apply → commit → evict), plus
+//! the per-stage latency accounting behind `GET /metrics` and the Chrome
+//! trace-event export behind `GET /trace`.
+//!
+//! Design notes:
+//!
+//! * **Ring**: events land in a fixed-capacity slot array indexed by an
+//!   atomic ticket counter (`fetch_add % capacity`), each slot guarded by a
+//!   per-slot seqlock. Writers never block, never allocate, and never
+//!   contend on a mutex; when the ring wraps, the oldest events are simply
+//!   overwritten. Readers (`events()`, `chrome_json()`) discard slots whose
+//!   seqlock changed mid-read, so a torn event is dropped, not emitted.
+//! * **Clock discipline**: the recorder owns a single monotonic origin
+//!   `Instant`; every record method takes explicit `Instant`s, so tests
+//!   inject synthetic clocks (`origin + Duration`) and never sleep.
+//!   Timestamps serialize as µs-since-origin, which is exactly the `ts`
+//!   unit Chrome trace events want.
+//! * **Attribution**: session-scoped events carry the scheduler session id
+//!   (Chrome `tid` on pid [`PID_SESSIONS`]); executor-scoped events carry
+//!   the replica index (`tid` on pid [`PID_EXEC`]). Coalesced forwards are
+//!   ONE span on the leader's track with `lanes`/`kind` args.
+//!
+//! The stage histograms ([`StageStats`]) are ordinary [`LatencyHistogram`]s
+//! — they sit off the ring so `GET /metrics` percentiles survive ring
+//! wrap-around, and they are only touched from the scheduler's booking
+//! path, not from inside the forward.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::plan::ForwardKind;
+use crate::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+/// `serve --trace {off,ring}`. `Off` is the zero-overhead default: the
+/// scheduler holds no recorder and skips every timestamp read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    #[default]
+    Off,
+    Ring,
+}
+
+impl TraceMode {
+    pub fn from_name(s: &str) -> Option<TraceMode> {
+        match s {
+            "off" => Some(TraceMode::Off),
+            "ring" => Some(TraceMode::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Ring => "ring",
+        }
+    }
+}
+
+/// Lifecycle stage of a recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Session admitted to the run queue (instant).
+    Admit,
+    /// Span spent waiting in the run queue before being picked.
+    QueueWait,
+    /// `Session::plan()` span.
+    Plan,
+    /// Follower-scan span of a coalesced tick (leader track).
+    Coalesce,
+    /// Wait for an idle pool replica (executor track).
+    PoolWait,
+    /// Model forward; one span per dispatch, coalesced lanes annotated.
+    Forward,
+    /// Replica-side execution span (per-replica attribution).
+    Exec,
+    /// `Session::apply()` span.
+    Apply,
+    /// Tokens committed (instant; `lanes` = tokens this step).
+    Commit,
+    /// KV cache evicted under memory pressure (instant).
+    Evict,
+    /// Governor width change (instant; `session` = old, `lanes` = new).
+    Width,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::QueueWait => "queue_wait",
+            Stage::Plan => "plan",
+            Stage::Coalesce => "coalesce",
+            Stage::PoolWait => "pool_wait",
+            Stage::Forward => "forward",
+            Stage::Exec => "exec",
+            Stage::Apply => "apply",
+            Stage::Commit => "commit",
+            Stage::Evict => "evict",
+            Stage::Width => "width",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            Stage::Admit => 1,
+            Stage::QueueWait => 2,
+            Stage::Plan => 3,
+            Stage::Coalesce => 4,
+            Stage::PoolWait => 5,
+            Stage::Forward => 6,
+            Stage::Exec => 7,
+            Stage::Apply => 8,
+            Stage::Commit => 9,
+            Stage::Evict => 10,
+            Stage::Width => 11,
+        }
+    }
+
+    fn from_code(c: u64) -> Option<Stage> {
+        Some(match c {
+            1 => Stage::Admit,
+            2 => Stage::QueueWait,
+            3 => Stage::Plan,
+            4 => Stage::Coalesce,
+            5 => Stage::PoolWait,
+            6 => Stage::Forward,
+            7 => Stage::Exec,
+            8 => Stage::Apply,
+            9 => Stage::Commit,
+            10 => Stage::Evict,
+            11 => Stage::Width,
+            _ => return None,
+        })
+    }
+}
+
+/// Sentinel for "no replica" in the packed event word.
+const NO_REPLICA: u32 = u32::MAX;
+
+/// One decoded ring event (the read-side view; slots store packed words).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    pub kind: Option<ForwardKind>,
+    pub session: u64,
+    pub replica: Option<u32>,
+    pub lanes: u32,
+    /// µs since the recorder's origin.
+    pub start_us: u64,
+    /// 0 for instant events.
+    pub dur_us: u64,
+}
+
+fn kind_code(k: Option<ForwardKind>) -> u64 {
+    match k {
+        None => 0,
+        Some(ForwardKind::Full) => 1,
+        Some(ForwardKind::Window) => 2,
+        Some(ForwardKind::Cached) => 3,
+    }
+}
+
+fn kind_from_code(c: u64) -> Option<ForwardKind> {
+    match c {
+        1 => Some(ForwardKind::Full),
+        2 => Some(ForwardKind::Window),
+        3 => Some(ForwardKind::Cached),
+        _ => None,
+    }
+}
+
+/// Per-slot seqlock: `seq == 0` means never written; odd means a writer is
+/// mid-flight; even (>= 2) means the words are a consistent event.
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; 4],
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            words: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+}
+
+/// Per-stage latency histograms feeding `GET /metrics`: the queue → plan →
+/// forward → apply breakdown (forwards also split per kind), TTFT
+/// (admit → first committed token), inter-step commit latency, and pool
+/// checkout wait.
+#[derive(Debug, Default)]
+pub struct StageStats {
+    pub queue: LatencyHistogram,
+    pub plan: LatencyHistogram,
+    pub forward: LatencyHistogram,
+    pub forward_full: LatencyHistogram,
+    pub forward_window: LatencyHistogram,
+    pub forward_cached: LatencyHistogram,
+    pub apply: LatencyHistogram,
+    pub pool_wait: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+    pub interstep: LatencyHistogram,
+}
+
+impl StageStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue", self.queue.to_json()),
+            ("plan", self.plan.to_json()),
+            ("forward", self.forward.to_json()),
+            (
+                "forward_by_kind",
+                Json::obj(vec![
+                    ("full", self.forward_full.to_json()),
+                    ("window", self.forward_window.to_json()),
+                    ("cached", self.forward_cached.to_json()),
+                ]),
+            ),
+            ("apply", self.apply.to_json()),
+            ("pool_wait", self.pool_wait.to_json()),
+            ("ttft", self.ttft.to_json()),
+            ("interstep", self.interstep.to_json()),
+        ])
+    }
+}
+
+/// Per-session lifecycle bookkeeping (admit time, queue-wait accumulation,
+/// TTFT, inter-step). Lives in a side map keyed by session id; entries are
+/// dropped when the session finishes.
+#[derive(Debug, Clone, Copy)]
+struct SessionTiming {
+    admit: Instant,
+    /// Set while the session sits in the run queue; cleared on pick.
+    queued_since: Option<Instant>,
+    queue_wait: Duration,
+    ttft: Option<Duration>,
+    last_commit: Option<Instant>,
+}
+
+/// Chrome `pid` for session-lifecycle tracks (`tid` = session id).
+pub const PID_SESSIONS: u64 = 1;
+/// Chrome `pid` for executor tracks (`tid` = replica index).
+pub const PID_EXEC: u64 = 2;
+
+const DEFAULT_CAPACITY: usize = 32 * 1024;
+
+/// The span recorder. One per scheduler when `--trace ring`; absent (and
+/// cost-free) when `--trace off`.
+pub struct TraceRecorder {
+    origin: Instant,
+    ticket: AtomicU64,
+    slots: Vec<Slot>,
+    pub stages: StageStats,
+    sessions: Mutex<HashMap<u64, SessionTiming>>,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.ticket.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder::with_origin(Instant::now(), DEFAULT_CAPACITY)
+    }
+
+    /// Injectable clock + ring size (tests pass a fixed origin and a tiny
+    /// capacity to exercise wrap-around deterministically).
+    pub fn with_origin(origin: Instant, capacity: usize) -> TraceRecorder {
+        assert!(capacity > 0, "trace ring needs at least one slot");
+        TraceRecorder {
+            origin,
+            ticket: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Slot::empty()).collect(),
+            stages: StageStats::default(),
+            sessions: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (not clamped to capacity).
+    pub fn recorded(&self) -> u64 {
+        self.ticket.load(Ordering::Relaxed)
+    }
+
+    fn us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.origin).as_micros() as u64
+    }
+
+    /// Core ring write: claim a ticket, seqlock the slot, store four packed
+    /// words. Atomics only — no lock, no allocation, no syscall.
+    #[allow(clippy::too_many_arguments)]
+    fn push(&self, stage: Stage, kind: Option<ForwardKind>, session: u64,
+            replica: Option<u32>, lanes: u32, start_us: u64, dur_us: u64) {
+        let ticket = self.ticket.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        // Seq values are derived from the ticket so a reader that catches a
+        // slot mid-overwrite sees the seq change and discards the read.
+        let writing = 2 * ticket + 1;
+        let stable = 2 * ticket + 2;
+        slot.seq.store(writing, Ordering::Release);
+        let rep = replica.unwrap_or(NO_REPLICA) as u64;
+        let w0 = stage.code() | (kind_code(kind) << 8) | ((lanes as u64) << 16) | (rep << 32);
+        slot.words[0].store(w0, Ordering::Relaxed);
+        slot.words[1].store(session, Ordering::Relaxed);
+        slot.words[2].store(start_us, Ordering::Relaxed);
+        slot.words[3].store(dur_us, Ordering::Relaxed);
+        slot.seq.store(stable, Ordering::Release);
+    }
+
+    // -- lifecycle hooks (called by scheduler / pool) -------------------------
+
+    /// Session admitted to the run queue.
+    pub fn admit(&self, session: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Admit, None, session, None, 0, t, 0);
+        self.sessions.lock().unwrap().insert(
+            session,
+            SessionTiming {
+                admit: now,
+                queued_since: Some(now),
+                queue_wait: Duration::ZERO,
+                ttft: None,
+                last_commit: None,
+            },
+        );
+    }
+
+    /// Session picked off the run queue: close its queue-wait span.
+    pub fn picked(&self, session: u64, now: Instant) {
+        let mut map = self.sessions.lock().unwrap();
+        if let Some(t) = map.get_mut(&session) {
+            if let Some(since) = t.queued_since.take() {
+                let wait = now.saturating_duration_since(since);
+                t.queue_wait += wait;
+                drop(map);
+                self.stages.queue.record(wait);
+                self.push(Stage::QueueWait, None, session, None, 0, self.us(since),
+                          wait.as_micros() as u64);
+            }
+        }
+    }
+
+    /// Session re-entered the run queue after a step (or a skipped pick).
+    pub fn requeued(&self, session: u64, now: Instant) {
+        if let Some(t) = self.sessions.lock().unwrap().get_mut(&session) {
+            t.queued_since = Some(now);
+        }
+    }
+
+    pub fn plan(&self, session: u64, start: Instant, end: Instant) {
+        let d = end.saturating_duration_since(start);
+        self.stages.plan.record(d);
+        self.push(Stage::Plan, None, session, None, 0, self.us(start),
+                  d.as_micros() as u64);
+    }
+
+    /// Follower-scan span of a coalesced tick; `lanes` = lanes admitted.
+    pub fn coalesce(&self, leader: u64, lanes: u32, start: Instant, end: Instant) {
+        self.push(Stage::Coalesce, None, leader, None, lanes, self.us(start),
+                  end.saturating_duration_since(start).as_micros() as u64);
+    }
+
+    /// One forward dispatch. Coalesced batches are a single span on the
+    /// leader's track with the lane count annotated.
+    pub fn forward(&self, kind: ForwardKind, leader: u64, lanes: u32,
+                   start: Instant, end: Instant) {
+        let d = end.saturating_duration_since(start);
+        self.stages.forward.record(d);
+        match kind {
+            ForwardKind::Full => self.stages.forward_full.record(d),
+            ForwardKind::Window => self.stages.forward_window.record(d),
+            ForwardKind::Cached => self.stages.forward_cached.record(d),
+        }
+        self.push(Stage::Forward, Some(kind), leader, None, lanes, self.us(start),
+                  d.as_micros() as u64);
+    }
+
+    /// Replica-side execution span (pool attribution).
+    pub fn exec_span(&self, replica: u32, start: Instant, end: Instant) {
+        self.push(Stage::Exec, None, 0, Some(replica), 0, self.us(start),
+                  end.saturating_duration_since(start).as_micros() as u64);
+    }
+
+    /// Wait for an idle replica; `replica` is the one finally acquired.
+    pub fn pool_wait(&self, replica: u32, start: Instant, end: Instant) {
+        let d = end.saturating_duration_since(start);
+        self.stages.pool_wait.record(d);
+        self.push(Stage::PoolWait, None, 0, Some(replica), 0, self.us(start),
+                  d.as_micros() as u64);
+    }
+
+    pub fn apply(&self, session: u64, start: Instant, end: Instant) {
+        let d = end.saturating_duration_since(start);
+        self.stages.apply.record(d);
+        self.push(Stage::Apply, None, session, None, 0, self.us(start),
+                  d.as_micros() as u64);
+    }
+
+    /// `tokens` newly-committed positions landed for `session`. First commit
+    /// closes the TTFT window (admit → first committed token); subsequent
+    /// commits feed the inter-step histogram.
+    pub fn commit(&self, session: u64, tokens: u32, now: Instant) {
+        self.push(Stage::Commit, None, session, None, tokens, self.us(now), 0);
+        let mut map = self.sessions.lock().unwrap();
+        if let Some(t) = map.get_mut(&session) {
+            if t.ttft.is_none() {
+                let ttft = now.saturating_duration_since(t.admit);
+                t.ttft = Some(ttft);
+                drop(map);
+                self.stages.ttft.record(ttft);
+                return;
+            }
+            if let Some(last) = t.last_commit.replace(now) {
+                let d = now.saturating_duration_since(last);
+                drop(map);
+                self.stages.interstep.record(d);
+            }
+        }
+    }
+
+    pub fn evict(&self, session: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Evict, None, session, None, 0, t, 0);
+    }
+
+    /// Governor changed the coalescing width target.
+    pub fn width_change(&self, from: usize, to: usize, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Width, None, from as u64, None, to as u32, t, 0);
+    }
+
+    /// Session finished (or failed): drop its timing entry.
+    pub fn finished(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
+    }
+
+    /// Live queue-wait and TTFT for a session, in milliseconds. Queue wait
+    /// includes time spent in the queue *right now* (sessions probed
+    /// mid-flight report an honest running total).
+    pub fn session_timing(&self, session: u64, now: Instant)
+                          -> Option<(f64, Option<f64>)> {
+        let map = self.sessions.lock().unwrap();
+        let t = map.get(&session)?;
+        let mut wait = t.queue_wait;
+        if let Some(since) = t.queued_since {
+            wait += now.saturating_duration_since(since);
+        }
+        Some((
+            wait.as_secs_f64() * 1e3,
+            t.ttft.map(|d| d.as_secs_f64() * 1e3),
+        ))
+    }
+
+    // -- read side ------------------------------------------------------------
+
+    /// Snapshot of all consistent ring events, oldest first. Slots caught
+    /// mid-write are skipped, never emitted torn.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let w0 = slot.words[0].load(Ordering::Relaxed);
+            let w1 = slot.words[1].load(Ordering::Relaxed);
+            let w2 = slot.words[2].load(Ordering::Relaxed);
+            let w3 = slot.words[3].load(Ordering::Relaxed);
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue; // overwritten while reading
+            }
+            let stage = match Stage::from_code(w0 & 0xff) {
+                Some(s) => s,
+                None => continue,
+            };
+            let rep = (w0 >> 32) as u32;
+            out.push(TraceEvent {
+                stage,
+                kind: kind_from_code((w0 >> 8) & 0xff),
+                session: w1,
+                replica: if rep == NO_REPLICA { None } else { Some(rep) },
+                lanes: ((w0 >> 16) & 0xffff) as u32,
+                start_us: w2,
+                dur_us: w3,
+            });
+        }
+        out.sort_by_key(|e| (e.start_us, e.dur_us));
+        out
+    }
+
+    /// Per-stage histograms for `GET /metrics`.
+    pub fn stages_json(&self) -> Json {
+        self.stages.to_json()
+    }
+
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` object format),
+    /// loadable in Perfetto / `chrome://tracing`. Spans are `ph:"X"`
+    /// complete events; instants are `ph:"i"`. Session tracks live under
+    /// pid [`PID_SESSIONS`] (`tid` = session id), executor tracks under pid
+    /// [`PID_EXEC`] (`tid` = replica index).
+    pub fn chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        for (pid, name) in [(PID_SESSIONS, "sessions"), (PID_EXEC, "executors")] {
+            events.push(Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("ts", Json::num(0.0)),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+        }
+        for e in self.events() {
+            let (pid, tid) = match e.stage {
+                Stage::Exec | Stage::PoolWait => {
+                    (PID_EXEC, e.replica.unwrap_or(0) as u64)
+                }
+                Stage::Width => (PID_EXEC, 0),
+                _ => (PID_SESSIONS, e.session),
+            };
+            let mut args = vec![];
+            match e.stage {
+                Stage::Forward => {
+                    args.push(("lanes", Json::num(e.lanes as f64)));
+                    if let Some(k) = e.kind {
+                        args.push(("kind", Json::str(k.name())));
+                    }
+                }
+                Stage::Coalesce => args.push(("lanes", Json::num(e.lanes as f64))),
+                Stage::Commit => args.push(("tokens", Json::num(e.lanes as f64))),
+                Stage::Width => {
+                    args.push(("from", Json::num(e.session as f64)));
+                    args.push(("to", Json::num(e.lanes as f64)));
+                }
+                _ => {}
+            }
+            if e.stage != Stage::Exec && e.stage != Stage::PoolWait
+                && e.stage != Stage::Width
+            {
+                args.push(("session", Json::num(e.session as f64)));
+            }
+            let mut fields = vec![
+                ("name", Json::str(e.stage.name())),
+                ("cat", Json::str("lifecycle")),
+                ("ts", Json::num(e.start_us as f64)),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(tid as f64)),
+            ];
+            if e.dur_us > 0 || matches!(e.stage, Stage::QueueWait | Stage::Plan
+                | Stage::Coalesce | Stage::PoolWait | Stage::Forward
+                | Stage::Exec | Stage::Apply)
+            {
+                fields.push(("ph", Json::str("X")));
+                fields.push(("dur", Json::num(e.dur_us as f64)));
+            } else {
+                fields.push(("ph", Json::str("i")));
+                fields.push(("s", Json::str("t")));
+            }
+            fields.push(("args", Json::obj(args)));
+            events.push(Json::obj(fields));
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(origin: Instant, ms: u64) -> Instant {
+        origin + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn trace_mode_names_round_trip() {
+        assert_eq!(TraceMode::from_name("off"), Some(TraceMode::Off));
+        assert_eq!(TraceMode::from_name("ring"), Some(TraceMode::Ring));
+        assert_eq!(TraceMode::from_name("bogus"), None);
+        assert_eq!(TraceMode::Ring.name(), "ring");
+        assert_eq!(TraceMode::default(), TraceMode::Off);
+    }
+
+    #[test]
+    fn ring_records_and_decodes_events() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 64);
+        tr.admit(7, at(t0, 1));
+        tr.picked(7, at(t0, 5));
+        tr.plan(7, at(t0, 5), at(t0, 6));
+        tr.forward(ForwardKind::Window, 7, 3, at(t0, 6), at(t0, 16));
+        tr.apply(7, at(t0, 16), at(t0, 17));
+        tr.commit(7, 2, at(t0, 17));
+        let ev = tr.events();
+        assert_eq!(ev.len(), 6);
+        assert_eq!(ev[0].stage, Stage::Admit);
+        assert_eq!(ev[0].start_us, 1_000);
+        let fwd = ev.iter().find(|e| e.stage == Stage::Forward).unwrap();
+        assert_eq!(fwd.kind, Some(ForwardKind::Window));
+        assert_eq!(fwd.lanes, 3);
+        assert_eq!(fwd.dur_us, 10_000);
+        assert_eq!(fwd.session, 7);
+        let qw = ev.iter().find(|e| e.stage == Stage::QueueWait).unwrap();
+        assert_eq!(qw.start_us, 1_000, "queue-wait span starts at enqueue");
+        assert_eq!(qw.dur_us, 4_000);
+    }
+
+    #[test]
+    fn stage_histograms_account_with_injected_clock() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 64);
+        // Two sessions with known queue waits: 5ms and 15ms.
+        tr.admit(1, at(t0, 0));
+        tr.admit(2, at(t0, 0));
+        tr.picked(1, at(t0, 5));
+        tr.picked(2, at(t0, 15));
+        let q = tr.stages.queue.summary().unwrap();
+        assert_eq!(q.n, 2);
+        assert!((q.min - 0.005).abs() < 1e-9, "min queue wait: {}", q.min);
+        assert!((q.max - 0.015).abs() < 1e-9, "max queue wait: {}", q.max);
+        // Forward kinds split into their own histograms.
+        tr.forward(ForwardKind::Full, 1, 1, at(t0, 5), at(t0, 25));
+        tr.forward(ForwardKind::Cached, 2, 1, at(t0, 15), at(t0, 18));
+        assert_eq!(tr.stages.forward.count(), 2);
+        assert_eq!(tr.stages.forward_full.count(), 1);
+        assert_eq!(tr.stages.forward_cached.count(), 1);
+        assert_eq!(tr.stages.forward_window.count(), 0);
+        assert!((tr.stages.forward_full.mean_secs() - 0.020).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ttft_and_interstep_accounting() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 64);
+        tr.admit(9, at(t0, 10));
+        // First committed token at t=60ms → TTFT 50ms.
+        tr.commit(9, 1, at(t0, 60));
+        let ttft = tr.stages.ttft.summary().unwrap();
+        assert_eq!(ttft.n, 1);
+        assert!((ttft.p50 - 0.050).abs() < 1e-9, "ttft: {}", ttft.p50);
+        // Later commits feed inter-step, not TTFT.
+        tr.commit(9, 1, at(t0, 70));
+        tr.commit(9, 2, at(t0, 100));
+        assert_eq!(tr.stages.ttft.count(), 1, "ttft recorded once");
+        let inter = tr.stages.interstep.summary().unwrap();
+        assert_eq!(inter.n, 1, "first post-TTFT commit seeds last_commit");
+        assert!((inter.p50 - 0.030).abs() < 1e-9, "interstep: {}", inter.p50);
+        // Live timing surfaces TTFT in ms.
+        let (_q, ttft_ms) = tr.session_timing(9, at(t0, 100)).unwrap();
+        assert!((ttft_ms.unwrap() - 50.0).abs() < 1e-6);
+        tr.finished(9);
+        assert!(tr.session_timing(9, at(t0, 101)).is_none());
+    }
+
+    #[test]
+    fn queue_wait_accumulates_across_requeues() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 64);
+        tr.admit(3, at(t0, 0));
+        tr.picked(3, at(t0, 4)); // 4ms
+        tr.requeued(3, at(t0, 10));
+        tr.picked(3, at(t0, 16)); // +6ms
+        tr.requeued(3, at(t0, 20));
+        // Probed mid-queue at t=25: 10ms booked + 5ms in-queue now.
+        let (q_ms, ttft) = tr.session_timing(3, at(t0, 25)).unwrap();
+        assert!((q_ms - 15.0).abs() < 1e-6, "queue_ms: {q_ms}");
+        assert!(ttft.is_none(), "no token committed yet");
+        assert_eq!(tr.stages.queue.count(), 2);
+    }
+
+    #[test]
+    fn ring_overflow_evicts_oldest() {
+        let t0 = Instant::now();
+        let cap = 16;
+        let tr = TraceRecorder::with_origin(t0, cap);
+        for i in 0..(3 * cap as u64) {
+            tr.evict(i, at(t0, i));
+        }
+        let ev = tr.events();
+        assert_eq!(ev.len(), cap, "ring stays bounded at capacity");
+        // Only the newest `cap` events survive; the oldest were overwritten.
+        let sessions: Vec<u64> = ev.iter().map(|e| e.session).collect();
+        let expect: Vec<u64> = (2 * cap as u64..3 * cap as u64).collect();
+        assert_eq!(sessions, expect, "oldest events evicted first");
+        assert_eq!(tr.recorded(), 3 * cap as u64);
+    }
+
+    #[test]
+    fn concurrent_recording_is_wait_free_for_writers() {
+        // Writers only touch atomics: hammer the ring from several threads
+        // while a reader snapshots concurrently, and require every writer to
+        // finish (a blocking record path would deadlock against the reader
+        // loop) and every snapshot to decode cleanly.
+        use std::sync::Arc;
+        let t0 = Instant::now();
+        let tr = Arc::new(TraceRecorder::with_origin(t0, 128));
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let tr = Arc::clone(&tr);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    tr.push(Stage::Exec, None, w, Some(w as u32), 0, i, 1);
+                }
+            }));
+        }
+        let reader = {
+            let tr = Arc::clone(&tr);
+            std::thread::spawn(move || {
+                let mut seen = 0usize;
+                for _ in 0..200 {
+                    seen += tr.events().len();
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(tr.recorded(), 40_000);
+        // Post-quiescence snapshot is fully consistent.
+        let ev = tr.events();
+        assert_eq!(ev.len(), 128);
+        assert!(ev.iter().all(|e| e.stage == Stage::Exec));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 64);
+        tr.admit(1, at(t0, 0));
+        tr.picked(1, at(t0, 2));
+        tr.forward(ForwardKind::Cached, 1, 4, at(t0, 2), at(t0, 7));
+        tr.pool_wait(0, at(t0, 2), at(t0, 3));
+        tr.width_change(1, 4, at(t0, 7));
+        tr.commit(1, 1, at(t0, 7));
+        let j = tr.chrome_json();
+        let events = j.get("traceEvents").as_arr().unwrap();
+        // 2 metadata + 6 recorded
+        assert_eq!(events.len(), 8);
+        for e in events {
+            for field in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(!matches!(e.get(field), Json::Null), "missing {field}: {e:?}");
+            }
+        }
+        let fwd = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("forward"))
+            .unwrap();
+        assert_eq!(fwd.get("ph").as_str(), Some("X"));
+        assert_eq!(fwd.get("dur").as_f64(), Some(5_000.0));
+        assert_eq!(fwd.get_path(&["args", "lanes"]).as_i64(), Some(4));
+        assert_eq!(fwd.get_path(&["args", "kind"]).as_str(), Some("cached"));
+        assert_eq!(fwd.get("pid").as_i64(), Some(PID_SESSIONS as i64));
+        assert_eq!(fwd.get("tid").as_i64(), Some(1));
+        let pw = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("pool_wait"))
+            .unwrap();
+        assert_eq!(pw.get("pid").as_i64(), Some(PID_EXEC as i64));
+        let width = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("width"))
+            .unwrap();
+        assert_eq!(width.get_path(&["args", "from"]).as_i64(), Some(1));
+        assert_eq!(width.get_path(&["args", "to"]).as_i64(), Some(4));
+        let admit = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("admit"))
+            .unwrap();
+        assert_eq!(admit.get("ph").as_str(), Some("i"));
+    }
+
+    #[test]
+    fn stages_json_has_tail_percentiles() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 16);
+        tr.admit(1, at(t0, 0));
+        tr.picked(1, at(t0, 3));
+        tr.commit(1, 1, at(t0, 9));
+        let j = tr.stages_json();
+        assert_eq!(j.get_path(&["queue", "count"]).as_i64(), Some(1));
+        assert!(j.get_path(&["queue", "p99"]).as_f64().is_some());
+        assert!(j.get_path(&["ttft", "p90"]).as_f64().is_some());
+        assert_eq!(j.get_path(&["forward_by_kind", "window", "count"]).as_i64(), Some(0));
+    }
+}

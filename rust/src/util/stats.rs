@@ -13,7 +13,9 @@ pub struct Summary {
     pub std: f64,
     pub min: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -32,7 +34,9 @@ impl Summary {
             std: var.sqrt(),
             min: sorted[0],
             p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
             p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
             max: sorted[n - 1],
         }
     }
@@ -243,6 +247,19 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p90, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn summary_tail_percentiles_separate_on_large_samples() {
+        // 1..=100: nearest-rank on (p/100)*(n-1) gives distinct tails
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&v);
+        assert_eq!(s.p50, 51.0);
+        assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
     }
 
     #[test]
