@@ -557,9 +557,19 @@ fn main() -> anyhow::Result<()> {
         ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, queue_capacity: 8 },
     )?;
     let (code, body) = http_post(&server.addr, "/generate", &bodies[0].0)?;
+    // the refusal carries a machine-readable backoff hint (ISSUE 7): derived
+    // from the trailing byte free rate, so clients retry when bytes could
+    // plausibly be free instead of hammering a wedged pool
+    let retry_ms = window_diffusion::util::json::parse(&body)
+        .ok()
+        .and_then(|j| j.get("retry_after_ms").as_usize());
     println!(
         "\nkv-pool admission with 1 KiB budget: HTTP {code} {}",
-        if code == 429 { "(rejected, as designed)" } else { body.as_str() }
+        match (code, retry_ms) {
+            (429, Some(ms)) => format!("(rejected, as designed; retry_after_ms={ms})"),
+            (429, None) => "(rejected, as designed — but retry_after_ms missing!)".into(),
+            _ => body.clone(),
+        }
     );
     server.stop();
     tiny.scheduler.shutdown();

@@ -1,0 +1,236 @@
+//! Perf-trajectory baseline for cross-session prefix reuse over the tiered
+//! KV store (PR 7): 16 concurrent sessions sharing a 64-token prompt
+//! prefix, driven solo (`max_batch 1`) on the compute-bound mock, with
+//! content-addressed sharing OFF vs ON at the *same* KV budget. A third
+//! run squeezes the hot tier to force spill → rehydrate traffic and proves
+//! sessions still complete byte-identically with the hot tier bounded.
+//!
+//! Emits `BENCH_7.json` at the repo root: steps/sec per config, the
+//! ON-vs-OFF speedup, prefix hit counts, and the pressure run's
+//! spill/rehydrate/hot-peak numbers. CI also checks the spill directory is
+//! left empty — blobs must die with their segments.
+//!
+//! ```bash
+//! cargo bench --bench prefix_reuse
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::strategies;
+use window_diffusion::util::json::Json;
+
+/// Per-token-slot sleep: makes forwards compute-bound so skipped refreshes
+/// translate into wall-clock, not just fewer engine calls.
+const SLOT_DELAY: Duration = Duration::from_micros(40);
+/// Short refresh cycle -> refresh forwards dominate; exactly the regime
+/// prefix sharing accelerates.
+const SPEC: &str = "window:w_ex=64,a=16,refresh=4";
+const PREFIX_LEN: usize = 64;
+const GEN_LEN: usize = 48;
+const SPILL_DIR: &str = "target/prefix_reuse_spill";
+
+fn shared_prefix() -> Vec<i32> {
+    (0..PREFIX_LEN).map(|i| 5 + (i % 10) as i32).collect()
+}
+
+fn request(prompt: Vec<i32>) -> GenRequest {
+    let mut req = GenRequest::new(prompt, GEN_LEN, 256);
+    req.adaptive = false;
+    req
+}
+
+struct RunResult {
+    label: &'static str,
+    steps_per_sec: f64,
+    wall_secs: f64,
+    prefix_hits: u64,
+    spills: u64,
+    rehydrates: u64,
+    hot_peak_bytes: usize,
+    outputs: Vec<Vec<i32>>,
+}
+
+fn run(label: &'static str, cfg: SchedulerConfig, prompts: &[Vec<i32>]) -> RunResult {
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> =
+        Arc::new(MockExec::new(256).with_slot_delay(SLOT_DELAY));
+    let sched = Scheduler::new(exec, cfg, Arc::clone(&metrics));
+    let t0 = Instant::now();
+    let tickets: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            sched
+                .submit(SubmitSpec {
+                    strategy: SPEC.into(),
+                    req: request(p.clone()),
+                    deadline: None,
+                })
+                .expect("admit")
+        })
+        .collect();
+    while sched.tick().is_some() {}
+    let outputs: Vec<Vec<i32>> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("bench workload completes").generated())
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let store = Arc::clone(sched.kv_store());
+    sched.shutdown();
+    drop(sched); // all handles are dead: every spill blob must be gone
+    RunResult {
+        label,
+        steps_per_sec: metrics.sched_steps_total.load(Ordering::Relaxed) as f64
+            / wall.max(1e-9),
+        wall_secs: wall,
+        prefix_hits: store.prefix_hits(),
+        spills: store.spills(),
+        rehydrates: store.rehydrates(),
+        hot_peak_bytes: store.hot_peak_bytes(),
+        outputs,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_sessions = bench_support::bench_n(16);
+    let _ = std::fs::remove_dir_all(SPILL_DIR);
+
+    // ground truth: the solo no-scheduler path, per prompt
+    let shared: Vec<Vec<i32>> = (0..n_sessions).map(|_| shared_prefix()).collect();
+    let strat = strategies::from_name(SPEC).expect("bench spec parses");
+    let solo = strat
+        .generate(&MockExec::new(256), &request(shared_prefix()))
+        .expect("solo run")
+        .generated();
+
+    // generous hot tier: identical for OFF and ON (the equal-budget clause)
+    let m = MockExec::new(256);
+    let seg_bytes = 8 * m.arch().kv_elems(128); // f32 K+V at the c=128 bucket
+    let roomy = 64 * seg_bytes;
+    let base = SchedulerConfig {
+        kv_soft_bytes: roomy,
+        kv_spill_dir: Some(SPILL_DIR.into()),
+        ..Default::default()
+    };
+
+    println!(
+        "prefix_reuse: {n_sessions} sessions, {PREFIX_LEN}-token shared prefix, \
+         {SPEC}, {SLOT_DELAY:?}/slot"
+    );
+    bench_support::hr(72);
+    let off = run("share-off", SchedulerConfig { prefix_share: false, ..base.clone() }, &shared);
+    let on = run("share-on", SchedulerConfig { prefix_share: true, ..base.clone() }, &shared);
+    for r in [&off, &on] {
+        println!(
+            "{:<10} {:>8.1} steps/s  hits={:<5} wall={:.2}s",
+            r.label, r.steps_per_sec, r.prefix_hits, r.wall_secs
+        );
+    }
+
+    // byte parity: every session, both runs, must match the solo path
+    for (i, out) in off.outputs.iter().enumerate() {
+        assert_eq!(out, &solo, "share-off session {i} diverged from solo");
+    }
+    for (i, out) in on.outputs.iter().enumerate() {
+        assert_eq!(out, &solo, "share-on session {i} diverged from solo");
+    }
+    assert!(on.prefix_hits > 0, "sharing run never hit the prefix index");
+    let speedup = bench_support::speedup(off.steps_per_sec, on.steps_per_sec);
+    println!("share-on vs share-off: {speedup:.2}x (acceptance floor 1.5x)");
+    assert!(
+        speedup >= 1.5,
+        "prefix sharing speedup {speedup:.2}x below the 1.5x acceptance floor"
+    );
+
+    // pressure run: distinct prefixes (nothing shareable), hot tier sized
+    // for ~4 of 16 sessions -> constant spill/rehydrate churn
+    let distinct: Vec<Vec<i32>> = (0..n_sessions)
+        .map(|sess| (0..PREFIX_LEN).map(|i| 3 + ((i + sess) % 12) as i32).collect())
+        .collect();
+    let solo_distinct: Vec<Vec<i32>> = distinct
+        .iter()
+        .map(|p| {
+            strat
+                .generate(&MockExec::new(256), &request(p.clone()))
+                .expect("solo run")
+                .generated()
+        })
+        .collect();
+    let tight = 4 * seg_bytes;
+    let pressure = run(
+        "pressure",
+        SchedulerConfig { prefix_share: true, kv_soft_bytes: tight, ..base.clone() },
+        &distinct,
+    );
+    println!(
+        "{:<10} {:>8.1} steps/s  spills={} rehydrates={} hot_peak={}B (soft {}B)",
+        pressure.label,
+        pressure.steps_per_sec,
+        pressure.spills,
+        pressure.rehydrates,
+        pressure.hot_peak_bytes,
+        tight
+    );
+    for (i, out) in pressure.outputs.iter().enumerate() {
+        assert_eq!(out, &solo_distinct[i], "spilled session {i} diverged after rehydration");
+    }
+    assert!(pressure.spills > 0, "pressure run never spilled");
+    assert!(pressure.rehydrates > 0, "pressure run never rehydrated");
+    // transient overshoot allowance: one pinned checkout, one fresh insert
+    // and one rehydrate can each sit above the soft limit before the
+    // enforcement pass runs
+    assert!(
+        pressure.hot_peak_bytes <= tight + 4 * seg_bytes,
+        "hot tier peak {}B blew past budget {}B + pinned allowance",
+        pressure.hot_peak_bytes,
+        tight
+    );
+
+    // blobs die with their segments: the spill dir must be empty now
+    let leftovers: Vec<_> = std::fs::read_dir(SPILL_DIR)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .map(|e| e.path().display().to_string())
+                .collect()
+        })
+        .unwrap_or_default();
+    assert!(leftovers.is_empty(), "spill blobs leaked: {leftovers:?}");
+    bench_support::hr(72);
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("prefix_reuse")),
+        ("issue", Json::num(7.0)),
+        ("n_sessions", Json::num(n_sessions as f64)),
+        ("prefix_len", Json::num(PREFIX_LEN as f64)),
+        ("gen_len", Json::num(GEN_LEN as f64)),
+        ("slot_delay_us", Json::num(SLOT_DELAY.as_secs_f64() * 1e6)),
+        (
+            "configs",
+            Json::Arr(
+                [&off, &on, &pressure]
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("label", Json::str(r.label)),
+                            ("steps_per_sec", Json::num(r.steps_per_sec)),
+                            ("wall_secs", Json::num(r.wall_secs)),
+                            ("prefix_hits", Json::num(r.prefix_hits as f64)),
+                            ("spills", Json::num(r.spills as f64)),
+                            ("rehydrates", Json::num(r.rehydrates as f64)),
+                            ("hot_peak_bytes", Json::num(r.hot_peak_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_share_on_vs_off", Json::num(speedup)),
+        ("pressure_soft_bytes", Json::num(tight as f64)),
+    ]);
+    bench_support::write_bench_json("BENCH_7.json", &payload)?;
+    Ok(())
+}

@@ -20,11 +20,12 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 use xla::Literal;
 
-use super::plan::{execute_plan, StepOutputs, StepPlan};
+use super::plan::{execute_plan, KvOut, StepOutputs, StepPlan};
 use crate::runtime::{
     buckets, Arch, BatchedKv, Engine, EngineCell, EnginePool, KvCache, ModelEntry, Specials,
     WeightBank,
 };
+use crate::scheduler::kvstore::KvCheckout;
 
 pub trait StepExec {
     fn arch(&self) -> Arch;
@@ -209,7 +210,9 @@ fn engine_execute_batch(e: &Engine, plans: Vec<StepPlan>) -> Vec<Result<StepOutp
             let mut slot_idx = vec![c as i32; b * r];
             let mut rvalid = vec![0f32; b * r];
             let mut cvalid = vec![0f32; b * c];
-            let mut kv_lanes: Vec<&KvCache> = Vec::with_capacity(lanes);
+            // checkout pins every lane's segment (rehydrating spilled ones)
+            // for the duration of the merged forward
+            let mut checkouts: Vec<KvCheckout> = Vec::with_capacity(lanes);
             for (i, p) in plans.iter().enumerate() {
                 let StepPlan::Cached {
                     ids_r: pir, pos_r: ppr, slot_idx: psi, rvalid: prv, cvalid: pcv, kv, ..
@@ -222,8 +225,12 @@ fn engine_execute_batch(e: &Engine, plans: Vec<StepPlan>) -> Vec<Result<StepOutp
                 slot_idx[i * r..(i + 1) * r].copy_from_slice(psi);
                 rvalid[i * r..(i + 1) * r].copy_from_slice(prv);
                 cvalid[i * c..(i + 1) * c].copy_from_slice(pcv);
-                kv_lanes.push(kv);
+                match kv.checkout() {
+                    Ok(co) => checkouts.push(co),
+                    Err(err) => return fan_error(&err.to_string(), lanes),
+                }
             }
+            let kv_lanes: Vec<&KvCache> = checkouts.iter().map(|co| &**co).collect();
             let merged = match KvCache::merge_lanes(&kv_lanes, b) {
                 Ok(m) => m,
                 Err(err) => return fan_error(&err.to_string(), lanes),
@@ -275,7 +282,7 @@ fn split_logits_kv(out: Result<Vec<Literal>>, lanes: usize, b: usize, s: usize,
             .map(|(i, kv)| {
                 Ok(StepOutputs::LogitsKv(
                     logits[i * logits_per_lane..(i + 1) * logits_per_lane].to_vec(),
-                    kv,
+                    KvOut::Fresh(kv),
                 ))
             })
             .collect(),
@@ -433,6 +440,12 @@ pub struct MockExec {
     /// this to make mock workloads compute-bound, so speedups from stepping
     /// sessions concurrently are measurable and robust.
     pub step_delay: Option<std::time::Duration>,
+    /// Artificial per-token-slot cost (sleep × computed slots). Unlike
+    /// `step_delay` this makes a window refresh (c slots) proportionally
+    /// more expensive than a cached step (r slots), which is what the
+    /// prefix-reuse bench needs: skipping a refresh must actually save
+    /// simulated wall time.
+    pub slot_delay: Option<std::time::Duration>,
     /// Bank-backed variant (ISSUE 5): when set, every logit row folds in a
     /// value read straight out of the shared [`WeightBank`], so pool tests
     /// exercise the zero-copy sharing path — and shared-vs-copy output
@@ -464,6 +477,7 @@ impl MockExec {
             s,
             eos_at: None,
             step_delay: None,
+            slot_delay: None,
             bank: None,
             calls: Default::default(),
         }
@@ -476,6 +490,11 @@ impl MockExec {
 
     pub fn with_step_delay(mut self, d: std::time::Duration) -> MockExec {
         self.step_delay = Some(d);
+        self
+    }
+
+    pub fn with_slot_delay(mut self, d: std::time::Duration) -> MockExec {
+        self.slot_delay = Some(d);
         self
     }
 
@@ -505,9 +524,12 @@ impl MockExec {
         }
     }
 
-    fn simulate_cost(&self) {
+    fn simulate_cost(&self, slots: usize) {
         if let Some(d) = self.step_delay {
             std::thread::sleep(d);
+        }
+        if let Some(d) = self.slot_delay {
+            std::thread::sleep(d * slots as u32);
         }
     }
 
@@ -568,7 +590,7 @@ impl StepExec for MockExec {
     fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
         assert_eq!(ids.len(), s);
         assert_eq!(valid.len(), s);
-        self.simulate_cost();
+        self.simulate_cost(s);
         let mut c = self.calls.lock().unwrap();
         c.full += 1;
         c.token_slots += s;
@@ -585,7 +607,7 @@ impl StepExec for MockExec {
         assert_eq!(ids.len(), c);
         assert_eq!(pos.len(), c);
         assert_eq!(valid.len(), c);
-        self.simulate_cost();
+        self.simulate_cost(c);
         let mut cc = self.calls.lock().unwrap();
         cc.window += 1;
         cc.token_slots += c;
@@ -605,7 +627,7 @@ impl StepExec for MockExec {
         assert_eq!(slot_idx.len(), r);
         assert_eq!(rvalid.len(), r);
         assert_eq!(kv.c, c, "cache/bucket mismatch");
-        self.simulate_cost();
+        self.simulate_cost(r);
         let mut cc = self.calls.lock().unwrap();
         cc.cached += 1;
         cc.token_slots += r;
@@ -638,8 +660,9 @@ impl StepExec for MockExec {
             plans.iter().all(|p| p.compatible(&plans[0])),
             "execute_batch over incompatible plans"
         );
-        self.simulate_cost();
         let per_lane_slots = plans[0].slots();
+        // cost paid ONCE for the whole batch — the coalescing amortization
+        self.simulate_cost(per_lane_slots);
         let kind = plans[0].kind();
         {
             let mut cc = self.calls.lock().unwrap();
@@ -667,15 +690,15 @@ impl StepExec for MockExec {
                     for &pp in pos.iter().take(c) {
                         out.extend(self.row(pp as usize));
                     }
-                    Ok(StepOutputs::LogitsKv(out, self.mock_kv(s, c)))
+                    Ok(StepOutputs::LogitsKv(out, KvOut::Fresh(self.mock_kv(s, c))))
                 }
                 StepPlan::Cached { s, c, r, pos_r, kv, .. } => {
-                    assert_eq!(kv.c, c, "cache/bucket mismatch");
+                    assert_eq!(kv.c(), c, "cache/bucket mismatch");
                     let mut out = Vec::with_capacity(r * self.vocab);
                     for &pp in pos_r.iter().take(r) {
                         out.extend(self.row(pp as usize));
                     }
-                    Ok(StepOutputs::LogitsKv(out, self.mock_kv(s, c)))
+                    Ok(StepOutputs::LogitsKv(out, KvOut::Fresh(self.mock_kv(s, c))))
                 }
             })
             .collect()
@@ -788,10 +811,13 @@ mod tests {
         let outs = m.execute_batch(plans);
         for out in outs {
             match out.unwrap() {
-                StepOutputs::LogitsKv(logits, kv) => {
+                StepOutputs::LogitsKv(logits, KvOut::Fresh(kv)) => {
                     assert_eq!(logits.len(), 64 * m.vocab);
                     assert_eq!(kv.c, 64);
                     assert_eq!(kv.s, 256);
+                }
+                StepOutputs::LogitsKv(_, KvOut::Shared(_)) => {
+                    panic!("mock must return fresh kv")
                 }
                 StepOutputs::Logits(_) => panic!("window plan must return kv"),
             }

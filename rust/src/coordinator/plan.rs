@@ -10,15 +10,20 @@
 //! decodes. `StepMachine::step` survives as the plan→execute→apply shim, so
 //! solo stepping is byte-identical to the legacy path by construction.
 //!
-//! Plans are self-contained (they own their input buffers, including the KV
-//! cache for cached steps), which is what lets the scheduler move them
-//! between sessions' machines and a shared batched forward. An abandoned
-//! plan is handed back via `StepMachine::cancel` so the KV cache is never
-//! lost to a failed coalescing attempt.
+//! Plans are self-contained (they own their input buffers; cached steps
+//! carry a [`KvHandle`] into the session's [`KvStore`] rather than an owned
+//! cache — ISSUE 7's ownership inversion), which is what lets the scheduler
+//! move them between sessions' machines and a shared batched forward. An
+//! abandoned plan is handed back via `StepMachine::cancel` so the KV handle
+//! is never lost to a failed coalescing attempt. Forward outputs return KV
+//! as [`KvOut`]: `Fresh` host bytes for the machine to adopt into its
+//! store, or `Shared` — an already-resident segment attached via
+//! content-addressed prefix lookup.
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::{buckets, Arch, KvCache};
+use crate::scheduler::kvstore::KvHandle;
 
 use super::exec::StepExec;
 
@@ -50,7 +55,9 @@ pub enum StepPlan {
     /// Window refresh / pruning-only step → logits `[c * vocab]` + fresh KV.
     Window { s: usize, c: usize, ids: Vec<i32>, pos: Vec<i32>, valid: Vec<f32> },
     /// Cached normal step: compute `r` slots against the cached `c`-window.
-    /// Owns the session's KV cache while the plan is in flight.
+    /// Holds the session's KV *handle* while the plan is in flight; the
+    /// segment itself stays pool-owned (and spillable until checkout pins
+    /// it for the forward).
     Cached {
         s: usize,
         c: usize,
@@ -60,7 +67,7 @@ pub enum StepPlan {
         slot_idx: Vec<i32>,
         rvalid: Vec<f32>,
         cvalid: Vec<f32>,
-        kv: KvCache,
+        kv: KvHandle,
     },
 }
 
@@ -166,15 +173,22 @@ impl StepPlan {
                 mut cvalid, kv,
             } => {
                 let (_, c_to, r_to) = to;
-                // re-dimension the cache first: it only borrows, so a
-                // failure can still hand the original plan back untouched.
-                // An r-only promotion leaves c alone — don't pay a whole-KV
-                // host copy for a no-op re-dimension on the hot path.
-                let kv = if kv.c == c_to {
+                // Re-dimension the cache first: a failure can still hand
+                // the original plan (and handle) back untouched. An r-only
+                // promotion leaves c alone — don't pay a whole-KV host copy
+                // for a no-op re-dimension on the hot path. A real grow
+                // checks the segment out (pinning it), re-buckets the host
+                // copy, and adopts the grown cache as a new segment in the
+                // same store; the old handle drops with the old bucket.
+                let kv = if kv.c() == c_to {
                     kv
                 } else {
-                    match kv.rebucket_c(c_to, arch) {
-                        Ok(grown) => grown,
+                    let grown = kv
+                        .checkout()
+                        .and_then(|co| co.rebucket_c(c_to, arch))
+                        .and_then(|g| kv.store().insert(&g));
+                    match grown {
+                        Ok(handle) => handle,
                         Err(_) => {
                             return Err(Box::new(StepPlan::Cached {
                                 s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv,
@@ -244,10 +258,39 @@ impl Promotion {
             ));
         }
         let logits = logits[..keep].to_vec();
-        // r-only promotions never changed c: hand the cache back as-is
-        // instead of paying a whole-KV host copy for a no-op re-dimension
-        let kv = if kv.c == c_from { kv } else { kv.rebucket_c(c_from, arch)? };
+        let kv = match kv {
+            KvOut::Fresh(kv) => {
+                // r-only promotions never changed c: hand the cache back
+                // as-is instead of paying a whole-KV host copy for a no-op
+                // re-dimension
+                let kv = if kv.c == c_from { kv } else { kv.rebucket_c(c_from, arch)? };
+                KvOut::Fresh(kv)
+            }
+            // Promoted lanes always executed, so their KV is fresh by
+            // construction; a shared segment here is a protocol violation.
+            KvOut::Shared(_) => {
+                return Err(anyhow!("promoted lane returned a shared KV segment"))
+            }
+        };
         Ok(StepOutputs::LogitsKv(logits, kv))
+    }
+}
+
+/// KV as returned to a machine's `apply`: either host bytes freshly
+/// computed by this forward (the machine adopts them into its store), or a
+/// handle to an already-resident shared segment (a content-addressed prefix
+/// hit — no forward ran at all).
+pub enum KvOut {
+    Fresh(KvCache),
+    Shared(KvHandle),
+}
+
+impl std::fmt::Debug for KvOut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvOut::Fresh(kv) => write!(f, "KvOut::Fresh(c={})", kv.c),
+            KvOut::Shared(h) => write!(f, "KvOut::Shared(seg={}, c={})", h.id(), h.c()),
+        }
     }
 }
 
@@ -255,8 +298,8 @@ impl Promotion {
 pub enum StepOutputs {
     /// `Full` plans: logits `[s * vocab]`.
     Logits(Vec<f32>),
-    /// `Window` / `Cached` plans: logits + the (fresh or updated) KV cache.
-    LogitsKv(Vec<f32>, KvCache),
+    /// `Window` / `Cached` plans: logits + the fresh-or-shared KV.
+    LogitsKv(Vec<f32>, KvOut),
 }
 
 impl StepOutputs {
@@ -284,12 +327,16 @@ pub fn execute_plan<E: StepExec + ?Sized>(exec: &E, plan: StepPlan) -> Result<St
         }
         StepPlan::Window { s, c, ids, pos, valid } => {
             let (logits, kv) = exec.window(s, c, &ids, &pos, &valid)?;
-            Ok(StepOutputs::LogitsKv(logits, kv))
+            Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(kv)))
         }
         StepPlan::Cached { s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv } => {
+            // Checkout pins the segment (rehydrating it if spilled) for the
+            // duration of the forward; the handle itself is consumed with
+            // the plan, exactly like the owned cache used to be.
+            let co = kv.checkout()?;
             let (logits, new_kv) =
-                exec.cached(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &kv)?;
-            Ok(StepOutputs::LogitsKv(logits, new_kv))
+                exec.cached(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &co)?;
+            Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(new_kv)))
         }
     }
 }
@@ -298,6 +345,7 @@ pub fn execute_plan<E: StepExec + ?Sized>(exec: &E, plan: StepPlan) -> Result<St
 mod tests {
     use super::*;
     use crate::coordinator::MockExec;
+    use crate::scheduler::kvstore::KvStore;
 
     #[test]
     fn bucket_and_kind_keys() {
@@ -355,9 +403,12 @@ mod tests {
         assert_eq!(promo.from, (256, 64, 0));
         let out = execute_plan(&m, promoted).unwrap();
         let demoted = promo.demote(out, m.vocab, &arch).unwrap();
-        let (StepOutputs::LogitsKv(sl, sk), StepOutputs::LogitsKv(dl, dk)) = (solo, demoted)
+        let (
+            StepOutputs::LogitsKv(sl, KvOut::Fresh(sk)),
+            StepOutputs::LogitsKv(dl, KvOut::Fresh(dk)),
+        ) = (solo, demoted)
         else {
-            panic!("window plans return logits + kv");
+            panic!("window plans return logits + fresh kv");
         };
         assert_eq!(sl, dl, "demoted logits diverged from solo");
         assert_eq!(dk.c, 64);
@@ -369,10 +420,12 @@ mod tests {
     fn promote_cached_remaps_drop_slots_and_rebuckets_kv() {
         let m = MockExec::new(256);
         let arch = m.arch();
+        let store = KvStore::detached();
         let mk_cached = |c: usize, r: usize| {
-            let StepOutputs::LogitsKv(_, kv) = execute_plan(&m, window_plan(c)).unwrap()
+            let StepOutputs::LogitsKv(_, KvOut::Fresh(kv)) =
+                execute_plan(&m, window_plan(c)).unwrap()
             else {
-                panic!("window returns kv")
+                panic!("window returns fresh kv")
             };
             StepPlan::Cached {
                 s: 256,
@@ -384,7 +437,7 @@ mod tests {
                 slot_idx: (0..r as i32 - 1).chain([c as i32]).collect(),
                 rvalid: vec![1.0; r],
                 cvalid: vec![1.0; c],
-                kv,
+                kv: store.insert(&kv).unwrap(),
             }
         };
         let solo = execute_plan(&m, mk_cached(64, 16)).unwrap();
@@ -393,15 +446,18 @@ mod tests {
         assert!(promoted.compatible(&leader));
         assert_eq!(promo.extra_positions, (128 - 64) + (32 - 16));
         let StepPlan::Cached { ref slot_idx, ref kv, .. } = promoted else { unreachable!() };
-        assert_eq!(kv.c, 128, "cache must be re-dimensioned to the leader window");
+        assert_eq!(kv.c(), 128, "cache must be re-dimensioned to the leader window");
         assert_eq!(slot_idx[15], 128, "old drop marker (64) must move to the new c");
         assert!(slot_idx[16..].iter().all(|&s| s == 128), "padded rows must drop");
         assert!(slot_idx[..15].iter().all(|&s| s < 64), "live scatters unchanged");
         let out = execute_plan(&m, promoted).unwrap();
         let demoted = promo.demote(out, m.vocab, &arch).unwrap();
-        let (StepOutputs::LogitsKv(sl, sk), StepOutputs::LogitsKv(dl, dk)) = (solo, demoted)
+        let (
+            StepOutputs::LogitsKv(sl, KvOut::Fresh(sk)),
+            StepOutputs::LogitsKv(dl, KvOut::Fresh(dk)),
+        ) = (solo, demoted)
         else {
-            panic!("cached plans return logits + kv");
+            panic!("cached plans return logits + fresh kv");
         };
         assert_eq!(sl, dl, "demoted cached logits diverged from solo");
         assert_eq!(dk.c, 64);

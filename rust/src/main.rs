@@ -128,10 +128,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace_arg = args.get("trace").unwrap_or("off");
     let trace = TraceMode::from_name(trace_arg)
         .ok_or_else(|| anyhow!("--trace must be 'off' or 'ring', got '{trace_arg}'"))?;
+    // cross-session prefix sharing is on by default for serving (identical
+    // refresh forwards across sessions resolve to one shared segment);
+    // --no-prefix-share restores fully private per-session KV
+    let prefix_share = !args.flag("no-prefix-share");
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
         kv_soft_bytes: args.usize_or("kv-soft-mb", 0) * 1024 * 1024,
+        kv_spill_dir: args.get("kv-spill-dir").map(std::path::PathBuf::from),
+        prefix_share,
         max_sessions: args.usize_or("max-sessions", 64),
         max_batch,
         batch_policy,
@@ -311,7 +317,8 @@ fn main() -> Result<()> {
                  [--max-batch B] \
                  [--batch-policy fixed|adaptive] [--coalesce-waste-pct P] \
                  [--policy rr|shortest|deadline] \
-                 [--kv-budget-mb N] [--kv-soft-mb N] [--max-sessions N] \
+                 [--kv-budget-mb N] [--kv-soft-mb N] [--kv-spill-dir DIR] \
+                 [--no-prefix-share] [--max-sessions N] \
                  [--workers N] [--queue N] [--direct] [--trace off|ring]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \
                  window-nocache | block[:size=32] | dkv[:interval=4] | \

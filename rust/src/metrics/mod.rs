@@ -207,6 +207,23 @@ pub struct Metrics {
     /// (a lifetime mean), this recovers after a burst drains — the gauge
     /// the governor's feedback loop is tested against.
     batch_occupancy_recent_bits: AtomicU64,
+    // -- tiered KV store (owned by scheduler::kvstore::KvStore) ---------------
+    /// Resident hot-tier segment bytes (actual residency, not reservations —
+    /// compare against `kv_pool_bytes`).
+    pub kv_hot_bytes: AtomicU64,
+    /// Bytes currently serialized in the disk (spill) tier.
+    pub kv_spilled_bytes: AtomicU64,
+    /// Segments spilled to disk to get under the hot-tier soft limit.
+    pub kv_spills: AtomicU64,
+    /// Segments read back from the disk tier at checkout.
+    pub kv_rehydrates: AtomicU64,
+    /// Window forwards answered from a published segment (engine skipped).
+    pub kv_prefix_hits: AtomicU64,
+    /// Window forwards that consulted the prefix index and missed.
+    pub kv_prefix_misses: AtomicU64,
+    /// KV pool releases for unknown session ids — a booking-discipline bug
+    /// in the scheduler if ever non-zero (see `KvPool::anomalies`).
+    pub kv_accounting_anomalies: AtomicU64,
 }
 
 impl Metrics {
@@ -259,6 +276,17 @@ impl Metrics {
         lanes as f64 / forwards as f64
     }
 
+    /// Fraction of prefix-index consultations that hit (0 when the index
+    /// was never consulted — e.g. `prefix_share` off).
+    pub fn kv_prefix_hit_rate(&self) -> f64 {
+        let hits = self.kv_prefix_hits.load(Ordering::Relaxed);
+        let total = hits + self.kv_prefix_misses.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        hits as f64 / total as f64
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("requests_total", Json::num(self.requests_total.load(Ordering::Relaxed) as f64)),
@@ -270,6 +298,17 @@ impl Metrics {
             ("kv_pool_bytes", Json::num(self.kv_pool_bytes.load(Ordering::Relaxed) as f64)),
             ("kv_pool_evictions", Json::num(self.kv_pool_evictions.load(Ordering::Relaxed) as f64)),
             ("kv_pool_rejections", Json::num(self.kv_pool_rejections.load(Ordering::Relaxed) as f64)),
+            ("kv_hot_bytes", Json::num(self.kv_hot_bytes.load(Ordering::Relaxed) as f64)),
+            ("kv_spilled_bytes", Json::num(self.kv_spilled_bytes.load(Ordering::Relaxed) as f64)),
+            ("kv_spills", Json::num(self.kv_spills.load(Ordering::Relaxed) as f64)),
+            ("kv_rehydrates", Json::num(self.kv_rehydrates.load(Ordering::Relaxed) as f64)),
+            ("kv_prefix_hits", Json::num(self.kv_prefix_hits.load(Ordering::Relaxed) as f64)),
+            ("kv_prefix_misses", Json::num(self.kv_prefix_misses.load(Ordering::Relaxed) as f64)),
+            ("kv_prefix_hit_rate", Json::num(self.kv_prefix_hit_rate())),
+            (
+                "kv_accounting_anomalies",
+                Json::num(self.kv_accounting_anomalies.load(Ordering::Relaxed) as f64),
+            ),
             ("sched_rejections", Json::num(self.sched_rejections.load(Ordering::Relaxed) as f64)),
             ("sched_steps_total", Json::num(self.sched_steps_total.load(Ordering::Relaxed) as f64)),
             ("steps_per_second", Json::num(self.steps_per_second())),
@@ -415,6 +454,31 @@ mod tests {
             j.get_path(&["forwards", "cached", "buckets", "b4_s256_c64_r16"]).as_i64(),
             Some(2)
         );
+    }
+
+    #[test]
+    fn kv_tier_gauges_export() {
+        let m = Metrics::default();
+        m.kv_hot_bytes.store(8192, Ordering::Relaxed);
+        m.kv_spilled_bytes.store(4096, Ordering::Relaxed);
+        m.kv_spills.store(3, Ordering::Relaxed);
+        m.kv_rehydrates.store(2, Ordering::Relaxed);
+        m.kv_prefix_hits.store(9, Ordering::Relaxed);
+        m.kv_prefix_misses.store(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("kv_hot_bytes").as_i64(), Some(8192));
+        assert_eq!(j.get("kv_spilled_bytes").as_i64(), Some(4096));
+        assert_eq!(j.get("kv_spills").as_i64(), Some(3));
+        assert_eq!(j.get("kv_rehydrates").as_i64(), Some(2));
+        assert_eq!(j.get("kv_prefix_hits").as_i64(), Some(9));
+        assert_eq!(j.get("kv_prefix_hit_rate").as_f64(), Some(0.9));
+        assert_eq!(j.get("kv_accounting_anomalies").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn prefix_hit_rate_is_zero_when_unconsulted() {
+        let m = Metrics::default();
+        assert_eq!(m.kv_prefix_hit_rate(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Byte-exact serialization for [`KvCache`] segments — the spill format of
+//! the tiered KV store (`scheduler/kvstore.rs`).
+//!
+//! Layout (`WDKV` v1, little-endian throughout):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"WDKV"
+//! 4       2     version (currently 1)
+//! 6       2     reserved (0)
+//! 8       4     s   (sequence bucket, u32)
+//! 12      4     c   (cache-window bucket, u32)
+//! 16      8     k_len (f32 element count, u64)
+//! 24      8     v_len (f32 element count, u64)
+//! 32      4*k   K payload, f32 LE
+//! ...     4*v   V payload, f32 LE
+//! ```
+//!
+//! The payloads are the exact `k_host()`/`v_host()` vectors, so a decoded
+//! cache is byte-identical to the encoded one: spill → rehydrate must never
+//! perturb a session's state (the `kv_tier_props` suite pins this across
+//! (s, c) buckets and through `rebucket_c`). Floats round-trip via
+//! `to_bits`/`from_bits` so NaN payloads and signed zeros survive verbatim.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::runtime::KvCache;
+
+pub const MAGIC: [u8; 4] = *b"WDKV";
+pub const VERSION: u16 = 1;
+const HEADER_LEN: usize = 32;
+
+/// Serialize raw K/V payloads with their bucket coordinates.
+pub fn encode(s: usize, c: usize, k: &[f32], v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 4 * (k.len() + v.len()));
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(s as u32).to_le_bytes());
+    out.extend_from_slice(&(c as u32).to_le_bytes());
+    out.extend_from_slice(&(k.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for x in k {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    for x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Parse a `WDKV` blob back into `(s, c, k, v)`.
+pub fn decode(bytes: &[u8]) -> Result<(usize, usize, Vec<f32>, Vec<f32>)> {
+    if bytes.len() < HEADER_LEN {
+        return Err(anyhow!("kvcodec: {} bytes is shorter than the header", bytes.len()));
+    }
+    if bytes[0..4] != MAGIC {
+        return Err(anyhow!("kvcodec: bad magic {:?}", &bytes[0..4]));
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != VERSION {
+        return Err(anyhow!("kvcodec: unsupported version {version}"));
+    }
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()) as usize;
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap()) as usize;
+    let s = u32_at(8);
+    let c = u32_at(12);
+    let k_len = u64_at(16);
+    let v_len = u64_at(24);
+    let want = HEADER_LEN + 4 * (k_len + v_len);
+    if bytes.len() != want {
+        return Err(anyhow!(
+            "kvcodec: payload length mismatch: have {} bytes, header implies {want}",
+            bytes.len()
+        ));
+    }
+    let floats_at = |start: usize, n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let o = start + 4 * i;
+                f32::from_bits(u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()))
+            })
+            .collect()
+    };
+    let k = floats_at(HEADER_LEN, k_len);
+    let v = floats_at(HEADER_LEN + 4 * k_len, v_len);
+    Ok((s, c, k, v))
+}
+
+/// Serialize a [`KvCache`] (host-side copy of both tensors).
+pub fn encode_cache(kv: &KvCache) -> Result<Vec<u8>> {
+    Ok(encode(kv.s, kv.c, &kv.k_host()?, &kv.v_host()?))
+}
+
+/// Deserialize into a flat host [`KvCache`] (the same representation the
+/// mock executor and batched-split paths produce).
+pub fn decode_cache(bytes: &[u8]) -> Result<KvCache> {
+    let (s, c, k, v) = decode(bytes)?;
+    Ok(KvCache { s, c, flat: true, k: Literal::vec1(&k), v: Literal::vec1(&v) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_byte_exactly() {
+        let k: Vec<f32> = (0..64).map(|i| (i as f32) * 0.5 - 7.25).collect();
+        let v: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let blob = encode(256, 64, &k, &v);
+        let (s, c, dk, dv) = decode(&blob).unwrap();
+        assert_eq!((s, c), (256, 64));
+        assert_eq!(dk, k);
+        assert_eq!(dv, v);
+    }
+
+    #[test]
+    fn preserves_exotic_float_bits() {
+        let k = vec![f32::NAN, -0.0, f32::INFINITY, f32::MIN_POSITIVE];
+        let v = vec![f32::NEG_INFINITY, 0.0, -1e-40, 3.5];
+        let (_, _, dk, dv) = decode(&encode(8, 8, &k, &v)).unwrap();
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dk), bits(&k));
+        assert_eq!(bits(&dv), bits(&v));
+    }
+
+    #[test]
+    fn rejects_corrupt_blobs() {
+        assert!(decode(b"short").is_err());
+        let mut blob = encode(8, 8, &[1.0], &[2.0]);
+        blob[0] = b'X';
+        assert!(decode(&blob).is_err(), "bad magic");
+        let mut blob = encode(8, 8, &[1.0], &[2.0]);
+        blob[4] = 99;
+        assert!(decode(&blob).is_err(), "bad version");
+        let mut blob = encode(8, 8, &[1.0], &[2.0]);
+        blob.pop();
+        assert!(decode(&blob).is_err(), "truncated payload");
+    }
+
+    #[test]
+    fn cache_round_trip_is_byte_exact() {
+        let k: Vec<f32> = (0..128).map(|i| i as f32 * 0.125).collect();
+        let v: Vec<f32> = (0..128).map(|i| -(i as f32)).collect();
+        let kv = KvCache {
+            s: 256,
+            c: 128,
+            flat: true,
+            k: Literal::vec1(&k),
+            v: Literal::vec1(&v),
+        };
+        let back = decode_cache(&encode_cache(&kv).unwrap()).unwrap();
+        assert_eq!(back.s, 256);
+        assert_eq!(back.c, 128);
+        assert!(back.flat);
+        assert_eq!(back.k_host().unwrap(), k);
+        assert_eq!(back.v_host().unwrap(), v);
+    }
+}

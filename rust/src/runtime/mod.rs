@@ -4,6 +4,7 @@
 
 pub mod buckets;
 pub mod engine;
+pub mod kvcodec;
 pub mod manifest;
 pub mod pool;
 pub mod weights;

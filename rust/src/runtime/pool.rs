@@ -23,7 +23,16 @@
 //! per-replica *device* upload is the only duplicated weight state (see
 //! DESIGN.md §"Weight bank").
 //!
+//! KV caches take the opposite route from weights on the upload path: a
+//! checked-out replica receives its lane's KV as a *borrowed* [`KvCache`]
+//! (`&KvCache` via the scheduler's `KvCheckout` pin — see
+//! `scheduler::kvstore`), uploads it for the forward, and returns a fresh
+//! cache the store may dedupe back into one shared segment. Replicas never
+//! own KV across steps, so segments can spill/rehydrate and be shared
+//! between sessions without any per-replica invalidation.
+//!
 //! [`EngineCell`]: super::engine::EngineCell
+//! [`KvCache`]: super::engine::KvCache
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};

@@ -7,13 +7,11 @@
 //! aggregate possible residency can never exceed it: the serving layer maps
 //! that to `429` rather than letting concurrent sessions blow the budget.
 //!
-//! Separately the pool books *evictions*: the scheduler may drop idle
-//! sessions' resident caches (forcing a refresh on their next step) to keep
-//! the *actual* resident bytes under a soft limit — see
-//! `Scheduler::maybe_evict`, which also counts the bytes of sessions that
-//! are mid-step on other driver workers (booked at checkout). Reservations
-//! are not returned by eviction (the session may re-cache at any step);
-//! only completion releases them.
+//! The *actual* resident bytes are kept under a separate soft limit by the
+//! tiered [`KvStore`](super::kvstore::KvStore), which spills cold segments
+//! to disk instead of dropping them (mid-step segments are pinned by their
+//! checkouts and never spill). Reservations are not returned by spilling
+//! (the session may rehydrate at any step); only completion releases them.
 //!
 //! The pool itself is not thread-safe; every call happens under the
 //! scheduler's run-queue lock, which serializes the K driver workers'
@@ -30,6 +28,11 @@ pub struct PoolExhausted {
     pub need: usize,
     pub budget: usize,
     pub in_use: usize,
+    /// Backpressure hint: how long a client should wait before retrying,
+    /// derived by the scheduler from the trailing byte free rate
+    /// (release + spill). `None` straight out of [`KvPool::try_reserve`] —
+    /// the pool has no rate view; the scheduler fills it in.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl fmt::Display for PoolExhausted {
@@ -38,7 +41,11 @@ impl fmt::Display for PoolExhausted {
             f,
             "kv pool exhausted: need {} bytes, {} of {} in use",
             self.need, self.in_use, self.budget
-        )
+        )?;
+        if let Some(ms) = self.retry_after_ms {
+            write!(f, " (retry in ~{ms}ms)")?;
+        }
+        Ok(())
     }
 }
 
@@ -51,6 +58,7 @@ pub struct KvPool {
     reserved_total: usize,
     evictions: u64,
     rejections: u64,
+    anomalies: u64,
 }
 
 impl KvPool {
@@ -61,6 +69,7 @@ impl KvPool {
             reserved_total: 0,
             evictions: 0,
             rejections: 0,
+            anomalies: 0,
         }
     }
 
@@ -83,6 +92,7 @@ impl KvPool {
                 need: bytes,
                 budget: self.budget,
                 in_use: self.reserved_total,
+                retry_after_ms: None,
             });
         }
         self.reserved_total += bytes;
@@ -90,10 +100,22 @@ impl KvPool {
         Ok(())
     }
 
-    /// Release a session's reservation (idempotent).
-    pub fn release(&mut self, id: u64) {
-        if let Some(bytes) = self.reserved.remove(&id) {
-            self.reserved_total -= bytes;
+    /// Release a session's reservation, returning the bytes freed. A
+    /// release for an id the pool does not know is an accounting bug in the
+    /// caller (a double release or a release of a never-reserved session):
+    /// it is counted in [`KvPool::anomalies`] rather than silently ignored,
+    /// so the booking-discipline regression it indicates is observable on
+    /// `/metrics` instead of slowly corrupting the budget.
+    pub fn release(&mut self, id: u64) -> usize {
+        match self.reserved.remove(&id) {
+            Some(bytes) => {
+                self.reserved_total -= bytes;
+                bytes
+            }
+            None => {
+                self.anomalies += 1;
+                0
+            }
         }
     }
 
@@ -121,6 +143,13 @@ impl KvPool {
     pub fn rejections(&self) -> u64 {
         self.rejections
     }
+
+    /// Releases for unknown session ids (see [`KvPool::release`]). Always 0
+    /// when the scheduler's booking discipline is correct — tests
+    /// `debug_assert` on it at shutdown.
+    pub fn anomalies(&self) -> u64 {
+        self.anomalies
+    }
 }
 
 #[cfg(test)]
@@ -134,10 +163,14 @@ mod tests {
         p.try_reserve(2, 400).unwrap();
         assert_eq!(p.reserved_bytes(), 800);
         assert_eq!(p.sessions(), 2);
-        p.release(1);
+        assert_eq!(p.release(1), 400);
         assert_eq!(p.reserved_bytes(), 400);
-        p.release(1); // idempotent
+        assert_eq!(p.anomalies(), 0);
+        // a double release is a caller bug: no effect on the ledger, but
+        // it is counted rather than silently swallowed
+        assert_eq!(p.release(1), 0);
         assert_eq!(p.reserved_bytes(), 400);
+        assert_eq!(p.anomalies(), 1);
     }
 
     #[test]

@@ -1,0 +1,788 @@
+//! Handle-based, tiered KV segment store (ISSUE 7).
+//!
+//! Ownership inversion: cached [`StepPlan`]s and strategy phase state used
+//! to *own* `KvCache` values; now they hold [`KvHandle`]s into a
+//! process-wide [`KvStore`] that owns every decoded-prefix segment. The
+//! store adds two capabilities the owned-value design could not express:
+//!
+//! * **Content-addressed prefix sharing.** A refresh (`Window`) forward is
+//!   a pure function of its full plan inputs under a deterministic
+//!   executor, so its outputs — logits plus the fresh phase KV — are keyed
+//!   by [`PrefixKey`] (bucket params + token ids + positions + exact valid
+//!   mask bits). Concurrent sessions with a shared prompt prefix attach
+//!   copy-on-write to one resident segment via [`KvHandle::dup`] instead of
+//!   recomputing it; segments are immutable, so "copy-on-write" degenerates
+//!   to "new segment on next refresh" and hits are byte-identical by
+//!   construction.
+//! * **Tiered residency.** Hot segments live in host memory under the
+//!   scheduler's soft byte limit; when the hot tier overflows, the
+//!   least-recently-touched *unpinned* segment is spilled to a disk tier
+//!   (`runtime/kvcodec` `WDKV` blobs) and transparently rehydrated on the
+//!   next [`KvHandle::checkout`]. Checkouts pin their segment, so a
+//!   mid-step session's KV is never spilled out from under the forward.
+//!
+//! Byte parity: spill → rehydrate round-trips the exact f32 bit patterns,
+//! and a prefix hit returns the same logits/KV bytes the session would have
+//! computed itself, so every PR 3/4 parity invariant (lane merge/split,
+//! promote/demote, solo-vs-batched) survives verbatim.
+
+use std::collections::HashMap;
+use std::ops::Deref;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{kvcodec, KvCache};
+use crate::trace::TraceRecorder;
+
+/// Distinguishes spill directories across stores in one process (tests spin
+/// up many schedulers concurrently).
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Most recently published prefix entries kept addressable; beyond this the
+/// least-recently-used entry (and its segment reference) is dropped.
+const PREFIX_INDEX_CAP: usize = 128;
+
+/// Content address of a refresh forward: the *entire* input of the pure
+/// `window(s, c, ids, pos, valid)` function, with the valid mask captured as
+/// exact f32 bit patterns. Two plans with equal keys produce byte-identical
+/// outputs under a deterministic executor.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PrefixKey {
+    pub s: usize,
+    pub c: usize,
+    pub ids: Vec<i32>,
+    pub pos: Vec<i32>,
+    pub valid_bits: Vec<u32>,
+}
+
+impl PrefixKey {
+    pub fn new(s: usize, c: usize, ids: &[i32], pos: &[i32], valid: &[f32]) -> PrefixKey {
+        PrefixKey {
+            s,
+            c,
+            ids: ids.to_vec(),
+            pos: pos.to_vec(),
+            valid_bits: valid.iter().map(|x| x.to_bits()).collect(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct KvStoreConfig {
+    /// Hot-tier soft limit in bytes; 0 disables spilling entirely.
+    pub soft_bytes: usize,
+    /// Where spilled `WDKV` blobs land. `None` → a per-store directory under
+    /// the system temp dir, created lazily and removed when the store drops.
+    pub spill_dir: Option<PathBuf>,
+}
+
+/// Host-resident payload of a hot segment. Plain `Vec<f32>`s (not XLA
+/// literals) so the store is `Send + Sync` without ceremony; checkouts
+/// materialize a fresh flat [`KvCache`] on demand.
+#[derive(Debug, Clone)]
+struct SegmentData {
+    s: usize,
+    c: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl SegmentData {
+    fn from_cache(kv: &KvCache) -> Result<SegmentData> {
+        Ok(SegmentData { s: kv.s, c: kv.c, k: kv.k_host()?, v: kv.v_host()? })
+    }
+
+    fn to_cache(&self) -> KvCache {
+        KvCache {
+            s: self.s,
+            c: self.c,
+            flat: true,
+            k: xla::Literal::vec1(&self.k),
+            v: xla::Literal::vec1(&self.v),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        4 * (self.k.len() + self.v.len())
+    }
+}
+
+#[derive(Debug)]
+enum Residency {
+    Hot(SegmentData),
+    Spilled(PathBuf),
+}
+
+#[derive(Debug)]
+struct Segment {
+    residency: Residency,
+    /// Outstanding handles + checkouts referencing this segment.
+    refs: usize,
+    /// Outstanding checkouts; pinned segments are never spill victims.
+    pins: usize,
+    bytes: usize,
+    s: usize,
+    c: usize,
+    /// Logical LRU clock value of the last touch (insert/checkout/hit).
+    last_touch: u64,
+}
+
+struct PrefixEntry {
+    logits: Arc<Vec<f32>>,
+    seg_id: u64,
+    last_touch: u64,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    segments: HashMap<u64, Segment>,
+    prefix: HashMap<PrefixKey, PrefixEntry>,
+    next_id: u64,
+    /// Monotonic LRU clock (bumped on every touch).
+    clock: u64,
+    hot_bytes: usize,
+    spilled_bytes: usize,
+    /// Lazily-created spill directory (once first spill happens).
+    spill_dir: Option<PathBuf>,
+    /// True when we created the directory ourselves and should remove it.
+    owns_dir: bool,
+}
+
+/// The tiered segment store. One per scheduler (plus cheap [`detached`]
+/// instances for solo/unit-test sessions that never share or spill).
+///
+/// [`detached`]: KvStore::detached
+pub struct KvStore {
+    /// Self-reference (set by `Arc::new_cyclic`) so `&self` methods can
+    /// mint `Arc`-owning handles without `&Arc<Self>` receivers.
+    self_ref: Weak<KvStore>,
+    cfg: KvStoreConfig,
+    inner: Mutex<StoreInner>,
+    spills: AtomicU64,
+    rehydrates: AtomicU64,
+    spill_errors: AtomicU64,
+    prefix_hits: AtomicU64,
+    prefix_misses: AtomicU64,
+    hot_peak: AtomicUsize,
+    /// Bytes freed from the hot tier by spills — feeds the scheduler's
+    /// trailing free-rate for 429 `retry_after_ms` hints.
+    spill_freed_bytes: AtomicUsize,
+    trace: OnceLock<Arc<TraceRecorder>>,
+}
+
+impl std::fmt::Debug for KvStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("KvStore")
+            .field("segments", &inner.segments.len())
+            .field("hot_bytes", &inner.hot_bytes)
+            .field("spilled_bytes", &inner.spilled_bytes)
+            .field("soft_bytes", &self.cfg.soft_bytes)
+            .finish()
+    }
+}
+
+impl KvStore {
+    pub fn new(cfg: KvStoreConfig) -> Arc<KvStore> {
+        Arc::new_cyclic(|me| KvStore {
+            self_ref: me.clone(),
+            cfg,
+            inner: Mutex::new(StoreInner::default()),
+            spills: AtomicU64::new(0),
+            rehydrates: AtomicU64::new(0),
+            spill_errors: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_misses: AtomicU64::new(0),
+            hot_peak: AtomicUsize::new(0),
+            spill_freed_bytes: AtomicUsize::new(0),
+            trace: OnceLock::new(),
+        })
+    }
+
+    /// A store that never spills and never shares — the default backing for
+    /// sessions stepped outside a scheduler (unit tests, solo shims).
+    pub fn detached() -> Arc<KvStore> {
+        KvStore::new(KvStoreConfig::default())
+    }
+
+    /// Wire the scheduler's span recorder in (idempotent; first wins).
+    pub fn attach_trace(&self, tr: Arc<TraceRecorder>) {
+        let _ = self.trace.set(tr);
+    }
+
+    fn arc(&self) -> Arc<KvStore> {
+        self.self_ref.upgrade().expect("kvstore alive while its methods run")
+    }
+
+    // -- segment lifecycle ----------------------------------------------------
+
+    /// Adopt a freshly-computed cache into the hot tier and return the
+    /// owning handle. May spill *other* (cold, unpinned) segments to stay
+    /// under the soft limit.
+    pub fn insert(&self, kv: &KvCache) -> Result<KvHandle> {
+        let data = SegmentData::from_cache(kv)?;
+        let bytes = data.bytes();
+        let (s, c) = (data.s, data.c);
+        let mut inner = self.inner.lock().unwrap();
+        inner.next_id += 1;
+        inner.clock += 1;
+        let id = inner.next_id;
+        let touch = inner.clock;
+        inner.segments.insert(
+            id,
+            Segment {
+                residency: Residency::Hot(data),
+                refs: 1,
+                pins: 0,
+                bytes,
+                s,
+                c,
+                last_touch: touch,
+            },
+        );
+        inner.hot_bytes += bytes;
+        self.note_hot_peak(inner.hot_bytes);
+        self.enforce_soft(&mut inner);
+        drop(inner);
+        Ok(KvHandle { id, s, c, bytes, store: self.arc() })
+    }
+
+    /// Spill least-recently-touched unpinned hot segments until the hot
+    /// tier fits the soft limit (or nothing spillable remains). IO errors
+    /// leave the victim hot and count `spill_errors` — degraded, not wrong.
+    fn enforce_soft(&self, inner: &mut StoreInner) {
+        let soft = self.cfg.soft_bytes;
+        if soft == 0 {
+            return;
+        }
+        while inner.hot_bytes > soft {
+            let victim = inner
+                .segments
+                .iter()
+                .filter(|(_, seg)| seg.pins == 0 && matches!(seg.residency, Residency::Hot(_)))
+                .min_by_key(|(_, seg)| seg.last_touch)
+                .map(|(id, _)| *id);
+            let Some(id) = victim else { break };
+            if let Err(e) = self.spill_one(inner, id) {
+                self.spill_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("kvstore: spill of segment {id} failed (left hot): {e:#}");
+                break;
+            }
+        }
+    }
+
+    fn spill_one(&self, inner: &mut StoreInner, id: u64) -> Result<()> {
+        let dir = self.ensure_spill_dir(inner)?;
+        let seg = inner.segments.get_mut(&id).expect("spill victim exists");
+        let Residency::Hot(data) = &seg.residency else {
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        let blob = kvcodec::encode(data.s, data.c, &data.k, &data.v);
+        let path = dir.join(format!("seg-{id}.kv"));
+        std::fs::write(&path, &blob)
+            .with_context(|| format!("writing spill blob {}", path.display()))?;
+        let bytes = seg.bytes;
+        seg.residency = Residency::Spilled(path);
+        inner.hot_bytes -= bytes;
+        inner.spilled_bytes += bytes;
+        self.spills.fetch_add(1, Ordering::Relaxed);
+        self.spill_freed_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if let Some(tr) = self.trace.get() {
+            tr.spill(id, t0, Instant::now());
+        }
+        Ok(())
+    }
+
+    fn ensure_spill_dir(&self, inner: &mut StoreInner) -> Result<PathBuf> {
+        if let Some(dir) = &inner.spill_dir {
+            return Ok(dir.clone());
+        }
+        let (dir, owned) = match &self.cfg.spill_dir {
+            Some(d) => (d.clone(), false),
+            None => {
+                let seq = STORE_SEQ.fetch_add(1, Ordering::Relaxed);
+                let d = std::env::temp_dir()
+                    .join(format!("wd-kv-spill-{}-{seq}", std::process::id()));
+                (d, true)
+            }
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        inner.spill_dir = Some(dir.clone());
+        inner.owns_dir = owned;
+        Ok(dir)
+    }
+
+    /// Pin + materialize a segment for a forward. Spilled segments are read
+    /// back, byte-verified by the codec, promoted hot again (their blob is
+    /// deleted), and the hot tier re-balanced around them.
+    fn checkout(&self, id: u64) -> Result<KvCheckout> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let touch = inner.clock;
+        let seg = inner
+            .segments
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("kvstore: checkout of unknown segment {id}"))?;
+        seg.last_touch = touch;
+        seg.refs += 1;
+        seg.pins += 1;
+        let kv = match &seg.residency {
+            Residency::Hot(data) => data.to_cache(),
+            Residency::Spilled(path) => {
+                let t0 = Instant::now();
+                let path = path.clone();
+                let blob = std::fs::read(&path)
+                    .with_context(|| format!("reading spill blob {}", path.display()));
+                let blob = match blob {
+                    Ok(b) => b,
+                    Err(e) => {
+                        seg.refs -= 1;
+                        seg.pins -= 1;
+                        return Err(e);
+                    }
+                };
+                let (s, c, k, v) = match kvcodec::decode(&blob) {
+                    Ok(d) => d,
+                    Err(e) => {
+                        seg.refs -= 1;
+                        seg.pins -= 1;
+                        return Err(e);
+                    }
+                };
+                let data = SegmentData { s, c, k, v };
+                let bytes = seg.bytes;
+                let kv = data.to_cache();
+                seg.residency = Residency::Hot(data);
+                inner.hot_bytes += bytes;
+                inner.spilled_bytes -= bytes;
+                let _ = std::fs::remove_file(&path);
+                self.rehydrates.fetch_add(1, Ordering::Relaxed);
+                self.note_hot_peak(inner.hot_bytes);
+                if let Some(tr) = self.trace.get() {
+                    tr.rehydrate(id, t0, Instant::now());
+                }
+                // The rehydrated segment is pinned; rebalance may spill a
+                // *different* cold segment to make room for it.
+                self.enforce_soft(&mut inner);
+                kv
+            }
+        };
+        drop(inner);
+        Ok(KvCheckout { kv, id, store: self.arc() })
+    }
+
+    fn unpin(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(seg) = inner.segments.get_mut(&id) {
+            debug_assert!(seg.pins > 0, "unpin of unpinned segment {id}");
+            seg.pins = seg.pins.saturating_sub(1);
+        }
+        self.release_locked(&mut inner, id);
+        // A just-unpinned segment may now be the pressure relief valve.
+        self.enforce_soft(&mut inner);
+    }
+
+    fn dup_ref(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(seg) = inner.segments.get_mut(&id) {
+            seg.refs += 1;
+        }
+    }
+
+    fn release(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        self.release_locked(&mut inner, id);
+    }
+
+    fn release_locked(&self, inner: &mut StoreInner, id: u64) {
+        let drop_seg = match inner.segments.get_mut(&id) {
+            Some(seg) => {
+                debug_assert!(seg.refs > 0, "release of dead segment {id}");
+                seg.refs = seg.refs.saturating_sub(1);
+                seg.refs == 0
+            }
+            None => false,
+        };
+        if drop_seg {
+            let seg = inner.segments.remove(&id).unwrap();
+            match seg.residency {
+                Residency::Hot(_) => inner.hot_bytes -= seg.bytes,
+                Residency::Spilled(path) => {
+                    inner.spilled_bytes -= seg.bytes;
+                    let _ = std::fs::remove_file(path);
+                }
+            }
+        }
+    }
+
+    // -- prefix index ---------------------------------------------------------
+
+    /// Publish a refresh forward's outputs under its content address. The
+    /// index holds one segment reference per entry (bounded LRU), keeping
+    /// the segment alive for future sessions even after the publisher moves
+    /// on.
+    pub fn publish(&self, key: PrefixKey, logits: Vec<f32>, handle: &KvHandle) {
+        debug_assert!(std::ptr::eq(handle.store_ptr(), self), "publish into foreign store");
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let touch = inner.clock;
+        if let Some(seg) = inner.segments.get_mut(&handle.id) {
+            seg.refs += 1;
+        } else {
+            return;
+        }
+        let old = inner.prefix.insert(
+            key,
+            PrefixEntry { logits: Arc::new(logits), seg_id: handle.id, last_touch: touch },
+        );
+        if let Some(old) = old {
+            self.release_locked(&mut inner, old.seg_id);
+        }
+        while inner.prefix.len() > PREFIX_INDEX_CAP {
+            let victim = inner
+                .prefix
+                .iter()
+                .min_by_key(|(_, e)| e.last_touch)
+                .map(|(k, _)| k.clone());
+            let Some(k) = victim else { break };
+            let e = inner.prefix.remove(&k).unwrap();
+            self.release_locked(&mut inner, e.seg_id);
+        }
+    }
+
+    /// Content-address lookup: on hit, returns the published logits plus a
+    /// fresh handle (CoW attach) to the shared segment.
+    pub fn prefix_lookup(&self, key: &PrefixKey) -> Option<(Arc<Vec<f32>>, KvHandle)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let touch = inner.clock;
+        let Some(entry) = inner.prefix.get_mut(key) else {
+            self.prefix_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        entry.last_touch = touch;
+        let seg_id = entry.seg_id;
+        let logits = Arc::clone(&entry.logits);
+        let (s, c, bytes) = {
+            let seg = inner.segments.get_mut(&seg_id)?;
+            seg.refs += 1;
+            seg.last_touch = touch;
+            (seg.s, seg.c, seg.bytes)
+        };
+        drop(inner);
+        self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(tr) = self.trace.get() {
+            tr.prefix_hit(seg_id, Instant::now());
+        }
+        Some((logits, KvHandle { id: seg_id, s, c, bytes, store: self.arc() }))
+    }
+
+    // -- gauges ---------------------------------------------------------------
+
+    fn note_hot_peak(&self, hot: usize) {
+        self.hot_peak.fetch_max(hot, Ordering::Relaxed);
+    }
+
+    pub fn hot_bytes(&self) -> usize {
+        self.inner.lock().unwrap().hot_bytes
+    }
+
+    pub fn spilled_bytes(&self) -> usize {
+        self.inner.lock().unwrap().spilled_bytes
+    }
+
+    pub fn hot_peak_bytes(&self) -> usize {
+        self.hot_peak.load(Ordering::Relaxed)
+    }
+
+    pub fn spills(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    pub fn rehydrates(&self) -> u64 {
+        self.rehydrates.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_errors(&self) -> u64 {
+        self.spill_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn prefix_misses(&self) -> u64 {
+        self.prefix_misses.load(Ordering::Relaxed)
+    }
+
+    /// Bytes freed by spills since the last call (drained, not cumulative) —
+    /// consumed by the scheduler's trailing free-rate meter.
+    pub fn take_spill_freed_bytes(&self) -> usize {
+        self.spill_freed_bytes.swap(0, Ordering::Relaxed)
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.inner.lock().unwrap().segments.len()
+    }
+
+    pub fn soft_bytes(&self) -> usize {
+        self.cfg.soft_bytes
+    }
+
+    /// The spill directory, if one was ever materialized.
+    pub fn spill_dir(&self) -> Option<PathBuf> {
+        self.inner.lock().unwrap().spill_dir.clone()
+    }
+}
+
+impl Drop for KvStore {
+    fn drop(&mut self) {
+        let inner = self.inner.get_mut().unwrap();
+        // All handles hold an Arc<KvStore>, so by the time the store drops
+        // no segment can still be referenced; delete any stray blobs and
+        // the directory if we created it.
+        for (_, seg) in inner.segments.drain() {
+            if let Residency::Spilled(path) = seg.residency {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+        if inner.owns_dir {
+            if let Some(dir) = inner.spill_dir.take() {
+                let _ = std::fs::remove_dir(dir);
+            }
+        }
+    }
+}
+
+/// Refcounted, non-`Clone` capability to one immutable KV segment. `dup()`
+/// is the explicit CoW attach; dropping the last handle frees the segment
+/// (and its spill blob). Plans and strategy phase state move handles around
+/// exactly where they used to move owned `KvCache` values.
+#[derive(Debug)]
+pub struct KvHandle {
+    id: u64,
+    s: usize,
+    c: usize,
+    bytes: usize,
+    store: Arc<KvStore>,
+}
+
+impl KvHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// Host bytes of the underlying segment (hot or spilled) — exactly
+    /// `c × kv_slot_bytes(arch)`, the same figure the old owned caches
+    /// reported through `cache_bytes()`.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Explicit share: a second owning reference to the same segment.
+    pub fn dup(&self) -> KvHandle {
+        self.store.dup_ref(self.id);
+        KvHandle {
+            id: self.id,
+            s: self.s,
+            c: self.c,
+            bytes: self.bytes,
+            store: Arc::clone(&self.store),
+        }
+    }
+
+    /// Pin + materialize for a forward; rehydrates from disk if spilled.
+    pub fn checkout(&self) -> Result<KvCheckout> {
+        self.store.checkout(self.id)
+    }
+
+    pub fn store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    fn store_ptr(&self) -> *const KvStore {
+        Arc::as_ptr(&self.store)
+    }
+}
+
+impl Drop for KvHandle {
+    fn drop(&mut self) {
+        self.store.release(self.id);
+    }
+}
+
+/// RAII pin over a checked-out segment: derefs to the materialized
+/// [`KvCache`] for the duration of a forward; dropping unpins (making the
+/// segment spillable again) without invalidating the handle.
+pub struct KvCheckout {
+    kv: KvCache,
+    id: u64,
+    store: Arc<KvStore>,
+}
+
+impl Deref for KvCheckout {
+    type Target = KvCache;
+
+    fn deref(&self) -> &KvCache {
+        &self.kv
+    }
+}
+
+impl std::fmt::Debug for KvCheckout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvCheckout")
+            .field("segment", &self.id)
+            .field("s", &self.kv.s)
+            .field("c", &self.kv.c)
+            .finish()
+    }
+}
+
+impl Drop for KvCheckout {
+    fn drop(&mut self) {
+        self.store.unpin(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use xla::Literal;
+
+    fn cache(s: usize, c: usize, fill: f32) -> KvCache {
+        let elems = c * 2; // arbitrary small payload; store never re-derives
+        let k: Vec<f32> = (0..elems).map(|i| fill + i as f32).collect();
+        let v: Vec<f32> = (0..elems).map(|i| -(fill + i as f32)).collect();
+        KvCache { s, c, flat: true, k: Literal::vec1(&k), v: Literal::vec1(&v) }
+    }
+
+    #[test]
+    fn insert_checkout_release_accounting() {
+        let store = KvStore::detached();
+        let kv = cache(64, 16, 1.0);
+        let h = store.insert(&kv).unwrap();
+        assert_eq!(store.hot_bytes(), h.bytes());
+        assert_eq!(store.segment_count(), 1);
+        {
+            let co = h.checkout().unwrap();
+            assert_eq!(co.k_host().unwrap(), kv.k_host().unwrap());
+            assert_eq!(co.v_host().unwrap(), kv.v_host().unwrap());
+        }
+        drop(h);
+        assert_eq!(store.segment_count(), 0);
+        assert_eq!(store.hot_bytes(), 0);
+    }
+
+    #[test]
+    fn dup_extends_lifetime() {
+        let store = KvStore::detached();
+        let h = store.insert(&cache(64, 16, 2.0)).unwrap();
+        let h2 = h.dup();
+        drop(h);
+        assert_eq!(store.segment_count(), 1, "dup keeps the segment alive");
+        let co = h2.checkout().unwrap();
+        assert_eq!(co.c, 16);
+        drop(co);
+        drop(h2);
+        assert_eq!(store.segment_count(), 0);
+    }
+
+    #[test]
+    fn soft_limit_spills_lru_and_rehydrates_byte_exact() {
+        let one = cache(64, 16, 3.0);
+        let bytes_each = 4 * (one.k_host().unwrap().len() + one.v_host().unwrap().len());
+        let dir = std::env::temp_dir().join(format!(
+            "wd-kvstore-test-{}-{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: bytes_each + bytes_each / 2,
+            spill_dir: Some(dir.clone()),
+        });
+        let h1 = store.insert(&one).unwrap();
+        let h2 = store.insert(&cache(64, 16, 4.0)).unwrap();
+        // h1 is LRU → spilled to make room for h2.
+        assert_eq!(store.spills(), 1);
+        assert!(store.hot_bytes() <= store.soft_bytes());
+        assert_eq!(store.spilled_bytes(), bytes_each);
+        // Rehydration is byte-exact and flips residency back.
+        let co = h1.checkout().unwrap();
+        assert_eq!(store.rehydrates(), 1);
+        assert_eq!(co.k_host().unwrap(), one.k_host().unwrap());
+        assert_eq!(co.v_host().unwrap(), one.v_host().unwrap());
+        drop(co);
+        drop(h1);
+        drop(h2);
+        assert_eq!(store.segment_count(), 0);
+        let leftovers = std::fs::read_dir(&dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert_eq!(leftovers, 0, "all spill blobs deleted");
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn pinned_segments_are_never_spill_victims() {
+        let one = cache(64, 16, 5.0);
+        let bytes_each = 4 * (one.k_host().unwrap().len() + one.v_host().unwrap().len());
+        let store =
+            KvStore::new(KvStoreConfig { soft_bytes: bytes_each, spill_dir: None });
+        let h1 = store.insert(&one).unwrap();
+        let co = h1.checkout().unwrap(); // pin h1
+        // Inserting h2 overflows the hot tier, but h1 is pinned and h2 is
+        // the only unpinned candidate → h2 spills, pinned h1 stays hot.
+        let h2 = store.insert(&cache(64, 16, 6.0)).unwrap();
+        assert_eq!(store.spills(), 1);
+        assert_eq!(co.k_host().unwrap(), one.k_host().unwrap(), "pinned data untouched");
+        drop(co);
+        // Unpinning rebalances: h1 (older touch) is now spillable.
+        assert!(store.hot_bytes() <= store.soft_bytes());
+        drop(h1);
+        drop(h2);
+    }
+
+    #[test]
+    fn prefix_publish_and_lookup_share_one_segment() {
+        let store = KvStore::detached();
+        let kv = cache(64, 32, 7.0);
+        let h = store.insert(&kv).unwrap();
+        let key = PrefixKey::new(64, 32, &[1, 2, 3], &[0, 1, 2], &[1.0, 1.0, 0.0]);
+        store.publish(key.clone(), vec![0.25; 8], &h);
+        drop(h); // index reference keeps the segment alive
+        assert_eq!(store.segment_count(), 1);
+        let (logits, h2) = store.prefix_lookup(&key).unwrap();
+        assert_eq!(logits.as_slice(), &[0.25; 8]);
+        assert_eq!(h2.c(), 32);
+        assert_eq!(store.prefix_hits(), 1);
+        let miss = PrefixKey::new(64, 32, &[9], &[0], &[1.0]);
+        assert!(store.prefix_lookup(&miss).is_none());
+        assert_eq!(store.prefix_misses(), 1);
+        let co = h2.checkout().unwrap();
+        assert_eq!(co.k_host().unwrap(), kv.k_host().unwrap(), "shared bytes identical");
+    }
+
+    #[test]
+    fn prefix_valid_mask_bits_are_part_of_the_key() {
+        let store = KvStore::detached();
+        let h = store.insert(&cache(64, 32, 8.0)).unwrap();
+        let key = PrefixKey::new(64, 32, &[1], &[0], &[1.0]);
+        store.publish(key, vec![1.0], &h);
+        let other = PrefixKey::new(64, 32, &[1], &[0], &[-0.0]);
+        assert!(store.prefix_lookup(&other).is_none(), "-0.0 != +0.0 bitwise");
+    }
+}

@@ -14,8 +14,13 @@
 //! * [`policy`] — who gets the next quantum (round-robin baseline,
 //!   shortest-remaining-steps, deadline-aware);
 //! * [`kvpool`] — byte-budgeted admission control over phase-cache
-//!   residency (reject, don't overcommit), plus soft-limit eviction of idle
-//!   sessions' caches;
+//!   residency (reject, don't overcommit);
+//! * [`kvstore`] — the tiered, handle-based segment store that owns every
+//!   resident KV cache: above the soft limit, cold segments *spill* to a
+//!   disk tier (rehydrated transparently at the next checkout) instead of
+//!   being dropped, and with `prefix_share` enabled, identical refresh
+//!   forwards across sessions resolve to ONE shared segment by content
+//!   address;
 //! * [`Ticket`] — completion handle the serving layer blocks on.
 //!
 //! With `max_batch > 1` each quantum **coalesces**: the driver drains up to
@@ -48,14 +53,17 @@
 
 pub mod governor;
 pub mod kvpool;
+pub mod kvstore;
 pub mod policy;
 
 pub use governor::{BatchGovernor, BatchPolicy, CounterSnapshot, GovernorConfig};
 pub use kvpool::{KvPool, PoolExhausted};
+pub use kvstore::{KvCheckout, KvHandle, KvStore, KvStoreConfig, PrefixKey};
 pub use policy::Policy;
 
 use std::collections::VecDeque;
 use std::fmt;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -63,12 +71,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::plan::{
-    execute_plan, ForwardKind, Planned, Promotion, StepOutputs, StepPlan,
+    execute_plan, ForwardKind, KvOut, Planned, Promotion, StepOutputs, StepPlan,
 };
 use crate::coordinator::{GenRequest, GenResult, StepExec};
 use crate::metrics::Metrics;
 use crate::runtime::{buckets, Arch};
-use crate::strategies::machine::kv_slot_bytes;
 use crate::strategies::{self, Session, StepOutcome};
 use crate::trace::{TraceMode, TraceRecorder};
 use crate::util::stats::RateMeter;
@@ -94,13 +101,24 @@ fn bucket_key(b: usize, bucket: (usize, usize, usize)) -> String {
     key
 }
 
+#[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     pub policy: Policy,
     /// KV pool byte budget (admission control); 0 = unlimited.
     pub kv_budget_bytes: usize,
-    /// Soft residency limit: above this, idle sessions' caches are evicted
-    /// (they refresh on their next quantum). 0 = never evict.
+    /// Hot-tier soft limit: above this, the [`KvStore`] spills cold
+    /// (unpinned, least-recently-touched) segments to the disk tier; they
+    /// rehydrate transparently at their next checkout. 0 = never spill.
     pub kv_soft_bytes: usize,
+    /// Where spilled segments land; `None` = a per-store temp directory,
+    /// removed when the scheduler drops.
+    pub kv_spill_dir: Option<PathBuf>,
+    /// Cross-session prefix sharing: content-address every Window (refresh)
+    /// forward and let identical later plans skip the engine, attaching to
+    /// the published segment instead. Off by default — sharing changes KV
+    /// *residency* (one segment for N sessions), which soft-limit tests and
+    /// byte-accounting consumers may not expect.
+    pub prefix_share: bool,
     /// In-flight session cap; 0 = unlimited.
     pub max_sessions: usize,
     /// Coalescing width: each `tick` drains up to this many policy-ordered
@@ -132,6 +150,8 @@ impl Default for SchedulerConfig {
             policy: Policy::RoundRobin,
             kv_budget_bytes: 0,
             kv_soft_bytes: 0,
+            kv_spill_dir: None,
+            prefix_share: false,
             max_sessions: 64,
             max_batch: 1,
             batch_policy: BatchPolicy::Fixed,
@@ -260,10 +280,6 @@ struct Inner {
     /// are invisible to `policy::pick` — concurrent drivers always step
     /// disjoint sessions.
     stepping: usize,
-    /// Resident cache bytes held by mid-step sessions, booked at checkout —
-    /// `maybe_evict` must see them or the soft limit undercounts exactly
-    /// when pressure is highest.
-    stepping_bytes: usize,
     /// Submissions past the admission checks but still building their
     /// session (lock released); they hold a pool reservation and count
     /// toward `max_sessions`.
@@ -276,6 +292,10 @@ struct Inner {
     /// `batch_occupancy_recent` gauge (lanes per forward, recent only).
     fwd_rate: RateMeter,
     lane_rate: RateMeter,
+    /// KV bytes freed over a trailing window (completed sessions' released
+    /// reservations + hot-tier bytes freed by spills) — the denominator of
+    /// the 429 `retry_after_ms` hint.
+    free_rate: RateMeter,
 }
 
 pub struct Scheduler {
@@ -293,6 +313,10 @@ pub struct Scheduler {
     /// tick (EDF policy + adaptive width only).
     deadline_slack: Duration,
     cfg: SchedulerConfig,
+    /// The tiered KV segment store shared by every session this scheduler
+    /// admits (sessions are re-pointed at it in `submit`, before their
+    /// first segment exists).
+    store: Arc<KvStore>,
     inner: Mutex<Inner>,
     work: Condvar,
     /// Signalled when `stepping` drops to zero while stopping — `shutdown`
@@ -337,6 +361,13 @@ impl Scheduler {
             TraceMode::Off => None,
             TraceMode::Ring => Some(Arc::new(TraceRecorder::new())),
         };
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: cfg.kv_soft_bytes,
+            spill_dir: cfg.kv_spill_dir.clone(),
+        });
+        if let Some(tr) = &trace {
+            store.attach_trace(Arc::clone(tr));
+        }
         Arc::new(Scheduler {
             exec,
             b_ladder,
@@ -344,16 +375,17 @@ impl Scheduler {
             governor,
             deadline_slack,
             cfg,
+            store,
             inner: Mutex::new(Inner {
                 run: VecDeque::new(),
                 stepping: 0,
-                stepping_bytes: 0,
                 admitting: 0,
                 pool,
                 quantum: 0,
                 rate: RateMeter::new(STEP_RATE_WINDOW, t0),
                 fwd_rate: RateMeter::new(STEP_RATE_WINDOW, t0),
                 lane_rate: RateMeter::new(STEP_RATE_WINDOW, t0),
+                free_rate: RateMeter::new(STEP_RATE_WINDOW, t0),
             }),
             work: Condvar::new(),
             quiesce: Condvar::new(),
@@ -378,6 +410,16 @@ impl Scheduler {
     /// the `/trace` and `/metrics` handlers read it.
     pub fn trace(&self) -> Option<&Arc<TraceRecorder>> {
         self.trace.as_ref()
+    }
+
+    /// The tiered KV segment store (`/info` and `/metrics` read its tier
+    /// gauges; benches read its hit/spill counters).
+    pub fn kv_store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    pub fn prefix_share_enabled(&self) -> bool {
+        self.cfg.prefix_share
     }
 
     /// Admit a session. Admission checks (saturation, KV budget) run
@@ -410,8 +452,9 @@ impl Scheduler {
                 });
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            if let Err(e) = inner.pool.try_reserve(id, est) {
-                self.update_gauges(&inner);
+            if let Err(mut e) = inner.pool.try_reserve(id, est) {
+                e.retry_after_ms = Some(self.retry_hint_ms(&inner, e.need));
+                self.update_gauges(&mut inner);
                 return Err(SubmitError::Pool(e));
             }
             // hold the slot (and the reservation) while the session is built
@@ -424,20 +467,24 @@ impl Scheduler {
 
         let mut inner = self.inner.lock().unwrap();
         inner.admitting -= 1;
-        let session = match session {
+        let mut session = match session {
             Ok(s) => s,
             Err(e) => {
-                inner.pool.release(id);
-                self.update_gauges(&inner);
+                self.release_metered(&mut inner, id);
+                self.update_gauges(&mut inner);
                 return Err(SubmitError::Start(e));
             }
         };
+        // every admitted session shares THIS scheduler's segment store —
+        // attached before its first step, so no segment ever lives in the
+        // per-session detached default
+        session.attach_kv_store(Arc::clone(&self.store));
         // re-check under the lock: shutdown() drains under this same lock,
         // so a session pushed here is either refused or guaranteed to be
         // drained — never stranded with an unfulfilled ticket
         if self.stop.load(Ordering::Relaxed) {
-            inner.pool.release(id);
-            self.update_gauges(&inner);
+            self.release_metered(&mut inner, id);
+            self.update_gauges(&mut inner);
             return Err(SubmitError::Start(anyhow!("scheduler is shut down")));
         }
         let ticket_inner = Arc::new(TicketInner {
@@ -455,11 +502,34 @@ impl Scheduler {
         if let Some(tr) = &self.trace {
             tr.admit(id, Instant::now());
         }
-        self.update_gauges(&inner);
+        self.update_gauges(&mut inner);
         // notify while holding the lock: a driver cannot miss the wakeup
         self.work.notify_one();
         drop(inner);
         Ok(Ticket { id, inner: ticket_inner })
+    }
+
+    /// Release a session's pool reservation and feed the freed bytes into
+    /// the trailing free-rate meter (the `retry_after_ms` denominator).
+    fn release_metered(&self, inner: &mut Inner, id: u64) {
+        let freed = inner.pool.release(id);
+        if freed > 0 {
+            inner.free_rate.note_n(Instant::now(), freed as u64);
+        }
+    }
+
+    /// 429 backpressure hint: at the trailing byte free rate (releases +
+    /// spills), how long until `need` bytes could plausibly be free? A
+    /// conservative fixed fallback when nothing freed recently — the hint
+    /// must exist precisely when the pool is wedged full.
+    fn retry_hint_ms(&self, inner: &Inner, need: usize) -> u64 {
+        const FALLBACK_MS: u64 = 100;
+        let rate = inner.free_rate.rate(Instant::now()); // bytes/sec
+        if rate > 0.0 {
+            (((need as f64) / rate) * 1e3).ceil().clamp(1.0, 60_000.0) as u64
+        } else {
+            FALLBACK_MS
+        }
     }
 
     /// Remove the policy's next session from the run queue.
@@ -490,7 +560,7 @@ impl Scheduler {
                     // shutdown raced this step: the run queue is (being)
                     // drained, so re-queueing would strand the ticket in a
                     // dead queue — fail it instead
-                    inner.pool.release(id);
+                    self.release_metered(inner, id);
                     self.metrics.record_request(Duration::ZERO, 0, 0, false);
                     if let Some(tr) = &self.trace {
                         tr.finished(id);
@@ -508,7 +578,7 @@ impl Scheduler {
                 }
             }
             Ok(StepOutcome::Finished) => {
-                inner.pool.release(id);
+                self.release_metered(inner, id);
                 if let Some(tr) = &self.trace {
                     tr.finished(id);
                 }
@@ -523,7 +593,7 @@ impl Scheduler {
                 ticket.fulfill(Ok(result));
             }
             Err(e) => {
-                inner.pool.release(id);
+                self.release_metered(inner, id);
                 self.metrics.record_request(Duration::ZERO, 0, 0, false);
                 if let Some(tr) = &self.trace {
                     tr.finished(id);
@@ -672,11 +742,7 @@ impl Scheduler {
         let mut inner = self.inner.lock().unwrap();
         let mut active = self.pick_active(&mut inner)?;
         let id = active.id;
-        // book resident bytes at checkout: mid-step caches must stay
-        // visible to maybe_evict's residency accounting
-        let checkout_bytes = active.session.cache_bytes();
         inner.stepping += 1;
-        inner.stepping_bytes += checkout_bytes;
         inner.quantum += 1;
         active.last_stepped = inner.quantum;
         if let Some(tr) = &self.trace {
@@ -684,7 +750,7 @@ impl Scheduler {
         }
         drop(inner);
 
-        let mut forwarded = false;
+        let mut stepped = false;
         let plan_start = self.trace.as_ref().map(|_| Instant::now());
         let planned = active.session.plan();
         if let (Some(tr), Some(p0)) = (&self.trace, plan_start) {
@@ -694,50 +760,97 @@ impl Scheduler {
             // zero-work session (gen_len == 0): finished without an engine call
             Ok(Planned::Finished) => Ok(StepOutcome::Finished),
             Ok(Planned::Forward(plan)) => {
-                forwarded = true;
+                stepped = true;
                 let kind = plan.kind();
-                self.note_forward(
-                    kind,
-                    1,
-                    plan.used_positions(),
-                    plan.padded_positions(),
-                    1,
-                    plan.bucket(),
-                );
-                let t0 = Instant::now();
-                let res = execute_plan(self.exec.as_ref(), plan);
-                active.session.add_busy(t0.elapsed());
-                if let Some(tr) = &self.trace {
-                    tr.forward(kind, id, 1, t0, Instant::now());
-                }
-                match res {
-                    Ok(out) => self.apply_traced(&mut active, out),
-                    Err(e) => Err(e),
+                // cross-session prefix reuse: a Window plan whose content
+                // address matches a published forward skips the engine call
+                // entirely — the shared logits plus a fresh handle on the
+                // SAME segment stand in for it, byte-identical by
+                // construction (the key covers every forward input)
+                let key = if self.cfg.prefix_share { Self::prefix_key(&plan) } else { None };
+                match key.as_ref().and_then(|k| self.store.prefix_lookup(k)) {
+                    Some((logits, handle)) => {
+                        let out =
+                            StepOutputs::LogitsKv((*logits).clone(), KvOut::Shared(handle));
+                        self.apply_traced(&mut active, out)
+                    }
+                    None => {
+                        self.note_forward(
+                            kind,
+                            1,
+                            plan.used_positions(),
+                            plan.padded_positions(),
+                            1,
+                            plan.bucket(),
+                        );
+                        let t0 = Instant::now();
+                        let res = execute_plan(self.exec.as_ref(), plan);
+                        active.session.add_busy(t0.elapsed());
+                        if let Some(tr) = &self.trace {
+                            tr.forward(kind, id, 1, t0, Instant::now());
+                        }
+                        match res {
+                            Ok(out) => {
+                                let out = self.maybe_publish(key, out);
+                                self.apply_traced(&mut active, out)
+                            }
+                            Err(e) => Err(e),
+                        }
+                    }
                 }
             }
             Err(e) => Err(e),
         };
-        if forwarded {
+        if stepped {
             self.steps_total.fetch_add(1, Ordering::Relaxed);
         }
 
         let mut inner = self.inner.lock().unwrap();
         inner.stepping -= 1;
-        inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
-        if forwarded {
+        if stepped {
             let now = Instant::now();
             inner.rate.note(now);
             inner.fwd_rate.note(now);
             inner.lane_rate.note(now);
         }
         self.book(&mut inner, active, outcome);
-        self.maybe_evict(&mut inner, &[id]);
-        self.update_gauges(&inner);
+        self.update_gauges(&mut inner);
         if inner.stepping == 0 {
             // shutdown() may be waiting for mid-step sessions to land
             self.quiesce.notify_all();
         }
         Some(id)
+    }
+
+    /// Content address of a Window (refresh) plan; `None` for any other
+    /// plan kind — only refresh forwards are pure functions of plan inputs
+    /// alone (cached steps also depend on the incoming segment).
+    fn prefix_key(plan: &StepPlan) -> Option<PrefixKey> {
+        match plan {
+            StepPlan::Window { s, c, ids, pos, valid } => {
+                Some(PrefixKey::new(*s, *c, ids, pos, valid))
+            }
+            _ => None,
+        }
+    }
+
+    /// After a keyed Window forward: adopt the fresh KV into the shared
+    /// store, publish (key → logits + segment) for future sessions, and
+    /// hand the session the resulting handle (`KvOut::Shared`) so it does
+    /// not re-insert the same bytes. Falls back to the unshared output if
+    /// the host transfer fails.
+    fn maybe_publish(&self, key: Option<PrefixKey>, out: StepOutputs) -> StepOutputs {
+        let Some(key) = key else { return out };
+        match out {
+            StepOutputs::LogitsKv(logits, KvOut::Fresh(kv)) => match self.store.insert(&kv) {
+                Ok(handle) => {
+                    self.store.publish(key, logits.clone(), &handle);
+                    StepOutputs::LogitsKv(logits, KvOut::Shared(handle))
+                }
+                Err(_) => StepOutputs::LogitsKv(logits, KvOut::Fresh(kv)),
+            },
+            other => other,
+        }
     }
 
     /// Coalesced quantum: pick a leader session per policy, plan it, and
@@ -760,7 +873,6 @@ impl Scheduler {
         let mut inner = self.inner.lock().unwrap();
         let mut leader = self.pick_active(&mut inner)?;
         let leader_id = leader.id;
-        let leader_bytes = leader.session.cache_bytes();
         inner.quantum += 1;
         leader.last_stepped = inner.quantum;
         if let Some(tr) = &self.trace {
@@ -776,20 +888,19 @@ impl Scheduler {
             Ok(Planned::Finished) => {
                 // zero-work session (gen_len == 0): book without an engine call
                 self.book(&mut inner, leader, Ok(StepOutcome::Finished));
-                self.maybe_evict(&mut inner, &[leader_id]);
-                self.update_gauges(&inner);
+                self.update_gauges(&mut inner);
                 return Some(leader_id);
             }
             Err(e) => {
                 self.book(&mut inner, leader, Err(e));
-                self.update_gauges(&inner);
+                self.update_gauges(&mut inner);
                 return Some(leader_id);
             }
         };
 
         // -- coalesce compatible followers (policy order preserved) -----------
-        let mut lanes: Vec<(Active, StepPlan, usize, Option<Promotion>)> =
-            vec![(leader, leader_plan, leader_bytes, None)];
+        let mut lanes: Vec<(Active, StepPlan, Option<Promotion>)> =
+            vec![(leader, leader_plan, None)];
         let scan_start = self.trace.as_ref().map(|_| Instant::now());
         if max_batch > 1 {
             let mut skipped: Vec<Active> = Vec::new();
@@ -801,7 +912,6 @@ impl Scheduler {
             while lanes.len() < max_batch && skipped.len() < max_mismatches {
                 let Some(mut cand) = self.pick_active(&mut inner) else { break };
                 let cand_id = cand.id;
-                let cand_bytes = cand.session.cache_bytes();
                 if let Some(tr) = &self.trace {
                     tr.picked(cand_id, Instant::now());
                 }
@@ -814,7 +924,7 @@ impl Scheduler {
                     Ok(Planned::Forward(p)) if p.compatible(&lanes[0].1) => {
                         inner.quantum += 1;
                         cand.last_stepped = inner.quantum;
-                        lanes.push((cand, p, cand_bytes, None));
+                        lanes.push((cand, p, None));
                     }
                     Ok(Planned::Forward(p)) => {
                         // bucket mismatch: a sub-bucket plan may still join
@@ -833,21 +943,7 @@ impl Scheduler {
                                         promo.extra_positions as u64,
                                         Ordering::Relaxed,
                                     );
-                                    // a promoted cached plan carries its KV
-                                    // re-dimensioned UP to the leader's
-                                    // window for the forward's duration —
-                                    // book the grown size, or maybe_evict's
-                                    // residency undercounts exactly when
-                                    // promotion adds memory pressure
-                                    let lane_bytes = match promo.kind {
-                                        ForwardKind::Cached => {
-                                            cand_bytes
-                                                + (promo.to.1 - promo.from.1)
-                                                    * kv_slot_bytes(&self.arch)
-                                        }
-                                        _ => cand_bytes,
-                                    };
-                                    lanes.push((cand, promoted, lane_bytes, Some(promo)));
+                                    lanes.push((cand, promoted, Some(promo)));
                                 }
                                 Err(original) => {
                                     cand.session.cancel_plan(*original);
@@ -861,7 +957,6 @@ impl Scheduler {
                     }
                     Ok(Planned::Finished) => {
                         self.book(&mut inner, cand, Ok(StepOutcome::Finished));
-                        self.maybe_evict(&mut inner, &[cand_id]);
                     }
                     Err(e) => {
                         self.book(&mut inner, cand, Err(e));
@@ -881,12 +976,8 @@ impl Scheduler {
             tr.coalesce(leader_id, lanes.len() as u32, s0, Instant::now());
         }
 
-        // book resident bytes at checkout: mid-step caches must stay visible
-        // to maybe_evict's residency accounting
         let n_lanes = lanes.len();
-        let checkout_bytes: usize = lanes.iter().map(|l| l.2).sum();
         inner.stepping += n_lanes;
-        inner.stepping_bytes += checkout_bytes;
         drop(inner);
 
         // -- one engine call for all lanes, lock released ---------------------
@@ -904,7 +995,7 @@ impl Scheduler {
         // governor's waste ceiling judges THIS, not the plans' own
         // bucket-mask waste, which narrowing could never remove
         let mut coalesce_padded: usize =
-            lanes.iter().flat_map(|l| &l.3).map(|p| p.extra_positions).sum();
+            lanes.iter().flat_map(|l| &l.2).map(|p| p.extra_positions).sum();
         if n_lanes > 1 {
             if let Ok(b) = buckets::pick(&self.b_ladder, n_lanes) {
                 let whole_lane = (b - n_lanes) * lanes[0].1.slots();
@@ -919,7 +1010,15 @@ impl Scheduler {
         let mut actives: Vec<Active> = Vec::with_capacity(n_lanes);
         let mut plans: Vec<StepPlan> = Vec::with_capacity(n_lanes);
         let mut promos: Vec<Option<Promotion>> = Vec::with_capacity(n_lanes);
-        for (a, p, _, promo) in lanes {
+        // content addresses for publish-after-forward (promoted lanes are
+        // skipped: their padded plan is not the session's own refresh)
+        let mut keys: Vec<Option<PrefixKey>> = Vec::with_capacity(n_lanes);
+        for (a, p, promo) in lanes {
+            keys.push(if self.cfg.prefix_share && promo.is_none() {
+                Self::prefix_key(&p)
+            } else {
+                None
+            });
             actives.push(a);
             plans.push(p);
             promos.push(promo);
@@ -958,7 +1057,9 @@ impl Scheduler {
         // first, so `apply` observes exactly what solo execution would have
         // returned
         let mut landed: Vec<(Active, Result<StepOutcome>)> = Vec::with_capacity(n_lanes);
-        for ((mut active, out), promo) in actives.into_iter().zip(outs).zip(promos) {
+        for (((mut active, out), promo), key) in
+            actives.into_iter().zip(outs).zip(promos).zip(keys)
+        {
             active.session.add_busy(fwd_wall);
             let outcome = match out {
                 Ok(o) => {
@@ -967,7 +1068,10 @@ impl Scheduler {
                         None => Ok(o),
                     };
                     match demoted {
-                        Ok(o) => self.apply_traced(&mut active, o),
+                        Ok(o) => {
+                            let o = self.maybe_publish(key, o);
+                            self.apply_traced(&mut active, o)
+                        }
                         Err(e) => Err(e),
                     }
                 }
@@ -978,18 +1082,14 @@ impl Scheduler {
 
         let mut inner = self.inner.lock().unwrap();
         inner.stepping -= n_lanes;
-        inner.stepping_bytes = inner.stepping_bytes.saturating_sub(checkout_bytes);
         let now = Instant::now();
         inner.fwd_rate.note(now);
         inner.lane_rate.note_n(now, n_lanes as u64);
-        let mut stepped_ids = Vec::with_capacity(n_lanes);
         for (active, outcome) in landed {
             inner.rate.note(now);
-            stepped_ids.push(active.id);
             self.book(&mut inner, active, outcome);
         }
-        self.maybe_evict(&mut inner, &stepped_ids);
-        self.update_gauges(&inner);
+        self.update_gauges(&mut inner);
         if inner.stepping == 0 {
             // shutdown() may be waiting for mid-step sessions to land
             self.quiesce.notify_all();
@@ -997,60 +1097,34 @@ impl Scheduler {
         Some(leader_id)
     }
 
-    /// Soft-limit eviction: drop resident caches (LRU first, sparing the
-    /// just-stepped sessions — a whole batch's lanes — while possible)
-    /// until under `kv_soft_bytes`. Mid-step sessions' bytes (booked at
-    /// checkout) count toward residency but are never victims — their
-    /// caches are in use on another thread. Evicted sessions refresh on
-    /// their next quantum — correctness is preserved, the cost is one
-    /// extra refresh forward each.
-    fn maybe_evict(&self, inner: &mut Inner, just_stepped: &[u64]) {
-        let soft = self.cfg.kv_soft_bytes;
-        if soft == 0 {
-            return;
+    /// Republish gauges under the run-queue lock. Spill-freed bytes are
+    /// drained from the store here and fed to the trailing free-rate meter
+    /// (alongside reservation releases) so `retry_after_ms` hints reflect
+    /// both ways memory comes back.
+    fn update_gauges(&self, inner: &mut Inner) {
+        let freed = self.store.take_spill_freed_bytes();
+        if freed > 0 {
+            inner.free_rate.note_n(Instant::now(), freed as u64);
         }
-        let mut resident: usize = inner.stepping_bytes
-            + inner.run.iter().map(|a| a.session.cache_bytes()).sum::<usize>();
-        while resident > soft {
-            let mut victim: Option<(usize, u64)> = None;
-            for (i, a) in inner.run.iter().enumerate() {
-                if a.session.cache_bytes() == 0 || just_stepped.contains(&a.id) {
-                    continue;
-                }
-                // Option::is_none_or would read better but needs Rust 1.82
-                #[allow(clippy::unnecessary_map_or)]
-                if victim.map_or(true, |(_, ls)| a.last_stepped < ls) {
-                    victim = Some((i, a.last_stepped));
-                }
-            }
-            let idx = match victim {
-                Some((i, _)) => i,
-                // last resort: the just-stepped session's own cache
-                None => match inner.run.iter().position(|a| a.session.cache_bytes() > 0) {
-                    Some(i) => i,
-                    None => break,
-                },
-            };
-            let a = &mut inner.run[idx];
-            let freed = a.session.cache_bytes();
-            a.session.evict_cache();
-            if let Some(tr) = &self.trace {
-                tr.evict(a.id, Instant::now());
-            }
-            inner.pool.note_eviction();
-            resident = resident.saturating_sub(freed);
-        }
-    }
-
-    fn update_gauges(&self, inner: &Inner) {
         let m = &self.metrics;
         m.active_sessions.store(
             (inner.run.len() + inner.stepping + inner.admitting) as u64,
             Ordering::Relaxed,
         );
         m.kv_pool_bytes.store(inner.pool.reserved_bytes() as u64, Ordering::Relaxed);
-        m.kv_pool_evictions.store(inner.pool.evictions(), Ordering::Relaxed);
+        // legacy gauge: "resident caches dropped to stay under the soft
+        // limit" — spills are the tiered successor of evictions, so the
+        // two counters are summed here to keep the gauge's meaning
+        m.kv_pool_evictions
+            .store(inner.pool.evictions() + self.store.spills(), Ordering::Relaxed);
         m.kv_pool_rejections.store(inner.pool.rejections(), Ordering::Relaxed);
+        m.kv_accounting_anomalies.store(inner.pool.anomalies(), Ordering::Relaxed);
+        m.kv_hot_bytes.store(self.store.hot_bytes() as u64, Ordering::Relaxed);
+        m.kv_spilled_bytes.store(self.store.spilled_bytes() as u64, Ordering::Relaxed);
+        m.kv_spills.store(self.store.spills(), Ordering::Relaxed);
+        m.kv_rehydrates.store(self.store.rehydrates(), Ordering::Relaxed);
+        m.kv_prefix_hits.store(self.store.prefix_hits(), Ordering::Relaxed);
+        m.kv_prefix_misses.store(self.store.prefix_misses(), Ordering::Relaxed);
         m.sched_steps_total
             .store(self.steps_total.load(Ordering::Relaxed), Ordering::Relaxed);
         let now = Instant::now();
@@ -1195,7 +1269,7 @@ impl Scheduler {
             inner = self.quiesce.wait(inner).unwrap();
         }
         while let Some(active) = inner.run.pop_front() {
-            inner.pool.release(active.id);
+            self.release_metered(&mut inner, active.id);
             // book the failure like any other error path so /metrics stays
             // consistent with the 500s the waiting clients observe
             self.metrics.record_request(Duration::ZERO, 0, 0, false);
@@ -1204,7 +1278,10 @@ impl Scheduler {
             }
             active.ticket.fulfill(Err(anyhow!("scheduler shut down")));
         }
-        self.update_gauges(&inner);
+        self.update_gauges(&mut inner);
+        // every reservation was created and released exactly once by the
+        // booking paths above — any anomaly is a scheduler bug
+        debug_assert_eq!(inner.pool.anomalies(), 0, "kv pool accounting anomaly");
     }
 }
 

@@ -4,7 +4,8 @@
 //! * `POST /generate` — `{prompt, gen_len?, strategy?, adaptive?,
 //!   tokens_per_step?, deadline_ms?}` → `{text, tokens, steps, latency_secs,
 //!   tokens_per_sec, strategy, eos}`; `429` on scheduler/KV-pool
-//!   backpressure
+//!   backpressure (KV-pool refusals add `retry_after_ms`, derived from the
+//!   trailing byte free rate)
 //! * `GET /sessions`  — in-flight scheduler sessions (id, strategy, steps,
 //!   remaining, kv_bytes, age_secs, busy_ms — age minus busy is queue time;
 //!   with `--trace ring`, recorder-sourced `queue_ms` and `ttft_ms`)
@@ -22,9 +23,12 @@
 //!   with an engine-replica pool, per-replica
 //!   step/execution gauges under `"replicas"` plus the weight-bank
 //!   residency gauges (`bank_mode`, `weight_bytes_host`,
-//!   `weight_bytes_per_replica`)
+//!   `weight_bytes_per_replica`); tiered-KV gauges (`kv_hot_bytes`,
+//!   `kv_spilled_bytes`, `kv_spills`, `kv_rehydrates`, `kv_prefix_hits`,
+//!   `kv_prefix_misses`, `kv_prefix_hit_rate`, `kv_accounting_anomalies`)
 //! * `GET /healthz`   — liveness
-//! * `GET /info`      — model / config / scheduling info
+//! * `GET /info`      — model / config / scheduling info, incl.
+//!   `prefix_share` and the `kv_tiers` residency summary
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -136,7 +140,18 @@ pub fn handle_generate(st: &AppState, params: &GenerateParams) -> Response {
         let ticket = match st.scheduler.submit(spec) {
             Ok(t) => t,
             Err(e) if e.is_backpressure() => {
-                return Response::json(429, err_json(&e.to_string()));
+                // KV-pool refusals carry a retry hint (trailing free rate);
+                // surface it as a machine-readable field so clients can back
+                // off for the right duration instead of guessing
+                let retry = match &e {
+                    crate::scheduler::SubmitError::Pool(p) => p.retry_after_ms,
+                    _ => None,
+                };
+                let mut fields = vec![("error", Json::str(e.to_string()))];
+                if let Some(ms) = retry {
+                    fields.push(("retry_after_ms", Json::num(ms as f64)));
+                }
+                return Response::json(429, Json::obj(fields).to_string());
             }
             Err(e) => return Response::json(400, err_json(&e.to_string())),
         };
@@ -303,6 +318,23 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("bank_mode", Json::str(
                     st.pool.as_ref().map_or("none", |p| p.bank_mode()),
                 )),
+                ("prefix_share", Json::Bool(st.scheduler.prefix_share_enabled())),
+                ("kv_tiers", {
+                    let store = st.scheduler.kv_store();
+                    Json::obj(vec![
+                        ("hot_soft_bytes", Json::num(store.soft_bytes() as f64)),
+                        ("hot_bytes", Json::num(store.hot_bytes() as f64)),
+                        ("spilled_bytes", Json::num(store.spilled_bytes() as f64)),
+                        ("segments", Json::num(store.segment_count() as f64)),
+                        (
+                            "spill_dir",
+                            match store.spill_dir() {
+                                Some(d) => Json::str(d.display().to_string()),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                }),
                 ("direct", Json::Bool(st.direct)),
             ])
             .to_string(),
@@ -535,6 +567,72 @@ mod tests {
             rows[0].to_string()
         );
         while st.scheduler.tick().is_some() {}
+        st.scheduler.shutdown();
+    }
+
+    #[test]
+    fn metrics_and_info_expose_kv_tiers() {
+        let st = mock_state(false);
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        for k in [
+            "kv_hot_bytes",
+            "kv_spilled_bytes",
+            "kv_spills",
+            "kv_rehydrates",
+            "kv_prefix_hits",
+            "kv_prefix_misses",
+            "kv_accounting_anomalies",
+        ] {
+            assert_eq!(mj.get(k).as_i64(), Some(0), "gauge '{k}' missing or non-zero");
+        }
+        assert_eq!(mj.get("kv_prefix_hit_rate").as_f64(), Some(0.0));
+        let i = get(&st, "/info");
+        let ij = parse(std::str::from_utf8(&i.body).unwrap()).unwrap();
+        assert_eq!(ij.get("prefix_share").as_bool(), Some(false));
+        assert_eq!(ij.get_path(&["kv_tiers", "hot_soft_bytes"]).as_i64(), Some(0));
+        assert_eq!(ij.get_path(&["kv_tiers", "segments"]).as_i64(), Some(0));
+        st.scheduler.shutdown();
+    }
+
+    /// ISSUE 7 satellite: a KV-pool 429 carries a machine-readable
+    /// `retry_after_ms` backpressure hint.
+    #[test]
+    fn kv_pool_429_carries_retry_hint() {
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+        let metrics = Arc::new(Metrics::default());
+        let scheduler = Scheduler::new(
+            Arc::clone(&exec),
+            SchedulerConfig {
+                kv_budget_bytes: 1024, // smaller than any session's estimate
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for i in 0..11 {
+            vocab.push(format!("w{i}"));
+        }
+        let st = Arc::new(AppState {
+            exec,
+            pool: None,
+            scheduler,
+            tokenizer: Tokenizer::from_vocab(vocab),
+            metrics,
+            model_name: "mock".into(),
+            default_strategy: "window".into(),
+            default_gen_len: 32,
+            s: 256,
+            direct: false,
+        });
+        let resp = post(&st, r#"{"prompt":"w1 w2 w3","gen_len":16,"strategy":"window"}"#);
+        assert_eq!(resp.status, 429, "{}", String::from_utf8_lossy(&resp.body));
+        let j = parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let ms = j.get("retry_after_ms").as_i64().expect("retry_after_ms missing");
+        assert!(ms >= 1, "hint must be a positive backoff: {ms}");
         st.scheduler.shutdown();
     }
 

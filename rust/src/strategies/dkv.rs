@@ -18,7 +18,8 @@ use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
 use crate::coordinator::{
     ComputeSet, GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout,
 };
-use crate::runtime::{buckets, KvCache};
+use crate::runtime::buckets;
+use crate::scheduler::kvstore::KvHandle;
 
 pub struct DkvCache {
     /// Refresh interval (paper: 4 on Dream, 8 on LLaDA).
@@ -30,7 +31,7 @@ pub struct DkvCache {
 struct DkvState {
     layout: WindowLayout,
     live_end: usize,
-    kv: Option<KvCache>,
+    kv: Option<KvHandle>,
     refresh_step: usize, // decodes since here are uncached
 }
 
@@ -138,7 +139,7 @@ impl StepMachine for DkvMachine {
                 };
                 core.counts.window += 1;
                 core.counts.token_slots += st.layout.c;
-                st.kv = Some(fresh);
+                st.kv = Some(core.adopt_kv(fresh)?);
                 st.refresh_step = core.step;
                 let cands = candidates(undecoded.iter().map(|&p| {
                     let slot = st.layout.slot(p).expect("undecoded in layout");
@@ -152,7 +153,7 @@ impl StepMachine for DkvMachine {
                 };
                 core.counts.cached += 1;
                 core.counts.token_slots += cs.r;
-                st.kv = Some(new_kv);
+                st.kv = Some(core.adopt_kv(new_kv)?);
                 let cands = candidates(
                     cs.positions[..cs.n_active]
                         .iter()
@@ -185,7 +186,7 @@ impl StepMachine for DkvMachine {
         self.cur
             .as_ref()
             .and_then(|st| st.kv.as_ref())
-            .map(|kv| kv.c * self.kv_slot_bytes)
+            .map(|kv| kv.c() * self.kv_slot_bytes)
             .unwrap_or(0)
     }
 

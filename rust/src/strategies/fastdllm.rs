@@ -19,7 +19,8 @@ use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
 use crate::coordinator::{
     ComputeSet, GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout,
 };
-use crate::runtime::{buckets, KvCache};
+use crate::runtime::buckets;
+use crate::scheduler::kvstore::KvHandle;
 
 pub struct FastDllmPrefix {
     pub block: usize,
@@ -39,7 +40,7 @@ struct FdPhase {
     block_end: usize,
     live_end: usize,
     layout: WindowLayout,
-    kv: Option<KvCache>,
+    kv: Option<KvHandle>,
     block_decoded: Vec<usize>,
 }
 
@@ -193,7 +194,7 @@ impl StepMachine for FastDllmMachine {
                     block_end,
                     live_end,
                     layout,
-                    kv: Some(kv),
+                    kv: Some(core.adopt_kv(kv)?),
                     block_decoded,
                 });
             }
@@ -204,7 +205,7 @@ impl StepMachine for FastDllmMachine {
                 let ph = self.phase.as_mut().expect("phase present for a normal step");
                 core.counts.cached += 1;
                 core.counts.token_slots += cs.r;
-                ph.kv = Some(new_kv);
+                ph.kv = Some(core.adopt_kv(new_kv)?);
                 // decode only within the block (block_undecoded is a prefix
                 // of the compute positions by construction)
                 let cands = candidates(
@@ -239,7 +240,7 @@ impl StepMachine for FastDllmMachine {
         self.phase
             .as_ref()
             .and_then(|ph| ph.kv.as_ref())
-            .map(|kv| kv.c * self.kv_slot_bytes)
+            .map(|kv| kv.c() * self.kv_slot_bytes)
             .unwrap_or(0)
     }
 

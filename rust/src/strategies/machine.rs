@@ -17,12 +17,14 @@
 //!
 //! [`Strategy`]: super::Strategy
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::plan::{execute_plan, Planned, StepOutputs, StepPlan};
+use crate::coordinator::plan::{execute_plan, KvOut, Planned, StepOutputs, StepPlan};
 use crate::coordinator::{GenRequest, GenResult, SeqState, StepCounts, StepExec};
+use crate::scheduler::kvstore::{KvHandle, KvStore};
 
 /// Result of advancing a session by one quantum.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,13 +95,34 @@ pub struct SessionCore {
     pub counts: StepCounts,
     /// Committed diffusion steps so far (the legacy loops' `step` counter).
     pub step: usize,
+    /// The KV segment store this session adopts fresh caches into. Defaults
+    /// to a private [`KvStore::detached`] (no sharing, no spilling) for
+    /// solo-stepped sessions; the scheduler swaps in its shared tiered
+    /// store right after `start` (before any segment exists).
+    pub kv: Arc<KvStore>,
 }
 
 impl SessionCore {
     pub fn new(exec: &dyn StepExec, req: &GenRequest) -> Result<SessionCore> {
         let sp = exec.special();
         let state = SeqState::new(&req.prompt, req.gen_len, req.s, sp.mask, sp.eos, sp.pad)?;
-        Ok(SessionCore { req: req.clone(), state, counts: StepCounts::default(), step: 0 })
+        Ok(SessionCore {
+            req: req.clone(),
+            state,
+            counts: StepCounts::default(),
+            step: 0,
+            kv: KvStore::detached(),
+        })
+    }
+
+    /// Turn a forward's KV output into an owned handle: fresh host bytes
+    /// are adopted into this session's store (possibly spilling cold
+    /// segments); a shared segment (prefix hit) passes through as-is.
+    pub fn adopt_kv(&self, out: KvOut) -> Result<KvHandle> {
+        match out {
+            KvOut::Fresh(kv) => self.kv.insert(&kv),
+            KvOut::Shared(handle) => Ok(handle),
+        }
     }
 
     /// Step-cap guard, identical to the legacy per-iteration check.
@@ -122,11 +145,13 @@ pub struct Session {
     finished: bool,
 }
 
-// SAFETY: a Session may hold KV caches (`xla::Literal`s) inside its machine.
-// Those are plain owned host memory with no aliasing back into the engine
-// (see the `EngineCell` safety note in runtime/engine.rs); moving them across
+// SAFETY: a Session's machine may transiently hold host tensor data
+// (`xla::Literal`s) — e.g. plan input buffers mid-build. Those are plain
+// owned host memory with no aliasing back into the engine (see the
+// `EngineCell` safety note in runtime/engine.rs); moving them across
 // threads is sound as long as access is exclusive, which `&mut self` on
-// every mutating method guarantees.
+// every mutating method guarantees. Phase KV itself now lives behind
+// `KvHandle`s (plain ids + `Arc<KvStore>`, Send by construction).
 unsafe impl Send for Session {}
 
 impl Session {
@@ -201,6 +226,17 @@ impl Session {
     /// session); state is restored as if `plan` was never called.
     pub fn cancel_plan(&mut self, plan: StepPlan) {
         self.machine.cancel(plan);
+    }
+
+    /// Rebind this session to a shared [`KvStore`] (the scheduler's tiered
+    /// store). Must be called before the first step: segments already
+    /// adopted into the previous store are not migrated.
+    pub fn attach_kv_store(&mut self, store: Arc<KvStore>) {
+        debug_assert_eq!(
+            self.core.step, 0,
+            "attach_kv_store after the session started stepping"
+        );
+        self.core.kv = store;
     }
 
     /// Attribute engine time spent on this session's behalf (the scheduler

@@ -28,7 +28,8 @@ use crate::coordinator::policies::{candidates, select_top_k, DecodeSchedule};
 use crate::coordinator::{
     ComputeSet, GenRequest, Planned, StepExec, StepOutputs, StepPlan, WindowLayout,
 };
-use crate::runtime::{buckets, KvCache};
+use crate::runtime::buckets;
+use crate::scheduler::kvstore::KvHandle;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WdConfig {
@@ -71,7 +72,9 @@ impl WindowDiffusion {
 /// One phase's continuation state (dropped at every phase boundary).
 struct WdPhase {
     layout: WindowLayout,
-    kv: Option<KvCache>,
+    /// Handle to the phase KV segment in the session's `KvStore` (possibly
+    /// shared with other sessions via content-addressed prefix reuse).
+    kv: Option<KvHandle>,
     /// Positions decoded since the phase's refresh (recomputed each normal
     /// step until the next refresh caches them).
     phase_decoded: Vec<usize>,
@@ -191,7 +194,7 @@ impl StepMachine for WindowMachine {
                 };
                 core.counts.window += 1;
                 core.counts.token_slots += ph.layout.c;
-                ph.kv = Some(fresh_kv);
+                ph.kv = Some(core.adopt_kv(fresh_kv)?);
                 // NOTE: after a refresh, earlier-phase decodes are in the
                 // cache; the phase-decoded set restarts here.
                 ph.phase_decoded.clear();
@@ -207,7 +210,7 @@ impl StepMachine for WindowMachine {
                 };
                 core.counts.cached += 1;
                 core.counts.token_slots += cs.r;
-                ph.kv = Some(new_kv);
+                ph.kv = Some(core.adopt_kv(new_kv)?);
                 let cands = candidates(
                     cs.positions[..cs.n_active]
                         .iter()
@@ -232,7 +235,7 @@ impl StepMachine for WindowMachine {
     }
 
     fn cancel(&mut self, plan: StepPlan) {
-        // restore the KV cache a cached plan carried; replanning from here
+        // restore the KV handle a cached plan carried; replanning from here
         // is deterministic (state is exactly as before `plan`)
         if let StepPlan::Cached { kv, .. } = plan {
             if let Some(ph) = self.phase.as_mut() {
@@ -246,7 +249,7 @@ impl StepMachine for WindowMachine {
         self.phase
             .as_ref()
             .and_then(|p| p.kv.as_ref())
-            .map(|kv| kv.c * self.kv_slot_bytes)
+            .map(|kv| kv.c() * self.kv_slot_bytes)
             .unwrap_or(0)
     }
 

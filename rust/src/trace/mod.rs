@@ -87,6 +87,16 @@ pub enum Stage {
     Evict,
     /// Governor width change (instant; `session` = old, `lanes` = new).
     Width,
+    /// Cold KV segment serialized to the disk tier (span; `session` =
+    /// segment id).
+    Spill,
+    /// Spilled KV segment read back into the hot tier on checkout (span;
+    /// `session` = segment id).
+    Rehydrate,
+    /// Content-addressed prefix lookup hit: a session attached to a shared
+    /// segment instead of recomputing its refresh (instant; `session` =
+    /// segment id).
+    PrefixHit,
 }
 
 impl Stage {
@@ -103,6 +113,9 @@ impl Stage {
             Stage::Commit => "commit",
             Stage::Evict => "evict",
             Stage::Width => "width",
+            Stage::Spill => "spill",
+            Stage::Rehydrate => "rehydrate",
+            Stage::PrefixHit => "prefix_hit",
         }
     }
 
@@ -119,6 +132,9 @@ impl Stage {
             Stage::Commit => 9,
             Stage::Evict => 10,
             Stage::Width => 11,
+            Stage::Spill => 12,
+            Stage::Rehydrate => 13,
+            Stage::PrefixHit => 14,
         }
     }
 
@@ -135,6 +151,9 @@ impl Stage {
             9 => Stage::Commit,
             10 => Stage::Evict,
             11 => Stage::Width,
+            12 => Stage::Spill,
+            13 => Stage::Rehydrate,
+            14 => Stage::PrefixHit,
             _ => return None,
         })
     }
@@ -453,6 +472,25 @@ impl TraceRecorder {
         self.push(Stage::Width, None, from as u64, None, to as u32, t, 0);
     }
 
+    /// Cold KV segment written to the disk tier (`segment` on the session
+    /// word — spills are store-scoped, not session-scoped).
+    pub fn spill(&self, segment: u64, start: Instant, end: Instant) {
+        self.push(Stage::Spill, None, segment, None, 0, self.us(start),
+                  end.saturating_duration_since(start).as_micros() as u64);
+    }
+
+    /// Spilled KV segment read back on checkout.
+    pub fn rehydrate(&self, segment: u64, start: Instant, end: Instant) {
+        self.push(Stage::Rehydrate, None, segment, None, 0, self.us(start),
+                  end.saturating_duration_since(start).as_micros() as u64);
+    }
+
+    /// Content-addressed prefix lookup hit on `segment`.
+    pub fn prefix_hit(&self, segment: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::PrefixHit, None, segment, None, 0, t, 0);
+    }
+
     /// Session finished (or failed): drop its timing entry.
     pub fn finished(&self, session: u64) {
         self.sessions.lock().unwrap().remove(&session);
@@ -540,6 +578,9 @@ impl TraceRecorder {
                     (PID_EXEC, e.replica.unwrap_or(0) as u64)
                 }
                 Stage::Width => (PID_EXEC, 0),
+                // Store-scoped events: one shared track on the executor pid
+                // (the `session` word is a segment id, not a session id).
+                Stage::Spill | Stage::Rehydrate | Stage::PrefixHit => (PID_EXEC, 0),
                 _ => (PID_SESSIONS, e.session),
             };
             let mut args = vec![];
@@ -556,10 +597,13 @@ impl TraceRecorder {
                     args.push(("from", Json::num(e.session as f64)));
                     args.push(("to", Json::num(e.lanes as f64)));
                 }
+                Stage::Spill | Stage::Rehydrate | Stage::PrefixHit => {
+                    args.push(("segment", Json::num(e.session as f64)));
+                }
                 _ => {}
             }
-            if e.stage != Stage::Exec && e.stage != Stage::PoolWait
-                && e.stage != Stage::Width
+            if !matches!(e.stage, Stage::Exec | Stage::PoolWait | Stage::Width
+                | Stage::Spill | Stage::Rehydrate | Stage::PrefixHit)
             {
                 args.push(("session", Json::num(e.session as f64)));
             }
@@ -572,7 +616,7 @@ impl TraceRecorder {
             ];
             if e.dur_us > 0 || matches!(e.stage, Stage::QueueWait | Stage::Plan
                 | Stage::Coalesce | Stage::PoolWait | Stage::Forward
-                | Stage::Exec | Stage::Apply)
+                | Stage::Exec | Stage::Apply | Stage::Spill | Stage::Rehydrate)
             {
                 fields.push(("ph", Json::str("X")));
                 fields.push(("dur", Json::num(e.dur_us as f64)));

@@ -1,0 +1,358 @@
+//! Property tests over the tiered KV store + prefix-sharing layer (PR 7).
+//!
+//! Four pillars:
+//! 1. **Codec fidelity** — a serialized `KvCache` round-trips byte-exactly
+//!    (f32 bit patterns, including NaN payloads and -0.0) across the
+//!    (s, c) bucket grid and through `rebucket_c` promotions.
+//! 2. **Spill fidelity** — a segment spilled to the disk tier and
+//!    rehydrated at its next checkout is byte-identical to the original.
+//! 3. **Pin discipline** — a session parked *mid-step* (its segment is
+//!    checked out) is never a spill victim, even when another session's
+//!    refresh drives the hot tier over the soft limit (gated-executor
+//!    regression for the booking/pinning invariant).
+//! 4. **Sharing parity** — with `prefix_share` on, identical concurrent
+//!    sessions attach to one published segment (hits observed) and still
+//!    emit byte-identical outputs to the solo no-sharing path.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::kvcodec;
+use window_diffusion::runtime::{Arch, KvCache, Specials};
+use window_diffusion::scheduler::{KvStore, KvStoreConfig, Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::strategies;
+
+use xla::Literal;
+
+fn submit(strategy: &str, req: &GenRequest) -> SubmitSpec {
+    SubmitSpec { strategy: strategy.into(), req: req.clone(), deadline: None }
+}
+
+/// Deterministic-but-irregular f32 payload covering exotic bit patterns.
+fn payload(n: usize, seed: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => f32::from_bits(0x7fc0_0001), // NaN with payload
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE / 2.0, // subnormal
+            3 => f32::MAX,
+            _ => ((i as u32).wrapping_mul(2654435761).wrapping_add(seed)) as f32 * 1e-3,
+        })
+        .collect()
+}
+
+fn flat_cache(s: usize, c: usize, arch: &Arch, seed: u32) -> KvCache {
+    let elems = arch.kv_elems(c);
+    KvCache {
+        s,
+        c,
+        flat: true,
+        k: Literal::vec1(&payload(elems, seed)),
+        v: Literal::vec1(&payload(elems, seed.wrapping_add(0x9e37))),
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_same_cache(a: &KvCache, b: &KvCache, ctx: &str) {
+    assert_eq!(a.s, b.s, "{ctx}: s mismatch");
+    assert_eq!(a.c, b.c, "{ctx}: c mismatch");
+    assert_eq!(
+        bits(&a.k_host().unwrap()),
+        bits(&b.k_host().unwrap()),
+        "{ctx}: K bits diverged"
+    );
+    assert_eq!(
+        bits(&a.v_host().unwrap()),
+        bits(&b.v_host().unwrap()),
+        "{ctx}: V bits diverged"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// codec: byte-exact round trips across the bucket grid and rebucket_c
+// ---------------------------------------------------------------------------
+
+#[test]
+fn codec_round_trips_across_bucket_grid() {
+    let m = MockExec::new(256);
+    let arch = m.arch();
+    for &s in &m.seqs() {
+        for &c in &m.c_ladder(s) {
+            // r buckets do not change the cache layout, but exercise the
+            // sizes a cached(r) step would produce by varying the seed.
+            for ri in 0..m.r_ladder(s).len() {
+                let kv = flat_cache(s, c, &arch, ((c as u32) << 8) | ri as u32);
+                let blob = kvcodec::encode_cache(&kv).unwrap();
+                let back = kvcodec::decode_cache(&blob).unwrap();
+                assert_same_cache(&kv, &back, &format!("s={s} c={c} r#{ri}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_round_trips_through_rebucket_c() {
+    let m = MockExec::new(256);
+    let arch = m.arch();
+    let ladder = m.c_ladder(256);
+    for pair in ladder.windows(2) {
+        let (lo, hi) = (pair[0], pair[1]);
+        let kv = flat_cache(256, lo, &arch, lo as u32);
+        // grow → codec round trip → shrink back: the live slots must be
+        // byte-identical to the original (the cross-bucket-promotion
+        // invariant from PR 4, now also crossing the serialization layer).
+        let grown = kv.rebucket_c(hi, &arch).unwrap();
+        let blob = kvcodec::encode_cache(&grown).unwrap();
+        let grown_back = kvcodec::decode_cache(&blob).unwrap();
+        assert_same_cache(&grown, &grown_back, &format!("grown c={lo}->{hi}"));
+        let shrunk = grown_back.rebucket_c(lo, &arch).unwrap();
+        assert_same_cache(&kv, &shrunk, &format!("round trip c={lo}->{hi}->{lo}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// store: spill → rehydrate is byte-exact and cleans its blobs up
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spill_rehydrate_is_byte_exact() {
+    let dir = std::env::temp_dir().join(format!("wd-kvtier-exact-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = MockExec::new(256);
+    let arch = m.arch();
+    let kv = flat_cache(256, 64, &arch, 7);
+    let seg_bytes = 4 * 2 * arch.kv_elems(64);
+    {
+        // soft limit fits exactly one segment: inserting a second spills
+        // the first (LRU, unpinned).
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: seg_bytes + seg_bytes / 2,
+            spill_dir: Some(dir.clone()),
+        });
+        let h1 = store.insert(&kv).unwrap();
+        let _h2 = store.insert(&flat_cache(256, 64, &arch, 8)).unwrap();
+        assert_eq!(store.spills(), 1, "second insert should spill the first segment");
+        assert!(store.spilled_bytes() > 0);
+        assert!(store.hot_bytes() <= store.soft_bytes(), "hot tier over soft limit");
+        let co = h1.checkout().unwrap();
+        assert_same_cache(&kv, &co, "spill->rehydrate");
+        assert_eq!(store.rehydrates(), 1);
+    }
+    // dropping the store removes every blob it wrote
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .map(|rd| rd.filter_map(|e| e.ok()).map(|e| e.path()).collect())
+        .unwrap_or_default();
+    assert!(leftovers.is_empty(), "spill blobs leaked: {leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// gate executor (same rendezvous as scheduler_props): park a session
+// mid-step deterministically
+// ---------------------------------------------------------------------------
+
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    armed: bool,
+    entered: usize,
+    open: bool,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { state: Mutex::new(GateState::default()), cv: Condvar::new() })
+    }
+
+    fn arm(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.armed = true;
+        st.open = false;
+    }
+
+    fn wait_entered(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.entered == 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = true;
+        st.armed = false;
+        self.cv.notify_all();
+    }
+
+    fn pass(&self) {
+        let mut st = self.state.lock().unwrap();
+        if !st.armed {
+            return;
+        }
+        st.entered += 1;
+        self.cv.notify_all();
+        while !st.open {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.entered -= 1;
+    }
+}
+
+struct GateExec {
+    inner: MockExec,
+    gate: Arc<Gate>,
+    gate_cached: bool,
+}
+
+impl StepExec for GateExec {
+    fn arch(&self) -> Arch {
+        self.inner.arch()
+    }
+    fn special(&self) -> Specials {
+        self.inner.special()
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.inner.seqs()
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.c_ladder(s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.r_ladder(s)
+    }
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.inner.full(s, ids, valid)
+    }
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        self.inner.window(s, c, ids, pos, valid)
+    }
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        if self.gate_cached {
+            self.gate.pass();
+        }
+        self.inner.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// a mid-step session's KV is never the spill victim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_step_session_kv_is_never_spilled() {
+    let req = GenRequest::new(vec![10; 4], 64, 256);
+    let solo = strategies::from_name("window")
+        .unwrap()
+        .generate(&MockExec::new(256), &req)
+        .unwrap();
+    // measure the per-session resident segment for this request shape
+    let probe = MockExec::new(256);
+    let mut probe_sess = strategies::from_name("window").unwrap().start(&probe, &req).unwrap();
+    probe_sess.step(&probe).unwrap();
+    let per_session = probe_sess.cache_bytes();
+    assert!(per_session > 0);
+
+    let gate = Gate::new();
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(GateExec {
+        inner: MockExec::new(256),
+        gate: Arc::clone(&gate),
+        gate_cached: true,
+    });
+    let dir = std::env::temp_dir().join(format!("wd-kvtier-pin-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            // soft limit of 1 byte: EVERY unpinned segment is a spill
+            // candidate; only the pin can protect A's checked-out KV
+            kv_soft_bytes: 1,
+            kv_spill_dir: Some(dir.clone()),
+            ..Default::default()
+        },
+        Arc::new(Metrics::default()),
+    );
+    let t_a = sched.submit(submit("window", &req)).unwrap();
+    sched.tick(); // A refreshes; its segment spills at once (unpinned, soft=1)
+    gate.arm();
+    let s2 = Arc::clone(&sched);
+    let stepper = thread::spawn(move || s2.tick()); // A rehydrates + parks mid-cached-step
+    gate.wait_entered();
+
+    let store = Arc::clone(sched.kv_store());
+    let hot_while_pinned = store.hot_bytes();
+    assert!(
+        hot_while_pinned >= per_session,
+        "parked session's segment left the hot tier: {hot_while_pinned} < {per_session}"
+    );
+
+    // drive pressure from another session while A is parked
+    let t_b = sched.submit(submit("window", &req)).unwrap();
+    sched.tick(); // B refreshes; its segment must be the victim, not A's
+    assert!(store.spills() >= 2, "B's refresh under soft=1 should have spilled");
+    assert!(
+        store.hot_bytes() >= per_session,
+        "pinned mid-step segment was spilled (hot {} < per-session {})",
+        store.hot_bytes(),
+        per_session
+    );
+
+    gate.open();
+    stepper.join().unwrap();
+    while sched.tick().is_some() {}
+    let r_a = t_a.wait().unwrap();
+    let r_b = t_b.wait().unwrap();
+    assert_eq!(r_a.generated(), solo.generated(), "spill pressure changed A's output");
+    assert_eq!(r_b.generated(), solo.generated(), "spill pressure changed B's output");
+    assert!(store.rehydrates() > 0, "spilled segments never came back");
+    sched.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// prefix sharing: hits observed, outputs byte-identical to no-sharing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_share_preserves_outputs_and_records_hits() {
+    let req = GenRequest::new(vec![10; 4], 64, 256);
+    let solo = strategies::from_name("window")
+        .unwrap()
+        .generate(&MockExec::new(256), &req)
+        .unwrap();
+
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig { prefix_share: true, ..Default::default() },
+        Arc::new(Metrics::default()),
+    );
+    assert!(sched.prefix_share_enabled());
+    let tickets: Vec<_> = (0..4)
+        .map(|_| sched.submit(submit("window", &req)).unwrap())
+        .collect();
+    while sched.tick().is_some() {}
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.generated(), solo.generated(), "sharing changed a session's output");
+    }
+    let store = sched.kv_store();
+    assert!(
+        store.prefix_hits() > 0,
+        "identical concurrent sessions never hit the prefix index"
+    );
+    sched.shutdown();
+}
