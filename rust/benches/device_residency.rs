@@ -1,0 +1,237 @@
+//! Perf-trajectory baseline for device-resident state (PR 8), mock-only.
+//!
+//! Part A — the per-step KV re-upload tax: a cached-heavy windowed
+//! workload where every cached forward pays a simulated host→device KV
+//! upload, run twice at the SAME hot-tier budget — once device-less (every
+//! step re-uploads) and once with a device attached (the store promotes at
+//! first checkout, later checkouts skip the upload entirely). Outputs must
+//! stay byte-identical; steps/sec must clear the 1.3x acceptance floor.
+//!
+//! Part B — device weight memory: pools at N ∈ {1, 4, 8} replicas sharing
+//! ONE device vs each uploading its own. Shared must stay flat at one
+//! bank's bytes; copy must grow linearly.
+//!
+//! Emits `BENCH_8.json` at the repo root, then prints the whole committed
+//! `BENCH_*.json` trajectory so one CI log tail shows every baseline.
+//!
+//! ```bash
+//! cargo bench --bench device_residency
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{EnginePool, HostParam, MockDevice, WeightBank};
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::strategies;
+use window_diffusion::util::json::Json;
+
+/// Simulated host→device KV transfer per cached forward — the tax the
+/// device rung exists to kill.
+const KV_UPLOAD_DELAY: Duration = Duration::from_micros(400);
+/// Small per-token-slot compute cost so the device arm is not measuring
+/// pure scheduler overhead.
+const SLOT_DELAY: Duration = Duration::from_micros(20);
+/// Long refresh cycle -> cached steps dominate; exactly the regime the
+/// device hot tier accelerates.
+const SPEC: &str = "window:w_ex=64,a=16,refresh=16";
+const PROMPT_LEN: usize = 16;
+const GEN_LEN: usize = 48;
+
+fn request() -> GenRequest {
+    let prompt: Vec<i32> = (0..PROMPT_LEN).map(|i| 5 + (i % 10) as i32).collect();
+    let mut req = GenRequest::new(prompt, GEN_LEN, 256);
+    req.adaptive = false;
+    req
+}
+
+struct RunResult {
+    label: &'static str,
+    steps_per_sec: f64,
+    wall_secs: f64,
+    upload_skips: u64,
+    device_promotions: u64,
+    outputs: Vec<Vec<i32>>,
+}
+
+fn run(label: &'static str, device: Option<Arc<MockDevice>>, n_sessions: usize) -> RunResult {
+    let metrics = Arc::new(Metrics::default());
+    let mut mock = MockExec::new(256)
+        .with_slot_delay(SLOT_DELAY)
+        .with_kv_upload_delay(KV_UPLOAD_DELAY);
+    if let Some(dev) = device {
+        mock = mock.with_device(dev);
+    }
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(mock);
+    // equal KV budget in both arms; the device rung stays uncapped (the
+    // A/B is upload traffic, not demotion pressure)
+    let m = MockExec::new(256);
+    let roomy = 64 * 8 * m.arch().kv_elems(128);
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig { kv_soft_bytes: roomy, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n_sessions)
+        .map(|_| {
+            sched
+                .submit(SubmitSpec { strategy: SPEC.into(), req: request(), deadline: None })
+                .expect("admit")
+        })
+        .collect();
+    while sched.tick().is_some() {}
+    let outputs: Vec<Vec<i32>> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("bench workload completes").generated())
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let store = Arc::clone(sched.kv_store());
+    sched.shutdown();
+    RunResult {
+        label,
+        steps_per_sec: metrics.sched_steps_total.load(Ordering::Relaxed) as f64
+            / wall.max(1e-9),
+        wall_secs: wall,
+        upload_skips: store.upload_skips(),
+        device_promotions: store.device_promotions(),
+        outputs,
+    }
+}
+
+fn bank_values(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i * 37 % 101) as f32) * 0.004 - 0.2).collect()
+}
+
+fn mock_bank() -> Arc<WeightBank> {
+    Arc::new(WeightBank::from_host_params(
+        "mock",
+        vec![
+            HostParam { name: "embed".into(), shape: vec![16, 4], data: bank_values(64) },
+            HostParam { name: "head".into(), shape: vec![4], data: bank_values(4) },
+        ],
+    ))
+}
+
+/// Device weight bytes for an N-replica pool, shared-device vs per-replica.
+fn device_pool_bytes(n: usize, shared: bool) -> usize {
+    let bank = mock_bank();
+    let dev = Arc::new(MockDevice::new());
+    let replicas = (0..n)
+        .map(|_| {
+            let d = if shared { Arc::clone(&dev) } else { Arc::new(MockDevice::new()) };
+            Arc::new(MockExec::new(256).with_weight_bank(Arc::clone(&bank)).with_device(d))
+                as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(replicas).unwrap().weight_bytes_device()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_sessions = bench_support::bench_n(8);
+
+    // ground truth: the solo no-scheduler, no-device path
+    let solo = strategies::from_name(SPEC)
+        .expect("bench spec parses")
+        .generate(&MockExec::new(256), &request())
+        .expect("solo run")
+        .generated();
+
+    println!(
+        "device_residency: {n_sessions} sessions, {SPEC}, \
+         {KV_UPLOAD_DELAY:?}/cached-step upload, {SLOT_DELAY:?}/slot"
+    );
+    bench_support::hr(78);
+    let host = run("host-upload", None, n_sessions);
+    let dev = run("device-kv", Some(Arc::new(MockDevice::new())), n_sessions);
+    for r in [&host, &dev] {
+        println!(
+            "{:<12} {:>8.1} steps/s  skips={:<5} promotions={:<4} wall={:.2}s",
+            r.label, r.steps_per_sec, r.upload_skips, r.device_promotions, r.wall_secs
+        );
+    }
+
+    // byte parity: residency must never change what a session generates
+    for (i, out) in host.outputs.iter().enumerate() {
+        assert_eq!(out, &solo, "host-upload session {i} diverged from solo");
+    }
+    for (i, out) in dev.outputs.iter().enumerate() {
+        assert_eq!(out, &solo, "device-kv session {i} diverged from solo");
+    }
+    assert_eq!(host.upload_skips, 0, "device-less run skipped an upload");
+    assert!(dev.upload_skips > 0, "device run never skipped an upload");
+    assert!(dev.device_promotions > 0, "device run never promoted a segment");
+    let speedup = bench_support::speedup(host.steps_per_sec, dev.steps_per_sec);
+    println!("device-kv vs host-upload: {speedup:.2}x (acceptance floor 1.3x)");
+    assert!(
+        speedup >= 1.3,
+        "device KV speedup {speedup:.2}x below the 1.3x acceptance floor"
+    );
+
+    // Part B: device weight bytes, shared flat vs copy linear
+    let ns = [1usize, 4, 8];
+    let per_bank = mock_bank().total_bytes();
+    let shared_bytes: Vec<usize> = ns.iter().map(|&n| device_pool_bytes(n, true)).collect();
+    let copy_bytes: Vec<usize> = ns.iter().map(|&n| device_pool_bytes(n, false)).collect();
+    for (i, &n) in ns.iter().enumerate() {
+        println!(
+            "N={n}: shared device weights {:>6}B (flat)   copy {:>6}B ({}x)",
+            shared_bytes[i],
+            copy_bytes[i],
+            n
+        );
+        assert_eq!(shared_bytes[i], per_bank, "shared device bytes not flat at N={n}");
+        assert_eq!(copy_bytes[i], n * per_bank, "copy device bytes not linear at N={n}");
+    }
+    bench_support::hr(78);
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("device_residency")),
+        ("issue", Json::num(8.0)),
+        ("n_sessions", Json::num(n_sessions as f64)),
+        ("gen_len", Json::num(GEN_LEN as f64)),
+        ("kv_upload_delay_us", Json::num(KV_UPLOAD_DELAY.as_secs_f64() * 1e6)),
+        ("slot_delay_us", Json::num(SLOT_DELAY.as_secs_f64() * 1e6)),
+        (
+            "configs",
+            Json::Arr(
+                [&host, &dev]
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("label", Json::str(r.label)),
+                            ("steps_per_sec", Json::num(r.steps_per_sec)),
+                            ("wall_secs", Json::num(r.wall_secs)),
+                            ("upload_skips", Json::num(r.upload_skips as f64)),
+                            ("device_promotions", Json::num(r.device_promotions as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_device_vs_host", Json::num(speedup)),
+        (
+            "device_weight_bytes",
+            Json::obj(vec![
+                ("replicas", Json::arr_num(&ns.map(|n| n as f64))),
+                (
+                    "shared",
+                    Json::arr_num(&shared_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+                ),
+                (
+                    "copy",
+                    Json::arr_num(&copy_bytes.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+                ),
+            ]),
+        ),
+    ]);
+    bench_support::write_bench_json("BENCH_8.json", &payload)?;
+
+    // the cross-PR trajectory: every committed baseline, one table
+    bench_support::print_trajectory();
+    Ok(())
+}

@@ -94,6 +94,71 @@ pub fn write_bench_json(name: &str, j: &crate::util::json::Json) -> Result<PathB
     Ok(path)
 }
 
+/// Print the cross-PR perf trajectory: one line per `BENCH_<n>.json` found
+/// in the bench JSON directory (`WD_BENCH_JSON_DIR`, default the repo root
+/// `..`), with each run's per-config steps/sec and any headline speedups.
+/// Benches call this last, so a single CI log tail shows every committed
+/// baseline side by side instead of one file per PR.
+pub fn print_trajectory() {
+    let dir = std::env::var("WD_BENCH_JSON_DIR").unwrap_or_else(|_| "..".into());
+    let mut files: Vec<(u64, PathBuf)> = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                let n = name
+                    .strip_prefix("BENCH_")
+                    .and_then(|rest| rest.strip_suffix(".json"))
+                    .and_then(|num| num.parse::<u64>().ok())?;
+                Some((n, e.path()))
+            })
+            .collect(),
+        Err(_) => return,
+    };
+    if files.is_empty() {
+        return;
+    }
+    files.sort();
+    println!();
+    println!("perf trajectory ({} baselines in {dir}):", files.len());
+    hr(78);
+    for (_, path) in &files {
+        let Ok(text) = std::fs::read_to_string(path) else { continue };
+        let Ok(j) = crate::util::json::parse(&text) else { continue };
+        let fname = path.file_name().map(|f| f.to_string_lossy().into_owned());
+        let mut cells: Vec<String> = Vec::new();
+        if let Some(sps) = j.get("steps_per_sec").as_f64() {
+            cells.push(format!("{sps:.1}st/s"));
+        }
+        if let Some(cfgs) = j.get("configs").as_arr() {
+            for c in cfgs {
+                if let (Some(label), Some(sps)) =
+                    (c.get("label").as_str(), c.get("steps_per_sec").as_f64())
+                {
+                    cells.push(format!("{label}={sps:.1}st/s"));
+                }
+            }
+        }
+        if let Some(top) = j.as_obj() {
+            for (k, v) in top {
+                if k.contains("speedup") {
+                    if let Some(x) = v.as_f64() {
+                        cells.push(format!("{k}={x:.2}x"));
+                    }
+                }
+            }
+        }
+        println!(
+            "{:<14} issue {:>2}  {:<17} {}",
+            fname.as_deref().unwrap_or("?"),
+            j.get("issue").as_f64().unwrap_or(0.0) as i64,
+            j.get("bench").as_str().unwrap_or("?"),
+            cells.join("  ")
+        );
+    }
+    hr(78);
+}
+
 pub fn speedup(base: f64, x: f64) -> f64 {
     if base <= 0.0 {
         0.0

@@ -22,8 +22,8 @@ use xla::Literal;
 
 use super::plan::{execute_plan, KvOut, StepOutputs, StepPlan};
 use crate::runtime::{
-    buckets, Arch, BatchedKv, Engine, EngineCell, EnginePool, KvCache, ModelEntry, Specials,
-    WeightBank,
+    buckets, Arch, BatchedKv, DeviceKv, Engine, EngineCell, EnginePool, KvCache, MockDevice,
+    ModelEntry, Specials, WeightBank,
 };
 use crate::scheduler::kvstore::KvCheckout;
 
@@ -49,6 +49,28 @@ pub trait StepExec {
     /// `bank_mode` gauges: replicas sharing one bank report its bytes once.
     fn weight_bank(&self) -> Option<Arc<WeightBank>> {
         None
+    }
+
+    /// The device KV segments can be made resident on for this executor
+    /// (`None`, the default, keeps the KV store host-only). Pools expose a
+    /// device only when every replica shares ONE device bank
+    /// (`DeviceMode::Shared`) — a lease taken against the shared device is
+    /// valid on whichever replica a step lands on; under copy mode replicas
+    /// sit on distinct devices and no store-wide lease would be sound.
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        None
+    }
+
+    /// Cached forward through a checked-out, pinned segment. The default
+    /// ignores residency and re-uploads the host bytes every step (`co`
+    /// derefs to the materialized [`KvCache`]); device-aware executors
+    /// override it to consume the device-resident copy in place when the
+    /// checkout carries a lease on their own device.
+    #[allow(clippy::too_many_arguments)]
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        self.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
     }
 
     fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>>;
@@ -318,11 +340,36 @@ impl StepExec for Engine {
               -> Result<(Vec<f32>, KvCache)> {
         Engine::fwd_cached(self, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
     }
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        // Device fast path: the lease must be on THIS engine's device and
+        // the materialized shape must match the bucket. Any failure falls
+        // back to the host re-upload — slower, never wrong.
+        if let Some(lease) = co.device() {
+            if lease.device_id() == Engine::device_bank(self).device_id() && co.c == c {
+                match Engine::fwd_cached_dev(
+                    self, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co.segment(),
+                ) {
+                    Ok(out) => return Ok(out),
+                    Err(err) => eprintln!(
+                        "device-resident cached forward for segment {} failed, \
+                         re-uploading host bytes: {err:#}",
+                        co.segment()
+                    ),
+                }
+            }
+        }
+        Engine::fwd_cached(self, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
+    }
     fn b_ladder(&self) -> Vec<usize> {
         self.model.b_ladder.clone()
     }
     fn weight_bank(&self) -> Option<Arc<WeightBank>> {
         Some(Engine::weight_bank(self))
+    }
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        Some(Engine::device_bank(self) as Arc<dyn DeviceKv>)
     }
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         engine_execute_batch(self, plans)
@@ -357,11 +404,21 @@ impl StepExec for EngineCell {
               -> Result<(Vec<f32>, KvCache)> {
         self.with(|e| e.fwd_cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv))
     }
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        self.with(|e| {
+            StepExec::cached_co(e, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
+        })
+    }
     fn b_ladder(&self) -> Vec<usize> {
         self.with(|e| e.model.b_ladder.clone())
     }
     fn weight_bank(&self) -> Option<Arc<WeightBank>> {
         self.with(|e| Some(e.weight_bank()))
+    }
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        self.with(|e| StepExec::device(e))
     }
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         // one mutex hold for the whole batch: the point of coalescing
@@ -408,12 +465,24 @@ impl StepExec for EnginePool {
             e.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
         })
     }
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        self.with_replica(|e| {
+            e.cached_co(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
+        })
+    }
     fn b_ladder(&self) -> Vec<usize> {
         self.cached_b_ladder().to_vec()
     }
     fn weight_bank(&self) -> Option<Arc<WeightBank>> {
         // construction-time snapshot (replica 0's bank) — no checkout
         EnginePool::weight_bank(self)
+    }
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        // Some only under shared device mode: a lease on the shared device
+        // is valid for every replica a step can land on.
+        EnginePool::shared_device(self)
     }
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         // the whole batch occupies ONE replica; other replicas stay free
@@ -451,6 +520,19 @@ pub struct MockExec {
     /// exercise the zero-copy sharing path — and shared-vs-copy output
     /// parity actually depends on the bank bytes — without artifacts.
     bank: Option<Arc<WeightBank>>,
+    /// Device-backed variant (ISSUE 8): the mock's device analog. When
+    /// set, the mock reports it through [`StepExec::device`] (so the
+    /// scheduler attaches it to the KV store) and `cached_co` honors
+    /// leases on it — a resident checkout skips the simulated upload cost,
+    /// a non-resident one pays `kv_upload_delay`. Mocks sharing one
+    /// `Arc<MockDevice>` model `DeviceMode::Shared`; distinct devices
+    /// model copy mode.
+    device: Option<Arc<MockDevice>>,
+    /// Simulated per-step host→device KV transfer cost, paid by `cached_co`
+    /// only when the checkout carries no usable device lease. This is the
+    /// cost the device hot tier exists to kill; the residency bench
+    /// measures exactly this delta.
+    pub kv_upload_delay: Option<std::time::Duration>,
     pub calls: std::sync::Mutex<CallCounts>,
 }
 
@@ -468,6 +550,11 @@ pub struct CallCounts {
     pub batched_forwards: usize,
     /// Lanes carried by those batched forwards.
     pub batched_lanes: usize,
+    /// `cached_co` forwards that paid the simulated host→device KV upload
+    /// (no usable device lease on the checkout).
+    pub kv_uploads: usize,
+    /// `cached_co` forwards that consumed device-resident KV in place.
+    pub kv_upload_skips: usize,
 }
 
 impl MockExec {
@@ -479,6 +566,8 @@ impl MockExec {
             step_delay: None,
             slot_delay: None,
             bank: None,
+            device: None,
+            kv_upload_delay: None,
             calls: Default::default(),
         }
     }
@@ -502,8 +591,33 @@ impl MockExec {
     /// field). Replicas built over one `Arc` exercise the shared path;
     /// replicas with their own equal-content banks model `copy` mode.
     pub fn with_weight_bank(mut self, bank: Arc<WeightBank>) -> MockExec {
+        if let Some(dev) = &self.device {
+            dev.note_weights(&bank);
+        }
         self.bank = Some(bank);
         self
+    }
+
+    /// Device-backed mock (see the `device` field). Registers the weight
+    /// bank (if any) with the device so `weight_bytes` dedupes by bank
+    /// identity, exactly like the real `DeviceBank` upload would.
+    pub fn with_device(mut self, dev: Arc<MockDevice>) -> MockExec {
+        if let Some(bank) = &self.bank {
+            dev.note_weights(bank);
+        }
+        self.device = Some(dev);
+        self
+    }
+
+    pub fn with_kv_upload_delay(mut self, d: std::time::Duration) -> MockExec {
+        self.kv_upload_delay = Some(d);
+        self
+    }
+
+    /// The mock's device, when one is attached (typed accessor for tests;
+    /// `StepExec::device` is the type-erased view the scheduler uses).
+    pub fn mock_device(&self) -> Option<&Arc<MockDevice>> {
+        self.device.as_ref()
     }
 
     /// Per-position perturbation read out of the bank (0 when bank-less).
@@ -639,12 +753,41 @@ impl StepExec for MockExec {
         Ok((out, self.mock_kv(s, c)))
     }
 
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        // Faithful analog of the engine's device fast path: a lease on OUR
+        // device skips the simulated upload; anything else pays it.
+        let resident = matches!(
+            (co.device(), &self.device),
+            (Some(lease), Some(own)) if lease.device_id() == own.device_id()
+        );
+        {
+            let mut cc = self.calls.lock().unwrap();
+            if resident {
+                cc.kv_upload_skips += 1;
+            } else {
+                cc.kv_uploads += 1;
+            }
+        }
+        if !resident {
+            if let Some(d) = self.kv_upload_delay {
+                std::thread::sleep(d);
+            }
+        }
+        self.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
+    }
+
     fn b_ladder(&self) -> Vec<usize> {
         vec![1, 2, 4, 8]
     }
 
     fn weight_bank(&self) -> Option<Arc<WeightBank>> {
         self.bank.clone()
+    }
+
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        self.device.clone().map(|d| d as Arc<dyn DeviceKv>)
     }
 
     /// Real batched execution: per-lane outputs are byte-identical to the

@@ -332,10 +332,12 @@ pub fn execute_plan<E: StepExec + ?Sized>(exec: &E, plan: StepPlan) -> Result<St
         StepPlan::Cached { s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv } => {
             // Checkout pins the segment (rehydrating it if spilled) for the
             // duration of the forward; the handle itself is consumed with
-            // the plan, exactly like the owned cache used to be.
+            // the plan, exactly like the owned cache used to be. Going
+            // through `cached_co` lets device-aware executors consume a
+            // device-resident copy in place instead of re-uploading.
             let co = kv.checkout()?;
             let (logits, new_kv) =
-                exec.cached(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &co)?;
+                exec.cached_co(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &co)?;
             Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(new_kv)))
         }
     }

@@ -19,7 +19,7 @@ use window_diffusion::analysis;
 use window_diffusion::coordinator::{GenRequest, StepExec};
 use window_diffusion::eval::{self, EvalOptions};
 use window_diffusion::metrics::Metrics;
-use window_diffusion::runtime::{BankMode, Engine, EnginePool, Manifest};
+use window_diffusion::runtime::{BankMode, DeviceMode, Engine, EnginePool, Manifest};
 use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::{self, api::AppState, ServerConfig};
 use window_diffusion::strategies;
@@ -102,11 +102,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         info!("--replicas {want} clamped to {replicas} (available_parallelism)");
     }
     let bank_mode = BankMode::from_name(args.get("weight-bank").unwrap_or("shared"))?;
-    let pool = EnginePool::load_with_mode(&manifest, &model, replicas, bank_mode)?;
+    // device side defaults to shared too: one PJRT client + one device
+    // weight upload for the whole pool, and the KV store gets a device hot
+    // tier; `--device-bank copy` restores per-replica clients (independent
+    // dispatch, linear device memory, no device KV rung).
+    let device_mode = DeviceMode::from_name(args.get("device-bank").unwrap_or("shared"))?;
+    let pool =
+        EnginePool::load_with_modes(&manifest, &model, replicas, bank_mode, device_mode)?;
     info!(
-        "weight bank: {} — {:.1} MB host-resident across {replicas} replica(s)",
+        "weight bank: {} — {:.1} MB host-resident across {replicas} replica(s); \
+         device bank: {} — {:.1} MB device-resident",
         pool.bank_mode(),
-        pool.weight_bytes_host() as f64 / 1e6
+        pool.weight_bytes_host() as f64 / 1e6,
+        pool.device_mode(),
+        pool.weight_bytes_device() as f64 / 1e6
     );
     let s = args.usize_or("s", pool.seqs()[0]);
     let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
@@ -136,6 +145,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
         kv_soft_bytes: args.usize_or("kv-soft-mb", 0) * 1024 * 1024,
+        kv_device_soft_bytes: args.usize_or("kv-device-mb", 0) * 1024 * 1024,
         kv_spill_dir: args.get("kv-spill-dir").map(std::path::PathBuf::from),
         prefix_share,
         max_sessions: args.usize_or("max-sessions", 64),
@@ -314,10 +324,11 @@ fn main() -> Result<()> {
                 "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
                  [--artifacts DIR] [--strategy SPEC] ...\n\
                  serve flags: [--replicas N] [--weight-bank shared|copy] \
-                 [--max-batch B] \
+                 [--device-bank shared|copy] [--max-batch B] \
                  [--batch-policy fixed|adaptive] [--coalesce-waste-pct P] \
                  [--policy rr|shortest|deadline] \
-                 [--kv-budget-mb N] [--kv-soft-mb N] [--kv-spill-dir DIR] \
+                 [--kv-budget-mb N] [--kv-soft-mb N] [--kv-device-mb N] \
+                 [--kv-spill-dir DIR] \
                  [--no-prefix-share] [--max-sessions N] \
                  [--workers N] [--queue N] [--direct] [--trace off|ring]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \

@@ -221,6 +221,18 @@ pub struct Metrics {
     pub kv_prefix_hits: AtomicU64,
     /// Window forwards that consulted the prefix index and missed.
     pub kv_prefix_misses: AtomicU64,
+    /// KV bytes resident on the device rung (subset of `kv_hot_bytes`;
+    /// 0 when no device is attached).
+    pub kv_device_bytes: AtomicU64,
+    /// Cached forwards that consumed device-resident KV in place instead
+    /// of re-uploading the segment — the per-step transfer the device hot
+    /// tier exists to kill.
+    pub kv_upload_skips: AtomicU64,
+    /// Segments uploaded to the device rung on first checkout.
+    pub kv_device_promotions: AtomicU64,
+    /// Device-resident segments demoted back to host-only (device pressure
+    /// or spill).
+    pub kv_device_demotions: AtomicU64,
     /// KV pool releases for unknown session ids — a booking-discipline bug
     /// in the scheduler if ever non-zero (see `KvPool::anomalies`).
     pub kv_accounting_anomalies: AtomicU64,
@@ -305,6 +317,16 @@ impl Metrics {
             ("kv_prefix_hits", Json::num(self.kv_prefix_hits.load(Ordering::Relaxed) as f64)),
             ("kv_prefix_misses", Json::num(self.kv_prefix_misses.load(Ordering::Relaxed) as f64)),
             ("kv_prefix_hit_rate", Json::num(self.kv_prefix_hit_rate())),
+            ("kv_device_bytes", Json::num(self.kv_device_bytes.load(Ordering::Relaxed) as f64)),
+            ("kv_upload_skips", Json::num(self.kv_upload_skips.load(Ordering::Relaxed) as f64)),
+            (
+                "kv_device_promotions",
+                Json::num(self.kv_device_promotions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_device_demotions",
+                Json::num(self.kv_device_demotions.load(Ordering::Relaxed) as f64),
+            ),
             (
                 "kv_accounting_anomalies",
                 Json::num(self.kv_accounting_anomalies.load(Ordering::Relaxed) as f64),
@@ -465,6 +487,10 @@ mod tests {
         m.kv_rehydrates.store(2, Ordering::Relaxed);
         m.kv_prefix_hits.store(9, Ordering::Relaxed);
         m.kv_prefix_misses.store(1, Ordering::Relaxed);
+        m.kv_device_bytes.store(2048, Ordering::Relaxed);
+        m.kv_upload_skips.store(5, Ordering::Relaxed);
+        m.kv_device_promotions.store(4, Ordering::Relaxed);
+        m.kv_device_demotions.store(1, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.get("kv_hot_bytes").as_i64(), Some(8192));
         assert_eq!(j.get("kv_spilled_bytes").as_i64(), Some(4096));
@@ -472,6 +498,10 @@ mod tests {
         assert_eq!(j.get("kv_rehydrates").as_i64(), Some(2));
         assert_eq!(j.get("kv_prefix_hits").as_i64(), Some(9));
         assert_eq!(j.get("kv_prefix_hit_rate").as_f64(), Some(0.9));
+        assert_eq!(j.get("kv_device_bytes").as_i64(), Some(2048));
+        assert_eq!(j.get("kv_upload_skips").as_i64(), Some(5));
+        assert_eq!(j.get("kv_device_promotions").as_i64(), Some(4));
+        assert_eq!(j.get("kv_device_demotions").as_i64(), Some(1));
         assert_eq!(j.get("kv_accounting_anomalies").as_i64(), Some(0));
     }
 

@@ -1,0 +1,471 @@
+//! Device residency: shared device weight banks and the device KV rung.
+//!
+//! PR 5 de-duplicated *host* weight memory; this module does the same for
+//! *device* memory and gives the KV store a device-resident hot rung:
+//!
+//! * [`DeviceBank`] owns one `PjRtClient` plus the device-resident weight
+//!   buffers uploaded from a host [`WeightBank`]. Under
+//!   [`DeviceMode::Shared`] every replica of a pool holds the same
+//!   `Arc<DeviceBank>` — one upload, flat device weight bytes in
+//!   `--replicas` — while [`DeviceMode::Copy`] keeps the historical
+//!   one-client-per-replica layout for A/B measurement (mirroring
+//!   `BankMode`).
+//! * [`DeviceKv`] is the residency interface the KV store's device rung is
+//!   written against: upload a segment, ask whether it is resident, evict
+//!   it, and account bytes. [`DeviceBank`] implements it with real PJRT
+//!   buffers; [`MockDevice`] implements it with host vectors + byte/upload
+//!   counters so every invariant (and the `device_residency` bench) is
+//!   provable without artifacts.
+//!
+//! Identity: every device gets a process-unique `device_id()`. "Resident on
+//! the executing replica's device" is an id comparison, so pools dedupe
+//! weight bytes and executors validate checkout leases without pointer
+//! games across `dyn` types.
+//!
+//! Concurrency note: the CPU PJRT client is `Rc`-based, so a *shared*
+//! `DeviceBank` serializes all PJRT calls (uploads, compiles, executions)
+//! behind one mutex. Shared mode trades replica-parallel dispatch for flat
+//! device memory; copy mode keeps dispatch parallel at linear memory. See
+//! DESIGN.md §"Memory ladder".
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{PjRtBuffer, PjRtClient};
+
+use super::manifest::Arch;
+use super::weights::WeightBank;
+
+/// Process-unique device identities (shared across real + mock devices so a
+/// mixed pool still dedupes correctly).
+static DEVICE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn next_device_id() -> u64 {
+    DEVICE_SEQ.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+/// `--device-bank {shared,copy}` — how a pool lays out device weight
+/// buffers across replicas (the device-side analog of `BankMode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceMode {
+    /// One `DeviceBank` (client + weight upload) per replica: device weight
+    /// bytes grow linearly in `--replicas`, PJRT dispatch stays parallel.
+    Copy,
+    /// All replicas share ONE `DeviceBank`: weights upload once, device
+    /// weight bytes stay flat, and the store's device KV rung becomes
+    /// usable (a segment uploaded by one replica is resident for all).
+    Shared,
+}
+
+impl DeviceMode {
+    pub fn from_name(s: &str) -> Result<DeviceMode> {
+        match s {
+            "shared" => Ok(DeviceMode::Shared),
+            "copy" => Ok(DeviceMode::Copy),
+            other => Err(anyhow!("unknown device-bank mode '{other}' (shared | copy)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceMode::Shared => "shared",
+            DeviceMode::Copy => "copy",
+        }
+    }
+}
+
+/// Residency interface the KV store's device rung is written against.
+///
+/// Implementors own some notion of device memory keyed by segment id. The
+/// store calls `kv_upload` to promote a hot host segment, `kv_evict` to
+/// demote it back to host-only, and reads the byte gauges for `/metrics`.
+/// The host mirror is ALWAYS kept by the store — the device rung saves
+/// host→device traffic, not host bytes — so eviction is a free drop, never
+/// a download.
+pub trait DeviceKv: Send + Sync {
+    /// Process-unique identity; equality means "the same device memory".
+    fn device_id(&self) -> u64;
+
+    /// Device-resident weight bytes this bank pins (0 for KV-only devices).
+    fn weight_bytes(&self) -> usize;
+
+    /// Upload a segment's flat `[L, c, H, Dh]` K/V to the device, replacing
+    /// any previous copy under this id. Returns device bytes now held by
+    /// the segment.
+    fn kv_upload(&self, seg: u64, s: usize, c: usize, k: &[f32], v: &[f32]) -> Result<usize>;
+
+    /// Whether `seg` currently has a device-resident copy.
+    fn kv_resident(&self, seg: u64) -> bool;
+
+    /// Drop the device copy of `seg`; returns bytes freed (0 if absent).
+    fn kv_evict(&self, seg: u64) -> usize;
+
+    /// Total KV bytes resident on this device.
+    fn kv_bytes(&self) -> usize;
+
+    /// KV segments uploaded over this device's lifetime.
+    fn kv_uploads(&self) -> u64;
+
+    /// KV segments evicted over this device's lifetime.
+    fn kv_evictions(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// real device bank (PJRT)
+// ---------------------------------------------------------------------------
+
+/// One KV segment's device buffers.
+pub(crate) struct DeviceSeg {
+    pub elems: usize,
+    pub bytes: usize,
+    pub k: PjRtBuffer,
+    pub v: PjRtBuffer,
+}
+
+/// Everything `Rc`-based lives here, behind the bank's mutex: the client,
+/// the weight buffers, and the device KV segments.
+pub(crate) struct Pjrt {
+    pub client: PjRtClient,
+    pub weights: Vec<PjRtBuffer>,
+    pub kv: HashMap<u64, DeviceSeg>,
+}
+
+/// A (client, model) pair's device-resident state: the PJRT client, the
+/// weight buffers uploaded once from a host [`WeightBank`], and the device
+/// KV segments promoted by the store. Shared (`Arc`) across every replica
+/// of a pool in [`DeviceMode::Shared`]; private per replica in
+/// [`DeviceMode::Copy`].
+pub struct DeviceBank {
+    id: u64,
+    /// Host bank the device weights were uploaded from (identity anchor
+    /// for accounting; the bank itself stays shared/mapped host-side).
+    bank: Arc<WeightBank>,
+    /// Model dims — fixes the `[L, c, H, Dh]` KV upload shape.
+    arch: Arch,
+    weight_bytes: usize,
+    pjrt: Mutex<Pjrt>,
+    kv_bytes: AtomicUsize,
+    uploads: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// # Safety
+/// Sound for the same reasons [`EngineCell`](super::engine::EngineCell) is:
+/// (a) every `Rc` clone and PJRT call on the client/buffers happens while
+/// holding `pjrt`, so refcount updates are serialized; (b) the TFRT CPU
+/// PJRT client is itself thread-safe; (c) nothing escapes the mutex except
+/// plain owned host data and atomics.
+unsafe impl Send for DeviceBank {}
+unsafe impl Sync for DeviceBank {}
+
+impl std::fmt::Debug for DeviceBank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceBank")
+            .field("id", &self.id)
+            .field("model", &self.bank.model())
+            .field("weight_bytes", &self.weight_bytes)
+            .field("kv_bytes", &self.kv_bytes.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl DeviceBank {
+    /// Create a PJRT client and upload every parameter of `bank` once.
+    pub fn upload(bank: &Arc<WeightBank>, arch: Arch) -> Result<DeviceBank> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut weights = Vec::with_capacity(bank.params_len());
+        let mut bytes = 0usize;
+        for i in 0..bank.params_len() {
+            let p = bank.param(i);
+            let dims: Vec<usize> =
+                if p.shape.is_empty() { vec![1] } else { p.shape.to_vec() };
+            weights.push(
+                client
+                    .buffer_from_host_buffer(p.data, &dims, None)
+                    .with_context(|| format!("uploading weight {}", p.name))?,
+            );
+            bytes += p.data.len() * 4;
+        }
+        Ok(DeviceBank {
+            id: next_device_id(),
+            bank: Arc::clone(bank),
+            arch,
+            weight_bytes: bytes,
+            pjrt: Mutex::new(Pjrt { client, weights, kv: HashMap::new() }),
+            kv_bytes: AtomicUsize::new(0),
+            uploads: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// Host bank behind the device copy.
+    pub fn weight_bank(&self) -> Arc<WeightBank> {
+        Arc::clone(&self.bank)
+    }
+
+    /// Lock the PJRT state for a compile/execute critical section. All
+    /// engine-side device access goes through here.
+    pub(crate) fn lock(&self) -> MutexGuard<'_, Pjrt> {
+        self.pjrt.lock().expect("device bank mutex poisoned")
+    }
+}
+
+impl DeviceKv for DeviceBank {
+    fn device_id(&self) -> u64 {
+        self.id
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.weight_bytes
+    }
+
+    fn kv_upload(&self, seg: u64, _s: usize, c: usize, k: &[f32], v: &[f32]) -> Result<usize> {
+        let elems = self.arch.kv_elems(c);
+        if k.len() != elems || v.len() != elems {
+            return Err(anyhow!(
+                "device kv upload of segment {seg}: {}/{} elems, arch says {elems} for c={c}",
+                k.len(),
+                v.len()
+            ));
+        }
+        let dims = vec![self.arch.n_layers, c, self.arch.n_heads, self.arch.dh];
+        let mut p = self.lock();
+        let kb = p.client.buffer_from_host_buffer(k, &dims, None)?;
+        let vb = p.client.buffer_from_host_buffer(v, &dims, None)?;
+        let bytes = 4 * (k.len() + v.len());
+        if let Some(old) = p.kv.insert(seg, DeviceSeg { elems, bytes, k: kb, v: vb }) {
+            self.kv_bytes.fetch_sub(old.bytes, Ordering::Relaxed);
+        }
+        drop(p);
+        self.kv_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    fn kv_resident(&self, seg: u64) -> bool {
+        self.lock().kv.contains_key(&seg)
+    }
+
+    fn kv_evict(&self, seg: u64) -> usize {
+        let freed = match self.lock().kv.remove(&seg) {
+            Some(d) => d.bytes,
+            None => return 0,
+        };
+        self.kv_bytes.fetch_sub(freed, Ordering::Relaxed);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        freed
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.kv_bytes.load(Ordering::Relaxed)
+    }
+
+    fn kv_uploads(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    fn kv_evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mock device
+// ---------------------------------------------------------------------------
+
+struct MockSeg {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    bytes: usize,
+}
+
+#[derive(Default)]
+struct MockState {
+    /// Weight registries keyed by host-bank identity (`Arc` address): a
+    /// second replica noting the SAME bank adds nothing, so shared pools
+    /// report flat device weight bytes and copy pools linear — the same
+    /// dedup rule `distinct_banks` applies host-side.
+    weights: HashMap<usize, usize>,
+    kv: HashMap<u64, MockSeg>,
+    kv_bytes: usize,
+}
+
+/// Artifact-free [`DeviceKv`]: host vectors standing in for device buffers,
+/// with the same byte accounting and upload/eviction counters the real
+/// bank keeps. The kept payloads let parity tests compare "device" bytes
+/// against the store's host mirror bit-for-bit.
+pub struct MockDevice {
+    id: u64,
+    inner: Mutex<MockState>,
+    uploads: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for MockDevice {
+    fn default() -> Self {
+        MockDevice::new()
+    }
+}
+
+impl MockDevice {
+    pub fn new() -> MockDevice {
+        MockDevice {
+            id: next_device_id(),
+            inner: Mutex::new(MockState::default()),
+            uploads: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a weight upload from `bank` (idempotent per bank identity).
+    pub fn note_weights(&self, bank: &Arc<WeightBank>) {
+        let key = Arc::as_ptr(bank) as usize;
+        self.inner.lock().unwrap().weights.insert(key, bank.total_bytes());
+    }
+
+    /// The "device" copy of a segment, when resident — parity probes.
+    pub fn kv_data(&self, seg: u64) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .kv
+            .get(&seg)
+            .map(|d| (d.k.clone(), d.v.clone()))
+    }
+}
+
+impl std::fmt::Debug for MockDevice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("MockDevice")
+            .field("id", &self.id)
+            .field("weight_bytes", &inner.weights.values().sum::<usize>())
+            .field("kv_segments", &inner.kv.len())
+            .field("kv_bytes", &inner.kv_bytes)
+            .finish()
+    }
+}
+
+impl DeviceKv for MockDevice {
+    fn device_id(&self) -> u64 {
+        self.id
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.inner.lock().unwrap().weights.values().sum()
+    }
+
+    fn kv_upload(&self, seg: u64, _s: usize, _c: usize, k: &[f32], v: &[f32]) -> Result<usize> {
+        let bytes = 4 * (k.len() + v.len());
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) =
+            inner.kv.insert(seg, MockSeg { k: k.to_vec(), v: v.to_vec(), bytes })
+        {
+            inner.kv_bytes -= old.bytes;
+        }
+        inner.kv_bytes += bytes;
+        drop(inner);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    fn kv_resident(&self, seg: u64) -> bool {
+        self.inner.lock().unwrap().kv.contains_key(&seg)
+    }
+
+    fn kv_evict(&self, seg: u64) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let freed = match inner.kv.remove(&seg) {
+            Some(d) => d.bytes,
+            None => return 0,
+        };
+        inner.kv_bytes -= freed;
+        drop(inner);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        freed
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.inner.lock().unwrap().kv_bytes
+    }
+
+    fn kv_uploads(&self) -> u64 {
+        self.uploads.load(Ordering::Relaxed)
+    }
+
+    fn kv_evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::weights::HostParam;
+
+    fn bank(name: &str, n: usize) -> Arc<WeightBank> {
+        Arc::new(WeightBank::from_host_params(
+            name,
+            vec![HostParam {
+                name: "w".into(),
+                shape: vec![n],
+                data: vec![0.5; n],
+            }],
+        ))
+    }
+
+    #[test]
+    fn device_mode_names_round_trip() {
+        assert_eq!(DeviceMode::from_name("shared").unwrap(), DeviceMode::Shared);
+        assert_eq!(DeviceMode::from_name("copy").unwrap(), DeviceMode::Copy);
+        assert!(DeviceMode::from_name("bogus").is_err());
+        assert_eq!(DeviceMode::Shared.name(), "shared");
+        assert_eq!(DeviceMode::Copy.name(), "copy");
+    }
+
+    #[test]
+    fn device_ids_are_process_unique() {
+        let a = MockDevice::new();
+        let b = MockDevice::new();
+        assert_ne!(a.device_id(), b.device_id());
+    }
+
+    #[test]
+    fn mock_weight_registry_dedupes_by_bank_identity() {
+        let dev = MockDevice::new();
+        let b1 = bank("m", 1024);
+        // the same bank noted twice (two replicas sharing it) counts once
+        dev.note_weights(&b1);
+        dev.note_weights(&b1);
+        assert_eq!(dev.weight_bytes(), 4 * 1024);
+        // a DISTINCT equal-content bank is a second upload (copy mode)
+        let b2 = bank("m", 1024);
+        dev.note_weights(&b2);
+        assert_eq!(dev.weight_bytes(), 2 * 4 * 1024);
+    }
+
+    #[test]
+    fn mock_kv_upload_evict_accounting_and_parity() {
+        let dev = MockDevice::new();
+        let k: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..32).map(|i| -(i as f32)).collect();
+        let bytes = dev.kv_upload(7, 64, 16, &k, &v).unwrap();
+        assert_eq!(bytes, 4 * 64);
+        assert!(dev.kv_resident(7));
+        assert_eq!(dev.kv_bytes(), bytes);
+        assert_eq!(dev.kv_uploads(), 1);
+        let (dk, dv) = dev.kv_data(7).unwrap();
+        assert_eq!(dk, k, "device copy bit-identical to the upload");
+        assert_eq!(dv, v);
+        // re-upload under the same id replaces, not accumulates
+        dev.kv_upload(7, 64, 16, &k, &v).unwrap();
+        assert_eq!(dev.kv_bytes(), bytes);
+        assert_eq!(dev.kv_evict(7), bytes);
+        assert!(!dev.kv_resident(7));
+        assert_eq!(dev.kv_bytes(), 0);
+        assert_eq!(dev.kv_evictions(), 1);
+        assert_eq!(dev.kv_evict(7), 0, "double evict is a no-op");
+    }
+}

@@ -5,10 +5,15 @@
 //! device-resident weight buffers. Only step inputs (ids/positions/masks) and
 //! step outputs (logits, KV literals) cross the host boundary per step.
 //!
-//! Weights are uploaded once at engine construction. KV caches travel as
-//! host `Literal`s between steps (the executables return a result tuple which
-//! PJRT materializes as one tuple buffer; see DESIGN.md §3.1 and the §Perf
-//! notes on why this is cheap at sim-model scale).
+//! Device state lives in a [`DeviceBank`] (client + weight buffers + device
+//! KV segments): weights are uploaded once per *bank* — shared across every
+//! replica attached to the same bank, not once per engine — and a cached
+//! step whose KV segment is device-resident consumes the device buffers in
+//! place via [`In::DevK`]/[`In::DevV`] ([`Engine::fwd_cached_dev`]), paying
+//! zero KV host→device traffic. KV caches without a device lease still
+//! travel as host `Literal`s between steps and re-upload per call (the
+//! executables return a result tuple which PJRT materializes as one tuple
+//! buffer; see DESIGN.md §3.1 and §"Memory ladder").
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -18,13 +23,16 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtLoadedExecutable, XlaComputation};
 
+use super::device::{DeviceBank, DeviceKv};
 use super::manifest::{Arch, Manifest, ModelEntry, Specials};
 use super::weights::{param_count, WeightBank};
 
 /// Per-request KV cache state: per-layer K/V for a `c`-slot window layout,
-/// held host-side between steps and re-uploaded per call.
+/// held host-side between steps. Re-uploaded per call unless the segment
+/// has a device-resident copy (see `scheduler::kvstore` and
+/// [`Engine::fwd_cached_dev`]), in which case the upload is skipped.
 pub struct KvCache {
     pub s: usize,
     pub c: usize,
@@ -179,11 +187,16 @@ impl BatchedKv {
     }
 }
 
-/// Step input: host array or pre-existing literal (KV caches).
+/// Step input: host array, pre-existing literal (KV caches), or a
+/// device-resident KV segment's K/V buffer consumed in place (no upload).
 pub enum In<'a> {
     I32(&'a [i32]),
     F32(&'a [f32]),
     Lit(&'a Literal),
+    /// K buffer of device segment `id` in this engine's [`DeviceBank`].
+    DevK(u64),
+    /// V buffer of device segment `id` in this engine's [`DeviceBank`].
+    DevV(u64),
 }
 
 /// Execution counters (perf accounting; see `metrics`).
@@ -235,11 +248,14 @@ impl EngineStatsSnapshot {
 }
 
 pub struct Engine {
-    client: PjRtClient,
+    /// Device-resident state: PJRT client, weight buffers, device KV
+    /// segments. Private per engine in `DeviceMode::Copy`; ONE bank shared
+    /// by every replica in `DeviceMode::Shared` (weights upload once,
+    /// device weight bytes flat in replica count). All PJRT calls lock it.
+    dev: Arc<DeviceBank>,
     pub model: ModelEntry,
     pub special: Specials,
     root: PathBuf,
-    weights: Vec<PjRtBuffer>,
     /// Host parameter bank the device buffers were uploaded from. Shared
     /// (`Arc`) across the replicas of a pool in `BankMode::Shared`; the
     /// engine never mutates it. Held for the engine's lifetime so
@@ -263,14 +279,32 @@ impl Engine {
         Engine::load_with_bank(manifest, model_name, &bank)
     }
 
-    /// Load an engine that uploads its device weights from `bank` — the
-    /// replica half of the shared-bank story: host parameters are read
-    /// zero-copy out of the (possibly memory-mapped) bank, and only the
-    /// device-resident upload is per-replica state.
+    /// Load an engine that uploads its device weights from `bank` into a
+    /// PRIVATE [`DeviceBank`] (the `DeviceMode::Copy` arm): host parameters
+    /// are read zero-copy out of the (possibly memory-mapped) bank, and the
+    /// device upload is per-engine state. Pools sharing device buffers
+    /// build the bank once and use [`Engine::load_on`] per replica.
     pub fn load_with_bank(
         manifest: &Manifest,
         model_name: &str,
         bank: &Arc<WeightBank>,
+    ) -> Result<Engine> {
+        let model = manifest.model(model_name)?;
+        let dev = Arc::new(
+            DeviceBank::upload(bank, model.arch.clone())
+                .with_context(|| format!("uploading weights for {model_name}"))?,
+        );
+        Engine::load_on(manifest, model_name, bank, &dev)
+    }
+
+    /// Attach an engine to an EXISTING device bank (the `DeviceMode::Shared`
+    /// arm): no client creation, no weight upload — N replicas over one
+    /// `dev` hold one set of device parameter buffers between them.
+    pub fn load_on(
+        manifest: &Manifest,
+        model_name: &str,
+        bank: &Arc<WeightBank>,
+        dev: &Arc<DeviceBank>,
     ) -> Result<Engine> {
         let model = manifest.model(model_name)?.clone();
         if bank.model() != model_name {
@@ -279,25 +313,13 @@ impl Engine {
                 bank.model()
             ));
         }
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut weights = Vec::with_capacity(bank.params_len());
-        let mut bytes = 0u64;
-        for i in 0..bank.params_len() {
-            let p = bank.param(i);
-            let dims: Vec<usize> =
-                if p.shape.is_empty() { vec![1] } else { p.shape.to_vec() };
-            weights.push(
-                client
-                    .buffer_from_host_buffer(p.data, &dims, None)
-                    .with_context(|| format!("uploading weight {}", p.name))?,
-            );
-            bytes += (p.data.len() * 4) as u64;
-        }
         crate::info!(
-            "engine {}: {} params ({:.1} MB) uploaded (bank {}), {} executables available",
+            "engine {}: {} params ({:.1} MB) device-resident on bank {} ({}), \
+             {} executables available",
             model_name,
             param_count(&model),
-            bytes as f64 / 1e6,
+            dev.weight_bytes() as f64 / 1e6,
+            dev.device_id(),
             if bank.is_mapped() { "mmap" } else { "heap" },
             model.executables.len()
         );
@@ -310,11 +332,10 @@ impl Engine {
             );
         }
         Ok(Engine {
-            client,
+            dev: Arc::clone(dev),
             model,
             special: manifest.special,
             root: manifest.root.clone(),
-            weights,
             bank: Arc::clone(bank),
             execs: RefCell::new(HashMap::new()),
             stats: EngineStats::default(),
@@ -330,6 +351,12 @@ impl Engine {
         Arc::clone(&self.bank)
     }
 
+    /// The device bank holding this engine's client + weight buffers (and
+    /// any device-resident KV segments).
+    pub fn device_bank(&self) -> Arc<DeviceBank> {
+        Arc::clone(&self.dev)
+    }
+
     /// Lazily compile an executable by manifest name.
     fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
         if let Some(e) = self.execs.borrow().get(name) {
@@ -342,6 +369,8 @@ impl Engine {
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self
+            .dev
+            .lock()
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
@@ -380,15 +409,28 @@ impl Engine {
             ));
         }
         let exe = self.executable(name)?;
-        // Host inputs -> device buffers (validated against the manifest spec).
+        // One device critical section for upload + execute: the bank's
+        // mutex is what makes a SHARED DeviceBank sound (the Rc-based CPU
+        // client must never see concurrent calls from sibling replicas).
+        let dev = self.dev.lock();
+        // Host inputs -> device buffers (validated against the manifest
+        // spec); device-resident KV inputs resolve to in-place buffers and
+        // cost zero h2d bytes — that skipped upload is the device rung's
+        // entire win on the cached path.
+        enum Slot {
+            Owned(usize),
+            DevK(u64),
+            DevV(u64),
+        }
         let mut owned: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut slots: Vec<Slot> = Vec::with_capacity(inputs.len());
         let mut h2d = 0u64;
         for (i, input) in inputs.iter().enumerate() {
             let io = &spec.inputs[i];
             let want: usize = io.shape.iter().product::<usize>().max(1);
             let dims: Vec<usize> =
                 if io.shape.is_empty() { vec![1] } else { io.shape.clone() };
-            let buf = match input {
+            match input {
                 In::I32(data) => {
                     if data.len() != want {
                         return Err(anyhow!(
@@ -398,7 +440,8 @@ impl Engine {
                         ));
                     }
                     h2d += (data.len() * 4) as u64;
-                    self.client.buffer_from_host_buffer(data, &dims, None)?
+                    owned.push(dev.client.buffer_from_host_buffer(data, &dims, None)?);
+                    slots.push(Slot::Owned(owned.len() - 1));
                 }
                 In::F32(data) => {
                     if data.len() != want {
@@ -409,17 +452,43 @@ impl Engine {
                         ));
                     }
                     h2d += (data.len() * 4) as u64;
-                    self.client.buffer_from_host_buffer(data, &dims, None)?
+                    owned.push(dev.client.buffer_from_host_buffer(data, &dims, None)?);
+                    slots.push(Slot::Owned(owned.len() - 1));
                 }
                 In::Lit(lit) => {
                     h2d += lit.size_bytes() as u64;
-                    self.client.buffer_from_host_literal(None, lit)?
+                    owned.push(dev.client.buffer_from_host_literal(None, lit)?);
+                    slots.push(Slot::Owned(owned.len() - 1));
                 }
-            };
-            owned.push(buf);
+                In::DevK(seg) | In::DevV(seg) => {
+                    let d = dev.kv.get(seg).ok_or_else(|| {
+                        anyhow!("{name}: input '{}' references non-resident device \
+                                 segment {seg}", io.name)
+                    })?;
+                    if d.elems != want {
+                        return Err(anyhow!(
+                            "{name}: device segment {seg} has {} elems, input '{}' \
+                             expects {want}",
+                            d.elems,
+                            io.name
+                        ));
+                    }
+                    slots.push(match input {
+                        In::DevK(s) => Slot::DevK(*s),
+                        _ => Slot::DevV(*seg),
+                    });
+                }
+            }
         }
-        let mut args: Vec<&PjRtBuffer> = owned.iter().collect();
-        args.extend(self.weights.iter());
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(slots.len());
+        for slot in &slots {
+            args.push(match slot {
+                Slot::Owned(i) => &owned[*i],
+                Slot::DevK(seg) => &dev.kv[seg].k,
+                Slot::DevV(seg) => &dev.kv[seg].v,
+            });
+        }
+        args.extend(dev.weights.iter());
 
         let t0 = Instant::now();
         let result = exe.execute_b(&args)?;
@@ -521,6 +590,43 @@ impl Engine {
         let logits = out.pop().unwrap().to_vec::<f32>()?;
         Ok((logits, KvCache { s, c, flat: false, k, v }))
     }
+
+    /// Cached step consuming a DEVICE-resident segment's K/V buffers in
+    /// place — segment `seg` must have been uploaded to this engine's
+    /// [`DeviceBank`] (the KV store's device rung does this at checkout).
+    /// No KV bytes cross the host boundary; everything else is identical
+    /// to [`Engine::fwd_cached`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn fwd_cached_dev(
+        &self,
+        s: usize,
+        c: usize,
+        r: usize,
+        ids_r: &[i32],
+        pos_r: &[i32],
+        slot_idx: &[i32],
+        rvalid: &[f32],
+        cvalid: &[f32],
+        seg: u64,
+    ) -> Result<(Vec<f32>, KvCache)> {
+        let name = ModelEntry::fwd_cached_name(s, c, r);
+        let mut out = self.run(
+            &name,
+            &[
+                In::I32(ids_r),
+                In::I32(pos_r),
+                In::I32(slot_idx),
+                In::F32(rvalid),
+                In::F32(cvalid),
+                In::DevK(seg),
+                In::DevV(seg),
+            ],
+        )?;
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, KvCache { s, c, flat: false, k, v }))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -532,10 +638,13 @@ impl Engine {
 /// threads can share one engine.
 ///
 /// # Safety
-/// Sound because (a) every `Rc` clone and PJRT call happens while holding the
-/// mutex, so refcount updates are serialized; (b) the TFRT CPU PJRT client is
-/// itself thread-safe; (c) `Literal`s returned to callers are plain owned
-/// host memory with no aliasing back into the engine.
+/// Sound because (a) every `Rc` clone and PJRT call happens while holding a
+/// mutex — the cell's for engine-local state (`execs`, `stats`), the shared
+/// [`DeviceBank`]'s for client/buffer access, so refcount updates are
+/// serialized even when sibling cells share one device bank; (b) the TFRT
+/// CPU PJRT client is itself thread-safe; (c) `Literal`s returned to
+/// callers are plain owned host memory with no aliasing back into the
+/// engine.
 pub struct EngineCell {
     inner: Mutex<Engine>,
 }

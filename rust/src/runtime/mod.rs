@@ -3,12 +3,14 @@
 //! pool behind the multi-worker scheduler (DESIGN.md §"Serving at scale").
 
 pub mod buckets;
+pub mod device;
 pub mod engine;
 pub mod kvcodec;
 pub mod manifest;
 pub mod pool;
 pub mod weights;
 
+pub use device::{DeviceBank, DeviceKv, DeviceMode, MockDevice};
 pub use engine::{BatchedKv, Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
 pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};
 pub use pool::{EnginePool, ReplicaStats};

@@ -2,11 +2,16 @@
 //!
 //! PR 1's scheduler made requests fair but still funneled every forward pass
 //! through one [`EngineCell`] mutex — a single-core server no matter how many
-//! sessions were in flight. [`EnginePool`] holds N independent replicas
-//! (each its own `PjRtClient` + weight upload, see [`EnginePool::load`]) and
+//! sessions were in flight. [`EnginePool`] holds N independent replicas and
 //! implements the step interface by checking out an **idle** replica per
 //! call: K scheduler driver workers step K sessions truly concurrently, one
-//! per replica, and block only when all replicas are busy.
+//! per replica, and block only when all replicas are busy. Where a replica's
+//! device state lives depends on [`DeviceMode`] (see
+//! [`EnginePool::load_with_modes`]): under the default `shared` every
+//! replica runs over ONE [`DeviceBank`] (one `PjRtClient`, one set of device
+//! weight buffers, uploaded once); under `copy` each replica gets its own
+//! client + private weight upload (the pre-bank behavior, kept as the A/B
+//! arm).
 //!
 //! The pool is deliberately generic over the replica type (`dyn StepExec`):
 //! production pools hold [`EngineCell`]s, tests hold `MockExec`s, and the
@@ -14,14 +19,15 @@
 //! is snapshotted from replica 0 at construction so metadata queries never
 //! contend with in-flight steps.
 //!
-//! Host weights are NOT duplicated per replica: under the default
-//! [`BankMode::Shared`] all replicas upload their device copies from ONE
-//! `Arc`-shared [`WeightBank`] (memory-mapped when possible), so host
-//! weight residency stays flat as `--replicas` grows and replica count is
-//! bounded by compute, not memory. `BankMode::Copy` restores the
-//! one-bank-per-replica behavior for A/B measurement; either way the
-//! per-replica *device* upload is the only duplicated weight state (see
-//! DESIGN.md §"Weight bank").
+//! Weights are NOT duplicated per replica on either side of the transfer:
+//! under the default [`BankMode::Shared`] all replicas read from ONE
+//! `Arc`-shared host [`WeightBank`] (memory-mapped when possible), and
+//! under the default [`DeviceMode::Shared`] they also attach to ONE device
+//! bank — so *both* host and device weight residency stay flat as
+//! `--replicas` grows and replica count is bounded by compute, not memory.
+//! `BankMode::Copy` / `DeviceMode::Copy` restore the per-replica behavior
+//! on each rung independently for A/B measurement (see DESIGN.md §"Memory
+//! ladder").
 //!
 //! KV caches take the opposite route from weights on the upload path: a
 //! checked-out replica receives its lane's KV as a *borrowed* [`KvCache`]
@@ -40,6 +46,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::device::{DeviceBank, DeviceKv, DeviceMode};
 use super::engine::{Engine, EngineCell, EngineStatsSnapshot};
 use super::manifest::{Arch, Manifest, Specials};
 use super::weights::{distinct_banks, host_bytes_of, BankMode, WeightBank};
@@ -75,11 +82,23 @@ pub struct EnginePool {
     /// Host bytes resident across all *distinct* banks (Arc identity):
     /// flat under `shared`, linear in N under `copy`.
     weight_bytes_host: usize,
-    /// Device-upload bytes each replica pays (== one bank's size).
+    /// One bank's size — the device upload a replica pays under
+    /// `DeviceMode::Copy`; a shared-device pool pays it once total (see
+    /// `weight_bytes_device`).
     weight_bytes_per_replica: usize,
     /// `"shared"` (one bank for all replicas), `"copy"` (a bank per
     /// replica), or `"none"` (bank-less replicas).
     bank_mode: &'static str,
+    // -- device accounting (snapshotted at construction) ----------------------
+    /// Device weight bytes across all *distinct* devices (by `device_id`):
+    /// flat under `DeviceMode::Shared`, linear in N under `Copy`.
+    weight_bytes_device: usize,
+    /// `"shared"` | `"copy"` | `"none"` — see [`DeviceMode`].
+    device_mode: &'static str,
+    /// The one device every replica runs on, when (and only when) the pool
+    /// is fully shared-device — the scheduler attaches this to the KV
+    /// store so segments can be made device-resident.
+    shared_device: Option<Arc<dyn DeviceKv>>,
     // -- metadata snapshot (replica 0 at construction) ------------------------
     arch: Arch,
     special: Specials,
@@ -108,26 +127,42 @@ impl EnginePool {
     /// aggregation is unavailable on this path — use [`EnginePool::load`]
     /// for real engines.
     pub fn new(replicas: Vec<Arc<dyn StepExec + Send + Sync>>) -> Result<Arc<EnginePool>> {
-        EnginePool::build(replicas, Vec::new(), None)
+        EnginePool::build(replicas, Vec::new(), None, None)
     }
 
-    /// Load `n` engine replicas of one model under the default
-    /// [`BankMode::Shared`]: the host bank is loaded ONCE (mmap when
-    /// possible) and every replica uploads its device copy from it.
+    /// Load `n` engine replicas of one model under the defaults
+    /// ([`BankMode::Shared`] + [`DeviceMode::Shared`]): the host bank is
+    /// loaded ONCE (mmap when possible) and its device copy is uploaded
+    /// ONCE — every replica attaches to the same device buffers.
     pub fn load(manifest: &Manifest, model_name: &str, n: usize) -> Result<Arc<EnginePool>> {
-        EnginePool::load_with_mode(manifest, model_name, n, BankMode::Shared)
+        EnginePool::load_with_modes(manifest, model_name, n, BankMode::Shared,
+                                    DeviceMode::Shared)
     }
 
-    /// Load `n` engine replicas with an explicit weight-bank mode: each
-    /// replica always gets its own PJRT client and device-resident weight
-    /// copy; `mode` decides whether the *host* bank behind those uploads is
-    /// shared (flat memory) or per-replica (the pre-bank behavior, kept for
-    /// A/B measurement).
+    /// Load with an explicit weight-bank mode and the *per-replica-client*
+    /// device arm ([`DeviceMode::Copy`]) — the pre-device-bank behavior,
+    /// kept for callers that want replica-independent PJRT dispatch.
     pub fn load_with_mode(
         manifest: &Manifest,
         model_name: &str,
         n: usize,
         mode: BankMode,
+    ) -> Result<Arc<EnginePool>> {
+        EnginePool::load_with_modes(manifest, model_name, n, mode, DeviceMode::Copy)
+    }
+
+    /// Load `n` engine replicas with explicit residency modes on both rungs:
+    /// `mode` decides whether the *host* bank is shared (flat host memory)
+    /// or per-replica; `dmode` decides whether the *device* side is one
+    /// shared [`DeviceBank`] (one client, weights uploaded once, flat device
+    /// memory — PJRT dispatch serializes on the bank) or one client +
+    /// upload per replica (linear device memory, independent dispatch).
+    pub fn load_with_modes(
+        manifest: &Manifest,
+        model_name: &str,
+        n: usize,
+        mode: BankMode,
+        dmode: DeviceMode,
     ) -> Result<Arc<EnginePool>> {
         let n = n.max(1);
         let mut cells = Vec::with_capacity(n);
@@ -145,31 +180,52 @@ impl EnginePool {
             }
             BankMode::Copy => None,
         };
+        // Built lazily from the first replica's host bank so the
+        // `BankMode::Copy` + `DeviceMode::Shared` combination still
+        // measures per-replica host banks while uploading device weights
+        // exactly once.
+        let mut shared_dev: Option<Arc<DeviceBank>> = None;
         for i in 0..n {
             crate::info!(
-                "engine pool: loading replica {}/{n} of {model_name} ({})",
+                "engine pool: loading replica {}/{n} of {model_name} (bank {}, device {})",
                 i + 1,
-                mode.name()
+                mode.name(),
+                dmode.name()
             );
-            let engine = match &shared_bank {
-                Some(bank) => Engine::load_with_bank(manifest, model_name, bank)?,
+            let bank = match &shared_bank {
+                Some(bank) => Arc::clone(bank),
                 // copy mode decodes a PRIVATE heap bank per replica: a
                 // mapped "copy" of the same artifact file would share
                 // page-cache pages with its siblings and the copy/shared
                 // memory A/B would measure nothing
-                None => {
-                    let bank = Arc::new(WeightBank::load_heap(
-                        &manifest.root,
-                        manifest.model(model_name)?,
-                    )?);
-                    Engine::load_with_bank(manifest, model_name, &bank)?
+                None => Arc::new(WeightBank::load_heap(
+                    &manifest.root,
+                    manifest.model(model_name)?,
+                )?),
+            };
+            let engine = match dmode {
+                DeviceMode::Shared => {
+                    if shared_dev.is_none() {
+                        let arch = manifest.model(model_name)?.arch.clone();
+                        let dev = Arc::new(DeviceBank::upload(&bank, arch)?);
+                        crate::info!(
+                            "engine pool: shared device bank {} for {model_name}: \
+                             {:.1} MB uploaded once for {n} replica(s)",
+                            dev.device_id(),
+                            dev.weight_bytes() as f64 / 1e6
+                        );
+                        shared_dev = Some(dev);
+                    }
+                    let dev = shared_dev.as_ref().expect("shared device built above");
+                    Engine::load_on(manifest, model_name, &bank, dev)?
                 }
+                DeviceMode::Copy => Engine::load_with_bank(manifest, model_name, &bank)?,
             };
             let cell = EngineCell::new(engine);
             replicas.push(Arc::clone(&cell) as Arc<dyn StepExec + Send + Sync>);
             cells.push(cell);
         }
-        EnginePool::build(replicas, cells, Some(mode))
+        EnginePool::build(replicas, cells, Some(mode), Some(dmode))
     }
 
     /// `mode`: the operator-requested bank mode, when one was requested —
@@ -181,6 +237,7 @@ impl EnginePool {
         replicas: Vec<Arc<dyn StepExec + Send + Sync>>,
         cells: Vec<Arc<EngineCell>>,
         mode: Option<BankMode>,
+        dmode: Option<DeviceMode>,
     ) -> Result<Arc<EnginePool>> {
         let first = replicas
             .first()
@@ -211,6 +268,32 @@ impl EnginePool {
         };
         let weight_bytes_host = host_bytes_of(&banks);
         let weight_bytes_per_replica = banks.first().map_or(0, |b| b.total_bytes());
+        // device accounting mirrors the host-bank story one rung down:
+        // distinct devices (by id) separate shared pools (1 device, flat
+        // weight bytes) from copy pools (N devices, linear)
+        let devices: Vec<Arc<dyn DeviceKv>> =
+            replicas.iter().filter_map(|r| r.device()).collect();
+        let mut distinct_devices: Vec<&Arc<dyn DeviceKv>> = Vec::new();
+        for d in &devices {
+            if !distinct_devices.iter().any(|e| e.device_id() == d.device_id()) {
+                distinct_devices.push(d);
+            }
+        }
+        let device_mode = if devices.is_empty() {
+            "none"
+        } else {
+            match dmode {
+                Some(m) => m.name(),
+                None if distinct_devices.len() == 1 => "shared",
+                None => "copy",
+            }
+        };
+        let weight_bytes_device: usize =
+            distinct_devices.iter().map(|d| d.weight_bytes()).sum();
+        // a store-wide device lease is only sound when EVERY replica a step
+        // can land on sits on the same device
+        let shared_device = (devices.len() == n && distinct_devices.len() == 1)
+            .then(|| Arc::clone(&devices[0]));
         Ok(Arc::new(EnginePool {
             replicas,
             cells,
@@ -223,6 +306,9 @@ impl EnginePool {
             weight_bytes_host,
             weight_bytes_per_replica,
             bank_mode,
+            weight_bytes_device,
+            device_mode,
+            shared_device,
             arch,
             special,
             seqs,
@@ -295,6 +381,26 @@ impl EnginePool {
     /// Replica-0 host bank, when the replicas are bank-backed.
     pub fn weight_bank(&self) -> Option<Arc<WeightBank>> {
         self.bank.clone()
+    }
+
+    // -- device gauges (construction-time snapshots; never contend) -----------
+
+    /// Device weight bytes across all distinct devices: flat in the replica
+    /// count under `shared`, linear under `copy` — the
+    /// `weight_bytes_device` gauge on `GET /metrics`.
+    pub fn weight_bytes_device(&self) -> usize {
+        self.weight_bytes_device
+    }
+
+    /// `"shared"` | `"copy"` | `"none"` — see [`DeviceMode`].
+    pub fn device_mode(&self) -> &'static str {
+        self.device_mode
+    }
+
+    /// The single device shared by every replica, when the pool is fully
+    /// shared-device (what the scheduler attaches to the KV store).
+    pub fn shared_device(&self) -> Option<Arc<dyn DeviceKv>> {
+        self.shared_device.clone()
     }
 
     /// Steps executed per replica (index-aligned with replica ids).

@@ -9,9 +9,12 @@
 //! [`WeightBank`] fixes the host side of that: parameters are loaded
 //! **once** — memory-mapped straight from the artifact file when the
 //! platform allows it, falling back to a single heap load — and shared
-//! read-only across replicas via `Arc`. Per-replica *device* uploads remain
-//! the only duplicated state (each replica owns a `PjRtClient`; see
-//! DESIGN.md §"Weight bank").
+//! read-only across replicas via `Arc`. The *device* side has the same
+//! story one layer down: under `DeviceMode::Shared` every replica attaches
+//! to one [`DeviceBank`](super::device::DeviceBank) (one `PjRtClient`, one
+//! weight upload), and only `DeviceMode::Copy` keeps the historical
+//! one-client-per-replica duplication for A/B measurement (see DESIGN.md
+//! §"Memory ladder").
 //!
 //! Sharing invariants: a bank is immutable after construction (no interior
 //! mutability anywhere, so [`WeightBank::param`] hands out plain `&[f32]`

@@ -14,17 +14,25 @@
 //!   recomputing it; segments are immutable, so "copy-on-write" degenerates
 //!   to "new segment on next refresh" and hits are byte-identical by
 //!   construction.
-//! * **Tiered residency.** Hot segments live in host memory under the
-//!   scheduler's soft byte limit; when the hot tier overflows, the
-//!   least-recently-touched *unpinned* segment is spilled to a disk tier
-//!   (`runtime/kvcodec` `WDKV` blobs) and transparently rehydrated on the
-//!   next [`KvHandle::checkout`]. Checkouts pin their segment, so a
-//!   mid-step session's KV is never spilled out from under the forward.
+//! * **Tiered residency.** Three rungs: {device, host, disk}. Hot segments
+//!   live in host memory under the scheduler's soft byte limit; when the
+//!   hot tier overflows, the least-recently-touched *unpinned* segment is
+//!   spilled to a disk tier (`runtime/kvcodec` `WDKV` blobs) and
+//!   transparently rehydrated on the next [`KvHandle::checkout`]. When a
+//!   [`DeviceKv`] is attached (shared-device pools), checkouts additionally
+//!   promote the segment onto the device: the first checkout pays the
+//!   upload, every subsequent one *skips it* (`kv_upload_skips`) and the
+//!   forward consumes the device buffers in place. Device pressure demotes
+//!   LRU unpinned segments device→host (free — the host mirror is always
+//!   kept); host pressure spills host→disk, evicting any device copy first
+//!   so a segment is never device- and disk-resident at once. Checkouts pin
+//!   their segment, keeping mid-step KV out of BOTH demotion paths.
 //!
 //! Byte parity: spill → rehydrate round-trips the exact f32 bit patterns,
-//! and a prefix hit returns the same logits/KV bytes the session would have
-//! computed itself, so every PR 3/4 parity invariant (lane merge/split,
-//! promote/demote, solo-vs-batched) survives verbatim.
+//! the device copy is uploaded from the same host mirror every checkout
+//! materializes, and a prefix hit returns the same logits/KV bytes the
+//! session would have computed itself, so every PR 3/4 parity invariant
+//! (lane merge/split, promote/demote, solo-vs-batched) survives verbatim.
 
 use std::collections::HashMap;
 use std::ops::Deref;
@@ -35,7 +43,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::{kvcodec, KvCache};
+use crate::runtime::{kvcodec, DeviceKv, KvCache};
 use crate::trace::TraceRecorder;
 
 /// Distinguishes spill directories across stores in one process (tests spin
@@ -78,6 +86,9 @@ pub struct KvStoreConfig {
     /// Where spilled `WDKV` blobs land. `None` → a per-store directory under
     /// the system temp dir, created lazily and removed when the store drops.
     pub spill_dir: Option<PathBuf>,
+    /// Device-rung soft limit in bytes; 0 means uncapped (the rung itself
+    /// is enabled by [`KvStore::attach_device`], not by this limit).
+    pub device_soft_bytes: usize,
 }
 
 /// Host-resident payload of a hot segment. Plain `Vec<f32>`s (not XLA
@@ -122,13 +133,17 @@ struct Segment {
     residency: Residency,
     /// Outstanding handles + checkouts referencing this segment.
     refs: usize,
-    /// Outstanding checkouts; pinned segments are never spill victims.
+    /// Outstanding checkouts; pinned segments are never spill OR device
+    /// demotion victims.
     pins: usize,
     bytes: usize,
     s: usize,
     c: usize,
     /// Logical LRU clock value of the last touch (insert/checkout/hit).
     last_touch: u64,
+    /// Device-resident copy exists (implies `Hot` — spilling evicts the
+    /// device copy first, so device+disk never coexist).
+    device: bool,
 }
 
 struct PrefixEntry {
@@ -146,6 +161,9 @@ struct StoreInner {
     clock: u64,
     hot_bytes: usize,
     spilled_bytes: usize,
+    /// Bytes with a device-resident copy (a subset of `hot_bytes` — the
+    /// device rung mirrors, it does not replace, the host copy).
+    device_bytes: usize,
     /// Lazily-created spill directory (once first spill happens).
     spill_dir: Option<PathBuf>,
     /// True when we created the directory ourselves and should remove it.
@@ -171,6 +189,14 @@ pub struct KvStore {
     /// Bytes freed from the hot tier by spills — feeds the scheduler's
     /// trailing free-rate for 429 `retry_after_ms` hints.
     spill_freed_bytes: AtomicUsize,
+    /// Checkouts that found their segment already device-resident and
+    /// skipped the per-step KV upload entirely — the device rung's win.
+    upload_skips: AtomicU64,
+    device_promotions: AtomicU64,
+    device_demotions: AtomicU64,
+    /// Device rung backing (shared-device pools attach theirs; absent →
+    /// two-rung behavior, byte-for-byte the PR 7 store).
+    device: OnceLock<Arc<dyn DeviceKv>>,
     trace: OnceLock<Arc<TraceRecorder>>,
 }
 
@@ -199,6 +225,10 @@ impl KvStore {
             prefix_misses: AtomicU64::new(0),
             hot_peak: AtomicUsize::new(0),
             spill_freed_bytes: AtomicUsize::new(0),
+            upload_skips: AtomicU64::new(0),
+            device_promotions: AtomicU64::new(0),
+            device_demotions: AtomicU64::new(0),
+            device: OnceLock::new(),
             trace: OnceLock::new(),
         })
     }
@@ -212,6 +242,14 @@ impl KvStore {
     /// Wire the scheduler's span recorder in (idempotent; first wins).
     pub fn attach_trace(&self, tr: Arc<TraceRecorder>) {
         let _ = self.trace.set(tr);
+    }
+
+    /// Enable the device rung: checkouts promote onto `dev` and hand out
+    /// leases executors can consume in place. Idempotent; first wins.
+    /// Typically wired from the executor's shared device (copy-mode pools
+    /// expose none, so they keep the two-rung behavior).
+    pub fn attach_device(&self, dev: Arc<dyn DeviceKv>) {
+        let _ = self.device.set(dev);
     }
 
     fn arc(&self) -> Arc<KvStore> {
@@ -242,6 +280,7 @@ impl KvStore {
                 s,
                 c,
                 last_touch: touch,
+                device: false,
             },
         );
         inner.hot_bytes += bytes;
@@ -275,8 +314,47 @@ impl KvStore {
         }
     }
 
+    /// Demote `id`'s device copy (free: the host mirror stays). No-op for
+    /// segments without one.
+    fn demote_device(&self, inner: &mut StoreInner, id: u64) {
+        let Some(dev) = self.device.get() else { return };
+        let Some(seg) = inner.segments.get_mut(&id) else { return };
+        if !seg.device {
+            return;
+        }
+        dev.kv_evict(id);
+        seg.device = false;
+        inner.device_bytes -= seg.bytes;
+        self.device_demotions.fetch_add(1, Ordering::Relaxed);
+        if let Some(tr) = self.trace.get() {
+            tr.device_demote(id, Instant::now());
+        }
+    }
+
+    /// Demote least-recently-touched unpinned device-resident segments
+    /// until the device rung fits its soft limit (0 = uncapped).
+    fn enforce_device(&self, inner: &mut StoreInner) {
+        let cap = self.cfg.device_soft_bytes;
+        if cap == 0 || self.device.get().is_none() {
+            return;
+        }
+        while inner.device_bytes > cap {
+            let victim = inner
+                .segments
+                .iter()
+                .filter(|(_, seg)| seg.pins == 0 && seg.device)
+                .min_by_key(|(_, seg)| seg.last_touch)
+                .map(|(id, _)| *id);
+            let Some(id) = victim else { break };
+            self.demote_device(inner, id);
+        }
+    }
+
     fn spill_one(&self, inner: &mut StoreInner, id: u64) -> Result<()> {
         let dir = self.ensure_spill_dir(inner)?;
+        // Strict ladder: a segment leaving host memory first leaves the
+        // device, so device + disk residency never coexist.
+        self.demote_device(inner, id);
         let seg = inner.segments.get_mut(&id).expect("spill victim exists");
         let Residency::Hot(data) = &seg.residency else {
             return Ok(());
@@ -373,8 +451,48 @@ impl KvStore {
                 kv
             }
         };
+        // Device rung: already-resident segments skip the per-step upload
+        // (the lease lets the executor consume device buffers in place);
+        // first-time checkouts pay one promotion upload. Upload failures
+        // degrade to the host path — slower, never wrong.
+        let mut lease: Option<Arc<dyn DeviceKv>> = None;
+        if let Some(dev) = self.device.get() {
+            let already = inner.segments.get(&id).map(|s| s.device).unwrap_or(false);
+            if already {
+                self.upload_skips.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = self.trace.get() {
+                    tr.upload_skip(id, Instant::now());
+                }
+                lease = Some(Arc::clone(dev));
+            } else {
+                let t0 = Instant::now();
+                let uploaded = match inner.segments.get(&id).map(|s| &s.residency) {
+                    Some(Residency::Hot(data)) => dev
+                        .kv_upload(id, data.s, data.c, &data.k, &data.v)
+                        .map_err(|e| {
+                            eprintln!("kvstore: device promotion of segment {id} \
+                                       failed (staying host-resident): {e:#}");
+                        })
+                        .is_ok(),
+                    _ => false,
+                };
+                if uploaded {
+                    let seg = inner.segments.get_mut(&id).expect("promoted segment exists");
+                    let bytes = seg.bytes;
+                    seg.device = true;
+                    inner.device_bytes += bytes;
+                    self.device_promotions.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tr) = self.trace.get() {
+                        tr.device_promote(id, t0, Instant::now());
+                    }
+                    lease = Some(Arc::clone(dev));
+                    // The pinned fresh arrival never demotes itself.
+                    self.enforce_device(&mut inner);
+                }
+            }
+        }
         drop(inner);
-        Ok(KvCheckout { kv, id, store: self.arc() })
+        Ok(KvCheckout { kv, id, store: self.arc(), device: lease })
     }
 
     fn unpin(&self, id: u64) {
@@ -384,7 +502,9 @@ impl KvStore {
             seg.pins = seg.pins.saturating_sub(1);
         }
         self.release_locked(&mut inner, id);
-        // A just-unpinned segment may now be the pressure relief valve.
+        // A just-unpinned segment may now be the pressure relief valve —
+        // on either rung.
+        self.enforce_device(&mut inner);
         self.enforce_soft(&mut inner);
     }
 
@@ -411,6 +531,14 @@ impl KvStore {
         };
         if drop_seg {
             let seg = inner.segments.remove(&id).unwrap();
+            // Dying segments vacate the device rung too (plain eviction,
+            // not a demotion: nothing is being kept).
+            if seg.device {
+                if let Some(dev) = self.device.get() {
+                    dev.kv_evict(id);
+                }
+                inner.device_bytes -= seg.bytes;
+            }
             match seg.residency {
                 Residency::Hot(_) => inner.hot_bytes -= seg.bytes,
                 Residency::Spilled(path) => {
@@ -535,6 +663,33 @@ impl KvStore {
         self.cfg.soft_bytes
     }
 
+    /// Bytes of KV currently resident on the device rung (always a subset
+    /// of `hot_bytes` — device residency implies a host mirror).
+    pub fn device_bytes(&self) -> usize {
+        self.inner.lock().unwrap().device_bytes
+    }
+
+    pub fn upload_skips(&self) -> u64 {
+        self.upload_skips.load(Ordering::Relaxed)
+    }
+
+    pub fn device_promotions(&self) -> u64 {
+        self.device_promotions.load(Ordering::Relaxed)
+    }
+
+    pub fn device_demotions(&self) -> u64 {
+        self.device_demotions.load(Ordering::Relaxed)
+    }
+
+    pub fn device_soft_bytes(&self) -> usize {
+        self.cfg.device_soft_bytes
+    }
+
+    /// Whether a device hot tier is attached at all.
+    pub fn device_attached(&self) -> bool {
+        self.device.get().is_some()
+    }
+
     /// The spill directory, if one was ever materialized.
     pub fn spill_dir(&self) -> Option<PathBuf> {
         self.inner.lock().unwrap().spill_dir.clone()
@@ -632,6 +787,11 @@ pub struct KvCheckout {
     kv: KvCache,
     id: u64,
     store: Arc<KvStore>,
+    /// Device lease: `Some(dev)` means the segment was device-resident on
+    /// `dev` at checkout time and stays resident while this pin is held —
+    /// an executor on the same device may consume device buffers in place
+    /// instead of re-uploading `kv`.
+    device: Option<Arc<dyn DeviceKv>>,
 }
 
 impl Deref for KvCheckout {
@@ -639,6 +799,21 @@ impl Deref for KvCheckout {
 
     fn deref(&self) -> &KvCache {
         &self.kv
+    }
+}
+
+impl KvCheckout {
+    /// Segment id — the key an executor passes to its device-resident
+    /// forward path.
+    pub fn segment(&self) -> u64 {
+        self.id
+    }
+
+    /// The device lease, if the segment is device-resident for the life of
+    /// this pin. Compare `device_id()` with the executor's own device
+    /// before trusting it.
+    pub fn device(&self) -> Option<&Arc<dyn DeviceKv>> {
+        self.device.as_ref()
     }
 }
 
@@ -713,6 +888,7 @@ mod tests {
         let store = KvStore::new(KvStoreConfig {
             soft_bytes: bytes_each + bytes_each / 2,
             spill_dir: Some(dir.clone()),
+            ..Default::default()
         });
         let h1 = store.insert(&one).unwrap();
         let h2 = store.insert(&cache(64, 16, 4.0)).unwrap();
@@ -740,8 +916,11 @@ mod tests {
     fn pinned_segments_are_never_spill_victims() {
         let one = cache(64, 16, 5.0);
         let bytes_each = 4 * (one.k_host().unwrap().len() + one.v_host().unwrap().len());
-        let store =
-            KvStore::new(KvStoreConfig { soft_bytes: bytes_each, spill_dir: None });
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: bytes_each,
+            spill_dir: None,
+            ..Default::default()
+        });
         let h1 = store.insert(&one).unwrap();
         let co = h1.checkout().unwrap(); // pin h1
         // Inserting h2 overflows the hot tier, but h1 is pinned and h2 is

@@ -110,6 +110,12 @@ pub struct SchedulerConfig {
     /// (unpinned, least-recently-touched) segments to the disk tier; they
     /// rehydrate transparently at their next checkout. 0 = never spill.
     pub kv_soft_bytes: usize,
+    /// Device-rung soft limit: above this, the [`KvStore`] demotes cold
+    /// device-resident segments back to host-only (their host mirror stays
+    /// hot, so demotion is free). 0 = uncapped. The rung only exists at all
+    /// when the executor exposes a shared device (see
+    /// `StepExec::device`).
+    pub kv_device_soft_bytes: usize,
     /// Where spilled segments land; `None` = a per-store temp directory,
     /// removed when the scheduler drops.
     pub kv_spill_dir: Option<PathBuf>,
@@ -150,6 +156,7 @@ impl Default for SchedulerConfig {
             policy: Policy::RoundRobin,
             kv_budget_bytes: 0,
             kv_soft_bytes: 0,
+            kv_device_soft_bytes: 0,
             kv_spill_dir: None,
             prefix_share: false,
             max_sessions: 64,
@@ -363,10 +370,18 @@ impl Scheduler {
         };
         let store = KvStore::new(KvStoreConfig {
             soft_bytes: cfg.kv_soft_bytes,
+            device_soft_bytes: cfg.kv_device_soft_bytes,
             spill_dir: cfg.kv_spill_dir.clone(),
         });
         if let Some(tr) = &trace {
             store.attach_trace(Arc::clone(tr));
+        }
+        // Device hot tier: when the executor runs on one shared device,
+        // the store can keep segments resident there and checkouts skip
+        // the per-step re-upload. Copy-mode pools (and plain mocks) expose
+        // no device, leaving the store host-only.
+        if let Some(dev) = exec.device() {
+            store.attach_device(dev);
         }
         Arc::new(Scheduler {
             exec,
@@ -1123,6 +1138,12 @@ impl Scheduler {
         m.kv_spilled_bytes.store(self.store.spilled_bytes() as u64, Ordering::Relaxed);
         m.kv_spills.store(self.store.spills(), Ordering::Relaxed);
         m.kv_rehydrates.store(self.store.rehydrates(), Ordering::Relaxed);
+        m.kv_device_bytes.store(self.store.device_bytes() as u64, Ordering::Relaxed);
+        m.kv_upload_skips.store(self.store.upload_skips(), Ordering::Relaxed);
+        m.kv_device_promotions
+            .store(self.store.device_promotions(), Ordering::Relaxed);
+        m.kv_device_demotions
+            .store(self.store.device_demotions(), Ordering::Relaxed);
         m.kv_prefix_hits.store(self.store.prefix_hits(), Ordering::Relaxed);
         m.kv_prefix_misses.store(self.store.prefix_misses(), Ordering::Relaxed);
         m.sched_steps_total

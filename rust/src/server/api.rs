@@ -272,6 +272,13 @@ fn metrics_json(st: &AppState) -> Json {
             "weight_bytes_per_replica".into(),
             Json::num(pool.weight_bytes_per_replica() as f64),
         );
+        // device-bank residency gauges (ISSUE 8): the same flat-vs-linear
+        // story one rung down — device weight bytes across distinct devices
+        fields.insert("device_mode".into(), Json::str(pool.device_mode()));
+        fields.insert(
+            "weight_bytes_device".into(),
+            Json::num(pool.weight_bytes_device() as f64),
+        );
         // aggregate PJRT counters across replicas (absent on mock pools)
         if let Some(agg) = pool.engine_stats() {
             fields.insert(
@@ -318,10 +325,16 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("bank_mode", Json::str(
                     st.pool.as_ref().map_or("none", |p| p.bank_mode()),
                 )),
+                ("device_mode", Json::str(
+                    st.pool.as_ref().map_or("none", |p| p.device_mode()),
+                )),
                 ("prefix_share", Json::Bool(st.scheduler.prefix_share_enabled())),
                 ("kv_tiers", {
                     let store = st.scheduler.kv_store();
                     Json::obj(vec![
+                        ("device_attached", Json::Bool(store.device_attached())),
+                        ("device_soft_bytes", Json::num(store.device_soft_bytes() as f64)),
+                        ("device_bytes", Json::num(store.device_bytes() as f64)),
                         ("hot_soft_bytes", Json::num(store.soft_bytes() as f64)),
                         ("hot_bytes", Json::num(store.hot_bytes() as f64)),
                         ("spilled_bytes", Json::num(store.spilled_bytes() as f64)),
@@ -582,6 +595,10 @@ mod tests {
             "kv_rehydrates",
             "kv_prefix_hits",
             "kv_prefix_misses",
+            "kv_device_bytes",
+            "kv_upload_skips",
+            "kv_device_promotions",
+            "kv_device_demotions",
             "kv_accounting_anomalies",
         ] {
             assert_eq!(mj.get(k).as_i64(), Some(0), "gauge '{k}' missing or non-zero");
@@ -592,6 +609,9 @@ mod tests {
         assert_eq!(ij.get("prefix_share").as_bool(), Some(false));
         assert_eq!(ij.get_path(&["kv_tiers", "hot_soft_bytes"]).as_i64(), Some(0));
         assert_eq!(ij.get_path(&["kv_tiers", "segments"]).as_i64(), Some(0));
+        // a plain mock executor exposes no device: the rung reports absent
+        assert_eq!(ij.get_path(&["kv_tiers", "device_attached"]).as_bool(), Some(false));
+        assert_eq!(ij.get_path(&["kv_tiers", "device_bytes"]).as_i64(), Some(0));
         st.scheduler.shutdown();
     }
 
@@ -707,6 +727,8 @@ mod tests {
         let ij = parse(std::str::from_utf8(&i.body).unwrap()).unwrap();
         assert_eq!(ij.get("replicas").as_usize(), Some(2));
         assert_eq!(ij.get("bank_mode").as_str(), Some("shared"));
+        // device-less mock replicas: the pool reports no device rung
+        assert_eq!(ij.get("device_mode").as_str(), Some("none"));
 
         let m = get(&st, "/metrics");
         let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
@@ -717,6 +739,8 @@ mod tests {
             mj.get("weight_bytes_per_replica").as_usize(),
             Some(bank_bytes)
         );
+        assert_eq!(mj.get("device_mode").as_str(), Some("none"));
+        assert_eq!(mj.get("weight_bytes_device").as_usize(), Some(0));
         let rows = mj.get("replicas").as_arr().expect("replicas array");
         assert_eq!(rows.len(), 2);
         let steps: u64 = rows

@@ -97,6 +97,15 @@ pub enum Stage {
     /// segment instead of recomputing its refresh (instant; `session` =
     /// segment id).
     PrefixHit,
+    /// Hot KV segment uploaded to the device rung on first checkout (span;
+    /// `session` = segment id).
+    DevicePromote,
+    /// Device-resident KV segment demoted back to host-only under device
+    /// pressure or on spill (instant; `session` = segment id).
+    DeviceDemote,
+    /// Checkout of a device-resident segment skipped the per-step KV
+    /// upload entirely (instant; `session` = segment id).
+    UploadSkip,
 }
 
 impl Stage {
@@ -116,6 +125,9 @@ impl Stage {
             Stage::Spill => "spill",
             Stage::Rehydrate => "rehydrate",
             Stage::PrefixHit => "prefix_hit",
+            Stage::DevicePromote => "device_promote",
+            Stage::DeviceDemote => "device_demote",
+            Stage::UploadSkip => "upload_skip",
         }
     }
 
@@ -135,6 +147,9 @@ impl Stage {
             Stage::Spill => 12,
             Stage::Rehydrate => 13,
             Stage::PrefixHit => 14,
+            Stage::DevicePromote => 15,
+            Stage::DeviceDemote => 16,
+            Stage::UploadSkip => 17,
         }
     }
 
@@ -154,6 +169,9 @@ impl Stage {
             12 => Stage::Spill,
             13 => Stage::Rehydrate,
             14 => Stage::PrefixHit,
+            15 => Stage::DevicePromote,
+            16 => Stage::DeviceDemote,
+            17 => Stage::UploadSkip,
             _ => return None,
         })
     }
@@ -491,6 +509,24 @@ impl TraceRecorder {
         self.push(Stage::PrefixHit, None, segment, None, 0, t, 0);
     }
 
+    /// Hot KV segment uploaded to the device rung on first checkout.
+    pub fn device_promote(&self, segment: u64, start: Instant, end: Instant) {
+        self.push(Stage::DevicePromote, None, segment, None, 0, self.us(start),
+                  end.saturating_duration_since(start).as_micros() as u64);
+    }
+
+    /// Device-resident segment demoted back to host-only.
+    pub fn device_demote(&self, segment: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::DeviceDemote, None, segment, None, 0, t, 0);
+    }
+
+    /// Checkout consumed device-resident KV in place, skipping the upload.
+    pub fn upload_skip(&self, segment: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::UploadSkip, None, segment, None, 0, t, 0);
+    }
+
     /// Session finished (or failed): drop its timing entry.
     pub fn finished(&self, session: u64) {
         self.sessions.lock().unwrap().remove(&session);
@@ -580,7 +616,9 @@ impl TraceRecorder {
                 Stage::Width => (PID_EXEC, 0),
                 // Store-scoped events: one shared track on the executor pid
                 // (the `session` word is a segment id, not a session id).
-                Stage::Spill | Stage::Rehydrate | Stage::PrefixHit => (PID_EXEC, 0),
+                Stage::Spill | Stage::Rehydrate | Stage::PrefixHit
+                | Stage::DevicePromote | Stage::DeviceDemote
+                | Stage::UploadSkip => (PID_EXEC, 0),
                 _ => (PID_SESSIONS, e.session),
             };
             let mut args = vec![];
@@ -597,13 +635,17 @@ impl TraceRecorder {
                     args.push(("from", Json::num(e.session as f64)));
                     args.push(("to", Json::num(e.lanes as f64)));
                 }
-                Stage::Spill | Stage::Rehydrate | Stage::PrefixHit => {
+                Stage::Spill | Stage::Rehydrate | Stage::PrefixHit
+                | Stage::DevicePromote | Stage::DeviceDemote
+                | Stage::UploadSkip => {
                     args.push(("segment", Json::num(e.session as f64)));
                 }
                 _ => {}
             }
             if !matches!(e.stage, Stage::Exec | Stage::PoolWait | Stage::Width
-                | Stage::Spill | Stage::Rehydrate | Stage::PrefixHit)
+                | Stage::Spill | Stage::Rehydrate | Stage::PrefixHit
+                | Stage::DevicePromote | Stage::DeviceDemote
+                | Stage::UploadSkip)
             {
                 args.push(("session", Json::num(e.session as f64)));
             }
@@ -616,7 +658,8 @@ impl TraceRecorder {
             ];
             if e.dur_us > 0 || matches!(e.stage, Stage::QueueWait | Stage::Plan
                 | Stage::Coalesce | Stage::PoolWait | Stage::Forward
-                | Stage::Exec | Stage::Apply | Stage::Spill | Stage::Rehydrate)
+                | Stage::Exec | Stage::Apply | Stage::Spill | Stage::Rehydrate
+                | Stage::DevicePromote)
             {
                 fields.push(("ph", Json::str("X")));
                 fields.push(("dur", Json::num(e.dur_us as f64)));

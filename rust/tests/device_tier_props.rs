@@ -1,0 +1,625 @@
+//! ISSUE 8 device-tier conformance suite: device residency is a pure
+//! accelerator — it may change *where* bytes live and how often they move,
+//! never *what* any session generates.
+//!
+//! Pillars:
+//! 1. **Shared-vs-copy device parity** — a pool whose replicas share ONE
+//!    device (the `DeviceMode::Shared` analog: one `MockDevice` behind
+//!    every replica) and a pool whose replicas each own a private device
+//!    produce byte-identical outputs for every strategy under concurrent
+//!    drivers, and both match a device-less solo run. Only the shared
+//!    pool exposes a pool-wide device, so only it exercises the store's
+//!    device rung — the parity is host-path vs device-path, not just
+//!    pool-vs-pool.
+//! 2. **Device-resident checkout parity** — a checkout served from the
+//!    device rung is byte-identical to the host re-upload path, and the
+//!    skip/upload counters split exactly as residency predicts.
+//! 3. **Pin discipline on the device rung** — a session parked *mid-step*
+//!    (gated executor) keeps its segment device-resident even when
+//!    another session's steps drive the device rung over its soft limit;
+//!    demotion pressure lands on unpinned segments only.
+//! 4. **Three-rung round trip** — device → host → disk demotion and the
+//!    way back are byte-exact, with the strict ladder observed (the
+//!    device copy dies before the host copy spills).
+//! 5. **Memory regression** — device weight bytes stay FLAT when N
+//!    replicas share a device bank and grow linearly when each replica
+//!    uploads its own (the `weight_bytes_device` gauge on `GET /metrics`).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{
+    Arch, DeviceKv, EnginePool, HostParam, KvCache, MockDevice, Specials, WeightBank,
+};
+use window_diffusion::scheduler::{
+    KvCheckout, KvStore, KvStoreConfig, Scheduler, SchedulerConfig, SubmitSpec,
+};
+use window_diffusion::strategies;
+use window_diffusion::util::prop;
+use window_diffusion::util::rng::Rng;
+
+use xla::Literal;
+
+const SPECS: &[&str] = &[
+    "full",
+    "window",
+    "window-nocache",
+    "block:size=16",
+    "dkv:interval=4",
+    "fastdllm-prefix",
+    "fastdllm-dual",
+];
+
+fn submit(strategy: &str, req: &GenRequest) -> SubmitSpec {
+    SubmitSpec { strategy: strategy.into(), req: req.clone(), deadline: None }
+}
+
+fn bank_values(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i * 37 % 101) as f32) * 0.004 - 0.2).collect()
+}
+
+fn mock_bank() -> Arc<WeightBank> {
+    Arc::new(WeightBank::from_host_params(
+        "mock",
+        vec![
+            HostParam { name: "embed".into(), shape: vec![16, 4], data: bank_values(64) },
+            HostParam { name: "head".into(), shape: vec![4], data: bank_values(4) },
+        ],
+    ))
+}
+
+/// Deterministic-but-irregular f32 payload covering exotic bit patterns.
+fn payload(n: usize, seed: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => f32::from_bits(0x7fc0_0001), // NaN with payload
+            1 => -0.0,
+            2 => f32::MIN_POSITIVE / 2.0, // subnormal
+            3 => f32::MAX,
+            _ => ((i as u32).wrapping_mul(2654435761).wrapping_add(seed)) as f32 * 1e-3,
+        })
+        .collect()
+}
+
+fn flat_cache(s: usize, c: usize, arch: &Arch, seed: u32) -> KvCache {
+    let elems = arch.kv_elems(c);
+    KvCache {
+        s,
+        c,
+        flat: true,
+        k: Literal::vec1(&payload(elems, seed)),
+        v: Literal::vec1(&payload(elems, seed.wrapping_add(0x9e37))),
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_same_cache(a: &KvCache, b: &KvCache, ctx: &str) {
+    assert_eq!(a.s, b.s, "{ctx}: s mismatch");
+    assert_eq!(a.c, b.c, "{ctx}: c mismatch");
+    assert_eq!(
+        bits(&a.k_host().unwrap()),
+        bits(&b.k_host().unwrap()),
+        "{ctx}: K bits diverged"
+    );
+    assert_eq!(
+        bits(&a.v_host().unwrap()),
+        bits(&b.v_host().unwrap()),
+        "{ctx}: V bits diverged"
+    );
+}
+
+/// N replicas over ONE bank and ONE device — the `--device-bank shared`
+/// analog. Every replica reports the same `device_id`, so the pool derives
+/// `device_mode = "shared"` and exposes the device for the scheduler to
+/// attach.
+fn shared_dev_pool(n: usize, bank: &Arc<WeightBank>, dev: &Arc<MockDevice>) -> Arc<EnginePool> {
+    let replicas = (0..n)
+        .map(|_| {
+            Arc::new(
+                MockExec::new(256)
+                    .with_weight_bank(Arc::clone(bank))
+                    .with_device(Arc::clone(dev)),
+            ) as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(replicas).unwrap()
+}
+
+/// N replicas, each owning a private equal-content bank AND device — the
+/// `--device-bank copy` analog (pre-ISSUE-8 device memory regime).
+fn copy_dev_pool(n: usize) -> Arc<EnginePool> {
+    let replicas = (0..n)
+        .map(|_| {
+            Arc::new(
+                MockExec::new(256)
+                    .with_weight_bank(mock_bank())
+                    .with_device(Arc::new(MockDevice::new())),
+            ) as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(replicas).unwrap()
+}
+
+fn sched_over(pool: Arc<EnginePool>) -> Arc<Scheduler> {
+    let exec: Arc<dyn StepExec + Send + Sync> = pool;
+    Scheduler::new(exec, SchedulerConfig::default(), Arc::new(Metrics::default()))
+}
+
+fn drive_concurrently(sched: &Arc<Scheduler>, workers: usize) {
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            let sched = &sched;
+            scope.spawn(move || loop {
+                if sched.tick().is_none() {
+                    if sched.active_sessions() == 0 {
+                        break; // fully drained
+                    }
+                    thread::yield_now(); // others are mid-step
+                }
+            });
+        }
+    });
+}
+
+fn random_req(rng: &mut Rng) -> GenRequest {
+    let prompt_len = 2 + rng.usize_below(12);
+    let gen = 8 + rng.usize_below(56);
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| 5 + (i % 10) as i32).collect();
+    let mut req = GenRequest::new(prompt, gen, 256);
+    req.tokens_per_step = 1 + rng.usize_below(3);
+    req
+}
+
+// ---------------------------------------------------------------------------
+// 1. shared-vs-copy device parity, every strategy, concurrent drivers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shared_and_copy_device_pools_step_identically() {
+    prop::check_seeded(
+        "device-parity",
+        0xDE71,
+        3,
+        |rng| (0..4).map(|_| random_req(rng)).collect::<Vec<_>>(),
+        |reqs| {
+            for spec in SPECS {
+                let mut results = Vec::new();
+                let bank = mock_bank();
+                let dev = Arc::new(MockDevice::new());
+                let shared = shared_dev_pool(4, &bank, &dev);
+                assert_eq!(shared.device_mode(), "shared");
+                let copy = copy_dev_pool(4);
+                assert!(copy.shared_device().is_none(), "copy pool leaked a shared device");
+                for (pool, expect_dev) in [(shared, true), (copy, false)] {
+                    let sched = sched_over(pool);
+                    // the scheduler wires the device rung iff the pool
+                    // exposes one pool-wide device
+                    if sched.kv_store().device_attached() != expect_dev {
+                        return Err(format!(
+                            "{spec}: store device attach = {}, want {expect_dev}",
+                            sched.kv_store().device_attached()
+                        ));
+                    }
+                    let tickets: Vec<_> = reqs
+                        .iter()
+                        .map(|r| {
+                            sched
+                                .submit(SubmitSpec {
+                                    strategy: (*spec).into(),
+                                    req: r.clone(),
+                                    deadline: None,
+                                })
+                                .expect("admit")
+                        })
+                        .collect();
+                    drive_concurrently(&sched, 4);
+                    let outs: Vec<_> = tickets
+                        .into_iter()
+                        .map(|t| t.wait())
+                        .collect::<Result<_, _>>()
+                        .map_err(|e| format!("{spec}: {e}"))?;
+                    results.push(outs);
+                }
+                let copy = results.pop().unwrap();
+                let shared = results.pop().unwrap();
+                for (i, (req, (s, c))) in
+                    reqs.iter().zip(shared.iter().zip(copy.iter())).enumerate()
+                {
+                    if s.generated() != c.generated() {
+                        return Err(format!("{spec}: session {i} shared != copy output"));
+                    }
+                    if s.steps != c.steps || s.counts != c.counts {
+                        return Err(format!("{spec}: session {i} cost accounting diverged"));
+                    }
+                    // triangulate against a pool-less, device-less solo run
+                    // over the same bank content — the host baseline
+                    let solo = strategies::from_name(spec)
+                        .unwrap()
+                        .generate(&MockExec::new(256).with_weight_bank(mock_bank()), req)
+                        .map_err(|e| format!("{spec} solo: {e}"))?;
+                    if s.generated() != solo.generated() {
+                        return Err(format!("{spec}: session {i} device path != solo output"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. device-resident checkout ≡ host re-upload, store level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn device_checkout_matches_host_path_byte_for_byte() {
+    let m = MockExec::new(256);
+    let arch = m.arch();
+    let store = KvStore::new(KvStoreConfig::default());
+    let dev = Arc::new(MockDevice::new());
+    store.attach_device(Arc::clone(&dev) as Arc<dyn DeviceKv>);
+    assert!(store.device_attached());
+
+    let kv = flat_cache(256, 64, &arch, 11);
+    let h = store.insert(&kv).unwrap();
+    assert_eq!(store.device_bytes(), 0, "insert alone must not touch the device");
+
+    // first checkout promotes: one upload, no skip, lease handed out
+    let co1 = h.checkout().unwrap();
+    assert!(co1.device().is_some(), "promoted checkout carries no lease");
+    assert_eq!(store.device_promotions(), 1);
+    assert_eq!(store.upload_skips(), 0);
+    assert_eq!(dev.kv_uploads(), 1);
+    assert!(dev.kv_resident(co1.segment()));
+    assert!(store.device_bytes() > 0);
+    assert!(
+        store.device_bytes() <= store.hot_bytes(),
+        "device rung exceeded its host mirror"
+    );
+
+    // the device copy is bit-identical to the host bytes
+    let (dk, dv) = dev.kv_data(co1.segment()).expect("device copy exists");
+    assert_eq!(bits(&dk), bits(&kv.k_host().unwrap()), "device K bits diverged");
+    assert_eq!(bits(&dv), bits(&kv.v_host().unwrap()), "device V bits diverged");
+
+    // second checkout skips the upload and materializes the same bytes the
+    // host path would
+    let co2 = h.checkout().unwrap();
+    assert_eq!(store.upload_skips(), 1);
+    assert_eq!(dev.kv_uploads(), 1, "resident checkout re-uploaded");
+    let (a, b): (&KvCache, &KvCache) = (&co1, &co2);
+    assert_same_cache(a, b, "device-resident vs first checkout");
+    assert_same_cache(&kv, b, "device-resident vs original");
+}
+
+#[test]
+fn mock_exec_splits_upload_and_skip_counters_by_residency() {
+    let req = GenRequest::new(vec![10; 4], 64, 256);
+    let solo = strategies::from_name("window")
+        .unwrap()
+        .generate(&MockExec::new(256), &req)
+        .unwrap();
+
+    // device-less executor: every cached step pays the host re-upload
+    let host = Arc::new(MockExec::new(256));
+    let sched = Scheduler::new(
+        Arc::clone(&host) as Arc<dyn StepExec + Send + Sync>,
+        SchedulerConfig::default(),
+        Arc::new(Metrics::default()),
+    );
+    assert!(!sched.kv_store().device_attached());
+    let t = sched.submit(submit("window", &req)).unwrap();
+    while sched.tick().is_some() {}
+    assert_eq!(t.wait().unwrap().generated(), solo.generated());
+    let cc = host.counts();
+    assert!(cc.kv_uploads > 0, "host path never paid an upload");
+    assert_eq!(cc.kv_upload_skips, 0, "device-less exec skipped an upload");
+    sched.shutdown();
+
+    // device-backed executor: first cached checkout uploads, the rest skip
+    let dev = Arc::new(MockDevice::new());
+    let devexec = Arc::new(MockExec::new(256).with_device(Arc::clone(&dev)));
+    let sched = Scheduler::new(
+        Arc::clone(&devexec) as Arc<dyn StepExec + Send + Sync>,
+        SchedulerConfig::default(),
+        Arc::new(Metrics::default()),
+    );
+    assert!(sched.kv_store().device_attached(), "exec device never reached the store");
+    let t = sched.submit(submit("window", &req)).unwrap();
+    while sched.tick().is_some() {}
+    assert_eq!(
+        t.wait().unwrap().generated(),
+        solo.generated(),
+        "device residency changed the output"
+    );
+    let cc = devexec.counts();
+    assert!(cc.kv_upload_skips > 0, "multi-step session never skipped an upload");
+    // the store pays the promotion upload at checkout, so the executor
+    // itself never re-uploads host bytes — every cached forward consumes
+    // the device copy
+    assert_eq!(cc.kv_uploads, 0, "a cached forward fell back to the host re-upload");
+    let store = sched.kv_store();
+    assert!(store.upload_skips() > 0);
+    assert_eq!(
+        store.upload_skips() + store.device_promotions(),
+        cc.kv_upload_skips as u64,
+        "every exec-side skip must be a store-side skip or promotion"
+    );
+    assert!(dev.kv_uploads() > 0);
+    sched.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// gate executor (same rendezvous as kv_tier_props): park a session mid-step
+// while it holds a device lease
+// ---------------------------------------------------------------------------
+
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    armed: bool,
+    entered: usize,
+    open: bool,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { state: Mutex::new(GateState::default()), cv: Condvar::new() })
+    }
+
+    fn arm(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.armed = true;
+        st.open = false;
+    }
+
+    fn wait_entered(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.entered == 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = true;
+        st.armed = false;
+        self.cv.notify_all();
+    }
+
+    fn pass(&self) {
+        let mut st = self.state.lock().unwrap();
+        if !st.armed {
+            return;
+        }
+        // one-shot: only the FIRST cached step parks (session A). Later
+        // cached steps — B's, driven from the main thread while A is
+        // parked — must flow freely or the test would deadlock on itself.
+        st.armed = false;
+        st.entered += 1;
+        self.cv.notify_all();
+        while !st.open {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.entered -= 1;
+    }
+}
+
+/// Device-backed executor that parks inside `cached_co` — i.e. while the
+/// step's checkout (pin + device lease) is alive.
+struct GateExec {
+    inner: MockExec,
+    gate: Arc<Gate>,
+}
+
+impl StepExec for GateExec {
+    fn arch(&self) -> Arch {
+        self.inner.arch()
+    }
+    fn special(&self) -> Specials {
+        self.inner.special()
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.inner.seqs()
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.c_ladder(s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.r_ladder(s)
+    }
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        StepExec::device(&self.inner)
+    }
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.inner.full(s, ids, valid)
+    }
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        self.inner.window(s, c, ids, pos, valid)
+    }
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        self.inner.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        self.gate.pass();
+        StepExec::cached_co(&self.inner, s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. a mid-step session's segment is never the device demotion victim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_step_device_segment_is_never_demoted() {
+    let req = GenRequest::new(vec![10; 4], 64, 256);
+    let solo = strategies::from_name("window")
+        .unwrap()
+        .generate(&MockExec::new(256), &req)
+        .unwrap();
+    // measure the per-session resident segment for this request shape
+    let probe = MockExec::new(256);
+    let mut probe_sess = strategies::from_name("window").unwrap().start(&probe, &req).unwrap();
+    probe_sess.step(&probe).unwrap();
+    let per_session = probe_sess.cache_bytes();
+    assert!(per_session > 0);
+
+    let gate = Gate::new();
+    let dev = Arc::new(MockDevice::new());
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(GateExec {
+        inner: MockExec::new(256).with_device(Arc::clone(&dev)),
+        gate: Arc::clone(&gate),
+    });
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            // device cap of 1 byte: EVERY unpinned device segment is a
+            // demotion candidate; only the pin can keep A's lease valid
+            kv_device_soft_bytes: 1,
+            ..Default::default()
+        },
+        Arc::new(Metrics::default()),
+    );
+    let store = Arc::clone(sched.kv_store());
+    assert!(store.device_attached());
+
+    let t_a = sched.submit(submit("window", &req)).unwrap();
+    sched.tick(); // A refreshes; nothing device-resident yet
+    gate.arm();
+    let s2 = Arc::clone(&sched);
+    let stepper = thread::spawn(move || s2.tick()); // A promotes + parks mid-cached-step
+    gate.wait_entered();
+
+    let dev_while_pinned = store.device_bytes();
+    assert!(
+        dev_while_pinned >= per_session,
+        "parked session's segment left the device rung: {dev_while_pinned} < {per_session}"
+    );
+
+    // drive pressure from another session while A is parked: B's cached
+    // steps promote B's segment over the 1-byte cap, and B — not A — must
+    // be the demotion victim once its own pin drops
+    let t_b = sched.submit(submit("window", &req)).unwrap();
+    sched.tick(); // B refreshes
+    sched.tick(); // B's cached step promotes, then demotes itself at unpin
+    assert!(store.device_demotions() >= 1, "device cap of 1 byte never demoted");
+    assert!(
+        store.device_bytes() >= per_session,
+        "pinned mid-step segment was demoted (device {} < per-session {})",
+        store.device_bytes(),
+        per_session
+    );
+
+    gate.open();
+    stepper.join().unwrap();
+    while sched.tick().is_some() {}
+    let r_a = t_a.wait().unwrap();
+    let r_b = t_b.wait().unwrap();
+    assert_eq!(r_a.generated(), solo.generated(), "demotion pressure changed A's output");
+    assert_eq!(r_b.generated(), solo.generated(), "demotion pressure changed B's output");
+    sched.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 4. device → host → disk → back, byte-exact, strict ladder
+// ---------------------------------------------------------------------------
+
+#[test]
+fn demotion_round_trip_is_byte_exact_across_all_three_rungs() {
+    let dir = std::env::temp_dir().join(format!("wd-devtier-exact-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = MockExec::new(256);
+    let arch = m.arch();
+    let kv = flat_cache(256, 64, &arch, 7);
+    let seg_bytes = 4 * 2 * arch.kv_elems(64);
+    {
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: seg_bytes + seg_bytes / 2,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        let dev = Arc::new(MockDevice::new());
+        store.attach_device(Arc::clone(&dev) as Arc<dyn DeviceKv>);
+
+        let h1 = store.insert(&kv).unwrap();
+        let seg_id = {
+            let co = h1.checkout().unwrap(); // rung 1: promoted to device
+            assert!(dev.kv_resident(co.segment()));
+            co.segment()
+        };
+        // still device-resident after unpin (no pressure yet)
+        assert!(dev.kv_resident(seg_id));
+
+        // a second insert drives the hot tier over soft: the victim's
+        // device copy dies FIRST (strict ladder — device and disk never
+        // coexist), then the host bytes spill
+        let _h2 = store.insert(&flat_cache(256, 64, &arch, 8)).unwrap();
+        assert_eq!(store.spills(), 1, "second insert should spill the first segment");
+        assert_eq!(store.device_demotions(), 1, "spill skipped the device demotion");
+        assert!(!dev.kv_resident(seg_id), "spilled segment left a device copy behind");
+        assert_eq!(store.device_bytes(), 0);
+
+        // the way back: disk → host (rehydrate) → device (re-promote)
+        let co = h1.checkout().unwrap();
+        assert_eq!(store.rehydrates(), 1);
+        assert_eq!(store.device_promotions(), 2);
+        assert!(dev.kv_resident(seg_id));
+        let back: &KvCache = &co;
+        assert_same_cache(&kv, back, "device->disk->device round trip");
+        let (dk, dv) = dev.kv_data(seg_id).expect("re-promoted device copy");
+        assert_eq!(bits(&dk), bits(&kv.k_host().unwrap()), "device K bits after round trip");
+        assert_eq!(bits(&dv), bits(&kv.v_host().unwrap()), "device V bits after round trip");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 5. memory regression: shared device bytes flat, copy linear
+// ---------------------------------------------------------------------------
+
+#[test]
+fn device_weight_bytes_flat_shared_linear_copy() {
+    let bank = mock_bank();
+    let per_copy = bank.total_bytes();
+    assert!(per_copy > 0);
+    for n in [1usize, 4, 8] {
+        let dev = Arc::new(MockDevice::new());
+        let shared = shared_dev_pool(n, &bank, &dev);
+        assert_eq!(shared.device_mode(), "shared", "n={n}");
+        assert_eq!(
+            shared.weight_bytes_device(),
+            per_copy,
+            "shared device bytes must stay flat at n={n}"
+        );
+        let lease = shared.shared_device().expect("shared pool exposes its device");
+        assert_eq!(lease.device_id(), dev.device_id());
+
+        let copy = copy_dev_pool(n);
+        assert_eq!(
+            copy.weight_bytes_device(),
+            n * per_copy,
+            "copy device bytes must grow linearly at n={n}"
+        );
+        if n > 1 {
+            assert_eq!(copy.device_mode(), "copy", "n={n}");
+            assert!(copy.shared_device().is_none(), "distinct devices leaked a shared lease");
+        }
+    }
+}

@@ -135,6 +135,7 @@ fn spill_rehydrate_is_byte_exact() {
         let store = KvStore::new(KvStoreConfig {
             soft_bytes: seg_bytes + seg_bytes / 2,
             spill_dir: Some(dir.clone()),
+            ..Default::default()
         });
         let h1 = store.insert(&kv).unwrap();
         let _h2 = store.insert(&flat_cache(256, 64, &arch, 8)).unwrap();
