@@ -22,9 +22,15 @@
 //! geometries land on *different* `(s, c, r)` buckets, served at fixed
 //! B=1, fixed B=8 (exact-bucket coalescing only) and
 //! `--batch-policy adaptive` with cross-bucket promotion — steps/sec,
-//! occupancy and `promoted_lanes` side by side. Finally demonstrates
+//! occupancy and `promoted_lanes` side by side. Then demonstrates
 //! KV-pool admission control: a server with a tiny `kv_budget_bytes`
-//! answers `429` instead of overcommitting.
+//! answers `429` instead of overcommitting, and a **well-behaved client**
+//! honors the refusal's `retry_after_ms` hint (jittered backoff, no rand
+//! crate) until a long-running session frees the budget. Finally a **chaos
+//! drill** (ISSUE 9): the mixed workload through a chaos-wrapped 2-replica
+//! pool with ~10% transient forward faults — every request must still
+//! answer 200, with the injected-fault and retry counters printed side by
+//! side.
 //!
 //! Runs against the trained sim model when artifacts exist, otherwise falls
 //! back to the deterministic mock model so the comparison runs anywhere (the
@@ -36,13 +42,13 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use window_diffusion::coordinator::{MockExec, StepExec};
 use window_diffusion::eval;
 use window_diffusion::metrics::Metrics;
-use window_diffusion::runtime::{Engine, EngineCell, EnginePool, Manifest};
-use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfig};
+use window_diffusion::runtime::{ChaosConfig, ChaosPlan, Engine, EngineCell, EnginePool, Manifest};
+use window_diffusion::scheduler::{BatchPolicy, KvPool, Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::api::AppState;
 use window_diffusion::server::http::{http_get, http_post};
 use window_diffusion::server::{serve, ServerConfig};
@@ -218,6 +224,36 @@ fn run_phase(
     server.stop();
     state.scheduler.shutdown();
     Ok(stats)
+}
+
+/// Minimal well-behaved client for the 429 path: on backpressure, honor the
+/// refusal's `retry_after_ms` hint plus additive jitter (derived from the
+/// clock's subsecond nanos — no rand crate) instead of hammering the pool.
+/// Returns the terminal response and how many backoffs it took.
+fn post_with_backoff(
+    addr: &str,
+    body: &str,
+    max_attempts: usize,
+) -> anyhow::Result<(u16, String, usize)> {
+    let mut backoffs = 0usize;
+    loop {
+        let (code, resp) = http_post(addr, "/generate", body)?;
+        if code != 429 || backoffs + 1 >= max_attempts {
+            return Ok((code, resp, backoffs));
+        }
+        let hint_ms = parse(&resp)
+            .ok()
+            .and_then(|j| j.get("retry_after_ms").as_usize())
+            .unwrap_or(100) as u64;
+        let jitter_ms = u64::from(
+            SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.subsec_nanos())
+                .unwrap_or(0),
+        ) % (hint_ms / 2 + 1);
+        backoffs += 1;
+        std::thread::sleep(Duration::from_millis(hint_ms + jitter_ms));
+    }
 }
 
 /// (p50, p95), tolerating an empty sample set (all requests failed).
@@ -573,5 +609,110 @@ fn main() -> anyhow::Result<()> {
     );
     server.stop();
     tiny.scheduler.shutdown();
+
+    // -- a well-behaved 429 client: honor retry_after_ms until bytes free ------
+    // budget = exactly one full-size KV bucket (mock arch), so a long session
+    // books the whole pool; a second client is refused with a backoff hint
+    // and retries with jitter until the holder completes. Mock-only (2 ms per
+    // forward keeps the holder in flight long enough to observe the refusal).
+    let demo_exec: Arc<dyn StepExec + Send + Sync> =
+        Arc::new(MockExec::new(256).with_step_delay(Duration::from_millis(2)));
+    let est_max = KvPool::estimate_bytes(&demo_exec.arch(), &demo_exec.c_ladder(256), 256);
+    let gated = build_state(
+        Arc::clone(&demo_exec),
+        None,
+        toy_tokenizer(),
+        "mock",
+        SchedulerConfig { kv_budget_bytes: est_max, ..Default::default() },
+        1,
+        false,
+    );
+    let server = serve(
+        Arc::clone(&gated),
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 4, queue_capacity: 8 },
+    )?;
+    let gated_addr = server.addr.clone();
+    let mk_body = |gen_len: usize, strategy: &str| {
+        Json::obj(vec![
+            ("prompt", Json::str("w1 w2 w3 w4")),
+            ("gen_len", Json::num(gen_len as f64)),
+            ("strategy", Json::str(strategy)),
+            ("adaptive", Json::Bool(false)),
+        ])
+        .to_string()
+    };
+    let holder_addr = gated_addr.clone();
+    let holder_body = mk_body(200, "full"); // books the largest c bucket
+    let holder = std::thread::spawn(move || http_post(&holder_addr, "/generate", &holder_body));
+    std::thread::sleep(Duration::from_millis(40)); // let the holder reserve
+    let (code, _resp, backoffs) =
+        post_with_backoff(&gated_addr, &mk_body(SHORT_GEN, "window"), 50)?;
+    println!(
+        "429-aware client vs one-bucket budget: HTTP {code} after {backoffs} jittered backoff(s)"
+    );
+    assert_eq!(code, 200, "backoff client never got admitted");
+    let _ = holder.join();
+    server.stop();
+    gated.scheduler.shutdown();
+
+    // -- chaos drill: ~10% transient forward faults, retry-with-replan ---------
+    // the mixed workload through a chaos-wrapped 2-replica mock pool; every
+    // request must still answer 200 — faults surface only as booked retries
+    // (and quarantines, were any replica to fail persistently)
+    let chaos = ChaosPlan::new(ChaosConfig { transient_per_mille: 100, ..Default::default() });
+    let chaos_pool = EnginePool::new(
+        (0..2usize)
+            .map(|i| {
+                let inner: Arc<dyn StepExec + Send + Sync> =
+                    Arc::new(MockExec::new(256).with_step_delay(Duration::from_millis(1)));
+                Arc::new(chaos.wrap(i as u32, inner)) as Arc<dyn StepExec + Send + Sync>
+            })
+            .collect(),
+    )?;
+    chaos_pool.configure_health(3, 250);
+    let chaos_exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&chaos_pool);
+    let chaos_state = build_state(
+        chaos_exec,
+        Some(Arc::clone(&chaos_pool)),
+        toy_tokenizer(),
+        "mock",
+        SchedulerConfig { max_step_retries: 6, ..Default::default() },
+        2,
+        false,
+    );
+    let chaos_bodies: Vec<(String, usize)> = (0..n_requests)
+        .map(|i| {
+            let gen_len = if i % 2 == 0 { SHORT_GEN } else { LONG_GEN };
+            (mk_body(gen_len, if i % 4 == 3 { "full" } else { "window" }), gen_len)
+        })
+        .collect();
+    let chaos_phase =
+        run_phase("chaos[10% transient]", Arc::clone(&chaos_state), &chaos_bodies, concurrency)?;
+    println!("\n--- chaos drill (2 mock replicas, 10% transient faults) ---");
+    print_phase(&chaos_phase);
+    let c = chaos.counters();
+    println!(
+        "  injected: transient={} persistent={} stuck={} upload_failures={}",
+        c.transient(),
+        c.persistent(),
+        c.stuck(),
+        c.upload_failures()
+    );
+    println!(
+        "  recovered: step_retries={} exhausted={} quarantines={}",
+        chaos_state
+            .metrics
+            .step_retries
+            .load(std::sync::atomic::Ordering::Relaxed),
+        chaos_state
+            .metrics
+            .step_retries_exhausted
+            .load(std::sync::atomic::Ordering::Relaxed),
+        chaos_pool.quarantines(),
+    );
+    assert_eq!(
+        chaos_phase.ok, chaos_phase.total,
+        "chaos drill dropped requests — transient faults must not surface to clients"
+    );
     Ok(())
 }

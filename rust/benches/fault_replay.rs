@@ -1,0 +1,200 @@
+//! Fault replay harness (ISSUE 9): the latency-replay corpus re-run under
+//! injected faults, on the compute-bound mock (per-forward sleep) — no
+//! artifacts needed, so CI runs it end to end. Three phases:
+//!
+//! 1. **Fault-free baseline** — the corpus through a 2-replica pool,
+//!    recording steps/sec and every session's tokens.
+//! 2. **5% transient faults** — same corpus, every forward rolling a 5%
+//!    transient failure (seeded chaos RNG), bounded retry-with-replan on.
+//!    Asserted: ZERO failed sessions, byte-identical outputs to phase 1,
+//!    and ≥ 0.8× the fault-free steps/sec — retries must cost bounded
+//!    throughput, not correctness.
+//! 3. **Quarantine drill** — one replica broken persistently; the pool must
+//!    bench it and the survivor must serve the whole corpus to the same
+//!    bytes.
+//!
+//! Emits `BENCH_9.json` at the repo root, extending the `BENCH_*.json`
+//! perf-trajectory series with the fault-tolerance floor.
+//!
+//! ```bash
+//! cargo bench --bench fault_replay
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{ChaosConfig, ChaosPlan, EnginePool};
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::util::json::Json;
+
+const STEP_DELAY: Duration = Duration::from_millis(2);
+const FAULT_PER_MILLE: u32 = 50; // 5% of forwards fail transiently
+const REPLICAS: usize = 2;
+
+fn chaos_pool(chaos: &Arc<ChaosPlan>) -> Arc<EnginePool> {
+    let mocks = (0..REPLICAS)
+        .map(|i| {
+            let inner: Arc<dyn StepExec + Send + Sync> =
+                Arc::new(MockExec::new(256).with_step_delay(STEP_DELAY));
+            Arc::new(chaos.wrap(i as u32, inner)) as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(mocks).unwrap()
+}
+
+fn corpus_spec(i: usize) -> SubmitSpec {
+    let mut req = GenRequest::new(vec![10, 11, 12, 13], 32, 256);
+    req.adaptive = false;
+    SubmitSpec {
+        strategy: if i % 2 == 0 { "full".into() } else { "window".into() },
+        req,
+        deadline: None,
+    }
+}
+
+struct RunOutcome {
+    steps_per_sec: f64,
+    /// Per-session generated tokens, corpus order.
+    outputs: Vec<Vec<i32>>,
+    retries: u64,
+    retries_exhausted: u64,
+}
+
+/// Replay the corpus through a pool; every session must complete.
+fn run_corpus(label: &str, pool: &Arc<EnginePool>, n: usize) -> RunOutcome {
+    let metrics = Arc::new(Metrics::default());
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(pool);
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            max_step_retries: 8,
+            // measure the replay floor, not the pacing knob: immediate
+            // re-eligibility keeps a retried step's cost to its replay
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    sched.spawn_workers(REPLICAS);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n).map(|i| sched.submit(corpus_spec(i)).expect("admit")).collect();
+    let outputs: Vec<Vec<i32>> = tickets
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            t.wait()
+                .unwrap_or_else(|e| panic!("{label}: session {i} failed: {e:#}"))
+                .generated()
+        })
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    RunOutcome {
+        steps_per_sec: metrics.sched_steps_total.load(Ordering::Relaxed) as f64
+            / wall.max(1e-9),
+        outputs,
+        retries: metrics.step_retries.load(Ordering::Relaxed),
+        retries_exhausted: metrics.step_retries_exhausted.load(Ordering::Relaxed),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_support::bench_n(24);
+    println!(
+        "fault_replay: {n} requests (full/window gen 32), {STEP_DELAY:?}/forward, \
+         {REPLICAS} replicas, retry budget 8, {FAULT_PER_MILLE}‰ transient faults"
+    );
+    bench_support::hr(78);
+
+    // -- phase 1: fault-free baseline ------------------------------------------
+    let quiet = ChaosPlan::new(ChaosConfig::default());
+    let clean = run_corpus("fault-free", &chaos_pool(&quiet), n);
+    println!("fault-free : {:>7.1} steps/s", clean.steps_per_sec);
+
+    // -- phase 2: 5% transient faults, retry-with-replan -----------------------
+    let chaos = ChaosPlan::new(ChaosConfig {
+        transient_per_mille: FAULT_PER_MILLE,
+        ..Default::default()
+    });
+    let pool = chaos_pool(&chaos);
+    pool.configure_health(0, 0); // isolate retries: no quarantine this phase
+    let faulty = run_corpus("5pct-faults", &pool, n);
+    let injected = chaos.counters().transient();
+    let ratio = bench_support::speedup(clean.steps_per_sec, faulty.steps_per_sec);
+    println!(
+        "5% faults  : {:>7.1} steps/s  ratio={ratio:.3} (floor 0.80)  \
+         injected={injected} retries={} exhausted={}",
+        faulty.steps_per_sec, faulty.retries, faulty.retries_exhausted
+    );
+    anyhow::ensure!(injected >= 1, "chaos injected nothing — the floor is vacuous");
+    anyhow::ensure!(
+        faulty.outputs == clean.outputs,
+        "outputs diverged under transient faults"
+    );
+    anyhow::ensure!(faulty.retries_exhausted == 0, "a session burned its retry budget");
+    anyhow::ensure!(
+        ratio >= 0.80,
+        "5% transient faults cost more than 20% steps/sec ({ratio:.3})"
+    );
+
+    // -- phase 3: quarantine drill — survivor serves the corpus ----------------
+    let drill = ChaosPlan::new(ChaosConfig::default());
+    let drill_pool = chaos_pool(&drill);
+    drill_pool.configure_health(2, 60_000);
+    drill.break_replica(0);
+    let degraded = run_corpus("quarantine-drill", &drill_pool, n);
+    println!(
+        "drill      : {:>7.1} steps/s  quarantines={} survivor_steps={}",
+        degraded.steps_per_sec,
+        drill_pool.quarantines(),
+        drill_pool.replica_steps()[1],
+    );
+    anyhow::ensure!(
+        degraded.outputs == clean.outputs,
+        "outputs diverged on the degraded pool"
+    );
+    anyhow::ensure!(
+        drill_pool.quarantines() >= 1,
+        "persistently-broken replica was never quarantined"
+    );
+    anyhow::ensure!(!drill_pool.all_quarantined(), "survivor was benched too");
+    bench_support::hr(78);
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("fault_replay")),
+        ("issue", Json::num(9.0)),
+        ("n_requests", Json::num(n as f64)),
+        ("step_delay_ms", Json::num(STEP_DELAY.as_secs_f64() * 1e3)),
+        ("fault_per_mille", Json::num(FAULT_PER_MILLE as f64)),
+        ("faults_injected", Json::num(injected as f64)),
+        ("retries", Json::num(faulty.retries as f64)),
+        ("quarantines", Json::num(drill_pool.quarantines() as f64)),
+        (
+            "configs",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("label", Json::str("fault-free")),
+                    ("steps_per_sec", Json::num(clean.steps_per_sec)),
+                ]),
+                Json::obj(vec![
+                    ("label", Json::str("5pct-faults")),
+                    ("steps_per_sec", Json::num(faulty.steps_per_sec)),
+                ]),
+                Json::obj(vec![
+                    ("label", Json::str("quarantine-drill")),
+                    ("steps_per_sec", Json::num(degraded.steps_per_sec)),
+                ]),
+            ]),
+        ),
+        // the headline: throughput retained under 5% faults (a "speedup"
+        // vs the fault-free baseline; < 1.0 by construction, floored 0.8)
+        ("fault_speedup", Json::num(ratio)),
+    ]);
+    bench_support::write_bench_json("BENCH_9.json", &payload)?;
+    bench_support::print_trajectory();
+    Ok(())
+}

@@ -27,6 +27,40 @@ use crate::runtime::{
 };
 use crate::scheduler::kvstore::KvCheckout;
 
+/// Marker for forward errors worth retrying: the failure is tied to the
+/// attempt (a replica hiccup, a transient device error), not to the plan or
+/// the session, so cancelling the plan and re-executing — preferably on a
+/// different replica — can succeed. Executors wrap retryable failures in
+/// this type (`anyhow::Error::new(TransientError::new(...))` or via
+/// `.context`-style chaining); the scheduler classifies with
+/// [`is_transient`] and only books retries for errors that carry it
+/// somewhere in their chain. Plan/apply errors never carry it: a session
+/// whose machine failed is dead, not unlucky.
+#[derive(Debug)]
+pub struct TransientError {
+    msg: String,
+}
+
+impl TransientError {
+    pub fn new(msg: impl Into<String>) -> TransientError {
+        TransientError { msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for TransientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transient: {}", self.msg)
+    }
+}
+
+impl std::error::Error for TransientError {}
+
+/// Whether `e` carries a [`TransientError`] anywhere in its chain — the
+/// scheduler's retry-vs-fatal classification point.
+pub fn is_transient(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<TransientError>().is_some())
+}
+
 pub trait StepExec {
     fn arch(&self) -> Arch;
     fn special(&self) -> Specials;
@@ -487,7 +521,8 @@ impl StepExec for EnginePool {
     fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
         // the whole batch occupies ONE replica; other replicas stay free
         // for other driver workers' batches
-        self.with_replica(|e| e.execute_batch(plans))
+        let lanes = plans.len();
+        self.with_replica_lanes(lanes, |e| e.execute_batch(plans))
     }
 }
 

@@ -19,8 +19,9 @@ pub mod window;
 
 use std::time::Duration;
 
-pub use exec::{MockExec, StepExec};
-pub use plan::{execute_plan, ForwardKind, Planned, Promotion, StepOutputs, StepPlan};
+pub use exec::{is_transient, MockExec, StepExec, TransientError};
+pub use plan::{execute_plan, execute_plan_recoverable, ForwardKind, Planned, Promotion,
+               StepOutputs, StepPlan};
 pub use state::SeqState;
 pub use window::{ComputeSet, WindowLayout};
 

@@ -139,6 +139,41 @@ impl StepPlan {
         buckets::promote_cost(leader.bucket(), self.bucket())
     }
 
+    /// Deep copy for retry bookkeeping: input buffers are cloned and a
+    /// cached plan's KV handle is [`dup`]ed (a second ref on the same
+    /// segment), so the copy can be executed while the original stays
+    /// cancellable. Both copies must eventually be consumed (executed or
+    /// cancelled) for the segment refcount to balance.
+    ///
+    /// [`dup`]: KvHandle::dup
+    pub fn duplicate(&self) -> StepPlan {
+        match self {
+            StepPlan::Full { s, ids, valid } => {
+                StepPlan::Full { s: *s, ids: ids.clone(), valid: valid.clone() }
+            }
+            StepPlan::Window { s, c, ids, pos, valid } => StepPlan::Window {
+                s: *s,
+                c: *c,
+                ids: ids.clone(),
+                pos: pos.clone(),
+                valid: valid.clone(),
+            },
+            StepPlan::Cached { s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv } => {
+                StepPlan::Cached {
+                    s: *s,
+                    c: *c,
+                    r: *r,
+                    ids_r: ids_r.clone(),
+                    pos_r: pos_r.clone(),
+                    slot_idx: slot_idx.clone(),
+                    rvalid: rvalid.clone(),
+                    cvalid: cvalid.clone(),
+                    kv: kv.dup(),
+                }
+            }
+        }
+    }
+
     /// Re-bucket this plan up into `leader`'s `(s, c, r)` bucket so the two
     /// can share one batched forward: input tensors are zero-padded onto the
     /// larger axes, validity masks are zero-extended (the added slots are
@@ -339,6 +374,57 @@ pub fn execute_plan<E: StepExec + ?Sized>(exec: &E, plan: StepPlan) -> Result<St
             let (logits, new_kv) =
                 exec.cached_co(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &co)?;
             Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(new_kv)))
+        }
+    }
+}
+
+/// Execute one plan solo, handing the *plan back* alongside the error on
+/// failure: the caller can route it through `StepMachine::cancel` (restoring
+/// the session's KV handle and pending state) and retry with a fresh replan
+/// instead of losing the lane. Behavior on success is byte-identical to
+/// [`execute_plan`].
+pub fn execute_plan_recoverable<E: StepExec + ?Sized>(
+    exec: &E,
+    plan: StepPlan,
+) -> std::result::Result<StepOutputs, (StepPlan, anyhow::Error)> {
+    match plan {
+        StepPlan::Full { s, ids, valid } => match exec.full(s, &ids, &valid) {
+            Ok(logits) => Ok(StepOutputs::Logits(logits)),
+            Err(e) => Err((StepPlan::Full { s, ids, valid }, e)),
+        },
+        StepPlan::Window { s, c, ids, pos, valid } => {
+            match exec.window(s, c, &ids, &pos, &valid) {
+                Ok((logits, kv)) => Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(kv))),
+                Err(e) => Err((StepPlan::Window { s, c, ids, pos, valid }, e)),
+            }
+        }
+        StepPlan::Cached { s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv } => {
+            // Checkout failure (e.g. a lost spill blob) and forward failure
+            // both hand the intact plan back — the handle is only consumed
+            // on success, mirroring `execute_plan`.
+            let co = match kv.checkout() {
+                Ok(co) => co,
+                Err(e) => {
+                    return Err((
+                        StepPlan::Cached {
+                            s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv,
+                        },
+                        e,
+                    ))
+                }
+            };
+            match exec.cached_co(s, c, r, &ids_r, &pos_r, &slot_idx, &rvalid, &cvalid, &co) {
+                Ok((logits, new_kv)) => Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(new_kv))),
+                Err(e) => {
+                    drop(co);
+                    Err((
+                        StepPlan::Cached {
+                            s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv,
+                        },
+                        e,
+                    ))
+                }
+            }
         }
     }
 }

@@ -141,6 +141,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // refresh forwards across sessions resolve to one shared segment);
     // --no-prefix-share restores fully private per-session KV
     let prefix_share = !args.flag("no-prefix-share");
+    // fault tolerance: bounded retry-with-replan for transient forward
+    // failures, and replica quarantine with timed probation re-probes
+    let max_step_retries = args.usize_or("max-step-retries", 3) as u32;
+    let quarantine_after = args.usize_or("quarantine-after", 3) as u32;
+    let probation_ms = args.usize_or("probation-ms", 1000) as u64;
+    pool.configure_health(quarantine_after, probation_ms);
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
@@ -153,6 +159,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_policy,
         coalesce_waste_pct: args.usize_or("coalesce-waste-pct", default_waste).min(100),
         trace,
+        max_step_retries,
+        ..Default::default()
     };
     let policy_name = sched_cfg.policy.name();
     let batch_policy_name = sched_cfg.batch_policy.name();
@@ -330,6 +338,8 @@ fn main() -> Result<()> {
                  [--kv-budget-mb N] [--kv-soft-mb N] [--kv-device-mb N] \
                  [--kv-spill-dir DIR] \
                  [--no-prefix-share] [--max-sessions N] \
+                 [--max-step-retries N] [--quarantine-after N] \
+                 [--probation-ms MS] \
                  [--workers N] [--queue N] [--direct] [--trace off|ring]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \
                  window-nocache | block[:size=32] | dkv[:interval=4] | \

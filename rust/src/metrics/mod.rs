@@ -236,6 +236,23 @@ pub struct Metrics {
     /// KV pool releases for unknown session ids — a booking-discipline bug
     /// in the scheduler if ever non-zero (see `KvPool::anomalies`).
     pub kv_accounting_anomalies: AtomicU64,
+    // -- fault tolerance (owned by the scheduler's retry path + KvStore) ------
+    /// Transient forward failures that cancelled the plan and re-queued the
+    /// session for another attempt instead of failing the ticket.
+    pub step_retries: AtomicU64,
+    /// Sessions whose ticket failed after exhausting the retry budget
+    /// (distinguished from fatal errors, which fail without retrying).
+    pub step_retries_exhausted: AtomicU64,
+    /// Rehydrates of spilled segments that failed (corrupt/missing blob)
+    /// and degraded the segment to recompute instead of erroring checkout.
+    pub kv_rehydrate_failures: AtomicU64,
+    /// Sessions that dropped their phase cache and replanned a Window/Full
+    /// refresh after losing a KV rung (rehydrate failure or spill-write
+    /// drop) — the recompute half of the degradation ladder.
+    pub degraded_recomputes: AtomicU64,
+    /// Spill writes that failed and dropped the victim segment outright
+    /// (drop-with-recompute) instead of wedging the soft-limit sweep.
+    pub kv_spill_drops: AtomicU64,
 }
 
 impl Metrics {
@@ -331,6 +348,20 @@ impl Metrics {
                 "kv_accounting_anomalies",
                 Json::num(self.kv_accounting_anomalies.load(Ordering::Relaxed) as f64),
             ),
+            ("step_retries", Json::num(self.step_retries.load(Ordering::Relaxed) as f64)),
+            (
+                "step_retries_exhausted",
+                Json::num(self.step_retries_exhausted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_rehydrate_failures",
+                Json::num(self.kv_rehydrate_failures.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "degraded_recomputes",
+                Json::num(self.degraded_recomputes.load(Ordering::Relaxed) as f64),
+            ),
+            ("kv_spill_drops", Json::num(self.kv_spill_drops.load(Ordering::Relaxed) as f64)),
             ("sched_rejections", Json::num(self.sched_rejections.load(Ordering::Relaxed) as f64)),
             ("sched_steps_total", Json::num(self.sched_steps_total.load(Ordering::Relaxed) as f64)),
             ("steps_per_second", Json::num(self.steps_per_second())),
@@ -503,6 +534,22 @@ mod tests {
         assert_eq!(j.get("kv_device_promotions").as_i64(), Some(4));
         assert_eq!(j.get("kv_device_demotions").as_i64(), Some(1));
         assert_eq!(j.get("kv_accounting_anomalies").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn fault_tolerance_counters_export() {
+        let m = Metrics::default();
+        m.step_retries.store(6, Ordering::Relaxed);
+        m.step_retries_exhausted.store(1, Ordering::Relaxed);
+        m.kv_rehydrate_failures.store(2, Ordering::Relaxed);
+        m.degraded_recomputes.store(3, Ordering::Relaxed);
+        m.kv_spill_drops.store(4, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("step_retries").as_i64(), Some(6));
+        assert_eq!(j.get("step_retries_exhausted").as_i64(), Some(1));
+        assert_eq!(j.get("kv_rehydrate_failures").as_i64(), Some(2));
+        assert_eq!(j.get("degraded_recomputes").as_i64(), Some(3));
+        assert_eq!(j.get("kv_spill_drops").as_i64(), Some(4));
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Chaos harness: deterministic fault injection for resilience testing
+//! (ISSUE 9).
+//!
+//! Every resilience claim in this repo — retry-with-replan, replica
+//! quarantine, degrade-to-recompute — is proved against *injected* faults,
+//! not real hardware failures. [`ChaosPlan`] is a seeded, shared fault
+//! plan; [`ChaosExec`] wraps any [`StepExec`] replica and injects faults
+//! from that plan in front of the forward methods:
+//!
+//! * **Transient forward errors** — each forward rolls against
+//!   `transient_per_mille` on the wrapper's own deterministic [`Rng`]
+//!   (seeded `seed ^ tag`). Injected errors carry [`TransientError`], so
+//!   the scheduler's retry classification sees exactly what a flaky
+//!   replica would produce. Batched forwards roll **per lane**, which is
+//!   what the per-lane retry tests need: one unlucky lane, innocent
+//!   batchmates.
+//! * **Persistent replica failure** — replicas whose tag is in the broken
+//!   set fail every forward until [`ChaosPlan::heal`] removes them. Also
+//!   marked transient: the *step* is retryable on another replica even
+//!   though the *replica* is dead — which is precisely the signal the
+//!   pool's quarantine logic exists to integrate over.
+//! * **Stuck steps** — every `stuck_every`-th dispatch (a shared counter
+//!   across all wrappers) sleeps `stuck_delay` before executing, modeling
+//!   a replica that is slow rather than wrong.
+//! * **Device upload failures** — [`ChaosDevice`] wraps any [`DeviceKv`]
+//!   and fails `kv_upload` by the same per-mille roll, exercising the KV
+//!   store's promote-failure degrade path.
+//! * **Spill-blob damage** — [`corrupt_spill_blobs`] / [`unlink_spill_blobs`]
+//!   vandalize a store's `seg-*.kv` spill directory so rehydrate-failure
+//!   degradation is testable without racing the spiller.
+//!
+//! Every fault class has a counter on [`ChaosCounters`], so tests assert
+//! "N faults were actually injected" rather than hoping the dice landed.
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::device::DeviceKv;
+use super::engine::KvCache;
+use super::manifest::{Arch, Specials};
+use super::weights::WeightBank;
+use crate::coordinator::{StepExec, StepOutputs, StepPlan, TransientError};
+use crate::scheduler::kvstore::KvCheckout;
+use crate::util::rng::Rng;
+
+/// Seeded fault plan. All-zero defaults inject nothing — a `ChaosExec`
+/// over a default plan is byte-for-byte the inner executor.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Seed for every injection roll (wrappers fork it by tag).
+    pub seed: u64,
+    /// Per-forward (per-lane for batches) transient failure probability,
+    /// in per-mille (50 = 5%).
+    pub transient_per_mille: u32,
+    /// Replica tags that fail EVERY forward until healed.
+    pub persistent: Vec<u32>,
+    /// Every Nth dispatch (shared across wrappers) is stuck; 0 disables.
+    pub stuck_every: u64,
+    /// How long a stuck dispatch sleeps before executing.
+    pub stuck_delay: Duration,
+    /// Per-upload device `kv_upload` failure probability, in per-mille.
+    pub upload_fail_per_mille: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0x5eed,
+            transient_per_mille: 0,
+            persistent: Vec::new(),
+            stuck_every: 0,
+            stuck_delay: Duration::ZERO,
+            upload_fail_per_mille: 0,
+        }
+    }
+}
+
+/// Injected-fault counters (one per fault class), shared by every wrapper
+/// of one plan.
+#[derive(Debug, Default)]
+pub struct ChaosCounters {
+    transient: AtomicU64,
+    persistent: AtomicU64,
+    stuck: AtomicU64,
+    upload_failures: AtomicU64,
+}
+
+impl ChaosCounters {
+    pub fn transient(&self) -> u64 {
+        self.transient.load(Ordering::Relaxed)
+    }
+
+    pub fn persistent(&self) -> u64 {
+        self.persistent.load(Ordering::Relaxed)
+    }
+
+    pub fn stuck(&self) -> u64 {
+        self.stuck.load(Ordering::Relaxed)
+    }
+
+    pub fn upload_failures(&self) -> u64 {
+        self.upload_failures.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected across all classes.
+    pub fn total(&self) -> u64 {
+        self.transient() + self.persistent() + self.stuck() + self.upload_failures()
+    }
+}
+
+/// One shared fault plan: config + counters + the mutable broken-replica
+/// set. Wrap each pool replica with [`ChaosPlan::wrap`] (distinct tags) and
+/// a device with [`ChaosPlan::wrap_device`]; all wrappers report into the
+/// same counters.
+pub struct ChaosPlan {
+    cfg: ChaosConfig,
+    counters: ChaosCounters,
+    /// Global dispatch counter driving `stuck_every`.
+    dispatches: AtomicU64,
+    /// Currently-broken replica tags (seeded from `cfg.persistent`;
+    /// `heal`/`break_replica` mutate it mid-run for probation tests).
+    broken: Mutex<HashSet<u32>>,
+}
+
+impl ChaosPlan {
+    pub fn new(cfg: ChaosConfig) -> Arc<ChaosPlan> {
+        let broken = cfg.persistent.iter().copied().collect();
+        Arc::new(ChaosPlan {
+            cfg,
+            counters: ChaosCounters::default(),
+            dispatches: AtomicU64::new(0),
+            broken: Mutex::new(broken),
+        })
+    }
+
+    pub fn config(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    pub fn counters(&self) -> &ChaosCounters {
+        &self.counters
+    }
+
+    /// Wrap one replica. `tag` identifies it in the broken set and salts
+    /// its private injection RNG, so two wrappers with the same tag over
+    /// the same plan inject identical fault sequences.
+    pub fn wrap(
+        self: &Arc<ChaosPlan>,
+        tag: u32,
+        inner: Arc<dyn StepExec + Send + Sync>,
+    ) -> ChaosExec {
+        let salt = (tag as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        ChaosExec {
+            inner,
+            plan: Arc::clone(self),
+            tag,
+            rng: Mutex::new(Rng::new(self.cfg.seed ^ salt)),
+        }
+    }
+
+    /// Wrap a device so its `kv_upload` fails by `upload_fail_per_mille`.
+    pub fn wrap_device(self: &Arc<ChaosPlan>, inner: Arc<dyn DeviceKv>) -> Arc<ChaosDevice> {
+        Arc::new(ChaosDevice {
+            inner,
+            plan: Arc::clone(self),
+            rng: Mutex::new(Rng::new(self.cfg.seed ^ 0xdead_d0d0_cafe)),
+        })
+    }
+
+    /// Mark `tag` persistently failing from now on.
+    pub fn break_replica(&self, tag: u32) {
+        self.broken.lock().unwrap().insert(tag);
+    }
+
+    /// Clear `tag`'s persistent failure (the replica "recovered" — the
+    /// pool's probation probe should now succeed and reinstate it).
+    pub fn heal(&self, tag: u32) {
+        self.broken.lock().unwrap().remove(&tag);
+    }
+
+    pub fn is_broken(&self, tag: u32) -> bool {
+        self.broken.lock().unwrap().contains(&tag)
+    }
+
+    /// Bump the shared dispatch counter and sleep if this dispatch is the
+    /// stuck one.
+    fn note_dispatch(&self) {
+        let n = self.dispatches.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cfg.stuck_every > 0 && n % self.cfg.stuck_every == 0 {
+            self.counters.stuck.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.cfg.stuck_delay);
+        }
+    }
+}
+
+impl std::fmt::Debug for ChaosPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaosPlan")
+            .field("cfg", &self.cfg)
+            .field("dispatches", &self.dispatches.load(Ordering::Relaxed))
+            .field("broken", &*self.broken.lock().unwrap())
+            .finish()
+    }
+}
+
+/// Fault-injecting [`StepExec`] wrapper (see module docs). Metadata
+/// methods delegate untouched; only the forward methods inject.
+pub struct ChaosExec {
+    inner: Arc<dyn StepExec + Send + Sync>,
+    plan: Arc<ChaosPlan>,
+    tag: u32,
+    /// Private injection stream: deterministic per (seed, tag) and
+    /// independent of every other wrapper's rolls.
+    rng: Mutex<Rng>,
+}
+
+impl ChaosExec {
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+
+    pub fn plan(&self) -> &Arc<ChaosPlan> {
+        &self.plan
+    }
+
+    fn transient_err(&self, what: &str) -> anyhow::Error {
+        anyhow::Error::new(TransientError::new(format!(
+            "chaos: injected fault on replica {} ({what})",
+            self.tag
+        )))
+    }
+
+    /// Replica-level faults: stuck delay, then persistent failure. Applies
+    /// once per dispatch (whole batch), like a real dying replica would.
+    fn replica_fault(&self, what: &str) -> Result<()> {
+        self.plan.note_dispatch();
+        if self.plan.is_broken(self.tag) {
+            self.plan.counters.persistent.fetch_add(1, Ordering::Relaxed);
+            return Err(self.transient_err(what));
+        }
+        Ok(())
+    }
+
+    /// One per-mille roll on the private stream; true = inject a transient.
+    fn transient_roll(&self) -> bool {
+        let pm = self.plan.cfg.transient_per_mille;
+        if pm == 0 {
+            return false;
+        }
+        let hit = self.rng.lock().unwrap().below(1000) < pm as u64;
+        if hit {
+            self.plan.counters.transient.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn inject(&self, what: &str) -> Result<()> {
+        self.replica_fault(what)?;
+        if self.transient_roll() {
+            return Err(self.transient_err(what));
+        }
+        Ok(())
+    }
+}
+
+impl StepExec for ChaosExec {
+    fn arch(&self) -> Arch {
+        self.inner.arch()
+    }
+    fn special(&self) -> Specials {
+        self.inner.special()
+    }
+    fn seqs(&self) -> Vec<usize> {
+        self.inner.seqs()
+    }
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.c_ladder(s)
+    }
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        self.inner.r_ladder(s)
+    }
+    fn b_ladder(&self) -> Vec<usize> {
+        self.inner.b_ladder()
+    }
+    fn weight_bank(&self) -> Option<Arc<WeightBank>> {
+        self.inner.weight_bank()
+    }
+    fn device(&self) -> Option<Arc<dyn DeviceKv>> {
+        self.inner.device()
+    }
+
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.inject("full forward")?;
+        self.inner.full(s, ids, valid)
+    }
+
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        self.inject("window forward")?;
+        self.inner.window(s, c, ids, pos, valid)
+    }
+
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        self.inject("cached forward")?;
+        self.inner.cached(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv)
+    }
+
+    fn cached_co(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+                 slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], co: &KvCheckout)
+                 -> Result<(Vec<f32>, KvCache)> {
+        self.inject("cached forward")?;
+        self.inner.cached_co(s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, co)
+    }
+
+    /// Replica-level faults hit the whole batch (it runs on one replica);
+    /// transient faults roll per lane, so one unlucky lane fails while its
+    /// batchmates' results land untouched.
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        let lanes = plans.len();
+        if self.replica_fault("batched forward").is_err() {
+            return (0..lanes).map(|_| Err(self.transient_err("batched forward"))).collect();
+        }
+        self.inner
+            .execute_batch(plans)
+            .into_iter()
+            .map(|out| {
+                if self.transient_roll() {
+                    Err(self.transient_err("batched forward lane"))
+                } else {
+                    out
+                }
+            })
+            .collect()
+    }
+}
+
+/// Fault-injecting [`DeviceKv`] wrapper: `kv_upload` fails by
+/// `upload_fail_per_mille`; everything else delegates. Attach to a
+/// [`KvStore`](crate::scheduler::kvstore::KvStore) to exercise the
+/// promote-failure degrade path deterministically.
+pub struct ChaosDevice {
+    inner: Arc<dyn DeviceKv>,
+    plan: Arc<ChaosPlan>,
+    rng: Mutex<Rng>,
+}
+
+impl ChaosDevice {
+    pub fn inner(&self) -> &Arc<dyn DeviceKv> {
+        &self.inner
+    }
+}
+
+impl DeviceKv for ChaosDevice {
+    fn device_id(&self) -> u64 {
+        self.inner.device_id()
+    }
+    fn weight_bytes(&self) -> usize {
+        self.inner.weight_bytes()
+    }
+    fn kv_upload(&self, seg: u64, s: usize, c: usize, k: &[f32], v: &[f32]) -> Result<usize> {
+        let pm = self.plan.cfg.upload_fail_per_mille;
+        if pm > 0 && self.rng.lock().unwrap().below(1000) < pm as u64 {
+            self.plan.counters.upload_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(TransientError::new(format!(
+                "chaos: injected device kv_upload failure for segment {seg}"
+            ))));
+        }
+        self.inner.kv_upload(seg, s, c, k, v)
+    }
+    fn kv_resident(&self, seg: u64) -> bool {
+        self.inner.kv_resident(seg)
+    }
+    fn kv_evict(&self, seg: u64) -> usize {
+        self.inner.kv_evict(seg)
+    }
+    fn kv_bytes(&self) -> usize {
+        self.inner.kv_bytes()
+    }
+    fn kv_uploads(&self) -> u64 {
+        self.inner.kv_uploads()
+    }
+    fn kv_evictions(&self) -> u64 {
+        self.inner.kv_evictions()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spill-blob vandalism
+// ---------------------------------------------------------------------------
+
+fn spill_blobs(dir: &Path) -> Result<Vec<std::path::PathBuf>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing spill dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("seg-") && name.ends_with(".kv") {
+            out.push(path);
+        }
+    }
+    Ok(out)
+}
+
+/// Overwrite every spilled `seg-*.kv` blob under `dir` with garbage that
+/// fails the `WDKV` codec's magic check. Returns blobs corrupted.
+pub fn corrupt_spill_blobs(dir: &Path) -> Result<usize> {
+    let blobs = spill_blobs(dir)?;
+    for path in &blobs {
+        std::fs::write(path, b"CHAOS!!!")
+            .with_context(|| format!("corrupting spill blob {}", path.display()))?;
+    }
+    Ok(blobs.len())
+}
+
+/// Delete every spilled `seg-*.kv` blob under `dir` (a lost disk tier).
+/// Returns blobs unlinked.
+pub fn unlink_spill_blobs(dir: &Path) -> Result<usize> {
+    let blobs = spill_blobs(dir)?;
+    for path in &blobs {
+        std::fs::remove_file(path)
+            .with_context(|| format!("unlinking spill blob {}", path.display()))?;
+    }
+    Ok(blobs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{is_transient, MockExec};
+    use crate::runtime::MockDevice;
+
+    fn mock(s: usize) -> Arc<dyn StepExec + Send + Sync> {
+        Arc::new(MockExec::new(s))
+    }
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let plan = ChaosPlan::new(ChaosConfig::default());
+        let c = plan.wrap(0, mock(64));
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        for _ in 0..50 {
+            c.full(64, &ids, &valid).unwrap();
+        }
+        assert_eq!(plan.counters().total(), 0);
+    }
+
+    #[test]
+    fn transient_faults_are_deterministic_per_seed_and_tag() {
+        let cfg = ChaosConfig { seed: 7, transient_per_mille: 250, ..Default::default() };
+        let a = ChaosPlan::new(cfg.clone());
+        let b = ChaosPlan::new(cfg);
+        let ca = a.wrap(3, mock(64));
+        let cb = b.wrap(3, mock(64));
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        let run = |c: &ChaosExec| -> Vec<bool> {
+            (0..80)
+                .map(|_| match c.full(64, &ids, &valid) {
+                    Ok(_) => false,
+                    Err(e) => {
+                        assert!(is_transient(&e), "injected fault must classify transient");
+                        true
+                    }
+                })
+                .collect()
+        };
+        let fa = run(&ca);
+        let fb = run(&cb);
+        assert_eq!(fa, fb, "same (seed, tag) must inject at the same dispatches");
+        let n = fa.iter().filter(|&&f| f).count();
+        assert!(n > 0 && n < 80, "25% rate should fail some but not all of 80 ({n})");
+        assert_eq!(a.counters().transient(), n as u64);
+    }
+
+    #[test]
+    fn persistent_replica_fails_until_healed() {
+        let cfg = ChaosConfig { persistent: vec![1], ..Default::default() };
+        let plan = ChaosPlan::new(cfg);
+        let healthy = plan.wrap(0, mock(64));
+        let broken = plan.wrap(1, mock(64));
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        healthy.full(64, &ids, &valid).unwrap();
+        let err = broken.full(64, &ids, &valid).unwrap_err();
+        assert!(is_transient(&err), "persistent fault still retryable elsewhere");
+        assert!(plan.is_broken(1));
+        plan.heal(1);
+        broken.full(64, &ids, &valid).unwrap();
+        plan.break_replica(0);
+        assert!(healthy.full(64, &ids, &valid).is_err());
+        assert_eq!(plan.counters().persistent(), 2);
+    }
+
+    #[test]
+    fn stuck_dispatches_are_counted() {
+        let cfg = ChaosConfig {
+            stuck_every: 2,
+            stuck_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let plan = ChaosPlan::new(cfg);
+        let c = plan.wrap(0, mock(64));
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        for _ in 0..6 {
+            c.full(64, &ids, &valid).unwrap();
+        }
+        assert_eq!(plan.counters().stuck(), 3, "every 2nd of 6 dispatches is stuck");
+    }
+
+    #[test]
+    fn batch_faults_roll_per_lane() {
+        let cfg = ChaosConfig { seed: 11, transient_per_mille: 400, ..Default::default() };
+        let plan = ChaosPlan::new(cfg);
+        let c = plan.wrap(0, mock(64));
+        let mk_plans = || -> Vec<StepPlan> {
+            (0..4)
+                .map(|_| StepPlan::Full { s: 64, ids: vec![1; 64], valid: vec![1.0; 64] })
+                .collect()
+        };
+        let (mut ok, mut err) = (0, 0);
+        for _ in 0..10 {
+            for out in c.execute_batch(mk_plans()) {
+                match out {
+                    Ok(_) => ok += 1,
+                    Err(e) => {
+                        assert!(is_transient(&e));
+                        err += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(ok + err, 40);
+        assert!(ok > 0, "some lanes must survive a 40% rate");
+        assert!(err > 0, "some lanes must fail a 40% rate");
+        assert_eq!(plan.counters().transient(), err as u64);
+    }
+
+    #[test]
+    fn broken_replica_fails_every_batch_lane() {
+        let cfg = ChaosConfig { persistent: vec![2], ..Default::default() };
+        let plan = ChaosPlan::new(cfg);
+        let c = plan.wrap(2, mock(64));
+        let plans: Vec<StepPlan> = (0..3)
+            .map(|_| StepPlan::Full { s: 64, ids: vec![1; 64], valid: vec![1.0; 64] })
+            .collect();
+        let outs = c.execute_batch(plans);
+        assert_eq!(outs.len(), 3);
+        assert!(outs.iter().all(|o| o.is_err()), "dead replica sinks the whole batch");
+    }
+
+    #[test]
+    fn chaos_device_injects_upload_failures() {
+        let always = ChaosPlan::new(ChaosConfig {
+            upload_fail_per_mille: 1000,
+            ..Default::default()
+        });
+        let dev = always.wrap_device(Arc::new(MockDevice::new()));
+        let k = vec![0.5f32; 8];
+        let v = vec![-0.5f32; 8];
+        assert!(dev.kv_upload(1, 64, 16, &k, &v).is_err());
+        assert!(!dev.kv_resident(1), "failed upload leaves nothing resident");
+        assert_eq!(always.counters().upload_failures(), 1);
+        let never = ChaosPlan::new(ChaosConfig::default());
+        let dev = never.wrap_device(Arc::new(MockDevice::new()));
+        dev.kv_upload(1, 64, 16, &k, &v).unwrap();
+        assert!(dev.kv_resident(1));
+        assert_eq!(dev.kv_uploads(), 1);
+    }
+
+    #[test]
+    fn spill_blob_helpers_corrupt_and_unlink() {
+        let dir = std::env::temp_dir().join(format!("wd-chaos-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("seg-1.kv"), b"WDKVvalid-looking-bytes").unwrap();
+        std::fs::write(dir.join("seg-2.kv"), b"WDKVother").unwrap();
+        std::fs::write(dir.join("not-a-blob.txt"), b"left alone").unwrap();
+        assert_eq!(corrupt_spill_blobs(&dir).unwrap(), 2);
+        assert_eq!(std::fs::read(dir.join("seg-1.kv")).unwrap(), b"CHAOS!!!");
+        assert_eq!(std::fs::read(dir.join("not-a-blob.txt")).unwrap(), b"left alone");
+        assert_eq!(unlink_spill_blobs(&dir).unwrap(), 2);
+        assert!(!dir.join("seg-1.kv").exists());
+        assert!(dir.join("not-a-blob.txt").exists());
+        let _ = std::fs::remove_file(dir.join("not-a-blob.txt"));
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -3,6 +3,7 @@
 //! pool behind the multi-worker scheduler (DESIGN.md §"Serving at scale").
 
 pub mod buckets;
+pub mod chaos;
 pub mod device;
 pub mod engine;
 pub mod kvcodec;
@@ -10,6 +11,7 @@ pub mod manifest;
 pub mod pool;
 pub mod weights;
 
+pub use chaos::{ChaosConfig, ChaosDevice, ChaosExec, ChaosPlan};
 pub use device::{DeviceBank, DeviceKv, DeviceMode, MockDevice};
 pub use engine::{BatchedKv, Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
 pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};

@@ -40,9 +40,9 @@
 //! [`EngineCell`]: super::engine::EngineCell
 //! [`KvCache`]: super::engine::KvCache
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -50,8 +50,44 @@ use super::device::{DeviceBank, DeviceKv, DeviceMode};
 use super::engine::{Engine, EngineCell, EngineStatsSnapshot};
 use super::manifest::{Arch, Manifest, Specials};
 use super::weights::{distinct_banks, host_bytes_of, BankMode, WeightBank};
-use crate::coordinator::StepExec;
+use crate::coordinator::{StepExec, StepOutputs, TransientError};
 use crate::trace::TraceRecorder;
+
+/// Condvar wait slice: bounded so a waiter re-checks quarantine state (a
+/// replica parked mid-wait, a probation window elapsing) instead of
+/// sleeping until a wakeup that may never come.
+const CHECKOUT_WAIT_SLICE: Duration = Duration::from_millis(100);
+
+/// Default consecutive-failure threshold before a replica is quarantined
+/// (0 disables quarantine entirely).
+pub const DEFAULT_QUARANTINE_AFTER: u32 = 3;
+
+/// Default probation window: how long a quarantined replica sits parked
+/// before checkout may hand it out again as a probe.
+pub const DEFAULT_PROBATION_MS: u64 = 1000;
+
+/// A replica's health state in the checkout rotation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// In rotation.
+    Healthy,
+    /// Parked after `quarantine_after` consecutive failures; skipped by
+    /// checkout until its probation window elapses.
+    Quarantined,
+    /// Handed out as a probation probe: the next step decides — success
+    /// reinstates, failure re-quarantines.
+    Probation,
+}
+
+impl ReplicaHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaHealth::Healthy => "healthy",
+            ReplicaHealth::Quarantined => "quarantined",
+            ReplicaHealth::Probation => "probation",
+        }
+    }
+}
 
 /// Per-replica observability row (`GET /metrics` → `replicas`).
 #[derive(Debug, Clone)]
@@ -61,15 +97,54 @@ pub struct ReplicaStats {
     pub steps: u64,
     /// PJRT execution counters (`None` for non-engine replicas, e.g. mocks).
     pub engine: Option<EngineStatsSnapshot>,
+    /// Current health state (see [`ReplicaHealth`]).
+    pub health: ReplicaHealth,
+    /// Consecutive failed steps (reset on any success).
+    pub consecutive_failures: u32,
+}
+
+/// Mutable per-replica health record (under the scheduler mutex).
+#[derive(Debug)]
+struct LaneHealth {
+    state: ReplicaHealth,
+    consecutive_failures: u32,
+    quarantined_at: Option<Instant>,
+}
+
+impl LaneHealth {
+    fn new() -> LaneHealth {
+        LaneHealth { state: ReplicaHealth::Healthy, consecutive_failures: 0, quarantined_at: None }
+    }
+}
+
+/// Checkout bookkeeping: the idle stack, the quarantine parking lot, and
+/// per-replica health — one mutex so state transitions are atomic.
+#[derive(Debug)]
+struct PoolSched {
+    /// Replicas available for checkout (popped from the back).
+    idle: Vec<usize>,
+    /// Quarantined idle replicas: out of rotation until probation.
+    parked: Vec<usize>,
+    lanes: Vec<LaneHealth>,
 }
 
 pub struct EnginePool {
     replicas: Vec<Arc<dyn StepExec + Send + Sync>>,
     /// Typed handles for engine-stat aggregation (empty for mock pools).
     cells: Vec<Arc<EngineCell>>,
-    /// Indices of replicas not currently executing a step.
-    idle: Mutex<Vec<usize>>,
+    /// Idle stack + quarantine parking lot + per-replica health.
+    sched: Mutex<PoolSched>,
     available: Condvar,
+    /// Consecutive failures before quarantine; 0 disables quarantine.
+    quarantine_after: AtomicU32,
+    /// Probation window a quarantined replica sits out, in milliseconds.
+    probation_ms: AtomicU64,
+    /// Replica quarantine events over the pool's lifetime.
+    quarantines: AtomicU64,
+    /// Probation probes handed out (each ends in reinstate or re-quarantine).
+    probes: AtomicU64,
+    /// Replicas returned to rotation by a successful probation probe.
+    reinstates: AtomicU64,
     /// Per-replica step counters (lock-free; safe to read from `/metrics`).
     steps: Vec<AtomicU64>,
     /// Optional span recorder (see [`EnginePool::attach_trace`]). Unattached
@@ -108,8 +183,8 @@ pub struct EnginePool {
     b_ladder: Vec<usize>,
 }
 
-/// RAII checkout: returns the replica to the idle set on drop, waking one
-/// waiter.
+/// RAII checkout: returns the replica to rotation on drop — the idle stack
+/// for healthy replicas, the quarantine parking lot otherwise.
 struct Checkout<'a> {
     pool: &'a EnginePool,
     idx: usize,
@@ -117,8 +192,30 @@ struct Checkout<'a> {
 
 impl Drop for Checkout<'_> {
     fn drop(&mut self) {
-        self.pool.idle.lock().unwrap().push(self.idx);
-        self.pool.available.notify_one();
+        let mut sched = self.pool.sched.lock().unwrap();
+        let (state, failures) = {
+            let lane = &sched.lanes[self.idx];
+            (lane.state, lane.consecutive_failures)
+        };
+        if state == ReplicaHealth::Quarantined {
+            sched.parked.push(self.idx);
+            drop(sched);
+            // wake every waiter: if this was the last in-flight replica
+            // they must discover the all-quarantined state now, not after
+            // a full wait slice
+            self.pool.available.notify_all();
+        } else if failures > 0 {
+            // a recently-failed (but not yet quarantined) replica goes to
+            // the BOTTOM of the stack, so a retry lands on a different
+            // replica whenever any other is free
+            sched.idle.insert(0, self.idx);
+            drop(sched);
+            self.pool.available.notify_one();
+        } else {
+            sched.idle.push(self.idx);
+            drop(sched);
+            self.pool.available.notify_one();
+        }
     }
 }
 
@@ -297,9 +394,18 @@ impl EnginePool {
         Ok(Arc::new(EnginePool {
             replicas,
             cells,
-            // reversed so pop() hands out replica 0 first
-            idle: Mutex::new((0..n).rev().collect()),
+            sched: Mutex::new(PoolSched {
+                // reversed so pop() hands out replica 0 first
+                idle: (0..n).rev().collect(),
+                parked: Vec::new(),
+                lanes: (0..n).map(|_| LaneHealth::new()).collect(),
+            }),
             available: Condvar::new(),
+            quarantine_after: AtomicU32::new(DEFAULT_QUARANTINE_AFTER),
+            probation_ms: AtomicU64::new(DEFAULT_PROBATION_MS),
+            quarantines: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            reinstates: AtomicU64::new(0),
             steps: (0..n).map(|_| AtomicU64::new(0)).collect(),
             trace: OnceLock::new(),
             bank: banks.into_iter().next(),
@@ -326,32 +432,152 @@ impl EnginePool {
         let _ = self.trace.set(tr);
     }
 
-    fn checkout(&self) -> Checkout<'_> {
+    /// Tune the replica-health policy (serve flags `--quarantine-after`,
+    /// `--probation-ms`). `quarantine_after == 0` disables quarantine.
+    pub fn configure_health(&self, quarantine_after: u32, probation_ms: u64) {
+        self.quarantine_after.store(quarantine_after, Ordering::Relaxed);
+        self.probation_ms.store(probation_ms, Ordering::Relaxed);
+    }
+
+    /// Check out a replica: a healthy idle one if any, else a quarantined
+    /// one whose probation has elapsed (handed out as a probe). Errors with
+    /// an all-quarantined status — instead of blocking forever on the
+    /// condvar — when every replica is parked and none is probe-eligible;
+    /// waits in bounded slices while replicas are merely busy.
+    fn checkout(&self) -> Result<Checkout<'_>> {
         let t0 = self.trace.get().map(|_| Instant::now());
-        let mut idle = self.idle.lock().unwrap();
+        let mut sched = self.sched.lock().unwrap();
         loop {
-            if let Some(idx) = idle.pop() {
-                drop(idle);
+            if let Some(idx) = sched.idle.pop() {
+                drop(sched);
                 if let (Some(tr), Some(t0)) = (self.trace.get(), t0) {
                     tr.pool_wait(idx as u32, t0, Instant::now());
                 }
-                return Checkout { pool: self, idx };
+                return Ok(Checkout { pool: self, idx });
             }
-            idle = self.available.wait(idle).unwrap();
+            // probation: the oldest-parked replica whose window elapsed
+            // becomes a probe — its next step decides its fate
+            let probation = Duration::from_millis(self.probation_ms.load(Ordering::Relaxed));
+            let now = Instant::now();
+            let probe = {
+                let PoolSched { parked, lanes, .. } = &*sched;
+                #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
+                parked.iter().position(|&i| {
+                    lanes[i]
+                        .quarantined_at
+                        .map_or(true, |t| now.duration_since(t) >= probation)
+                })
+            };
+            if let Some(pos) = probe {
+                let idx = sched.parked.remove(pos);
+                sched.lanes[idx].state = ReplicaHealth::Probation;
+                drop(sched);
+                self.probes.fetch_add(1, Ordering::Relaxed);
+                if let (Some(tr), Some(t0)) = (self.trace.get(), t0) {
+                    tr.pool_wait(idx as u32, t0, Instant::now());
+                }
+                return Ok(Checkout { pool: self, idx });
+            }
+            // Nothing idle and nothing probe-eligible. If every replica is
+            // parked, no in-flight step will ever return one — fail fast
+            // with a status the caller can surface (marked transient so a
+            // bounded scheduler retry can outlive a short probation).
+            if sched.parked.len() == self.replicas.len() {
+                return Err(anyhow::Error::new(TransientError::new(format!(
+                    "engine pool: all {} replicas quarantined",
+                    self.replicas.len()
+                ))));
+            }
+            let (guard, _) = self.available.wait_timeout(sched, CHECKOUT_WAIT_SLICE).unwrap();
+            sched = guard;
         }
     }
 
-    /// Run `f` on an idle replica, blocking until one frees up. This is the
-    /// whole concurrency story: K concurrent callers occupy K replicas.
-    pub fn with_replica<R>(&self, f: impl FnOnce(&dyn StepExec) -> R) -> R {
-        let co = self.checkout();
+    /// Record a step outcome for replica `idx`: success resets the failure
+    /// streak (and reinstates a probe); failure extends it and quarantines
+    /// at the threshold (a failed probe re-quarantines immediately).
+    fn note_step_outcome(&self, idx: usize, ok: bool) {
+        let now = Instant::now();
+        let threshold = self.quarantine_after.load(Ordering::Relaxed);
+        let mut sched = self.sched.lock().unwrap();
+        let lane = &mut sched.lanes[idx];
+        if ok {
+            let probed = lane.state == ReplicaHealth::Probation;
+            lane.consecutive_failures = 0;
+            lane.quarantined_at = None;
+            lane.state = ReplicaHealth::Healthy;
+            drop(sched);
+            if probed {
+                self.reinstates.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = self.trace.get() {
+                    tr.probation(idx as u32, true, now);
+                }
+            }
+            return;
+        }
+        lane.consecutive_failures += 1;
+        let failed_probe = lane.state == ReplicaHealth::Probation;
+        let over_threshold = threshold > 0 && lane.consecutive_failures >= threshold;
+        if (failed_probe || over_threshold) && lane.state != ReplicaHealth::Quarantined {
+            lane.state = ReplicaHealth::Quarantined;
+            lane.quarantined_at = Some(now);
+            drop(sched);
+            self.quarantines.fetch_add(1, Ordering::Relaxed);
+            if let Some(tr) = self.trace.get() {
+                if failed_probe {
+                    tr.probation(idx as u32, false, now);
+                }
+                tr.quarantine(idx as u32, now);
+            }
+        }
+    }
+
+    /// Run a fallible forward on an idle replica, blocking (in bounded
+    /// slices) while all are busy. This is the whole concurrency story —
+    /// K concurrent callers occupy K replicas — plus the health loop:
+    /// every outcome feeds the replica's failure streak.
+    pub fn with_replica<T>(
+        &self,
+        f: impl FnOnce(&dyn StepExec) -> Result<T>,
+    ) -> Result<T> {
+        let co = self.checkout()?;
         self.steps[co.idx].fetch_add(1, Ordering::Relaxed);
         let t0 = self.trace.get().map(|_| Instant::now());
         let r = f(self.replicas[co.idx].as_ref());
         if let (Some(tr), Some(t0)) = (self.trace.get(), t0) {
             tr.exec_span(co.idx as u32, t0, Instant::now());
         }
+        self.note_step_outcome(co.idx, r.is_ok());
         r
+    }
+
+    /// Batched variant: the whole batch runs on ONE replica. The replica is
+    /// charged a *failure* only when every lane failed (a dead replica
+    /// sinks all lanes; a single unlucky lane shouldn't cost it health).
+    /// A checkout failure (all quarantined) fans per-lane transient errors.
+    pub fn with_replica_lanes(
+        &self,
+        lanes: usize,
+        f: impl FnOnce(&dyn StepExec) -> Vec<Result<StepOutputs>>,
+    ) -> Vec<Result<StepOutputs>> {
+        let co = match self.checkout() {
+            Ok(co) => co,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                return (0..lanes)
+                    .map(|_| Err(anyhow::Error::new(TransientError::new(msg.clone()))))
+                    .collect();
+            }
+        };
+        self.steps[co.idx].fetch_add(1, Ordering::Relaxed);
+        let t0 = self.trace.get().map(|_| Instant::now());
+        let outs = f(self.replicas[co.idx].as_ref());
+        if let (Some(tr), Some(t0)) = (self.trace.get(), t0) {
+            tr.exec_span(co.idx as u32, t0, Instant::now());
+        }
+        let all_failed = !outs.is_empty() && outs.iter().all(|o| o.is_err());
+        self.note_step_outcome(co.idx, !all_failed);
+        outs
     }
 
     pub fn replicas(&self) -> usize {
@@ -424,13 +650,49 @@ impl EnginePool {
 
     /// Per-replica observability rows.
     pub fn per_replica_stats(&self) -> Vec<ReplicaStats> {
+        let health: Vec<(ReplicaHealth, u32)> = {
+            let sched = self.sched.lock().unwrap();
+            sched.lanes.iter().map(|l| (l.state, l.consecutive_failures)).collect()
+        };
         (0..self.replicas.len())
             .map(|i| ReplicaStats {
                 id: i,
                 steps: self.steps[i].load(Ordering::Relaxed),
                 engine: self.cells.get(i).map(|c| c.stats()),
+                health: health[i].0,
+                consecutive_failures: health[i].1,
             })
             .collect()
+    }
+
+    // -- replica-health gauges ------------------------------------------------
+
+    /// Replica quarantine events over the pool's lifetime.
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Probation probes handed out over the pool's lifetime.
+    pub fn probation_probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    /// Replicas reinstated by a successful probation probe.
+    pub fn reinstates(&self) -> u64 {
+        self.reinstates.load(Ordering::Relaxed)
+    }
+
+    /// Replicas currently out of rotation (quarantined or on probation).
+    pub fn quarantined_count(&self) -> usize {
+        let sched = self.sched.lock().unwrap();
+        sched.lanes.iter().filter(|l| l.state != ReplicaHealth::Healthy).count()
+    }
+
+    /// Whether every replica is currently quarantined — the `/healthz`
+    /// 503 condition: the pool cannot serve a step until probation.
+    pub fn all_quarantined(&self) -> bool {
+        let sched = self.sched.lock().unwrap();
+        sched.lanes.iter().all(|l| l.state == ReplicaHealth::Quarantined)
     }
 
     // -- metadata snapshot accessors (used by the StepExec impl) --------------
@@ -526,6 +788,89 @@ mod tests {
         let execs: Vec<_> = ev.iter().filter(|e| e.stage == Stage::Exec).collect();
         assert_eq!(execs.len(), 2, "one exec span per forward");
         assert!(execs.iter().all(|e| e.replica.is_some()), "exec spans carry replica ids");
+    }
+
+    fn chaos_pool(n: usize) -> (Arc<crate::runtime::chaos::ChaosPlan>, Arc<EnginePool>) {
+        use crate::runtime::chaos::{ChaosConfig, ChaosPlan};
+        let plan = ChaosPlan::new(ChaosConfig::default());
+        let replicas: Vec<Arc<dyn StepExec + Send + Sync>> = (0..n)
+            .map(|i| {
+                let inner: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(64));
+                Arc::new(plan.wrap(i as u32, inner)) as Arc<dyn StepExec + Send + Sync>
+            })
+            .collect();
+        (plan, EnginePool::new(replicas).unwrap())
+    }
+
+    /// Regression: with every replica quarantined, checkout must error with
+    /// a clear status instead of blocking forever on the condvar.
+    #[test]
+    fn all_quarantined_pool_fails_fast_instead_of_blocking() {
+        use crate::coordinator::is_transient;
+        let (plan, p) = chaos_pool(2);
+        p.configure_health(1, 60_000);
+        plan.break_replica(0);
+        plan.break_replica(1);
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        assert!(p.full(64, &ids, &valid).is_err());
+        assert!(p.full(64, &ids, &valid).is_err());
+        assert_eq!(p.quarantines(), 2);
+        assert!(p.all_quarantined());
+        assert_eq!(p.quarantined_count(), 2);
+        let t0 = Instant::now();
+        let err = p.full(64, &ids, &valid).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "checkout must fail fast");
+        assert!(is_transient(&err), "all-quarantined is retryable: {err:#}");
+        assert!(format!("{err:#}").contains("quarantined"), "got: {err:#}");
+        let stats = p.per_replica_stats();
+        assert!(stats.iter().all(|r| r.health == ReplicaHealth::Quarantined));
+        assert!(stats.iter().all(|r| r.consecutive_failures >= 1));
+    }
+
+    #[test]
+    fn probation_reinstates_healed_replicas() {
+        let (plan, p) = chaos_pool(2);
+        // quarantine after ONE failure, zero-length probation window so the
+        // lifecycle is deterministic without sleeping
+        p.configure_health(1, 0);
+        plan.break_replica(0);
+        plan.break_replica(1);
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        assert!(p.full(64, &ids, &valid).is_err());
+        assert!(p.full(64, &ids, &valid).is_err());
+        assert_eq!(p.quarantined_count(), 2);
+        // probation elapsed immediately: the next checkout probes the
+        // oldest-parked replica, the probe fails, it re-quarantines
+        assert!(p.full(64, &ids, &valid).is_err());
+        assert!(p.probation_probes() >= 1);
+        assert!(p.quarantines() >= 3, "failed probe re-quarantines");
+        // heal: the next probe succeeds and reinstates its replica
+        plan.heal(0);
+        plan.heal(1);
+        assert!(p.full(64, &ids, &valid).is_ok());
+        assert_eq!(p.reinstates(), 1);
+        assert!(!p.all_quarantined());
+        assert!(p.full(64, &ids, &valid).is_ok(), "reinstated replica serves");
+        let stats = p.per_replica_stats();
+        assert!(stats.iter().any(|r| r.health == ReplicaHealth::Healthy));
+    }
+
+    /// A failed-but-not-quarantined replica returns to the BOTTOM of the
+    /// idle stack, so an immediate retry lands on a different replica.
+    #[test]
+    fn failed_replica_yields_rotation_priority() {
+        let (plan, p) = chaos_pool(2);
+        p.configure_health(0, 1000); // quarantine disabled
+        plan.break_replica(0);
+        let ids = vec![1i32; 64];
+        let valid = vec![1.0f32; 64];
+        assert!(p.full(64, &ids, &valid).is_err());
+        plan.heal(0);
+        assert!(p.full(64, &ids, &valid).is_ok());
+        assert_eq!(p.replica_steps(), vec![1, 1], "retry must pick the other replica");
+        assert_eq!(p.quarantines(), 0, "quarantine disabled at threshold 0");
     }
 
     /// Two calls that *must* overlap: a barrier inside the executor

@@ -79,6 +79,32 @@ impl PrefixKey {
     }
 }
 
+/// Typed marker on checkout errors: the segment's spilled blob is missing
+/// or corrupt (or its bytes were dropped after a failed spill write), so the
+/// store cannot materialize it. The bytes are gone but the *session* isn't:
+/// schedulers catch this (see [`is_segment_lost`]) and degrade the session
+/// to recompute — evict the handle, replan a Window/Full refresh — instead
+/// of failing the request.
+#[derive(Debug)]
+pub struct SegmentLost {
+    pub segment: u64,
+}
+
+impl std::fmt::Display for SegmentLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv segment {} lost (spill blob missing or corrupt)", self.segment)
+    }
+}
+
+impl std::error::Error for SegmentLost {}
+
+/// Whether `e`'s chain carries a [`SegmentLost`] marker — the scheduler's
+/// cue to degrade to recompute rather than burn a retry attempt (the same
+/// forward would hit the same missing bytes on any replica).
+pub fn is_segment_lost(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<SegmentLost>().is_some())
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct KvStoreConfig {
     /// Hot-tier soft limit in bytes; 0 disables spilling entirely.
@@ -183,6 +209,13 @@ pub struct KvStore {
     spills: AtomicU64,
     rehydrates: AtomicU64,
     spill_errors: AtomicU64,
+    /// Checkouts that found their spill blob missing or corrupt — each one
+    /// surfaced a [`SegmentLost`] and degraded a session to recompute.
+    rehydrate_failures: AtomicU64,
+    /// Hot segments dropped because their spill *write* failed: rather than
+    /// wedge above the soft limit (the old left-hot behavior), the bytes are
+    /// released and later checkouts degrade to recompute.
+    spill_drops: AtomicU64,
     prefix_hits: AtomicU64,
     prefix_misses: AtomicU64,
     hot_peak: AtomicUsize,
@@ -221,6 +254,8 @@ impl KvStore {
             spills: AtomicU64::new(0),
             rehydrates: AtomicU64::new(0),
             spill_errors: AtomicU64::new(0),
+            rehydrate_failures: AtomicU64::new(0),
+            spill_drops: AtomicU64::new(0),
             prefix_hits: AtomicU64::new(0),
             prefix_misses: AtomicU64::new(0),
             hot_peak: AtomicUsize::new(0),
@@ -291,8 +326,10 @@ impl KvStore {
     }
 
     /// Spill least-recently-touched unpinned hot segments until the hot
-    /// tier fits the soft limit (or nothing spillable remains). IO errors
-    /// leave the victim hot and count `spill_errors` — degraded, not wrong.
+    /// tier fits the soft limit (or nothing spillable remains). A failed
+    /// spill *write* must not wedge the tier above its limit: the victim's
+    /// bytes are dropped anyway (`spill_drops`) and its later checkouts
+    /// degrade to recompute via [`SegmentLost`] — slower, never stuck.
     fn enforce_soft(&self, inner: &mut StoreInner) {
         let soft = self.cfg.soft_bytes;
         if soft == 0 {
@@ -308,10 +345,35 @@ impl KvStore {
             let Some(id) = victim else { break };
             if let Err(e) = self.spill_one(inner, id) {
                 self.spill_errors.fetch_add(1, Ordering::Relaxed);
-                eprintln!("kvstore: spill of segment {id} failed (left hot): {e:#}");
-                break;
+                eprintln!("kvstore: spill of segment {id} failed (dropping, will \
+                           recompute): {e:#}");
+                self.drop_hot_bytes(inner, id);
             }
         }
+    }
+
+    /// Drop-with-recompute: release a hot segment's bytes after its spill
+    /// write failed. The segment record survives as `Spilled` pointing at a
+    /// blob that does not exist, so outstanding handles stay valid and the
+    /// next checkout reports [`SegmentLost`] — the scheduler's cue to evict
+    /// and replan. Freed bytes feed the same backpressure meter as real
+    /// spills (memory genuinely came back).
+    fn drop_hot_bytes(&self, inner: &mut StoreInner, id: u64) {
+        let dir = inner.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+        let Some(seg) = inner.segments.get_mut(&id) else { return };
+        if !matches!(seg.residency, Residency::Hot(_)) {
+            return;
+        }
+        let path = dir.join(format!("seg-{id}.kv"));
+        // a partial blob from the failed write must not satisfy a later
+        // rehydrate read
+        let _ = std::fs::remove_file(&path);
+        let bytes = seg.bytes;
+        seg.residency = Residency::Spilled(path);
+        inner.hot_bytes -= bytes;
+        inner.spilled_bytes += bytes;
+        self.spill_drops.fetch_add(1, Ordering::Relaxed);
+        self.spill_freed_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Demote `id`'s device copy (free: the host mirror stays). No-op for
@@ -415,21 +477,40 @@ impl KvStore {
             Residency::Spilled(path) => {
                 let t0 = Instant::now();
                 let path = path.clone();
+                // Failed rehydrates release this checkout's ref + pin
+                // exactly once and surface a typed [`SegmentLost`]: the
+                // session degrades to recompute instead of dying with an
+                // opaque IO error. The segment record stays (other handles
+                // still reference it); every later checkout fails the same
+                // way until the last handle drops it.
+                let fail = |seg: &mut Segment, e: anyhow::Error| {
+                    debug_assert!(seg.refs > 0, "failed checkout releasing dead segment");
+                    debug_assert!(seg.pins > 0, "failed checkout unpinning unpinned segment");
+                    seg.refs -= 1;
+                    seg.pins -= 1;
+                    anyhow::Error::new(SegmentLost { segment: id }).context(format!("{e:#}"))
+                };
                 let blob = std::fs::read(&path)
                     .with_context(|| format!("reading spill blob {}", path.display()));
                 let blob = match blob {
                     Ok(b) => b,
                     Err(e) => {
-                        seg.refs -= 1;
-                        seg.pins -= 1;
+                        let e = fail(seg, e);
+                        self.rehydrate_failures.fetch_add(1, Ordering::Relaxed);
+                        if let Some(tr) = self.trace.get() {
+                            tr.rehydrate_fail(id, Instant::now());
+                        }
                         return Err(e);
                     }
                 };
                 let (s, c, k, v) = match kvcodec::decode(&blob) {
                     Ok(d) => d,
                     Err(e) => {
-                        seg.refs -= 1;
-                        seg.pins -= 1;
+                        let e = fail(seg, e);
+                        self.rehydrate_failures.fetch_add(1, Ordering::Relaxed);
+                        if let Some(tr) = self.trace.get() {
+                            tr.rehydrate_fail(id, Instant::now());
+                        }
                         return Err(e);
                     }
                 };
@@ -639,6 +720,18 @@ impl KvStore {
 
     pub fn spill_errors(&self) -> u64 {
         self.spill_errors.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that lost their segment to a missing/corrupt spill blob
+    /// (each surfaced a [`SegmentLost`] degrade).
+    pub fn rehydrate_failures(&self) -> u64 {
+        self.rehydrate_failures.load(Ordering::Relaxed)
+    }
+
+    /// Hot segments dropped after a failed spill write (degrade-to-recompute
+    /// instead of wedging the hot tier above its limit).
+    pub fn spill_drops(&self) -> u64 {
+        self.spill_drops.load(Ordering::Relaxed)
     }
 
     pub fn prefix_hits(&self) -> u64 {
@@ -933,6 +1026,101 @@ mod tests {
         assert!(store.hot_bytes() <= store.soft_bytes());
         drop(h1);
         drop(h2);
+    }
+
+    #[test]
+    fn lost_spill_blob_degrades_to_segment_lost() {
+        let one = cache(64, 16, 9.0);
+        let bytes_each = 4 * (one.k_host().unwrap().len() + one.v_host().unwrap().len());
+        let dir = std::env::temp_dir().join(format!(
+            "wd-kvstore-lost-{}-{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: bytes_each + bytes_each / 2,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        let h1 = store.insert(&one).unwrap();
+        let h2 = store.insert(&cache(64, 16, 10.0)).unwrap();
+        assert_eq!(store.spills(), 1, "h1 spilled to make room for h2");
+        // destroy the blob behind the store's back (chaos unlink hook)
+        assert_eq!(crate::runtime::chaos::unlink_spill_blobs(&dir).unwrap(), 1);
+        let err = h1.checkout().unwrap_err();
+        assert!(is_segment_lost(&err), "expected SegmentLost, got: {err:#}");
+        assert_eq!(store.rehydrate_failures(), 1);
+        // the record survives for outstanding handles: a second checkout
+        // fails the same (typed) way rather than panicking on accounting
+        assert!(is_segment_lost(&h1.checkout().unwrap_err()));
+        assert_eq!(store.rehydrate_failures(), 2);
+        // each failed checkout released its ref + pin exactly once, so the
+        // handles drop the segment cleanly
+        drop(h1);
+        drop(h2);
+        assert_eq!(store.segment_count(), 0);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_blob_degrades_to_segment_lost() {
+        let one = cache(64, 16, 13.0);
+        let bytes_each = 4 * (one.k_host().unwrap().len() + one.v_host().unwrap().len());
+        let dir = std::env::temp_dir().join(format!(
+            "wd-kvstore-corrupt-{}-{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: bytes_each + bytes_each / 2,
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        });
+        let h1 = store.insert(&one).unwrap();
+        let _h2 = store.insert(&cache(64, 16, 14.0)).unwrap();
+        assert_eq!(store.spills(), 1);
+        assert_eq!(crate::runtime::chaos::corrupt_spill_blobs(&dir).unwrap(), 1);
+        let err = h1.checkout().unwrap_err();
+        assert!(is_segment_lost(&err), "decode failure must degrade: {err:#}");
+        assert_eq!(store.rehydrate_failures(), 1);
+        drop(h1);
+        drop(_h2);
+        assert_eq!(store.segment_count(), 0);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn failed_spill_write_drops_bytes_instead_of_wedging() {
+        let one = cache(64, 16, 11.0);
+        let bytes_each = 4 * (one.k_host().unwrap().len() + one.v_host().unwrap().len());
+        // the spill "dir" is a FILE, so every spill write fails
+        let bogus = std::env::temp_dir().join(format!(
+            "wd-kvstore-notdir-{}-{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&bogus, b"not a directory").unwrap();
+        let store = KvStore::new(KvStoreConfig {
+            soft_bytes: bytes_each,
+            spill_dir: Some(bogus.clone()),
+            ..Default::default()
+        });
+        let h1 = store.insert(&one).unwrap();
+        let h2 = store.insert(&cache(64, 16, 12.0)).unwrap();
+        // the overflow spill failed, but the victim's bytes were dropped
+        // anyway: the hot tier must NOT wedge above its limit
+        assert!(store.spill_drops() >= 1, "failed spill write must drop");
+        assert!(store.spill_errors() >= 1);
+        assert!(
+            store.hot_bytes() <= store.soft_bytes(),
+            "hot tier wedged above the soft limit after a failed spill"
+        );
+        // the dropped segment degrades to recompute at checkout
+        assert!(is_segment_lost(&h1.checkout().unwrap_err()));
+        drop(h1);
+        drop(h2);
+        assert_eq!(store.segment_count(), 0);
+        let _ = std::fs::remove_file(&bogus);
     }
 
     #[test]

@@ -71,9 +71,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::plan::{
-    execute_plan, ForwardKind, KvOut, Planned, Promotion, StepOutputs, StepPlan,
+    execute_plan, execute_plan_recoverable, ForwardKind, KvOut, Planned, Promotion,
+    StepOutputs, StepPlan,
 };
-use crate::coordinator::{GenRequest, GenResult, StepExec};
+use crate::coordinator::{is_transient, GenRequest, GenResult, StepExec};
 use crate::metrics::Metrics;
 use crate::runtime::{buckets, Arch};
 use crate::strategies::{self, Session, StepOutcome};
@@ -148,6 +149,19 @@ pub struct SchedulerConfig {
     /// path; `Ring` records spans into a bounded ring (`GET /trace`) and
     /// feeds the per-stage latency histograms on `GET /metrics`.
     pub trace: TraceMode,
+    /// Transient-fault retry budget per session *streak*: a failed forward
+    /// classified transient (see [`crate::coordinator::is_transient`])
+    /// cancels the plan — restoring decode state and KV handles — and
+    /// re-queues the session for up to this many consecutive attempts; any
+    /// successful step resets the streak. 0 disables retries (every forward
+    /// failure fails the ticket — the pre-fault-tolerance behavior).
+    pub max_step_retries: u32,
+    /// Pause before a retried session is eligible to be picked again — the
+    /// injectable clock for retry pacing. `Duration::ZERO` retries
+    /// immediately (what deterministic tests want: a manual
+    /// `while tick().is_some()` drain never observes an empty-but-backing-
+    /// off queue).
+    pub retry_backoff: Duration,
 }
 
 impl Default for SchedulerConfig {
@@ -164,6 +178,8 @@ impl Default for SchedulerConfig {
             batch_policy: BatchPolicy::Fixed,
             coalesce_waste_pct: 0,
             trace: TraceMode::Off,
+            max_step_retries: 3,
+            retry_backoff: Duration::from_millis(5),
         }
     }
 }
@@ -278,6 +294,11 @@ struct Active {
     deadline: Option<Instant>,
     /// Quantum counter at the session's last step (LRU for eviction).
     last_stepped: u64,
+    /// Consecutive transient-failure retries; reset by any successful step.
+    attempts: u32,
+    /// While set (and in the future), the session is invisible to
+    /// `pick_active` — the retry pacing clock.
+    backoff_until: Option<Instant>,
 }
 
 struct Inner {
@@ -513,6 +534,8 @@ impl Scheduler {
             ticket: Arc::clone(&ticket_inner),
             deadline: spec.deadline.map(|d| Instant::now() + d),
             last_stepped: 0,
+            attempts: 0,
+            backoff_until: None,
         });
         if let Some(tr) = &self.trace {
             tr.admit(id, Instant::now());
@@ -547,22 +570,85 @@ impl Scheduler {
         }
     }
 
-    /// Remove the policy's next session from the run queue.
+    /// Remove the policy's next session from the run queue. Sessions inside
+    /// a retry backoff window are invisible to the policy until it expires
+    /// — `None` when nothing is eligible *right now* (drivers re-poll on the
+    /// run-loop wait timeout, so a backing-off queue is never stranded).
     fn pick_active(&self, inner: &mut Inner) -> Option<Active> {
         if inner.run.is_empty() {
             return None;
         }
-        let views: Vec<policy::PickView> = inner
-            .run
-            .iter()
-            .map(|a| policy::PickView {
-                remaining: a.session.remaining(),
-                deadline: a.deadline,
-                seq: a.seq,
-            })
-            .collect();
+        let now = Instant::now();
+        let mut eligible: Vec<usize> = Vec::with_capacity(inner.run.len());
+        let mut views: Vec<policy::PickView> = Vec::with_capacity(inner.run.len());
+        for (i, a) in inner.run.iter().enumerate() {
+            #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
+            let ready = a.backoff_until.map_or(true, |t| t <= now);
+            if ready {
+                eligible.push(i);
+                views.push(policy::PickView {
+                    remaining: a.session.remaining(),
+                    deadline: a.deadline,
+                    seq: a.seq,
+                });
+            }
+        }
+        if views.is_empty() {
+            return None;
+        }
         let idx = policy::pick(self.cfg.policy, &views);
-        inner.run.remove(idx)
+        inner.run.remove(eligible[idx])
+    }
+
+    /// Route one lane's failed forward: degrade, retry, or fail the ticket.
+    ///
+    /// * [`kvstore::SegmentLost`] — the session's cached segment is gone
+    ///   from every tier (spill blob missing or corrupt), so retrying the
+    ///   same plan can only fail again on any replica. Cancel the plan,
+    ///   evict the dead cache, and re-queue: the session's next plan is a
+    ///   refresh forward that recomputes the segment. Degradation never
+    ///   burns a retry attempt.
+    /// * Transient (replica fault, all replicas quarantined) within budget —
+    ///   cancel the plan (restoring decode state and KV handles) and
+    ///   re-queue behind the backoff window. The pool rotates a failed
+    ///   replica to the bottom of its idle stack, so the retry lands on a
+    ///   different replica whenever one exists.
+    /// * Transient with the budget exhausted — fail the ticket with an
+    ///   error that names the retry count, distinguishing
+    ///   transient-exhausted from fatal.
+    /// * Anything else is fatal and passes through unchanged.
+    fn route_failure(&self, active: &mut Active, plan: StepPlan,
+                     e: anyhow::Error) -> Result<StepOutcome> {
+        let now = Instant::now();
+        if kvstore::is_segment_lost(&e) {
+            active.session.cancel_plan(plan);
+            active.session.evict_cache();
+            self.metrics.degraded_recomputes.fetch_add(1, Ordering::Relaxed);
+            if let Some(tr) = &self.trace {
+                tr.degrade(active.id, now);
+            }
+            return Ok(StepOutcome::Running);
+        }
+        if is_transient(&e) && active.attempts < self.cfg.max_step_retries {
+            active.session.cancel_plan(plan);
+            active.attempts += 1;
+            if !self.cfg.retry_backoff.is_zero() {
+                active.backoff_until = Some(now + self.cfg.retry_backoff);
+            }
+            self.metrics.step_retries.fetch_add(1, Ordering::Relaxed);
+            if let Some(tr) = &self.trace {
+                tr.retry(active.id, active.attempts, now);
+            }
+            return Ok(StepOutcome::Running);
+        }
+        if is_transient(&e) {
+            self.metrics.step_retries_exhausted.fetch_add(1, Ordering::Relaxed);
+            return Err(e.context(format!(
+                "transient fault persisted after {} retry attempts",
+                active.attempts
+            )));
+        }
+        Err(e)
     }
 
     /// Book one session's quantum outcome under the run-queue lock (shared
@@ -785,6 +871,8 @@ impl Scheduler {
                 let key = if self.cfg.prefix_share { Self::prefix_key(&plan) } else { None };
                 match key.as_ref().and_then(|k| self.store.prefix_lookup(k)) {
                     Some((logits, handle)) => {
+                        active.attempts = 0;
+                        active.backoff_until = None;
                         let out =
                             StepOutputs::LogitsKv((*logits).clone(), KvOut::Shared(handle));
                         self.apply_traced(&mut active, out)
@@ -799,17 +887,21 @@ impl Scheduler {
                             plan.bucket(),
                         );
                         let t0 = Instant::now();
-                        let res = execute_plan(self.exec.as_ref(), plan);
+                        let res = execute_plan_recoverable(self.exec.as_ref(), plan);
                         active.session.add_busy(t0.elapsed());
                         if let Some(tr) = &self.trace {
                             tr.forward(kind, id, 1, t0, Instant::now());
                         }
                         match res {
                             Ok(out) => {
+                                active.attempts = 0;
+                                active.backoff_until = None;
                                 let out = self.maybe_publish(key, out);
                                 self.apply_traced(&mut active, out)
                             }
-                            Err(e) => Err(e),
+                            // the failed forward hands the plan back intact,
+                            // so degrade/retry can restore the session
+                            Err((plan, e)) => self.route_failure(&mut active, plan, e),
                         }
                     }
                 }
@@ -1038,6 +1130,24 @@ impl Scheduler {
             plans.push(p);
             promos.push(promo);
         }
+        // retained duplicates: the executor consumes every lane's plan even
+        // when that lane fails, so per-lane retry needs a second consumable
+        // copy (`StepPlan::duplicate` dups the Cached KV handle) to hand
+        // back via `cancel_plan`. Successful lanes just drop theirs —
+        // refcounts stay balanced either way. Promoted lanes carry no
+        // duplicate: their plan was padded into the leader's bucket and is
+        // no longer the session's own, so they fail as before.
+        let retained: Vec<Option<StepPlan>> = plans
+            .iter()
+            .zip(&promos)
+            .map(|(p, promo)| {
+                if self.cfg.max_step_retries > 0 && promo.is_none() {
+                    Some(p.duplicate())
+                } else {
+                    None
+                }
+            })
+            .collect();
         let t0 = Instant::now();
         let mut outs = if n_lanes == 1 {
             vec![execute_plan(self.exec.as_ref(), plans.pop().expect("one plan"))]
@@ -1072,12 +1182,14 @@ impl Scheduler {
         // first, so `apply` observes exactly what solo execution would have
         // returned
         let mut landed: Vec<(Active, Result<StepOutcome>)> = Vec::with_capacity(n_lanes);
-        for (((mut active, out), promo), key) in
-            actives.into_iter().zip(outs).zip(promos).zip(keys)
+        for ((((mut active, out), promo), key), kept) in
+            actives.into_iter().zip(outs).zip(promos).zip(keys).zip(retained)
         {
             active.session.add_busy(fwd_wall);
             let outcome = match out {
                 Ok(o) => {
+                    active.attempts = 0;
+                    active.backoff_until = None;
                     let demoted = match &promo {
                         Some(p) => p.demote(o, self.arch.vocab, &self.arch),
                         None => Ok(o),
@@ -1090,7 +1202,13 @@ impl Scheduler {
                         Err(e) => Err(e),
                     }
                 }
-                Err(e) => Err(e),
+                // per-lane routing: a faulted lane degrades or retries via
+                // its retained duplicate; innocent lanes in the same batch
+                // are untouched (they matched the Ok arm above)
+                Err(e) => match kept {
+                    Some(plan) => self.route_failure(&mut active, plan, e),
+                    None => Err(e),
+                },
             };
             landed.push((active, outcome));
         }
@@ -1138,6 +1256,9 @@ impl Scheduler {
         m.kv_spilled_bytes.store(self.store.spilled_bytes() as u64, Ordering::Relaxed);
         m.kv_spills.store(self.store.spills(), Ordering::Relaxed);
         m.kv_rehydrates.store(self.store.rehydrates(), Ordering::Relaxed);
+        m.kv_rehydrate_failures
+            .store(self.store.rehydrate_failures(), Ordering::Relaxed);
+        m.kv_spill_drops.store(self.store.spill_drops(), Ordering::Relaxed);
         m.kv_device_bytes.store(self.store.device_bytes() as u64, Ordering::Relaxed);
         m.kv_upload_skips.store(self.store.upload_skips(), Ordering::Relaxed);
         m.kv_device_promotions
@@ -1801,5 +1922,126 @@ mod tests {
         // RateMeter with an injected clock)
         s.refresh_rate_gauge();
         assert!(m.steps_per_second() >= 0.0);
+    }
+
+    /// Scheduler over a single chaos-wrapped mock replica, with the caller
+    /// holding both the chaos plan (to break/heal) and the metrics.
+    fn chaos_sched(
+        cfg: SchedulerConfig,
+    ) -> (Arc<crate::runtime::chaos::ChaosPlan>, Arc<Metrics>, Arc<Scheduler>) {
+        use crate::runtime::chaos::{ChaosConfig, ChaosPlan};
+        let plan = ChaosPlan::new(ChaosConfig::default());
+        let metrics = Arc::new(Metrics::default());
+        let inner: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(plan.wrap(0, inner));
+        let s = Scheduler::new(exec, cfg, Arc::clone(&metrics));
+        (plan, metrics, s)
+    }
+
+    #[test]
+    fn transient_fault_retries_to_byte_identical_completion() {
+        // fault-free baseline
+        let s0 = mock_sched(SchedulerConfig::default());
+        let t0 = s0.submit(spec("window", 16)).unwrap();
+        while s0.tick().is_some() {}
+        let baseline = t0.wait().unwrap().generated();
+
+        let (chaos, metrics, s) = chaos_sched(SchedulerConfig {
+            max_step_retries: 3,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        });
+        let t = s.submit(spec("window", 16)).unwrap();
+        // make some progress, then break the (only) replica mid-generation
+        for _ in 0..3 {
+            s.tick();
+        }
+        chaos.break_replica(0);
+        s.tick(); // forward fails: plan cancelled, retry booked
+        assert_eq!(metrics.step_retries.load(Ordering::Relaxed), 1);
+        chaos.heal(0);
+        while s.tick().is_some() {}
+        let r = t.wait().unwrap();
+        assert_eq!(r.generated(), baseline, "retried steps must be byte-identical");
+        assert_eq!(metrics.step_retries_exhausted.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_ticket_with_transient_context() {
+        let (chaos, metrics, s) = chaos_sched(SchedulerConfig {
+            max_step_retries: 2,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        });
+        chaos.break_replica(0); // never heals: the budget must exhaust
+        let t = s.submit(spec("full", 8)).unwrap();
+        while s.tick().is_some() {}
+        let err = t.wait().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("transient fault persisted after 2 retry attempts"),
+            "exhausted-retry error must name the budget: {msg}"
+        );
+        assert_eq!(metrics.step_retries.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.step_retries_exhausted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn retries_disabled_fail_fast() {
+        let (chaos, metrics, s) = chaos_sched(SchedulerConfig {
+            max_step_retries: 0,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        });
+        chaos.break_replica(0);
+        let t = s.submit(spec("full", 8)).unwrap();
+        while s.tick().is_some() {}
+        assert!(t.wait().is_err(), "with retries off, the first fault is fatal");
+        assert_eq!(metrics.step_retries.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn lost_segment_degrades_to_recompute_and_finishes() {
+        // fault-free baseline
+        let s0 = mock_sched(SchedulerConfig::default());
+        let t0 = s0.submit(spec("window", 16)).unwrap();
+        while s0.tick().is_some() {}
+        let baseline = t0.wait().unwrap().generated();
+
+        let dir = std::env::temp_dir()
+            .join(format!("wd-sched-degrade-{}", std::process::id()));
+        let metrics = Arc::new(Metrics::default());
+        let s = Scheduler::new(
+            Arc::new(MockExec::new(256)) as Arc<dyn StepExec + Send + Sync>,
+            SchedulerConfig {
+                // a 1-byte soft cap spills every unpinned segment at once,
+                // so the session's cache lives on disk between steps
+                kv_soft_bytes: 1,
+                kv_spill_dir: Some(dir.clone()),
+                retry_backoff: Duration::ZERO,
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let t = s.submit(spec("window", 16)).unwrap();
+        // run until a spilled segment exists, then corrupt every blob
+        for _ in 0..4 {
+            s.tick();
+        }
+        let corrupted = crate::runtime::chaos::corrupt_spill_blobs(&dir).unwrap();
+        assert!(corrupted >= 1, "expected a spilled segment to corrupt");
+        while s.tick().is_some() {}
+        let r = t.wait().unwrap();
+        assert_eq!(r.generated(), baseline, "degraded recompute must converge");
+        assert!(
+            metrics.degraded_recomputes.load(Ordering::Relaxed) >= 1,
+            "corrupt blob must route through the degrade path"
+        );
+        assert_eq!(
+            metrics.step_retries_exhausted.load(Ordering::Relaxed),
+            0,
+            "degradation must not burn retry budget"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

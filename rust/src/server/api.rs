@@ -26,7 +26,10 @@
 //!   `weight_bytes_per_replica`); tiered-KV gauges (`kv_hot_bytes`,
 //!   `kv_spilled_bytes`, `kv_spills`, `kv_rehydrates`, `kv_prefix_hits`,
 //!   `kv_prefix_misses`, `kv_prefix_hit_rate`, `kv_accounting_anomalies`)
-//! * `GET /healthz`   — liveness
+//! * `GET /healthz`   — liveness; with an engine-replica pool the check is
+//!   health-aware: `503 {"ok":false}` while EVERY replica is quarantined
+//!   (load balancers should stop routing here until probation reinstates
+//!   one), `200 {"ok":true}` otherwise
 //! * `GET /info`      — model / config / scheduling info, incl.
 //!   `prefix_share` and the `kv_tiers` residency summary
 
@@ -224,6 +227,14 @@ fn replicas_json(pool: &EnginePool) -> Json {
                 let mut fields = vec![
                     ("id", Json::num(r.id as f64)),
                     ("steps", Json::num(r.steps as f64)),
+                    // quarantine state machine (ISSUE 9): which replicas are
+                    // serving, probing, or benched — the dashboard row that
+                    // makes a chaos drill auditable
+                    ("health", Json::str(r.health.name())),
+                    (
+                        "consecutive_failures",
+                        Json::num(r.consecutive_failures as f64),
+                    ),
                 ];
                 if let Some(e) = r.engine {
                     fields.push(("executions", Json::num(e.executions as f64)));
@@ -260,6 +271,19 @@ fn metrics_json(st: &AppState) -> Json {
     if let (Some(pool), Json::Obj(fields)) = (&st.pool, &mut j) {
         fields.insert("replica_count".into(), Json::num(pool.replicas() as f64));
         fields.insert("replicas".into(), replicas_json(pool));
+        // pool-level fault-tolerance counters (ISSUE 9): lifetime
+        // quarantines / probation probes / reinstates, plus how many
+        // replicas are out of rotation right now
+        fields.insert("replica_quarantines".into(), Json::num(pool.quarantines() as f64));
+        fields.insert(
+            "replica_probation_probes".into(),
+            Json::num(pool.probation_probes() as f64),
+        );
+        fields.insert("replica_reinstates".into(), Json::num(pool.reinstates() as f64));
+        fields.insert(
+            "replicas_quarantined".into(),
+            Json::num(pool.quarantined_count() as f64),
+        );
         // weight-bank residency gauges (ISSUE 5): host bytes stay flat in
         // the replica count under `shared` and grow linearly under `copy`
         // — the memory-regression tests pin exactly these numbers
@@ -300,7 +324,21 @@ fn metrics_json(st: &AppState) -> Json {
 /// Route a parsed HTTP request (pure: no I/O — unit-testable).
 pub fn route(st: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::json(200, r#"{"ok":true}"#.to_string()),
+        ("GET", "/healthz") => {
+            // health-aware liveness: a pool with every replica quarantined
+            // cannot serve a single forward, so report unhealthy until
+            // probation reinstates one (pool-less servers are always ok)
+            #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
+            let serving = st.pool.as_ref().map_or(true, |p| !p.all_quarantined());
+            if serving {
+                Response::json(200, r#"{"ok":true}"#.to_string())
+            } else {
+                Response::json(
+                    503,
+                    r#"{"ok":false,"error":"all replicas quarantined"}"#.to_string(),
+                )
+            }
+        }
         ("GET", "/metrics") => Response::json(200, metrics_json(st).to_string()),
         ("GET", "/sessions") => Response::json(200, sessions_json(st).to_string()),
         ("GET", "/trace") => {
@@ -748,6 +786,90 @@ mod tests {
             .map(|r| r.get("steps").as_usize().unwrap_or(0) as u64)
             .sum();
         assert!(steps > 0, "pool replicas never stepped");
+        // healthy pool: per-replica health rows + zeroed quarantine counters
+        assert!(rows.iter().all(|r| r.get("health").as_str() == Some("healthy")));
+        assert_eq!(mj.get("replica_quarantines").as_i64(), Some(0));
+        assert_eq!(mj.get("replicas_quarantined").as_i64(), Some(0));
+        st.scheduler.shutdown();
+    }
+
+    /// ISSUE 9: `/healthz` flips to 503 while every replica is quarantined
+    /// and recovers once a probation probe reinstates one; `/metrics`
+    /// carries the per-replica health rows and pool-level fault counters.
+    #[test]
+    fn healthz_degrades_and_recovers_with_replica_quarantine() {
+        use crate::runtime::chaos::{ChaosConfig, ChaosPlan};
+        let chaos = ChaosPlan::new(ChaosConfig::default());
+        let replicas = (0..2)
+            .map(|i| {
+                let inner: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+                Arc::new(chaos.wrap(i as u32, inner)) as Arc<dyn StepExec + Send + Sync>
+            })
+            .collect();
+        let pool = EnginePool::new(replicas).unwrap();
+        // bench a replica on its first failure; probes are always eligible
+        pool.configure_health(1, 0);
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+        let metrics = Arc::new(Metrics::default());
+        let scheduler = Scheduler::new(
+            Arc::clone(&exec),
+            SchedulerConfig {
+                // fail fast: each failed request charges exactly one replica
+                max_step_retries: 0,
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        scheduler.spawn();
+        let mut vocab: Vec<String> = ["<pad>", "<mask>", "<eos>", "<bos>", "<unk>"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for i in 0..11 {
+            vocab.push(format!("w{i}"));
+        }
+        let st = Arc::new(AppState {
+            exec,
+            pool: Some(Arc::clone(&pool)),
+            scheduler,
+            tokenizer: Tokenizer::from_vocab(vocab),
+            metrics,
+            model_name: "mock-pool".into(),
+            default_strategy: "full".into(),
+            default_gen_len: 8,
+            s: 256,
+            direct: false,
+        });
+        assert_eq!(get(&st, "/healthz").status, 200);
+        chaos.break_replica(0);
+        chaos.break_replica(1);
+        // two failing requests bench both replicas (retry rotation charges a
+        // different replica each time)
+        for _ in 0..2 {
+            let resp = post(&st, r#"{"prompt":"w1 w2","gen_len":8,"strategy":"full"}"#);
+            assert_eq!(resp.status, 500, "{}", String::from_utf8_lossy(&resp.body));
+        }
+        let h = get(&st, "/healthz");
+        assert_eq!(h.status, 503, "all-quarantined pool must report unhealthy");
+        let hj = parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+        assert_eq!(hj.get("ok").as_bool(), Some(false));
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(mj.get("replicas_quarantined").as_i64(), Some(2));
+        assert_eq!(mj.get("replica_quarantines").as_i64(), Some(2));
+        let rows = mj.get("replicas").as_arr().expect("replicas array");
+        assert!(rows
+            .iter()
+            .all(|r| r.get("health").as_str() == Some("quarantined")));
+        // heal: the next request's probation probe reinstates a replica
+        chaos.heal(0);
+        chaos.heal(1);
+        let resp = post(&st, r#"{"prompt":"w1 w2","gen_len":8,"strategy":"full"}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        assert_eq!(get(&st, "/healthz").status, 200, "healed pool must serve");
+        let m = get(&st, "/metrics");
+        let mj = parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert!(mj.get("replica_reinstates").as_i64().unwrap_or(0) >= 1);
         st.scheduler.shutdown();
     }
 }

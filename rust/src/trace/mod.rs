@@ -106,6 +106,22 @@ pub enum Stage {
     /// Checkout of a device-resident segment skipped the per-step KV
     /// upload entirely (instant; `session` = segment id).
     UploadSkip,
+    /// Transient forward failure cancelled the plan and re-queued the
+    /// session for another attempt (instant; `lanes` = attempt number).
+    Retry,
+    /// Replica quarantined after consecutive failures (instant; executor
+    /// track).
+    Quarantine,
+    /// Quarantined replica handed out as a probation probe (instant;
+    /// executor track; `lanes` = 1 when the probe reinstated it).
+    Probation,
+    /// Rehydrate of a spilled segment failed (corrupt/missing blob); the
+    /// segment was degraded to recompute (instant; `session` = segment id).
+    RehydrateFail,
+    /// Session degraded to recompute after losing a KV rung: its phase
+    /// cache was dropped and the next plan is a Window/Full refresh
+    /// (instant).
+    Degrade,
 }
 
 impl Stage {
@@ -128,6 +144,11 @@ impl Stage {
             Stage::DevicePromote => "device_promote",
             Stage::DeviceDemote => "device_demote",
             Stage::UploadSkip => "upload_skip",
+            Stage::Retry => "retry",
+            Stage::Quarantine => "quarantine",
+            Stage::Probation => "probation",
+            Stage::RehydrateFail => "rehydrate_fail",
+            Stage::Degrade => "degrade",
         }
     }
 
@@ -150,6 +171,11 @@ impl Stage {
             Stage::DevicePromote => 15,
             Stage::DeviceDemote => 16,
             Stage::UploadSkip => 17,
+            Stage::Retry => 18,
+            Stage::Quarantine => 19,
+            Stage::Probation => 20,
+            Stage::RehydrateFail => 21,
+            Stage::Degrade => 22,
         }
     }
 
@@ -172,6 +198,11 @@ impl Stage {
             15 => Stage::DevicePromote,
             16 => Stage::DeviceDemote,
             17 => Stage::UploadSkip,
+            18 => Stage::Retry,
+            19 => Stage::Quarantine,
+            20 => Stage::Probation,
+            21 => Stage::RehydrateFail,
+            22 => Stage::Degrade,
             _ => return None,
         })
     }
@@ -527,6 +558,40 @@ impl TraceRecorder {
         self.push(Stage::UploadSkip, None, segment, None, 0, t, 0);
     }
 
+    /// Transient forward failure re-queued `session` for attempt `attempt`.
+    pub fn retry(&self, session: u64, attempt: u32, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Retry, None, session, None, attempt, t, 0);
+    }
+
+    /// Replica quarantined after hitting the consecutive-failure threshold.
+    pub fn quarantine(&self, replica: u32, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Quarantine, None, 0, Some(replica), 0, t, 0);
+    }
+
+    /// Quarantined replica handed out as a probation probe; `reinstated`
+    /// marks the probe that returned it to rotation.
+    pub fn probation(&self, replica: u32, reinstated: bool, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Probation, None, 0, Some(replica),
+                  u32::from(reinstated), t, 0);
+    }
+
+    /// Rehydrate of a spilled segment failed; the segment degraded to
+    /// recompute instead of erroring the checkout.
+    pub fn rehydrate_fail(&self, segment: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::RehydrateFail, None, segment, None, 0, t, 0);
+    }
+
+    /// Session dropped its phase cache and will replan a refresh after
+    /// losing a KV rung.
+    pub fn degrade(&self, session: u64, now: Instant) {
+        let t = self.us(now);
+        self.push(Stage::Degrade, None, session, None, 0, t, 0);
+    }
+
     /// Session finished (or failed): drop its timing entry.
     pub fn finished(&self, session: u64) {
         self.sessions.lock().unwrap().remove(&session);
@@ -610,7 +675,8 @@ impl TraceRecorder {
         }
         for e in self.events() {
             let (pid, tid) = match e.stage {
-                Stage::Exec | Stage::PoolWait => {
+                Stage::Exec | Stage::PoolWait | Stage::Quarantine
+                | Stage::Probation => {
                     (PID_EXEC, e.replica.unwrap_or(0) as u64)
                 }
                 Stage::Width => (PID_EXEC, 0),
@@ -618,7 +684,7 @@ impl TraceRecorder {
                 // (the `session` word is a segment id, not a session id).
                 Stage::Spill | Stage::Rehydrate | Stage::PrefixHit
                 | Stage::DevicePromote | Stage::DeviceDemote
-                | Stage::UploadSkip => (PID_EXEC, 0),
+                | Stage::UploadSkip | Stage::RehydrateFail => (PID_EXEC, 0),
                 _ => (PID_SESSIONS, e.session),
             };
             let mut args = vec![];
@@ -637,15 +703,20 @@ impl TraceRecorder {
                 }
                 Stage::Spill | Stage::Rehydrate | Stage::PrefixHit
                 | Stage::DevicePromote | Stage::DeviceDemote
-                | Stage::UploadSkip => {
+                | Stage::UploadSkip | Stage::RehydrateFail => {
                     args.push(("segment", Json::num(e.session as f64)));
+                }
+                Stage::Retry => args.push(("attempt", Json::num(e.lanes as f64))),
+                Stage::Probation => {
+                    args.push(("reinstated", Json::Bool(e.lanes != 0)));
                 }
                 _ => {}
             }
             if !matches!(e.stage, Stage::Exec | Stage::PoolWait | Stage::Width
                 | Stage::Spill | Stage::Rehydrate | Stage::PrefixHit
                 | Stage::DevicePromote | Stage::DeviceDemote
-                | Stage::UploadSkip)
+                | Stage::UploadSkip | Stage::RehydrateFail
+                | Stage::Quarantine | Stage::Probation)
             {
                 args.push(("session", Json::num(e.session as f64)));
             }
@@ -885,6 +956,46 @@ mod tests {
             .find(|e| e.get("name").as_str() == Some("admit"))
             .unwrap();
         assert_eq!(admit.get("ph").as_str(), Some("i"));
+    }
+
+    #[test]
+    fn fault_stages_record_and_export() {
+        let t0 = Instant::now();
+        let tr = TraceRecorder::with_origin(t0, 64);
+        tr.retry(7, 2, at(t0, 1));
+        tr.quarantine(3, at(t0, 2));
+        tr.probation(3, true, at(t0, 3));
+        tr.rehydrate_fail(99, at(t0, 4));
+        tr.degrade(7, at(t0, 5));
+        let ev = tr.events();
+        assert_eq!(ev.len(), 5);
+        assert_eq!(ev[0].stage, Stage::Retry);
+        assert_eq!(ev[0].lanes, 2, "retry carries the attempt number");
+        assert_eq!(ev[1].replica, Some(3));
+        let j = tr.chrome_json();
+        let events = j.get("traceEvents").as_arr().unwrap();
+        let retry = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("retry"))
+            .unwrap();
+        assert_eq!(retry.get_path(&["args", "attempt"]).as_i64(), Some(2));
+        assert_eq!(retry.get("pid").as_i64(), Some(PID_SESSIONS as i64));
+        let q = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("quarantine"))
+            .unwrap();
+        assert_eq!(q.get("pid").as_i64(), Some(PID_EXEC as i64));
+        assert_eq!(q.get("tid").as_i64(), Some(3));
+        let p = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("probation"))
+            .unwrap();
+        assert_eq!(p.get_path(&["args", "reinstated"]).as_bool(), Some(true));
+        let rf = events
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("rehydrate_fail"))
+            .unwrap();
+        assert_eq!(rf.get_path(&["args", "segment"]).as_i64(), Some(99));
     }
 
     #[test]

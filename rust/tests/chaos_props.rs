@@ -1,0 +1,278 @@
+//! Fault-tolerance property tests (ISSUE 9): chaos-injected faults against
+//! the scheduler + replica pool, all over `MockExec` — no artifacts needed.
+//!
+//! Four pillars:
+//! 1. **Parity under faults** — every strategy spec completes byte-identical
+//!    to its fault-free run while transient faults fire, under 4 concurrent
+//!    drivers. Retried forwards replay exactly (mock logits are pure
+//!    functions of position), and `cancel_plan` restores the session, so a
+//!    retry is observationally a pause, never a divergence.
+//! 2. **Quarantine continuity** — a persistently-broken replica is benched
+//!    after one failure and the surviving replica serves every session to
+//!    the fault-free answer; the benched replica takes no steps after
+//!    quarantine.
+//! 3. **Per-lane innocence** — coalesced batches retry per-lane: a faulted
+//!    lane replans and replays while batchmates land their outputs; every
+//!    session's tokens AND step count equal its solo run.
+//! 4. **Liveness** — every ticket resolves (fulfilled or failed, never
+//!    stranded) when `shutdown()` races chaos-faulted in-flight work, 100
+//!    rounds with per-round seeds.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::runtime::{ChaosConfig, ChaosPlan, EnginePool};
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::strategies;
+
+const SPECS: &[&str] = &[
+    "full",
+    "window",
+    "window-nocache",
+    "block:size=16",
+    "dkv:interval=4",
+    "fastdllm-prefix",
+    "fastdllm-dual",
+];
+
+fn req(gen_len: usize) -> GenRequest {
+    let mut r = GenRequest::new(vec![10, 11, 12, 13], gen_len, 256);
+    r.tokens_per_step = 2;
+    r
+}
+
+fn submit(strategy: &str, r: &GenRequest) -> SubmitSpec {
+    SubmitSpec { strategy: strategy.into(), req: r.clone(), deadline: None }
+}
+
+/// Fault-free reference for a spec: the run-to-completion `generate()` path
+/// on a fresh mock.
+fn baseline(spec: &str, r: &GenRequest) -> Vec<i32> {
+    strategies::from_name(spec)
+        .unwrap()
+        .generate(&MockExec::new(256), r)
+        .unwrap()
+        .generated()
+}
+
+/// Chaos-wrapped replica pool: `n` mocks behind one fault plan.
+fn chaos_pool(chaos: &Arc<ChaosPlan>, n: usize) -> Arc<EnginePool> {
+    let replicas = (0..n)
+        .map(|i| {
+            let inner: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+            Arc::new(chaos.wrap(i as u32, inner)) as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(replicas).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// 1. parity under transient faults, concurrent drivers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_faults_preserve_outputs_under_concurrent_drivers() {
+    let chaos = ChaosPlan::new(ChaosConfig {
+        transient_per_mille: 150, // ~15% of forwards fail transiently
+        ..Default::default()
+    });
+    let pool = chaos_pool(&chaos, 4);
+    // quarantine off: this pillar isolates the retry machinery (random
+    // transient streaks must not bench replicas under it)
+    pool.configure_health(0, 0);
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            max_step_retries: 8,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    sched.spawn_workers(4);
+    let r = req(32);
+    let tickets: Vec<_> = SPECS
+        .iter()
+        .map(|spec| (spec, sched.submit(submit(spec, &r)).expect("admit")))
+        .collect();
+    for (spec, t) in tickets {
+        let got = t.wait().unwrap_or_else(|e| panic!("{spec} failed under chaos: {e:#}"));
+        assert_eq!(
+            got.generated(),
+            baseline(spec, &r),
+            "{spec}: output diverged under injected transient faults"
+        );
+    }
+    sched.shutdown();
+    assert!(
+        chaos.counters().transient() >= 1,
+        "chaos injected nothing — the parity claim is vacuous"
+    );
+    assert_eq!(
+        metrics.step_retries.load(std::sync::atomic::Ordering::Relaxed),
+        chaos.counters().transient(),
+        "every injected transient fault must book exactly one retry"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. quarantine continuity: benched replica, surviving replica serves
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quarantined_replica_is_benched_while_survivor_serves() {
+    let chaos = ChaosPlan::new(ChaosConfig::default());
+    let pool = chaos_pool(&chaos, 2);
+    pool.configure_health(1, 60_000); // bench on first failure, long probation
+    chaos.break_replica(0);
+
+    // bench replica 0 deterministically: run nested checkouts so both
+    // replicas forward once — exactly one (the broken one) fails, and the
+    // health loop charges it whichever nesting level held it
+    let ids = vec![7i32; 64];
+    let valid = vec![1.0f32; 64];
+    let res = pool.with_replica(|outer| {
+        let outer_ok = outer.full(64, &ids, &valid).is_ok();
+        let inner_ok = pool.with_replica(|inner| inner.full(64, &ids, &valid)).is_ok();
+        assert!(outer_ok != inner_ok, "exactly one replica is broken");
+        if !outer_ok {
+            anyhow::bail!("outer held the broken replica");
+        }
+        Ok(())
+    });
+    let _ = res; // either nesting order ends with replica 0 benched
+    assert_eq!(pool.quarantines(), 1, "broken replica was not quarantined");
+    assert!(!pool.all_quarantined());
+    let benched_steps = pool.replica_steps()[0];
+
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            max_step_retries: 4,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    sched.spawn_workers(2);
+    let r = req(24);
+    let tickets: Vec<_> = SPECS
+        .iter()
+        .map(|spec| (spec, sched.submit(submit(spec, &r)).expect("admit")))
+        .collect();
+    for (spec, t) in tickets {
+        let got = t.wait().unwrap_or_else(|e| panic!("{spec} failed on degraded pool: {e:#}"));
+        assert_eq!(
+            got.generated(),
+            baseline(spec, &r),
+            "{spec}: degraded-pool output diverged"
+        );
+    }
+    sched.shutdown();
+    assert_eq!(
+        pool.replica_steps()[0],
+        benched_steps,
+        "quarantined replica served steps while benched"
+    );
+    assert!(pool.replica_steps()[1] > 0, "survivor never stepped");
+}
+
+// ---------------------------------------------------------------------------
+// 3. per-lane retry: faulted lanes replay, batchmates are untouched
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coalesced_batches_retry_per_lane_without_disturbing_batchmates() {
+    let chaos = ChaosPlan::new(ChaosConfig {
+        transient_per_mille: 350, // most batches carry at least one faulted lane
+        ..Default::default()
+    });
+    let inner: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::new(chaos.wrap(0, inner));
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig {
+            max_batch: 4,
+            max_step_retries: 16,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        },
+        Arc::clone(&metrics),
+    );
+    // single-threaded manual drain: lane composition and fault rolls are
+    // fully deterministic for the seed
+    let r = req(24);
+    let tickets: Vec<_> = (0..4).map(|_| sched.submit(submit("full", &r)).unwrap()).collect();
+    while sched.tick().is_some() {}
+    let want = baseline("full", &r);
+    let solo_steps = {
+        let strat = strategies::from_name("full").unwrap();
+        strat.generate(&MockExec::new(256), &r).unwrap().steps
+    };
+    for t in tickets {
+        let got = t.wait().expect("batched session failed under per-lane faults");
+        assert_eq!(got.generated(), want, "lane output diverged");
+        // a retried lane replays the SAME step; an innocent lane is never
+        // re-stepped — both show up as exactly the solo step count
+        assert_eq!(got.steps, solo_steps, "retries leaked into step accounting");
+    }
+    assert!(
+        chaos.counters().transient() >= 1,
+        "no per-lane faults fired — lower the seed's luck or raise per-mille"
+    );
+    assert_eq!(
+        metrics.step_retries.load(std::sync::atomic::Ordering::Relaxed),
+        chaos.counters().transient(),
+        "per-lane faults and booked retries must match 1:1"
+    );
+    sched.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 4. liveness: every ticket resolves under a chaos shutdown race
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_ticket_resolves_under_chaos_shutdown_race() {
+    for round in 0u64..100 {
+        let chaos = ChaosPlan::new(ChaosConfig {
+            seed: 0x5eed ^ round,
+            transient_per_mille: 300,
+            ..Default::default()
+        });
+        let pool = chaos_pool(&chaos, 2);
+        pool.configure_health(2, 0);
+        let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+        let sched = Scheduler::new(
+            exec,
+            SchedulerConfig {
+                max_step_retries: 2,
+                retry_backoff: Duration::ZERO,
+                ..Default::default()
+            },
+            Arc::new(Metrics::default()),
+        );
+        sched.spawn_workers(2);
+        let r = req(16);
+        let tickets: Vec<_> = (0..4)
+            .filter_map(|i| sched.submit(submit(SPECS[i % SPECS.len()], &r)).ok())
+            .collect();
+        // shutdown races admission, in-flight retries and mid-step sessions;
+        // stagger the race point across rounds
+        if round % 3 == 0 {
+            std::thread::yield_now();
+        }
+        sched.shutdown();
+        for t in tickets {
+            // fulfilled or failed are both fine; a hang here is the bug
+            let _ = t.wait();
+        }
+    }
+}
