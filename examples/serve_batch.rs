@@ -105,6 +105,7 @@ fn build_state(
     Arc::new(AppState {
         exec,
         pool,
+        remote: None,
         scheduler,
         tokenizer: tok,
         metrics,

@@ -1,0 +1,205 @@
+//! Remote-dispatch bench (ISSUE 10): the wire protocol's overhead on the
+//! compute-bound mock (per-forward sleep) — no artifacts needed, so CI
+//! runs it end to end. Three phases:
+//!
+//! 1. **Local baseline** — the corpus through a 2-replica local pool,
+//!    recording steps/sec and every session's tokens.
+//! 2. **Remote loopback** — the SAME pool behind a loopback engine host,
+//!    dispatched through `RemoteExec` over real HTTP. Asserted:
+//!    byte-identical outputs and ≥ 0.5× the local steps/sec — the frame
+//!    codec + loopback HTTP must cost at most half the throughput on a
+//!    compute-bound workload.
+//! 3. **Codec microbench** — encode/decode of a representative cached
+//!    frame (inlined KV payload), reported in µs/frame.
+//!
+//! Emits `BENCH_10.json` at the repo root, extending the `BENCH_*.json`
+//! perf-trajectory series with the disaggregation floor.
+//!
+//! ```bash
+//! cargo bench --bench remote_dispatch
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use window_diffusion::bench_support;
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::remote::{serve_engine, wire, EngineHostConfig, RemoteExec, WirePlan};
+use window_diffusion::runtime::EnginePool;
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::util::json::Json;
+
+const STEP_DELAY: Duration = Duration::from_millis(2);
+const REPLICAS: usize = 2;
+const FLOOR: f64 = 0.5;
+
+fn mock_pool() -> Arc<EnginePool> {
+    let mocks = (0..REPLICAS)
+        .map(|_| {
+            Arc::new(MockExec::new(256).with_step_delay(STEP_DELAY))
+                as Arc<dyn StepExec + Send + Sync>
+        })
+        .collect();
+    EnginePool::new(mocks).unwrap()
+}
+
+fn corpus_spec(i: usize) -> SubmitSpec {
+    let mut req = GenRequest::new(vec![10, 11, 12, 13], 32, 256);
+    req.adaptive = false;
+    SubmitSpec {
+        strategy: if i % 2 == 0 { "full".into() } else { "window".into() },
+        req,
+        deadline: None,
+    }
+}
+
+struct RunOutcome {
+    steps_per_sec: f64,
+    /// Per-session generated tokens, corpus order.
+    outputs: Vec<Vec<i32>>,
+}
+
+/// Replay the corpus through an executor; every session must complete.
+fn run_corpus(label: &str, exec: Arc<dyn StepExec + Send + Sync>, n: usize) -> RunOutcome {
+    let metrics = Arc::new(Metrics::default());
+    let sched = Scheduler::new(
+        exec,
+        SchedulerConfig { retry_backoff: Duration::ZERO, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    sched.spawn_workers(REPLICAS);
+    let t0 = Instant::now();
+    let tickets: Vec<_> =
+        (0..n).map(|i| sched.submit(corpus_spec(i)).expect("admit")).collect();
+    let outputs: Vec<Vec<i32>> = tickets
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            t.wait()
+                .unwrap_or_else(|e| panic!("{label}: session {i} failed: {e:#}"))
+                .generated()
+        })
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    RunOutcome {
+        steps_per_sec: metrics.sched_steps_total.load(Ordering::Relaxed) as f64
+            / wall.max(1e-9),
+        outputs,
+    }
+}
+
+/// Representative cached frame for the codec microbench: KV payload sized
+/// to the mock arch at c=64 (n_layers × c × n_heads × dh elements).
+fn codec_frame_plan() -> WirePlan {
+    let elems = 64 * 8; // MockExec arch: 1 layer, 1 head, dh 8, c 64
+    WirePlan::Cached {
+        s: 256,
+        c: 64,
+        r: 16,
+        ids_r: vec![7; 16],
+        pos_r: (0..16).collect(),
+        slot_idx: vec![64; 16],
+        rvalid: vec![1.0; 16],
+        cvalid: vec![1.0; 64],
+        kv_s: 256,
+        kv_c: 64,
+        k: (0..elems).map(|i| i as f32 * 0.5).collect(),
+        v: (0..elems).map(|i| -(i as f32) * 0.25).collect(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = bench_support::bench_n(24);
+    println!(
+        "remote_dispatch: {n} requests (full/window gen 32), {STEP_DELAY:?}/forward, \
+         {REPLICAS} replicas, loopback engine host vs local pool"
+    );
+    bench_support::hr(78);
+
+    // -- phase 1: local baseline -----------------------------------------------
+    let local = run_corpus("local", Arc::clone(&mock_pool()) as _, n);
+    println!("local          : {:>7.1} steps/s", local.steps_per_sec);
+
+    // -- phase 2: the same pool behind a loopback engine host --------------------
+    let host_pool = mock_pool();
+    let host = serve_engine(
+        Arc::clone(&host_pool) as _,
+        Some(host_pool),
+        EngineHostConfig { addr: "127.0.0.1:0".into(), workers: 8, queue_capacity: 64 },
+    )?;
+    let remote = RemoteExec::attach(&[host.addr.clone()])?;
+    let over_wire = run_corpus("remote-loopback", Arc::clone(&remote) as _, n);
+    let ratio = bench_support::speedup(local.steps_per_sec, over_wire.steps_per_sec);
+    println!(
+        "remote-loopback: {:>7.1} steps/s  ratio={ratio:.3} (floor {FLOOR:.2})  \
+         host_batches={}",
+        over_wire.steps_per_sec,
+        remote.host_stats()[0].steps
+    );
+    anyhow::ensure!(
+        over_wire.outputs == local.outputs,
+        "outputs diverged over the wire"
+    );
+    anyhow::ensure!(remote.quarantines() == 0, "loopback host was benched");
+    anyhow::ensure!(
+        ratio >= FLOOR,
+        "remote loopback dispatch cost more than half the local steps/sec ({ratio:.3})"
+    );
+
+    // -- phase 3: codec microbench ---------------------------------------------
+    let fp = wire::fingerprint(&MockExec::new(256));
+    let plan = codec_frame_plan();
+    let frame = wire::encode_request(fp, std::slice::from_ref(&plan));
+    let frame_bytes = frame.len();
+    const ITERS: u32 = 500;
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        let f = wire::encode_request(fp, std::slice::from_ref(&plan));
+        std::hint::black_box(&f);
+    }
+    let encode_us = t0.elapsed().as_secs_f64() * 1e6 / ITERS as f64;
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        let p = wire::decode_request(&frame, fp)?;
+        std::hint::black_box(&p);
+    }
+    let decode_us = t0.elapsed().as_secs_f64() * 1e6 / ITERS as f64;
+    println!(
+        "codec          : {frame_bytes} B cached frame — encode {encode_us:.1} µs, \
+         decode {decode_us:.1} µs"
+    );
+    bench_support::hr(78);
+
+    let payload = Json::obj(vec![
+        ("bench", Json::str("remote_dispatch")),
+        ("issue", Json::num(10.0)),
+        ("n_requests", Json::num(n as f64)),
+        ("step_delay_ms", Json::num(STEP_DELAY.as_secs_f64() * 1e3)),
+        ("replicas", Json::num(REPLICAS as f64)),
+        ("frame_bytes", Json::num(frame_bytes as f64)),
+        ("wire_encode_us", Json::num(encode_us)),
+        ("wire_decode_us", Json::num(decode_us)),
+        (
+            "configs",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("label", Json::str("local")),
+                    ("steps_per_sec", Json::num(local.steps_per_sec)),
+                ]),
+                Json::obj(vec![
+                    ("label", Json::str("remote-loopback")),
+                    ("steps_per_sec", Json::num(over_wire.steps_per_sec)),
+                ]),
+            ]),
+        ),
+        // the headline: throughput retained over loopback HTTP dispatch
+        // (< 1.0 by construction on a compute-bound mock, floored 0.5)
+        ("remote_speedup", Json::num(ratio)),
+    ]);
+    bench_support::write_bench_json("BENCH_10.json", &payload)?;
+    bench_support::print_trajectory();
+    Ok(())
+}

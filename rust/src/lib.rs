@@ -22,6 +22,9 @@
 //! * [`eval`] — task suites, graders, accuracy/throughput harness;
 //! * [`analysis`] — Fig. 2/3/4 token-level probes;
 //! * [`server`] — HTTP front end, connection admission, scheduler bridge;
+//! * [`remote`] — coordinator↔engine-host wire protocol: versioned
+//!   `StepPlan` frames, the stateless engine host, and `RemoteExec`
+//!   dispatch with per-host health;
 //! * [`trace`] — step-lifecycle span recorder: stage histograms, TTFT,
 //!   Chrome-trace export (`GET /trace`);
 //! * [`util`] — std-only substrates (JSON, RNG, stats, pool, mini-proptest).
@@ -34,6 +37,7 @@ pub mod bench_support;
 pub mod coordinator;
 pub mod eval;
 pub mod metrics;
+pub mod remote;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

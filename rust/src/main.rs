@@ -1,7 +1,9 @@
 //! `wdserve` — the Window-Diffusion leader binary.
 //!
 //! Subcommands:
-//! * `serve`    — boot the HTTP serving layer on a model
+//! * `serve`    — boot the HTTP serving layer on a model (local replica
+//!   pool, or `--engine-hosts` for remote wire-protocol dispatch)
+//! * `serve-engine` — boot a stateless engine host for the wire protocol
 //! * `generate` — one-shot generation from the CLI
 //! * `eval`     — run a strategy over a task suite, print the table cell
 //! * `analyze`  — run the Fig.2/3/4 token-level probes
@@ -19,6 +21,7 @@ use window_diffusion::analysis;
 use window_diffusion::coordinator::{GenRequest, StepExec};
 use window_diffusion::eval::{self, EvalOptions};
 use window_diffusion::metrics::Metrics;
+use window_diffusion::remote::{self, EngineHostConfig, RemoteExec};
 use window_diffusion::runtime::{BankMode, DeviceMode, Engine, EnginePool, Manifest};
 use window_diffusion::scheduler::{BatchPolicy, Policy, Scheduler, SchedulerConfig};
 use window_diffusion::server::{self, api::AppState, ServerConfig};
@@ -88,42 +91,86 @@ fn load_engine(args: &Args) -> Result<(Manifest, Engine, Tokenizer)> {
     Ok((manifest, engine, tok))
 }
 
+/// Parse `--engine-hosts host:port,host:port,...` (empty → local serving).
+fn engine_hosts(args: &Args) -> Vec<String> {
+    args.get("engine-hosts")
+        .map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let (manifest, model, tok) = load_manifest(args)?;
 
-    // engine-replica pool: N concurrent steps over one shared host weight
-    // bank (default) — replica count is bounded by compute, so clamp to
-    // the host's parallelism; `--weight-bank copy` restores the
-    // one-host-copy-per-replica behavior for A/B measurement.
-    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let want = args.usize_or("replicas", 1).max(1);
-    let replicas = want.min(hw);
-    if replicas < want {
-        info!("--replicas {want} clamped to {replicas} (available_parallelism)");
-    }
-    let bank_mode = BankMode::from_name(args.get("weight-bank").unwrap_or("shared"))?;
-    // device side defaults to shared too: one PJRT client + one device
-    // weight upload for the whole pool, and the KV store gets a device hot
-    // tier; `--device-bank copy` restores per-replica clients (independent
-    // dispatch, linear device memory, no device KV rung).
-    let device_mode = DeviceMode::from_name(args.get("device-bank").unwrap_or("shared"))?;
-    let pool =
-        EnginePool::load_with_modes(&manifest, &model, replicas, bank_mode, device_mode)?;
-    info!(
-        "weight bank: {} — {:.1} MB host-resident across {replicas} replica(s); \
-         device bank: {} — {:.1} MB device-resident",
-        pool.bank_mode(),
-        pool.weight_bytes_host() as f64 / 1e6,
-        pool.device_mode(),
-        pool.weight_bytes_device() as f64 / 1e6
-    );
-    let s = args.usize_or("s", pool.seqs()[0]);
-    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+    // fault tolerance: bounded retry-with-replan for transient forward
+    // failures, and replica/host quarantine with timed probation re-probes
+    let max_step_retries = args.usize_or("max-step-retries", 3) as u32;
+    let quarantine_after = args.usize_or("quarantine-after", 3) as u32;
+    let probation_ms = args.usize_or("probation-ms", 1000) as u64;
+
+    // `--engine-hosts a:p,b:p` (ISSUE 10): dispatch forwards to remote
+    // engine hosts over the wire protocol instead of a local replica pool;
+    // the manifest is still loaded locally for the tokenizer + defaults,
+    // and attach verifies the hosts run the SAME manifest (fingerprint).
+    let hosts = engine_hosts(args);
+    let (exec, pool, remote_exec, drivers): (
+        Arc<dyn StepExec + Send + Sync>,
+        Option<Arc<EnginePool>>,
+        Option<Arc<RemoteExec>>,
+        usize,
+    ) = if !hosts.is_empty() {
+        let remote = RemoteExec::attach(&hosts)
+            .context("attaching remote engine hosts (--engine-hosts)")?;
+        remote.configure_health(quarantine_after, probation_ms);
+        info!("remote dispatch: {} engine host(s) attached, contracts agree", hosts.len());
+        let n = hosts.len();
+        (Arc::clone(&remote) as Arc<dyn StepExec + Send + Sync>, None, Some(remote), n)
+    } else {
+        // engine-replica pool: N concurrent steps over one shared host
+        // weight bank (default) — replica count is bounded by compute, so
+        // clamp to the host's parallelism; `--weight-bank copy` restores
+        // the one-host-copy-per-replica behavior for A/B measurement.
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let want = args.usize_or("replicas", 1).max(1);
+        let replicas = want.min(hw);
+        if replicas < want {
+            info!("--replicas {want} clamped to {replicas} (available_parallelism)");
+        }
+        let bank_mode = BankMode::from_name(args.get("weight-bank").unwrap_or("shared"))?;
+        // device side defaults to shared too: one PJRT client + one device
+        // weight upload for the whole pool, and the KV store gets a device
+        // hot tier; `--device-bank copy` restores per-replica clients
+        // (independent dispatch, linear device memory, no device KV rung).
+        let device_mode =
+            DeviceMode::from_name(args.get("device-bank").unwrap_or("shared"))?;
+        let pool =
+            EnginePool::load_with_modes(&manifest, &model, replicas, bank_mode, device_mode)?;
+        info!(
+            "weight bank: {} — {:.1} MB host-resident across {replicas} replica(s); \
+             device bank: {} — {:.1} MB device-resident",
+            pool.bank_mode(),
+            pool.weight_bytes_host() as f64 / 1e6,
+            pool.device_mode(),
+            pool.weight_bytes_device() as f64 / 1e6
+        );
+        pool.configure_health(quarantine_after, probation_ms);
+        (
+            Arc::clone(&pool) as Arc<dyn StepExec + Send + Sync>,
+            Some(pool),
+            None,
+            replicas,
+        )
+    };
+    let s = args.usize_or("s", exec.seqs().first().copied().unwrap_or(256));
 
     let metrics = Arc::new(Metrics::default());
     // coalescing width: clamp to the artifacts' batch ladder so the
     // scheduler never drains more lanes than one forward can carry
-    let b_max = pool.b_ladder().into_iter().max().unwrap_or(1);
+    let b_max = exec.b_ladder().into_iter().max().unwrap_or(1);
     let batch_policy = BatchPolicy::from_name(args.get("batch-policy").unwrap_or("fixed"))?;
     // adaptive mode governs the width itself, so --max-batch defaults to
     // the ladder ceiling there (it remains the operator cap either way)
@@ -141,12 +188,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // refresh forwards across sessions resolve to one shared segment);
     // --no-prefix-share restores fully private per-session KV
     let prefix_share = !args.flag("no-prefix-share");
-    // fault tolerance: bounded retry-with-replan for transient forward
-    // failures, and replica quarantine with timed probation re-probes
-    let max_step_retries = args.usize_or("max-step-retries", 3) as u32;
-    let quarantine_after = args.usize_or("quarantine-after", 3) as u32;
-    let probation_ms = args.usize_or("probation-ms", 1000) as u64;
-    pool.configure_health(quarantine_after, probation_ms);
     let sched_cfg = SchedulerConfig {
         policy: Policy::from_name(args.get("policy").unwrap_or("rr"))?,
         kv_budget_bytes: args.usize_or("kv-budget-mb", 0) * 1024 * 1024,
@@ -167,14 +208,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let scheduler = Scheduler::new(Arc::clone(&exec), sched_cfg, Arc::clone(&metrics));
     // replica checkout waits + on-replica exec spans land in the same ring
     if let Some(tr) = scheduler.trace() {
-        pool.attach_trace(Arc::clone(tr));
+        if let Some(p) = &pool {
+            p.attach_trace(Arc::clone(tr));
+        }
         info!("trace: ring recorder on — GET /trace for the Perfetto export");
     }
-    // one driver worker per replica: K sessions step in parallel
-    scheduler.spawn_workers(replicas);
+    // one driver worker per replica (or per remote engine host): K sessions
+    // step in parallel
+    scheduler.spawn_workers(drivers);
     let state = Arc::new(AppState {
         exec,
-        pool: Some(pool),
+        pool,
+        remote: remote_exec,
         scheduler,
         tokenizer: tok,
         metrics,
@@ -192,9 +237,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = server::serve(state, cfg)?;
     info!(
         "ready on {} — POST /generate, GET /metrics, GET /sessions \
-         (policy={policy_name}, replicas={replicas}, max_batch={max_batch}, \
+         (policy={policy_name}, drivers={drivers}, max_batch={max_batch}, \
          batch_policy={batch_policy_name}; ctrl-c to stop)",
         server.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `serve-engine` (ISSUE 10): a stateless engine host. Loads the local
+/// replica pool exactly like `serve`, but exposes the wire protocol
+/// (`POST /wire/execute`, `GET /wire/info`) instead of the session API —
+/// all session state, scheduling, retries and fleet-health policy live on
+/// the coordinator that attaches via `serve --engine-hosts`.
+fn cmd_serve_engine(args: &Args) -> Result<()> {
+    let (manifest, model, _tok) = load_manifest(args)?;
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let want = args.usize_or("replicas", 1).max(1);
+    let replicas = want.min(hw);
+    if replicas < want {
+        info!("--replicas {want} clamped to {replicas} (available_parallelism)");
+    }
+    let bank_mode = BankMode::from_name(args.get("weight-bank").unwrap_or("shared"))?;
+    let device_mode = DeviceMode::from_name(args.get("device-bank").unwrap_or("shared"))?;
+    let pool =
+        EnginePool::load_with_modes(&manifest, &model, replicas, bank_mode, device_mode)?;
+    // local replica health stays active under a host too: a host with a
+    // flaky replica quarantines it locally and keeps serving on the rest;
+    // only when EVERY replica is benched do batches fail (502) and the
+    // coordinator's per-HOST health takes over
+    pool.configure_health(
+        args.usize_or("quarantine-after", 3) as u32,
+        args.usize_or("probation-ms", 1000) as u64,
+    );
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&pool);
+    let host = remote::serve_engine(
+        exec,
+        Some(pool),
+        EngineHostConfig {
+            addr: args.get("addr").unwrap_or("127.0.0.1:8788").to_string(),
+            workers: args.usize_or("workers", 8),
+            queue_capacity: args.usize_or("queue", 64),
+        },
+    )?;
+    info!(
+        "engine host ready on {} — POST /wire/execute, GET /wire/info, \
+         GET /healthz ({model}, replicas={replicas}; ctrl-c to stop)",
+        host.addr
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -323,14 +413,15 @@ fn main() -> Result<()> {
     }
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "serve-engine" => cmd_serve_engine(&args),
         "generate" => cmd_generate(&args),
         "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
         "info" => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: wdserve <serve|generate|eval|analyze|info> [--model NAME] \
-                 [--artifacts DIR] [--strategy SPEC] ...\n\
+                "usage: wdserve <serve|serve-engine|generate|eval|analyze|info> \
+                 [--model NAME] [--artifacts DIR] [--strategy SPEC] ...\n\
                  serve flags: [--replicas N] [--weight-bank shared|copy] \
                  [--device-bank shared|copy] [--max-batch B] \
                  [--batch-policy fixed|adaptive] [--coalesce-waste-pct P] \
@@ -340,7 +431,12 @@ fn main() -> Result<()> {
                  [--no-prefix-share] [--max-sessions N] \
                  [--max-step-retries N] [--quarantine-after N] \
                  [--probation-ms MS] \
+                 [--engine-hosts HOST:PORT,...] \
                  [--workers N] [--queue N] [--direct] [--trace off|ring]\n\
+                 serve-engine flags: [--addr HOST:PORT] [--replicas N] \
+                 [--weight-bank shared|copy] [--device-bank shared|copy] \
+                 [--quarantine-after N] [--probation-ms MS] \
+                 [--workers N] [--queue N]\n\
                  strategies: full | window[:w_ex=64,a=16,refresh=32] | \
                  window-nocache | block[:size=32] | dkv[:interval=4] | \
                  fastdllm-prefix | fastdllm-dual"

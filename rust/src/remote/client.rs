@@ -1,0 +1,492 @@
+//! `RemoteExec` (ISSUE 10): the coordinator's [`StepExec`] over a fleet of
+//! remote engine hosts.
+//!
+//! At attach it fetches every host's `/wire/info` manifest contract and
+//! verifies the wire version and fingerprint — hosts that disagree (with
+//! us, or with each other) are rejected with a typed
+//! [`WireMismatch`](wire::WireMismatch), because a mismatched host runs
+//! *different executables* and byte parity is unprovable.
+//!
+//! Dispatch encodes a whole compatible batch as ONE request frame and
+//! posts it to one host. Health mirrors the in-pool replica loop
+//! ([`LaneHealth`] is literally the same state machine): consecutive
+//! transport/5xx failures quarantine a host, a quarantined host is probed
+//! again after its probation window (probes take priority over the
+//! healthy rotation so a recovered host rejoins promptly), success
+//! reinstates. All failures the transport layer produces are
+//! [`TransientError`]s, so the scheduler's retry-with-replan replays the
+//! step — typically onto a different host. Protocol errors (409) are
+//! deliberately NOT transient: retrying a version mismatch cannot help.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{
+    is_transient, StepExec, StepOutputs, StepPlan, TransientError,
+};
+use crate::runtime::pool::{
+    LaneHealth, ReplicaHealth, DEFAULT_PROBATION_MS, DEFAULT_QUARANTINE_AFTER,
+};
+use crate::runtime::{Arch, KvCache, Specials};
+use crate::server::http::{http_get, http_post_bytes};
+use crate::util::json::{self, Json};
+
+use super::wire::{self, WireMismatch, WireOutput, WirePlan};
+
+/// Per-host observability row (`GET /metrics` → `remote_hosts`).
+#[derive(Debug, Clone)]
+pub struct RemoteHostStats {
+    pub addr: String,
+    /// Batches dispatched to this host (attempts, not successes).
+    pub steps: u64,
+    pub health: ReplicaHealth,
+    pub consecutive_failures: u32,
+}
+
+/// One host's `/wire/info` manifest contract, parsed.
+struct HostInfo {
+    wire_version: u16,
+    fingerprint: u64,
+    arch: Arch,
+    special: Specials,
+    seqs: Vec<usize>,
+    c_ladder: Vec<usize>,
+    r_ladder: Vec<usize>,
+    b_ladder: Vec<usize>,
+}
+
+struct HostSched {
+    lanes: Vec<LaneHealth>,
+}
+
+pub struct RemoteExec {
+    hosts: Vec<String>,
+    fingerprint: u64,
+    // metadata snapshot from the (agreeing) hosts' contract
+    arch: Arch,
+    special: Specials,
+    seqs: Vec<usize>,
+    c_ladder: Vec<usize>,
+    r_ladder: Vec<usize>,
+    b_ladder: Vec<usize>,
+    // health (same state machine as the replica pool, one lane per host)
+    sched: Mutex<HostSched>,
+    rr: AtomicUsize,
+    quarantine_after: AtomicU32,
+    probation_ms: AtomicU64,
+    quarantines: AtomicU64,
+    probes: AtomicU64,
+    reinstates: AtomicU64,
+    steps: Vec<AtomicU64>,
+}
+
+fn usizes(j: &Json, what: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("wire/info: '{what}' is not an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("wire/info: bad '{what}' entry")))
+        .collect()
+}
+
+fn fetch_info(addr: &str) -> Result<HostInfo> {
+    let (status, body) =
+        http_get(addr, "/wire/info").with_context(|| format!("engine host {addr}"))?;
+    if status != 200 {
+        return Err(anyhow!("engine host {addr}: /wire/info returned {status}"));
+    }
+    let j = json::parse(&body)
+        .map_err(|e| anyhow!("engine host {addr}: bad /wire/info json: {e}"))?;
+    let u = |path: &[&str]| -> Result<usize> {
+        j.get_path(path)
+            .as_usize()
+            .ok_or_else(|| anyhow!("engine host {addr}: /wire/info missing {path:?}"))
+    };
+    let tok = |name: &str| -> Result<i32> {
+        j.get_path(&["special", name])
+            .as_f64()
+            .map(|x| x as i32)
+            .ok_or_else(|| anyhow!("engine host {addr}: /wire/info missing special.{name}"))
+    };
+    let fp_hex = j
+        .get("fingerprint")
+        .as_str()
+        .ok_or_else(|| anyhow!("engine host {addr}: /wire/info missing fingerprint"))?;
+    let fingerprint = u64::from_str_radix(fp_hex, 16)
+        .map_err(|_| anyhow!("engine host {addr}: bad fingerprint '{fp_hex}'"))?;
+    Ok(HostInfo {
+        wire_version: u(&["wire_version"])? as u16,
+        fingerprint,
+        arch: Arch {
+            d: u(&["arch", "d"])?,
+            n_layers: u(&["arch", "n_layers"])?,
+            n_heads: u(&["arch", "n_heads"])?,
+            dh: u(&["arch", "dh"])?,
+            ffn: u(&["arch", "ffn"])?,
+            vocab: u(&["arch", "vocab"])?,
+            max_seq: u(&["arch", "max_seq"])?,
+        },
+        special: Specials { pad: tok("pad")?, mask: tok("mask")?, eos: tok("eos")? },
+        seqs: usizes(j.get("seqs"), "seqs")?,
+        c_ladder: usizes(j.get("c_ladder"), "c_ladder")?,
+        r_ladder: usizes(j.get("r_ladder"), "r_ladder")?,
+        b_ladder: usizes(j.get("b_ladder"), "b_ladder")?,
+    })
+}
+
+fn ladder_le(ladder: &[usize], s: usize) -> Vec<usize> {
+    ladder.iter().copied().filter(|&x| x <= s).collect()
+}
+
+impl RemoteExec {
+    /// Attach to a fleet: fetch every host's manifest contract, verify the
+    /// wire version against ours and the fingerprints against each other
+    /// (host 0 is the reference). Typed [`WireMismatch`] on disagreement.
+    pub fn attach(hosts: &[String]) -> Result<Arc<RemoteExec>> {
+        if hosts.is_empty() {
+            return Err(anyhow!("remote: no engine hosts given"));
+        }
+        let infos: Vec<HostInfo> =
+            hosts.iter().map(|h| fetch_info(h)).collect::<Result<_>>()?;
+        for (host, info) in hosts.iter().zip(&infos) {
+            if info.wire_version != wire::VERSION {
+                return Err(anyhow::Error::new(WireMismatch::Version {
+                    want: wire::VERSION,
+                    got: info.wire_version,
+                })
+                .context(format!("attaching engine host {host}")));
+            }
+            if info.fingerprint != infos[0].fingerprint {
+                return Err(anyhow::Error::new(WireMismatch::Fingerprint {
+                    want: infos[0].fingerprint,
+                    got: info.fingerprint,
+                })
+                .context(format!(
+                    "engine host {host} disagrees with {}",
+                    hosts[0]
+                )));
+            }
+        }
+        let reference = &infos[0];
+        Ok(Arc::new(RemoteExec {
+            fingerprint: reference.fingerprint,
+            arch: reference.arch.clone(),
+            special: reference.special.clone(),
+            seqs: reference.seqs.clone(),
+            c_ladder: reference.c_ladder.clone(),
+            r_ladder: reference.r_ladder.clone(),
+            b_ladder: reference.b_ladder.clone(),
+            sched: Mutex::new(HostSched {
+                lanes: hosts.iter().map(|_| LaneHealth::new()).collect(),
+            }),
+            rr: AtomicUsize::new(0),
+            quarantine_after: AtomicU32::new(DEFAULT_QUARANTINE_AFTER),
+            probation_ms: AtomicU64::new(DEFAULT_PROBATION_MS),
+            quarantines: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            reinstates: AtomicU64::new(0),
+            steps: hosts.iter().map(|_| AtomicU64::new(0)).collect(),
+            hosts: hosts.to_vec(),
+        }))
+    }
+
+    /// Tune the host-health policy (serve flags `--quarantine-after`,
+    /// `--probation-ms`); same semantics as the in-pool replica loop.
+    pub fn configure_health(&self, quarantine_after: u32, probation_ms: u64) {
+        self.quarantine_after.store(quarantine_after, Ordering::Relaxed);
+        self.probation_ms.store(probation_ms, Ordering::Relaxed);
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    pub fn probation_probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    pub fn reinstates(&self) -> u64 {
+        self.reinstates.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        let sched = self.sched.lock().unwrap();
+        sched.lanes.iter().filter(|l| l.state == ReplicaHealth::Quarantined).count()
+    }
+
+    pub fn all_quarantined(&self) -> bool {
+        let sched = self.sched.lock().unwrap();
+        sched.lanes.iter().all(|l| l.state == ReplicaHealth::Quarantined)
+    }
+
+    pub fn host_stats(&self) -> Vec<RemoteHostStats> {
+        let sched = self.sched.lock().unwrap();
+        self.hosts
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| RemoteHostStats {
+                addr: addr.clone(),
+                steps: self.steps[i].load(Ordering::Relaxed),
+                health: sched.lanes[i].state,
+                consecutive_failures: sched.lanes[i].consecutive_failures,
+            })
+            .collect()
+    }
+
+    /// Pick a host for one batch. Unlike pool replicas, hosts serve
+    /// concurrent requests, so there is no checkout: probe-eligible
+    /// quarantined hosts go first (at most one probe in flight — the lane
+    /// sits in `Probation` until its outcome lands), then round-robin over
+    /// healthy hosts; with everything benched, fail fast with a transient
+    /// error the scheduler's bounded retry can outlive.
+    fn pick_host(&self) -> Result<usize> {
+        let probation = Duration::from_millis(self.probation_ms.load(Ordering::Relaxed));
+        let now = Instant::now();
+        let mut sched = self.sched.lock().unwrap();
+        if let Some(i) =
+            sched.lanes.iter().position(|l| l.probe_eligible(now, probation))
+        {
+            sched.lanes[i].state = ReplicaHealth::Probation;
+            drop(sched);
+            self.probes.fetch_add(1, Ordering::Relaxed);
+            return Ok(i);
+        }
+        let n = sched.lanes.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        for k in 0..n {
+            let i = (start + k) % n;
+            if sched.lanes[i].state == ReplicaHealth::Healthy {
+                return Ok(i);
+            }
+        }
+        Err(anyhow::Error::new(TransientError::new(format!(
+            "remote: all {n} engine hosts quarantined"
+        ))))
+    }
+
+    fn note(&self, idx: usize, ok: bool) {
+        use crate::runtime::pool::HealthEvent;
+        let now = Instant::now();
+        let threshold = self.quarantine_after.load(Ordering::Relaxed);
+        let mut sched = self.sched.lock().unwrap();
+        let event = sched.lanes[idx].note(ok, threshold, now);
+        drop(sched);
+        match event {
+            HealthEvent::None => {}
+            HealthEvent::Reinstated => {
+                self.reinstates.fetch_add(1, Ordering::Relaxed);
+            }
+            HealthEvent::Quarantined { .. } => {
+                self.quarantines.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Post one request frame to a picked host and decode the response.
+    /// Transport errors, 5xx and malformed frames charge the host's
+    /// health and come back transient; 409 (protocol disagreement) charges
+    /// the host but is NOT transient — a retry cannot fix a version skew.
+    fn post_frame(&self, frame: &[u8]) -> Result<Vec<WireOutput>> {
+        let idx = self.pick_host()?;
+        let addr = self.hosts[idx].clone();
+        self.steps[idx].fetch_add(1, Ordering::Relaxed);
+        match http_post_bytes(&addr, "/wire/execute", frame) {
+            Ok((200, bytes)) => match wire::decode_response(&bytes, self.fingerprint) {
+                Ok(outs) => {
+                    self.note(idx, true);
+                    Ok(outs)
+                }
+                Err(e) => {
+                    self.note(idx, false);
+                    Err(anyhow::Error::new(TransientError::new(format!(
+                        "engine host {addr}: bad response frame: {e:#}"
+                    ))))
+                }
+            },
+            Ok((409, bytes)) => {
+                self.note(idx, false);
+                Err(anyhow!(
+                    "engine host {addr} rejected frame (409): {}",
+                    String::from_utf8_lossy(&bytes)
+                ))
+            }
+            Ok((status, bytes)) if status >= 500 => {
+                self.note(idx, false);
+                Err(anyhow::Error::new(TransientError::new(format!(
+                    "engine host {addr} returned {status}: {}",
+                    String::from_utf8_lossy(&bytes)
+                ))))
+            }
+            Ok((status, bytes)) => {
+                self.note(idx, false);
+                Err(anyhow!(
+                    "engine host {addr} returned {status}: {}",
+                    String::from_utf8_lossy(&bytes)
+                ))
+            }
+            Err(e) => {
+                self.note(idx, false);
+                Err(anyhow::Error::new(TransientError::new(format!(
+                    "transport to engine host {addr}: {e:#}"
+                ))))
+            }
+        }
+    }
+
+    fn dispatch_one(&self, plan: WirePlan) -> Result<StepOutputs> {
+        let frame = wire::encode_request(self.fingerprint, std::slice::from_ref(&plan));
+        let mut outs = self.post_frame(&frame)?;
+        if outs.len() != 1 {
+            return Err(anyhow::Error::new(TransientError::new(format!(
+                "engine host returned {} lanes for a solo step",
+                outs.len()
+            ))));
+        }
+        wire::wire_to_output(outs.pop().unwrap())
+    }
+}
+
+impl StepExec for RemoteExec {
+    fn arch(&self) -> Arch {
+        self.arch.clone()
+    }
+
+    fn special(&self) -> Specials {
+        self.special.clone()
+    }
+
+    fn seqs(&self) -> Vec<usize> {
+        self.seqs.clone()
+    }
+
+    fn c_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(&self.c_ladder, s)
+    }
+
+    fn r_ladder(&self, s: usize) -> Vec<usize> {
+        ladder_le(&self.r_ladder, s)
+    }
+
+    fn b_ladder(&self) -> Vec<usize> {
+        self.b_ladder.clone()
+    }
+
+    fn full(&self, s: usize, ids: &[i32], valid: &[f32]) -> Result<Vec<f32>> {
+        let plan =
+            WirePlan::Full { s, ids: ids.to_vec(), valid: valid.to_vec() };
+        match self.dispatch_one(plan)? {
+            StepOutputs::Logits(l) => Ok(l),
+            _ => Err(anyhow!("remote full step returned kv")),
+        }
+    }
+
+    fn window(&self, s: usize, c: usize, ids: &[i32], pos: &[i32],
+              valid: &[f32]) -> Result<(Vec<f32>, KvCache)> {
+        let plan = WirePlan::Window {
+            s,
+            c,
+            ids: ids.to_vec(),
+            pos: pos.to_vec(),
+            valid: valid.to_vec(),
+        };
+        match self.dispatch_one(plan)? {
+            StepOutputs::LogitsKv(l, crate::coordinator::plan::KvOut::Fresh(kv)) => {
+                Ok((l, kv))
+            }
+            _ => Err(anyhow!("remote window step returned no fresh kv")),
+        }
+    }
+
+    fn cached(&self, s: usize, c: usize, r: usize, ids_r: &[i32], pos_r: &[i32],
+              slot_idx: &[i32], rvalid: &[f32], cvalid: &[f32], kv: &KvCache)
+              -> Result<(Vec<f32>, KvCache)> {
+        let plan = WirePlan::Cached {
+            s,
+            c,
+            r,
+            ids_r: ids_r.to_vec(),
+            pos_r: pos_r.to_vec(),
+            slot_idx: slot_idx.to_vec(),
+            rvalid: rvalid.to_vec(),
+            cvalid: cvalid.to_vec(),
+            kv_s: kv.s,
+            kv_c: kv.c,
+            k: kv.k_host()?,
+            v: kv.v_host()?,
+        };
+        match self.dispatch_one(plan)? {
+            StepOutputs::LogitsKv(l, crate::coordinator::plan::KvOut::Fresh(kv)) => {
+                Ok((l, kv))
+            }
+            _ => Err(anyhow!("remote cached step returned no fresh kv")),
+        }
+    }
+
+    /// One request frame per batch: all lanes ship to ONE host (mirroring
+    /// the pool's one-replica-per-batch rule). A lane whose KV checkout
+    /// fails locally errors alone (keeping its classification — segment
+    /// loss must still degrade to recompute, not kill batchmates); a
+    /// transport/host failure fans a transient error to every shipped
+    /// lane, and the scheduler's per-lane retry replans them — the next
+    /// pick lands on a surviving host.
+    fn execute_batch(&self, plans: Vec<StepPlan>) -> Vec<Result<StepOutputs>> {
+        if plans.is_empty() {
+            return Vec::new();
+        }
+        let n = plans.len();
+        let mut slots: Vec<Option<Result<StepOutputs>>> = (0..n).map(|_| None).collect();
+        let mut ship = Vec::new();
+        let mut ship_idx = Vec::new();
+        for (i, p) in plans.iter().enumerate() {
+            match WirePlan::from_plan(p) {
+                Ok(w) => {
+                    ship.push(w);
+                    ship_idx.push(i);
+                }
+                Err(e) => slots[i] = Some(Err(e)),
+            }
+        }
+        if !ship.is_empty() {
+            let frame = wire::encode_request(self.fingerprint, &ship);
+            match self.post_frame(&frame) {
+                Ok(outs) if outs.len() == ship.len() => {
+                    for (&slot, out) in ship_idx.iter().zip(outs) {
+                        slots[slot] = Some(wire::wire_to_output(out));
+                    }
+                }
+                Ok(outs) => {
+                    let msg = format!(
+                        "engine host returned {} lanes for a {}-lane batch",
+                        outs.len(),
+                        ship.len()
+                    );
+                    for &i in &ship_idx {
+                        slots[i] =
+                            Some(Err(anyhow::Error::new(TransientError::new(msg.clone()))));
+                    }
+                }
+                Err(e) => {
+                    let transient = is_transient(&e);
+                    let msg = format!("{e:#}");
+                    for &i in &ship_idx {
+                        slots[i] = Some(Err(if transient {
+                            anyhow::Error::new(TransientError::new(msg.clone()))
+                        } else {
+                            anyhow!("{msg}")
+                        }));
+                    }
+                }
+            }
+        }
+        // dropping the plans consumes cached lanes' KV handles, balancing
+        // segment refcounts exactly like local execution does
+        drop(plans);
+        slots.into_iter().map(|o| o.expect("every lane filled")).collect()
+    }
+}

@@ -1,0 +1,262 @@
+//! Stateless engine host (ISSUE 10): the execute side of the wire
+//! protocol, run by the `serve-engine` subcommand.
+//!
+//! A host owns an executor (usually a local [`EnginePool`]) and exposes:
+//!
+//! * `GET /wire/info` — the manifest contract as JSON: wire version,
+//!   fingerprint (hex), arch dims, special tokens, sequence sets and
+//!   ladders. Coordinators verify this at attach.
+//! * `POST /wire/execute` — one binary request frame in, one response
+//!   frame out. 409 on a version/fingerprint mismatch, 400 on a malformed
+//!   frame, 502 when *every* lane failed (the all-lanes-dead signal the
+//!   coordinator's host-health loop counts), 200 with per-lane results
+//!   otherwise (individual lane errors travel inside the frame, keeping
+//!   their transience).
+//! * `GET /healthz` — 200 while the local pool can serve, 503 when all
+//!   its replicas are quarantined.
+//!
+//! Hosts are stateless between requests: a cached lane's KV payload is
+//! minted into a throwaway detached [`KvStore`], executed, and the fresh
+//! KV is shipped back in the response. All session state, retries and
+//! health policy live on the coordinator.
+//!
+//! [`EnginePool`]: crate::runtime::EnginePool
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::StepExec;
+use crate::metrics::Metrics;
+use crate::runtime::EnginePool;
+use crate::scheduler::kvstore::KvStore;
+use crate::server::batcher::{Batcher, Job};
+use crate::server::http::{read_request, write_response, Request, Response};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+use super::wire;
+
+pub struct EngineHostConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub queue_capacity: usize,
+}
+
+impl Default for EngineHostConfig {
+    fn default() -> Self {
+        EngineHostConfig { addr: "127.0.0.1:8788".into(), workers: 8, queue_capacity: 64 }
+    }
+}
+
+struct HostState {
+    exec: Arc<dyn StepExec + Send + Sync>,
+    /// Same executor as a pool, when it is one — for `/healthz` and the
+    /// replica gauges in `/wire/info`.
+    pool: Option<Arc<EnginePool>>,
+    fingerprint: u64,
+    info: String,
+    /// Batches executed (one per `POST /wire/execute`).
+    batches: AtomicU64,
+}
+
+/// Running engine host; stops (and joins) on [`EngineHost::stop`] or drop.
+pub struct EngineHost {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The `/wire/info` manifest contract for an executor.
+fn info_json(exec: &dyn StepExec, fp: u64) -> String {
+    let a = exec.arch();
+    let sp = exec.special();
+    let seqs = exec.seqs();
+    let max_s = seqs.iter().copied().max().unwrap_or(0);
+    let nums = |xs: &[usize]| Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect());
+    Json::obj(vec![
+        ("wire_version", Json::num(wire::VERSION as f64)),
+        ("fingerprint", Json::str(format!("{fp:016x}"))),
+        (
+            "arch",
+            Json::obj(vec![
+                ("d", Json::num(a.d as f64)),
+                ("n_layers", Json::num(a.n_layers as f64)),
+                ("n_heads", Json::num(a.n_heads as f64)),
+                ("dh", Json::num(a.dh as f64)),
+                ("ffn", Json::num(a.ffn as f64)),
+                ("vocab", Json::num(a.vocab as f64)),
+                ("max_seq", Json::num(a.max_seq as f64)),
+            ]),
+        ),
+        (
+            "special",
+            Json::obj(vec![
+                ("pad", Json::num(sp.pad as f64)),
+                ("mask", Json::num(sp.mask as f64)),
+                ("eos", Json::num(sp.eos as f64)),
+            ]),
+        ),
+        ("seqs", nums(&seqs)),
+        ("c_ladder", nums(&exec.c_ladder(max_s))),
+        ("r_ladder", nums(&exec.r_ladder(max_s))),
+        ("b_ladder", nums(&exec.b_ladder())),
+    ])
+    .to_string()
+}
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// Decode → execute on the local pool → encode. Statelessness is the
+/// whole trick: the detached store lives exactly as long as the batch.
+fn handle_execute(st: &HostState, body: &[u8]) -> Response {
+    let wire_plans = match wire::decode_request(body, st.fingerprint) {
+        Ok(p) => p,
+        Err(e) => {
+            let status = if wire::wire_mismatch(&e).is_some() { 409 } else { 400 };
+            return Response::json(status, err_body(&format!("{e:#}")));
+        }
+    };
+    if wire_plans.is_empty() {
+        return Response::json(400, err_body("empty batch"));
+    }
+    let store = KvStore::detached();
+    let plans: Result<Vec<_>> =
+        wire_plans.into_iter().map(|w| w.into_plan(&store)).collect();
+    let plans = match plans {
+        Ok(p) => p,
+        Err(e) => return Response::json(400, err_body(&format!("bad kv payload: {e:#}"))),
+    };
+    st.batches.fetch_add(1, Ordering::Relaxed);
+    let outs = st.exec.execute_batch(plans);
+    // every lane dead reads as "this host can't execute" — surface it as a
+    // 502 so the coordinator charges the HOST's health, not the lanes'
+    let all_failed = outs.iter().all(|o| o.is_err());
+    if all_failed {
+        let msg = outs
+            .first()
+            .and_then(|o| o.as_ref().err())
+            .map(|e| format!("{e:#}"))
+            .unwrap_or_else(|| "empty batch".into());
+        return Response::json(502, err_body(&format!("engine failure: {msg}")));
+    }
+    let wire_outs: Vec<_> = outs.into_iter().map(wire::output_to_wire).collect();
+    Response::bytes(200, wire::encode_response(st.fingerprint, &wire_outs))
+}
+
+fn route(st: &HostState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/wire/info") => Response::json(200, st.info.clone()),
+        ("POST", "/wire/execute") => handle_execute(st, &req.body),
+        ("GET", "/healthz") => {
+            let serving = st.pool.as_ref().map_or(true, |p| !p.all_quarantined());
+            if serving {
+                Response::json(200, "{\"ok\":true}".into())
+            } else {
+                Response::json(503, err_body("all replicas quarantined"))
+            }
+        }
+        ("GET", _) | ("POST", _) => Response::json(404, err_body("no such endpoint")),
+        _ => Response::json(405, err_body("method not allowed")),
+    }
+}
+
+/// Start an engine host over `exec` (pass the same `Arc` as `pool` when it
+/// is an [`EnginePool`], for health-aware `/healthz`). Binds synchronously
+/// — `EngineHost::addr` carries the resolved port for `addr: "...:0"`.
+pub fn serve_engine(
+    exec: Arc<dyn StepExec + Send + Sync>,
+    pool: Option<Arc<EnginePool>>,
+    cfg: EngineHostConfig,
+) -> Result<EngineHost> {
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?.to_string();
+    listener.set_nonblocking(true)?;
+    let fp = wire::fingerprint(exec.as_ref());
+    let state = Arc::new(HostState {
+        info: info_json(exec.as_ref(), fp),
+        exec,
+        pool,
+        fingerprint: fp,
+        batches: AtomicU64::new(0),
+    });
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let queue: Arc<Batcher<TcpStream>> =
+        Batcher::new(cfg.queue_capacity, Arc::new(Metrics::default()));
+    let next_id = Arc::new(AtomicU64::new(0));
+
+    let pool_threads = ThreadPool::new(cfg.workers);
+    for _ in 0..cfg.workers {
+        let q = Arc::clone(&queue);
+        let st = Arc::clone(&state);
+        pool_threads.execute(move || {
+            while let Some(job) = q.next() {
+                let mut stream = job.payload;
+                let resp = match read_request(&mut stream) {
+                    Ok(req) => route(&st, &req),
+                    Err(e) => Response::json(
+                        crate::server::http::read_error_status(&e),
+                        err_body(&format!("{e:#}")),
+                    ),
+                };
+                let _ = write_response(&mut stream, &resp);
+            }
+        });
+    }
+
+    let sd = Arc::clone(&shutdown);
+    let accept_handle = std::thread::Builder::new()
+        .name("wd-engine-accept".into())
+        .spawn(move || {
+            let _pool_threads = pool_threads; // keep workers alive
+            crate::info!(
+                "engine host on http://{} (fingerprint {:016x})",
+                listener.local_addr().unwrap(),
+                fp
+            );
+            while !sd.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let id = next_id.fetch_add(1, Ordering::Relaxed);
+                        if let Err(job) = queue.submit(Job { id, payload: stream }) {
+                            let mut s = job.payload;
+                            let _ = write_response(
+                                &mut s,
+                                &Response::json(429, err_body("queue full")),
+                            );
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            queue.close();
+        })?;
+
+    Ok(EngineHost { addr, shutdown, accept_handle: Some(accept_handle) })
+}
+
+impl EngineHost {
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EngineHost {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}

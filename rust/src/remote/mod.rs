@@ -1,0 +1,27 @@
+//! Coordinator↔engine-host wire protocol (ISSUE 10): the step from "one
+//! big box" to "a fleet".
+//!
+//! [`StepPlan`]s are self-contained (kind + bucket + input tensors; cached
+//! plans carry their KV), so disaggregated serving is a serialization
+//! problem, not a redesign:
+//!
+//! * [`wire`] — the versioned binary codec: `WDRP` frames with a manifest
+//!   fingerprint, bit-exact f32 payloads, typed mismatch errors;
+//! * [`host`] — the stateless engine host (`serve-engine`): executes
+//!   posted batches on its local pool, no session state;
+//! * [`client`] — [`RemoteExec`]: a `StepExec` that dispatches batches
+//!   over HTTP with per-host quarantine/probation health, folding remote
+//!   hosts into the same retry-with-replan loop in-pool replicas use.
+//!
+//! See DESIGN.md §"Wire protocol" for the frame layout and negotiation
+//! rules, and `tests/remote_props.rs` for the parity/chaos/mismatch suite.
+//!
+//! [`StepPlan`]: crate::coordinator::StepPlan
+
+pub mod client;
+pub mod host;
+pub mod wire;
+
+pub use client::{RemoteExec, RemoteHostStats};
+pub use host::{serve_engine, EngineHost, EngineHostConfig};
+pub use wire::{fingerprint, wire_mismatch, WireMismatch, WireOutput, WirePlan};

@@ -1,0 +1,721 @@
+//! Versioned binary wire codec for [`StepPlan`] / [`StepOutputs`] batch
+//! frames — the coordinator↔engine-host protocol (ISSUE 10).
+//!
+//! Frame layout (`WDRP` v1, little-endian throughout):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"WDRP"
+//! 4       2     version (currently 1)
+//! 6       2     frame kind (1 = execute request, 2 = execute response)
+//! 8       8     manifest fingerprint (FNV-1a 64 over the executor contract)
+//! 16      4     lane count (u32)
+//! 20      ...   lanes, back to back
+//! ```
+//!
+//! Request lanes are tagged `StepPlan`s (0 full / 1 window / 2 cached);
+//! cached lanes inline the checked-out KV payload — engine hosts are
+//! stateless, so the segment travels with the plan and is re-minted into a
+//! detached [`KvStore`] on arrival. Response lanes are tagged outputs
+//! (0 logits / 1 logits+kv / 2 error, errors carrying their transience so
+//! [`TransientError`] classification — and with it retry-with-replan —
+//! survives the wire). Vectors are length-prefixed (u64 element count);
+//! `i32` goes through `to_le_bytes` and `f32` through `to_bits` LE — the
+//! `WDKV` discipline from [`crate::runtime::kvcodec`], so NaN payloads and
+//! `-0.0` round-trip bit-exactly.
+//!
+//! The fingerprint is the nanoserde-style manifest contract: a hash of
+//! everything two parties must agree on before a frame is meaningful —
+//! arch dims, special tokens, sequence sets and bucket ladders. A host
+//! whose fingerprint differs executes *different executables*; frames are
+//! rejected at decode (HTTP 409) and attaches fail with a typed
+//! [`WireMismatch`].
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::coordinator::plan::KvOut;
+use crate::coordinator::{is_transient, StepExec, StepOutputs, StepPlan, TransientError};
+use crate::runtime::KvCache;
+use crate::scheduler::kvstore::KvStore;
+
+pub const MAGIC: [u8; 4] = *b"WDRP";
+pub const VERSION: u16 = 1;
+const HEADER_LEN: usize = 20;
+
+pub const FRAME_REQUEST: u16 = 1;
+pub const FRAME_RESPONSE: u16 = 2;
+
+const TAG_FULL: u8 = 0;
+const TAG_WINDOW: u8 = 1;
+const TAG_CACHED: u8 = 2;
+
+const TAG_LOGITS: u8 = 0;
+const TAG_LOGITS_KV: u8 = 1;
+const TAG_ERR: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// manifest fingerprint
+// ---------------------------------------------------------------------------
+
+/// Canonical byte string of the executor contract: every number a frame's
+/// meaning depends on, in a fixed order.
+fn contract_bytes(exec: &dyn StepExec) -> Vec<u8> {
+    let mut out = Vec::with_capacity(256);
+    let mut push = |x: u64| out.extend_from_slice(&x.to_le_bytes());
+    let a = exec.arch();
+    for dim in [a.d, a.n_layers, a.n_heads, a.dh, a.ffn, a.vocab, a.max_seq] {
+        push(dim as u64);
+    }
+    let sp = exec.special();
+    for tok in [sp.pad, sp.mask, sp.eos] {
+        push(tok as u32 as u64);
+    }
+    let seqs = exec.seqs();
+    push(seqs.len() as u64);
+    for &s in &seqs {
+        push(s as u64);
+        for ladder in [exec.c_ladder(s), exec.r_ladder(s)] {
+            push(ladder.len() as u64);
+            for rung in ladder {
+                push(rung as u64);
+            }
+        }
+    }
+    let b = exec.b_ladder();
+    push(b.len() as u64);
+    for rung in b {
+        push(rung as u64);
+    }
+    out
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Manifest fingerprint of an executor: two parties with equal
+/// fingerprints agree on every shape a frame can reference.
+pub fn fingerprint(exec: &dyn StepExec) -> u64 {
+    fnv1a64(&contract_bytes(exec))
+}
+
+// ---------------------------------------------------------------------------
+// typed mismatch error
+// ---------------------------------------------------------------------------
+
+/// A host speaking a different protocol version or executing a different
+/// manifest — rejected at attach (typed) and at frame decode (HTTP 409).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMismatch {
+    Version { want: u16, got: u16 },
+    Fingerprint { want: u64, got: u64 },
+}
+
+impl std::fmt::Display for WireMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireMismatch::Version { want, got } => {
+                write!(f, "wire version mismatch: want {want}, got {got}")
+            }
+            WireMismatch::Fingerprint { want, got } => {
+                write!(
+                    f,
+                    "manifest fingerprint mismatch: want {want:016x}, got {got:016x}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireMismatch {}
+
+/// The typed mismatch inside an error chain, if any (survives `context`).
+pub fn wire_mismatch(e: &anyhow::Error) -> Option<WireMismatch> {
+    e.chain().find_map(|c| c.downcast_ref::<WireMismatch>()).copied()
+}
+
+// ---------------------------------------------------------------------------
+// wire-side plan / output types
+// ---------------------------------------------------------------------------
+
+/// A [`StepPlan`] with its KV materialized: what actually crosses the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WirePlan {
+    Full {
+        s: usize,
+        ids: Vec<i32>,
+        valid: Vec<f32>,
+    },
+    Window {
+        s: usize,
+        c: usize,
+        ids: Vec<i32>,
+        pos: Vec<i32>,
+        valid: Vec<f32>,
+    },
+    Cached {
+        s: usize,
+        c: usize,
+        r: usize,
+        ids_r: Vec<i32>,
+        pos_r: Vec<i32>,
+        slot_idx: Vec<i32>,
+        rvalid: Vec<f32>,
+        cvalid: Vec<f32>,
+        kv_s: usize,
+        kv_c: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+}
+
+impl WirePlan {
+    /// Coordinator side: materialize a plan for shipping. A cached plan's
+    /// segment is checked out (pinning/rehydrating it) and its host bytes
+    /// copied into the frame — the handle itself stays with the caller.
+    pub fn from_plan(plan: &StepPlan) -> Result<WirePlan> {
+        Ok(match plan {
+            StepPlan::Full { s, ids, valid } => {
+                WirePlan::Full { s: *s, ids: ids.clone(), valid: valid.clone() }
+            }
+            StepPlan::Window { s, c, ids, pos, valid } => WirePlan::Window {
+                s: *s,
+                c: *c,
+                ids: ids.clone(),
+                pos: pos.clone(),
+                valid: valid.clone(),
+            },
+            StepPlan::Cached { s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv } => {
+                let co = kv.checkout()?;
+                WirePlan::Cached {
+                    s: *s,
+                    c: *c,
+                    r: *r,
+                    ids_r: ids_r.clone(),
+                    pos_r: pos_r.clone(),
+                    slot_idx: slot_idx.clone(),
+                    rvalid: rvalid.clone(),
+                    cvalid: cvalid.clone(),
+                    kv_s: co.s,
+                    kv_c: co.c,
+                    k: co.k_host()?,
+                    v: co.v_host()?,
+                }
+            }
+        })
+    }
+
+    /// Host side: re-mint the plan against a local (detached) store — the
+    /// inlined KV payload becomes a segment, and the returned plan is
+    /// exactly what a local scheduler would have handed the executor.
+    pub fn into_plan(self, store: &Arc<KvStore>) -> Result<StepPlan> {
+        Ok(match self {
+            WirePlan::Full { s, ids, valid } => StepPlan::Full { s, ids, valid },
+            WirePlan::Window { s, c, ids, pos, valid } => {
+                StepPlan::Window { s, c, ids, pos, valid }
+            }
+            WirePlan::Cached {
+                s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv_s, kv_c, k, v,
+            } => {
+                let kv = KvCache {
+                    s: kv_s,
+                    c: kv_c,
+                    flat: true,
+                    k: Literal::vec1(&k),
+                    v: Literal::vec1(&v),
+                };
+                let handle = store.insert(&kv)?;
+                StepPlan::Cached {
+                    s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv: handle,
+                }
+            }
+        })
+    }
+}
+
+/// One lane's result as it crosses the wire. Shared KV segments are
+/// flattened to fresh host bytes — the coordinator's store is the only
+/// one that outlives the request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireOutput {
+    Logits(Vec<f32>),
+    LogitsKv { logits: Vec<f32>, kv_s: usize, kv_c: usize, k: Vec<f32>, v: Vec<f32> },
+    Err { msg: String, transient: bool },
+}
+
+/// Host side: flatten one lane's outcome for the response frame.
+pub fn output_to_wire(out: Result<StepOutputs>) -> WireOutput {
+    let flat = |logits: Vec<f32>, kv: KvOut| -> Result<WireOutput> {
+        let (kv_s, kv_c, k, v) = match kv {
+            KvOut::Fresh(kv) => (kv.s, kv.c, kv.k_host()?, kv.v_host()?),
+            KvOut::Shared(h) => {
+                let co = h.checkout()?;
+                (co.s, co.c, co.k_host()?, co.v_host()?)
+            }
+        };
+        Ok(WireOutput::LogitsKv { logits, kv_s, kv_c, k, v })
+    };
+    let res = match out {
+        Ok(StepOutputs::Logits(l)) => Ok(WireOutput::Logits(l)),
+        Ok(StepOutputs::LogitsKv(l, kv)) => flat(l, kv),
+        Err(e) => Err(e),
+    };
+    res.unwrap_or_else(|e| WireOutput::Err {
+        transient: is_transient(&e),
+        msg: format!("{e:#}"),
+    })
+}
+
+/// Coordinator side: rehydrate one lane's result; errors come back with
+/// their transience restored so the scheduler's retry policy still fires.
+pub fn wire_to_output(w: WireOutput) -> Result<StepOutputs> {
+    match w {
+        WireOutput::Logits(l) => Ok(StepOutputs::Logits(l)),
+        WireOutput::LogitsKv { logits, kv_s, kv_c, k, v } => {
+            let kv = KvCache {
+                s: kv_s,
+                c: kv_c,
+                flat: true,
+                k: Literal::vec1(&k),
+                v: Literal::vec1(&v),
+            };
+            Ok(StepOutputs::LogitsKv(logits, KvOut::Fresh(kv)))
+        }
+        WireOutput::Err { msg, transient } => Err(if transient {
+            anyhow::Error::new(TransientError::new(msg))
+        } else {
+            anyhow!(msg)
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encoder / decoder primitives
+// ---------------------------------------------------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, x: u8) {
+        self.0.push(x);
+    }
+    fn u16(&mut self, x: u16) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u32(&mut self, x: usize) {
+        self.0.extend_from_slice(&(x as u32).to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn i32s(&mut self, xs: &[i32]) {
+        self.u64(xs.len() as u64);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for x in xs {
+            self.0.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return Err(anyhow!("wire: truncated frame at offset {}", self.pos));
+        }
+        let out = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<usize> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()) as usize)
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Length prefix for `width`-byte elements, bounded by the bytes that
+    /// actually remain — a hostile length can't allocate unbounded memory.
+    fn len(&mut self, width: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n > (self.b.len() - self.pos) / width {
+            return Err(anyhow!("wire: length {n} exceeds remaining frame"));
+        }
+        Ok(n)
+    }
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.len(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| anyhow!("wire: non-utf8 string"))
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(anyhow!(
+                "wire: {} trailing bytes after frame",
+                self.b.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Header check shared by both frame kinds: magic, version (typed
+/// mismatch), kind, fingerprint (typed mismatch), then the lane count.
+fn decode_header(d: &mut Dec, want_kind: u16, want_fp: u64) -> Result<usize> {
+    let magic = d.take(4)?;
+    if magic != MAGIC {
+        return Err(anyhow!("wire: bad magic {magic:?}"));
+    }
+    let version = d.u16()?;
+    if version != VERSION {
+        return Err(anyhow::Error::new(WireMismatch::Version {
+            want: VERSION,
+            got: version,
+        }));
+    }
+    let kind = d.u16()?;
+    if kind != want_kind {
+        return Err(anyhow!("wire: frame kind {kind}, expected {want_kind}"));
+    }
+    let fp = d.u64()?;
+    if fp != want_fp {
+        return Err(anyhow::Error::new(WireMismatch::Fingerprint {
+            want: want_fp,
+            got: fp,
+        }));
+    }
+    let lanes = d.u32()?;
+    // every lane costs at least its tag byte — a hostile count can't
+    // pre-allocate more than the frame itself could carry
+    if lanes > d.b.len() - d.pos {
+        return Err(anyhow!("wire: lane count {lanes} exceeds frame size"));
+    }
+    Ok(lanes)
+}
+
+fn encode_header(e: &mut Enc, kind: u16, fp: u64, lanes: usize) {
+    e.0.extend_from_slice(&MAGIC);
+    e.u16(VERSION);
+    e.u16(kind);
+    e.u64(fp);
+    e.u32(lanes);
+}
+
+// ---------------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------------
+
+/// Encode an execute-request frame (one or more lanes of one batch).
+pub fn encode_request(fp: u64, plans: &[WirePlan]) -> Vec<u8> {
+    let mut e = Enc(Vec::with_capacity(HEADER_LEN + 64 * plans.len()));
+    encode_header(&mut e, FRAME_REQUEST, fp, plans.len());
+    for p in plans {
+        match p {
+            WirePlan::Full { s, ids, valid } => {
+                e.u8(TAG_FULL);
+                e.u32(*s);
+                e.i32s(ids);
+                e.f32s(valid);
+            }
+            WirePlan::Window { s, c, ids, pos, valid } => {
+                e.u8(TAG_WINDOW);
+                e.u32(*s);
+                e.u32(*c);
+                e.i32s(ids);
+                e.i32s(pos);
+                e.f32s(valid);
+            }
+            WirePlan::Cached {
+                s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv_s, kv_c, k, v,
+            } => {
+                e.u8(TAG_CACHED);
+                e.u32(*s);
+                e.u32(*c);
+                e.u32(*r);
+                e.i32s(ids_r);
+                e.i32s(pos_r);
+                e.i32s(slot_idx);
+                e.f32s(rvalid);
+                e.f32s(cvalid);
+                e.u32(*kv_s);
+                e.u32(*kv_c);
+                e.f32s(k);
+                e.f32s(v);
+            }
+        }
+    }
+    e.0
+}
+
+/// Decode an execute-request frame, verifying version and fingerprint
+/// (typed [`WireMismatch`] on disagreement).
+pub fn decode_request(bytes: &[u8], want_fp: u64) -> Result<Vec<WirePlan>> {
+    let mut d = Dec { b: bytes, pos: 0 };
+    let lanes = decode_header(&mut d, FRAME_REQUEST, want_fp)?;
+    let mut plans = Vec::with_capacity(lanes);
+    for _ in 0..lanes {
+        let plan = match d.u8()? {
+            TAG_FULL => {
+                let s = d.u32()?;
+                WirePlan::Full { s, ids: d.i32s()?, valid: d.f32s()? }
+            }
+            TAG_WINDOW => {
+                let s = d.u32()?;
+                let c = d.u32()?;
+                WirePlan::Window { s, c, ids: d.i32s()?, pos: d.i32s()?, valid: d.f32s()? }
+            }
+            TAG_CACHED => {
+                let s = d.u32()?;
+                let c = d.u32()?;
+                let r = d.u32()?;
+                let ids_r = d.i32s()?;
+                let pos_r = d.i32s()?;
+                let slot_idx = d.i32s()?;
+                let rvalid = d.f32s()?;
+                let cvalid = d.f32s()?;
+                let kv_s = d.u32()?;
+                let kv_c = d.u32()?;
+                WirePlan::Cached {
+                    s, c, r, ids_r, pos_r, slot_idx, rvalid, cvalid, kv_s, kv_c,
+                    k: d.f32s()?,
+                    v: d.f32s()?,
+                }
+            }
+            tag => return Err(anyhow!("wire: unknown plan tag {tag}")),
+        };
+        plans.push(plan);
+    }
+    d.done()?;
+    Ok(plans)
+}
+
+/// Encode an execute-response frame (index-aligned with the request).
+pub fn encode_response(fp: u64, outs: &[WireOutput]) -> Vec<u8> {
+    let mut e = Enc(Vec::with_capacity(HEADER_LEN + 64 * outs.len()));
+    encode_header(&mut e, FRAME_RESPONSE, fp, outs.len());
+    for o in outs {
+        match o {
+            WireOutput::Logits(l) => {
+                e.u8(TAG_LOGITS);
+                e.f32s(l);
+            }
+            WireOutput::LogitsKv { logits, kv_s, kv_c, k, v } => {
+                e.u8(TAG_LOGITS_KV);
+                e.f32s(logits);
+                e.u32(*kv_s);
+                e.u32(*kv_c);
+                e.f32s(k);
+                e.f32s(v);
+            }
+            WireOutput::Err { msg, transient } => {
+                e.u8(TAG_ERR);
+                e.u8(*transient as u8);
+                e.str(msg);
+            }
+        }
+    }
+    e.0
+}
+
+/// Decode an execute-response frame.
+pub fn decode_response(bytes: &[u8], want_fp: u64) -> Result<Vec<WireOutput>> {
+    let mut d = Dec { b: bytes, pos: 0 };
+    let lanes = decode_header(&mut d, FRAME_RESPONSE, want_fp)?;
+    let mut outs = Vec::with_capacity(lanes);
+    for _ in 0..lanes {
+        let out = match d.u8()? {
+            TAG_LOGITS => WireOutput::Logits(d.f32s()?),
+            TAG_LOGITS_KV => {
+                let logits = d.f32s()?;
+                let kv_s = d.u32()?;
+                let kv_c = d.u32()?;
+                WireOutput::LogitsKv { logits, kv_s, kv_c, k: d.f32s()?, v: d.f32s()? }
+            }
+            TAG_ERR => {
+                let transient = d.u8()? != 0;
+                WireOutput::Err { msg: d.str()?, transient }
+            }
+            tag => return Err(anyhow!("wire: unknown output tag {tag}")),
+        };
+        outs.push(out);
+    }
+    d.done()?;
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExec;
+
+    fn plans() -> Vec<WirePlan> {
+        vec![
+            WirePlan::Full {
+                s: 256,
+                ids: vec![1, -2, i32::MAX, i32::MIN],
+                valid: vec![1.0, 0.0, -0.0, f32::NAN],
+            },
+            WirePlan::Window {
+                s: 256,
+                c: 64,
+                ids: vec![5, 6],
+                pos: vec![0, 1],
+                valid: vec![1.0, 1.0],
+            },
+            WirePlan::Cached {
+                s: 256,
+                c: 64,
+                r: 8,
+                ids_r: vec![7; 8],
+                pos_r: (0..8).collect(),
+                slot_idx: vec![64; 8],
+                rvalid: vec![1.0; 8],
+                cvalid: vec![1.0; 64],
+                kv_s: 256,
+                kv_c: 64,
+                k: vec![f32::NAN, -0.0, f32::INFINITY, 1e-40],
+                v: vec![f32::NEG_INFINITY, 0.0, -1.5, 2.5],
+            },
+        ]
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn request_round_trips_bit_exactly() {
+        let fp = 0xdead_beef_cafe_f00d;
+        let want = plans();
+        let frame = encode_request(fp, &want);
+        let back = decode_request(&frame, fp).unwrap();
+        assert_eq!(back.len(), 3);
+        // PartialEq on f32 treats NaN != NaN; compare the exotic lanes by bits
+        match (&back[0], &want[0]) {
+            (WirePlan::Full { valid, .. }, WirePlan::Full { valid: wv, .. }) => {
+                assert_eq!(bits(valid), bits(wv));
+            }
+            _ => panic!("lane 0 kind changed"),
+        }
+        assert_eq!(back[1], want[1]);
+        match (&back[2], &want[2]) {
+            (
+                WirePlan::Cached { k, v, kv_s, kv_c, .. },
+                WirePlan::Cached { k: wk, v: wv, .. },
+            ) => {
+                assert_eq!((*kv_s, *kv_c), (256, 64));
+                assert_eq!(bits(k), bits(wk));
+                assert_eq!(bits(v), bits(wv));
+            }
+            _ => panic!("lane 2 kind changed"),
+        }
+    }
+
+    #[test]
+    fn response_round_trips_with_error_transience() {
+        let fp = 42;
+        let outs = vec![
+            WireOutput::Logits(vec![f32::NAN, -0.0, 3.25]),
+            WireOutput::LogitsKv {
+                logits: vec![1.0; 4],
+                kv_s: 256,
+                kv_c: 64,
+                k: vec![-0.0; 4],
+                v: vec![f32::NAN; 4],
+            },
+            WireOutput::Err { msg: "replica 0 down".into(), transient: true },
+            WireOutput::Err { msg: "bad shape".into(), transient: false },
+        ];
+        let back = decode_response(&encode_response(fp, &outs), fp).unwrap();
+        assert_eq!(back.len(), 4);
+        let e1 = wire_to_output(back[2].clone()).unwrap_err();
+        assert!(is_transient(&e1), "transience lost on the wire");
+        let e2 = wire_to_output(back[3].clone()).unwrap_err();
+        assert!(!is_transient(&e2), "non-transient error became transient");
+    }
+
+    #[test]
+    fn version_and_fingerprint_mismatch_are_typed() {
+        let frame = encode_request(7, &plans());
+        // doctored version
+        let mut bad = frame.clone();
+        bad[4] = 99;
+        let err = decode_request(&bad, 7).unwrap_err();
+        assert_eq!(
+            wire_mismatch(&err),
+            Some(WireMismatch::Version { want: VERSION, got: 99 })
+        );
+        // wrong fingerprint
+        let err = decode_request(&frame, 8).unwrap_err();
+        assert_eq!(
+            wire_mismatch(&err),
+            Some(WireMismatch::Fingerprint { want: 8, got: 7 })
+        );
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_panicked() {
+        let fp = 7;
+        let frame = encode_request(fp, &plans());
+        assert!(decode_request(b"WDRP", fp).is_err(), "truncated header");
+        let mut bad = frame.clone();
+        bad.truncate(frame.len() - 3);
+        assert!(decode_request(&bad, fp).is_err(), "truncated payload");
+        let mut bad = frame.clone();
+        bad.extend_from_slice(b"xx");
+        assert!(decode_request(&bad, fp).is_err(), "trailing garbage");
+        // hostile length prefix: u64::MAX elements must not allocate
+        let mut bad = frame;
+        let lane0_len_off = HEADER_LEN + 1 + 4; // tag + s, then ids length
+        bad[lane0_len_off..lane0_len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_request(&bad, fp).is_err(), "hostile length");
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_executor_contract() {
+        let a = fingerprint(&MockExec::new(256));
+        let b = fingerprint(&MockExec::new(256));
+        assert_eq!(a, b, "fingerprint must be deterministic");
+        let c = fingerprint(&MockExec::new(128));
+        assert_ne!(a, c, "different sequence sets must change the fingerprint");
+    }
+}

@@ -15,5 +15,5 @@ pub use chaos::{ChaosConfig, ChaosDevice, ChaosExec, ChaosPlan};
 pub use device::{DeviceBank, DeviceKv, DeviceMode, MockDevice};
 pub use engine::{BatchedKv, Engine, EngineCell, EngineStatsSnapshot, In, KvCache};
 pub use manifest::{Arch, ExecSpec, Manifest, ModelEntry, Specials};
-pub use pool::{EnginePool, ReplicaStats};
+pub use pool::{EnginePool, HealthEvent, LaneHealth, ReplicaHealth, ReplicaStats};
 pub use weights::{BankMode, HostParam, WeightBank};

@@ -103,17 +103,71 @@ pub struct ReplicaStats {
     pub consecutive_failures: u32,
 }
 
-/// Mutable per-replica health record (under the scheduler mutex).
+/// A state transition worth counting, returned by [`LaneHealth::note`] so
+/// the owner can bump its counters / trace without re-deriving the edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthEvent {
+    /// No transition (routine success, or a failure under the threshold).
+    None,
+    /// A probation probe succeeded; the lane is back in rotation.
+    Reinstated,
+    /// The lane was quarantined (`failed_probe` when a probation probe
+    /// failed, rather than a streak crossing the threshold).
+    Quarantined { failed_probe: bool },
+}
+
+/// Mutable per-lane health record (guarded by the owner's mutex). One
+/// state machine, two transports: the in-pool replica rotation here and
+/// the remote engine-host rotation in [`crate::remote`] share it.
 #[derive(Debug)]
-struct LaneHealth {
-    state: ReplicaHealth,
-    consecutive_failures: u32,
-    quarantined_at: Option<Instant>,
+pub struct LaneHealth {
+    pub state: ReplicaHealth,
+    pub consecutive_failures: u32,
+    pub quarantined_at: Option<Instant>,
+}
+
+impl Default for LaneHealth {
+    fn default() -> Self {
+        LaneHealth::new()
+    }
 }
 
 impl LaneHealth {
-    fn new() -> LaneHealth {
+    pub fn new() -> LaneHealth {
         LaneHealth { state: ReplicaHealth::Healthy, consecutive_failures: 0, quarantined_at: None }
+    }
+
+    /// Whether a quarantined lane's probation window has elapsed — i.e. it
+    /// may be handed out as a probe.
+    #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
+    pub fn probe_eligible(&self, now: Instant, probation: Duration) -> bool {
+        self.state == ReplicaHealth::Quarantined
+            && self
+                .quarantined_at
+                .map_or(true, |t| now.duration_since(t) >= probation)
+    }
+
+    /// Record a step outcome: success resets the failure streak (and
+    /// reinstates a probe); failure extends it and quarantines at the
+    /// threshold (a failed probe re-quarantines immediately; `threshold`
+    /// of 0 disables quarantine).
+    pub fn note(&mut self, ok: bool, threshold: u32, now: Instant) -> HealthEvent {
+        if ok {
+            let probed = self.state == ReplicaHealth::Probation;
+            self.consecutive_failures = 0;
+            self.quarantined_at = None;
+            self.state = ReplicaHealth::Healthy;
+            return if probed { HealthEvent::Reinstated } else { HealthEvent::None };
+        }
+        self.consecutive_failures += 1;
+        let failed_probe = self.state == ReplicaHealth::Probation;
+        let over_threshold = threshold > 0 && self.consecutive_failures >= threshold;
+        if (failed_probe || over_threshold) && self.state != ReplicaHealth::Quarantined {
+            self.state = ReplicaHealth::Quarantined;
+            self.quarantined_at = Some(now);
+            return HealthEvent::Quarantined { failed_probe };
+        }
+        HealthEvent::None
     }
 }
 
@@ -461,12 +515,7 @@ impl EnginePool {
             let now = Instant::now();
             let probe = {
                 let PoolSched { parked, lanes, .. } = &*sched;
-                #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
-                parked.iter().position(|&i| {
-                    lanes[i]
-                        .quarantined_at
-                        .map_or(true, |t| now.duration_since(t) >= probation)
-                })
+                parked.iter().position(|&i| lanes[i].probe_eligible(now, probation))
             };
             if let Some(pos) = probe {
                 let idx = sched.parked.remove(pos);
@@ -500,34 +549,24 @@ impl EnginePool {
         let now = Instant::now();
         let threshold = self.quarantine_after.load(Ordering::Relaxed);
         let mut sched = self.sched.lock().unwrap();
-        let lane = &mut sched.lanes[idx];
-        if ok {
-            let probed = lane.state == ReplicaHealth::Probation;
-            lane.consecutive_failures = 0;
-            lane.quarantined_at = None;
-            lane.state = ReplicaHealth::Healthy;
-            drop(sched);
-            if probed {
+        let event = sched.lanes[idx].note(ok, threshold, now);
+        drop(sched);
+        match event {
+            HealthEvent::None => {}
+            HealthEvent::Reinstated => {
                 self.reinstates.fetch_add(1, Ordering::Relaxed);
                 if let Some(tr) = self.trace.get() {
                     tr.probation(idx as u32, true, now);
                 }
             }
-            return;
-        }
-        lane.consecutive_failures += 1;
-        let failed_probe = lane.state == ReplicaHealth::Probation;
-        let over_threshold = threshold > 0 && lane.consecutive_failures >= threshold;
-        if (failed_probe || over_threshold) && lane.state != ReplicaHealth::Quarantined {
-            lane.state = ReplicaHealth::Quarantined;
-            lane.quarantined_at = Some(now);
-            drop(sched);
-            self.quarantines.fetch_add(1, Ordering::Relaxed);
-            if let Some(tr) = self.trace.get() {
-                if failed_probe {
-                    tr.probation(idx as u32, false, now);
+            HealthEvent::Quarantined { failed_probe } => {
+                self.quarantines.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = self.trace.get() {
+                    if failed_probe {
+                        tr.probation(idx as u32, false, now);
+                    }
+                    tr.quarantine(idx as u32, now);
                 }
-                tr.quarantine(idx as u32, now);
             }
         }
     }

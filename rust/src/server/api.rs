@@ -25,11 +25,16 @@
 //!   residency gauges (`bank_mode`, `weight_bytes_host`,
 //!   `weight_bytes_per_replica`); tiered-KV gauges (`kv_hot_bytes`,
 //!   `kv_spilled_bytes`, `kv_spills`, `kv_rehydrates`, `kv_prefix_hits`,
-//!   `kv_prefix_misses`, `kv_prefix_hit_rate`, `kv_accounting_anomalies`)
-//! * `GET /healthz`   — liveness; with an engine-replica pool the check is
-//!   health-aware: `503 {"ok":false}` while EVERY replica is quarantined
-//!   (load balancers should stop routing here until probation reinstates
-//!   one), `200 {"ok":true}` otherwise
+//!   `kv_prefix_misses`, `kv_prefix_hit_rate`, `kv_accounting_anomalies`);
+//!   under `serve --engine-hosts` (ISSUE 10), per-host dispatch/health rows
+//!   (`remote_hosts`) plus the fleet counters `remote_quarantines`,
+//!   `remote_probation_probes`, `remote_reinstates`,
+//!   `remote_hosts_quarantined`
+//! * `GET /healthz`   — liveness; with an engine-replica pool (or a remote
+//!   engine-host fleet) the check is health-aware: `503 {"ok":false}` while
+//!   EVERY replica (or every remote host) is quarantined (load balancers
+//!   should stop routing here until probation reinstates one),
+//!   `200 {"ok":true}` otherwise
 //! * `GET /info`      — model / config / scheduling info, incl.
 //!   `prefix_share` and the `kv_tiers` residency summary
 
@@ -41,6 +46,7 @@ use anyhow::{anyhow, Result};
 use super::http::{Request, Response};
 use crate::coordinator::{GenRequest, StepExec};
 use crate::metrics::Metrics;
+use crate::remote::RemoteExec;
 use crate::runtime::EnginePool;
 use crate::scheduler::{Scheduler, SubmitSpec};
 use crate::strategies;
@@ -55,6 +61,10 @@ pub struct AppState {
     /// Typed handle to the replica pool when `exec` is one — powers the
     /// per-replica gauges on `GET /metrics` and `replicas` on `GET /info`.
     pub pool: Option<Arc<EnginePool>>,
+    /// Typed handle to the remote-host dispatcher when `exec` is one
+    /// (`serve --engine-hosts`, ISSUE 10) — powers the per-host health
+    /// gauges on `GET /metrics` and the remote-aware `/healthz`.
+    pub remote: Option<Arc<RemoteExec>>,
     pub scheduler: Arc<Scheduler>,
     pub tokenizer: Tokenizer,
     pub metrics: Arc<Metrics>,
@@ -318,6 +328,45 @@ fn metrics_json(st: &AppState) -> Json {
             );
         }
     }
+    if let (Some(remote), Json::Obj(fields)) = (&st.remote, &mut j) {
+        // remote-host dispatch gauges (ISSUE 10): the same quarantine /
+        // probation / reinstate story as in-pool replicas, one lane per
+        // engine host — the dashboard rows a remote chaos drill audits
+        fields.insert("remote_host_count".into(), Json::num(remote.hosts() as f64));
+        fields.insert(
+            "remote_hosts".into(),
+            Json::Arr(
+                remote
+                    .host_stats()
+                    .into_iter()
+                    .map(|h| {
+                        Json::obj(vec![
+                            ("addr", Json::str(h.addr)),
+                            ("steps", Json::num(h.steps as f64)),
+                            ("health", Json::str(h.health.name())),
+                            (
+                                "consecutive_failures",
+                                Json::num(h.consecutive_failures as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        fields.insert(
+            "remote_quarantines".into(),
+            Json::num(remote.quarantines() as f64),
+        );
+        fields.insert(
+            "remote_probation_probes".into(),
+            Json::num(remote.probation_probes() as f64),
+        );
+        fields.insert("remote_reinstates".into(), Json::num(remote.reinstates() as f64));
+        fields.insert(
+            "remote_hosts_quarantined".into(),
+            Json::num(remote.quarantined_count() as f64),
+        );
+    }
     j
 }
 
@@ -326,16 +375,21 @@ pub fn route(st: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             // health-aware liveness: a pool with every replica quarantined
+            // — or a remote fleet with every engine host quarantined —
             // cannot serve a single forward, so report unhealthy until
             // probation reinstates one (pool-less servers are always ok)
             #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
-            let serving = st.pool.as_ref().map_or(true, |p| !p.all_quarantined());
-            if serving {
+            let pool_ok = st.pool.as_ref().map_or(true, |p| !p.all_quarantined());
+            #[allow(clippy::unnecessary_map_or)] // Option::is_none_or needs Rust 1.82
+            let remote_ok = st.remote.as_ref().map_or(true, |r| !r.all_quarantined());
+            if pool_ok && remote_ok {
                 Response::json(200, r#"{"ok":true}"#.to_string())
             } else {
+                let what =
+                    if pool_ok { "all engine hosts quarantined" } else { "all replicas quarantined" };
                 Response::json(
                     503,
-                    r#"{"ok":false,"error":"all replicas quarantined"}"#.to_string(),
+                    format!(r#"{{"ok":false,"error":"{what}"}}"#),
                 )
             }
         }
@@ -359,6 +413,9 @@ pub fn route(st: &AppState, req: &Request) -> Response {
                 ("batch_policy", Json::str(st.scheduler.batch_policy().name())),
                 ("replicas", Json::num(
                     st.pool.as_ref().map_or(1, |p| p.replicas()) as f64,
+                )),
+                ("engine_hosts", Json::num(
+                    st.remote.as_ref().map_or(0, |r| r.hosts()) as f64,
                 )),
                 ("bank_mode", Json::str(
                     st.pool.as_ref().map_or("none", |p| p.bank_mode()),
@@ -454,6 +511,7 @@ mod tests {
         Arc::new(AppState {
             exec,
             pool: None,
+            remote: None,
             scheduler,
             tokenizer: Tokenizer::from_vocab(vocab),
             metrics,
@@ -677,6 +735,7 @@ mod tests {
         let st = Arc::new(AppState {
             exec,
             pool: None,
+            remote: None,
             scheduler,
             tokenizer: Tokenizer::from_vocab(vocab),
             metrics,
@@ -749,6 +808,7 @@ mod tests {
         let st = Arc::new(AppState {
             exec,
             pool: Some(pool),
+            remote: None,
             scheduler,
             tokenizer: Tokenizer::from_vocab(vocab),
             metrics,
@@ -831,6 +891,7 @@ mod tests {
         let st = Arc::new(AppState {
             exec,
             pool: Some(Arc::clone(&pool)),
+            remote: None,
             scheduler,
             tokenizer: Tokenizer::from_vocab(vocab),
             metrics,

@@ -2,11 +2,27 @@
 //! tokio/hyper; DESIGN.md §4 item 13). Supports the subset the serving API
 //! needs: GET/POST, Content-Length bodies, keep-alive off (connection:
 //! close per response — simple and robust for a bench/serving harness).
+//!
+//! Hardened for network-facing engine hosts (ISSUE 10): accepted sockets
+//! get a read timeout, header count/line length are capped, and the client
+//! side is byte-clean (binary wire frames round-trip without UTF-8
+//! validation of the body).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
+
+/// How long a worker waits on a socket read before giving up on the
+/// connection (stalled clients must not wedge accept workers).
+pub const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Max header lines per request (request line excluded).
+const MAX_HEADERS: usize = 64;
+/// Max bytes in one header (or request) line, terminator included.
+const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Max request body bytes.
+const MAX_BODY: usize = 16 * 1024 * 1024;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
@@ -31,39 +47,91 @@ impl Response {
         Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
     }
 
-    fn status_line(&self) -> &'static str {
-        match self.status {
-            200 => "200 OK",
-            400 => "400 Bad Request",
-            404 => "404 Not Found",
-            405 => "405 Method Not Allowed",
-            429 => "429 Too Many Requests",
-            500 => "500 Internal Server Error",
-            503 => "503 Service Unavailable",
-            _ => "200 OK",
-        }
+    /// Binary payload (wire frames).
+    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+        Response { status, content_type: "application/octet-stream", body }
+    }
+
+    fn status_line(&self) -> String {
+        let reason = match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            409 => "Conflict",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            502 => "Bad Gateway",
+            503 => "Service Unavailable",
+            // unmapped codes keep their numeric identity with a generic
+            // reason phrase — never lie with "200 OK"
+            _ => "Status",
+        };
+        format!("{} {}", self.status, reason)
     }
 }
 
+/// Map a `read_request` failure to the response status a worker should
+/// send back: 408 for a socket read timeout, 400 for everything else.
+pub fn read_error_status(e: &anyhow::Error) -> u16 {
+    let timed_out = e.chain().any(|cause| {
+        cause.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        })
+    });
+    if timed_out {
+        408
+    } else {
+        400
+    }
+}
+
+/// `read_line` with a hard byte cap: a client streaming an unterminated
+/// line grows at most `MAX_HEADER_LINE` bytes, not unbounded memory.
+fn read_line_capped<R: BufRead>(reader: &mut R, buf: &mut String) -> Result<usize> {
+    let mut limited = reader.take(MAX_HEADER_LINE as u64 + 1);
+    let n = limited.read_line(buf)?;
+    if n > MAX_HEADER_LINE {
+        return Err(anyhow!("header line too long (> {MAX_HEADER_LINE} bytes)"));
+    }
+    Ok(n)
+}
+
 /// Parse one request from a stream (HTTP/1.1, Content-Length bodies only).
+/// Applies [`READ_TIMEOUT`] to the socket and caps header count/size.
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    read_request_timeout(stream, READ_TIMEOUT)
+}
+
+/// [`read_request`] with an explicit timeout (tests use short ones).
+pub fn read_request_timeout(stream: &mut TcpStream, timeout: Duration) -> Result<Request> {
+    stream.set_read_timeout(Some(timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
-    reader.read_line(&mut request_line)?;
+    read_line_capped(&mut reader, &mut request_line)?;
     let mut parts = request_line.split_whitespace();
     let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
     let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
 
     let mut content_length = 0usize;
+    let mut headers = 0usize;
     loop {
         let mut line = String::new();
-        let n = reader.read_line(&mut line)?;
+        let n = read_line_capped(&mut reader, &mut line)?;
         if n == 0 {
             return Err(anyhow!("connection closed mid-headers"));
         }
         let line = line.trim_end();
         if line.is_empty() {
             break;
+        }
+        headers += 1;
+        if headers > MAX_HEADERS {
+            return Err(anyhow!("too many headers (> {MAX_HEADERS})"));
         }
         if let Some((name, value)) = line.split_once(':') {
             if name.eq_ignore_ascii_case("content-length") {
@@ -74,7 +142,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
             }
         }
     }
-    if content_length > 16 * 1024 * 1024 {
+    if content_length > MAX_BODY {
         return Err(anyhow!("body too large"));
     }
     let mut body = vec![0u8; content_length];
@@ -97,38 +165,64 @@ pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// tiny client (examples / integration tests / the serve_batch driver)
+// tiny client (examples / integration tests / the serve_batch driver /
+// the RemoteExec wire dispatch)
 // ---------------------------------------------------------------------------
 
 pub fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
-    http_call(addr, "POST", path, Some(body))
+    http_call(addr, "POST", path, Some(body.as_bytes()))
 }
 
 pub fn http_get(addr: &str, path: &str) -> Result<(u16, String)> {
     http_call(addr, "GET", path, None)
 }
 
-fn http_call(addr: &str, method: &str, path: &str, body: Option<&str>)
+/// POST raw bytes; the response body comes back byte-exact (no UTF-8
+/// validation) — the path binary wire frames take.
+pub fn http_post_bytes(addr: &str, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
+    http_call_bytes(addr, "POST", path, Some(body))
+}
+
+pub fn http_get_bytes(addr: &str, path: &str) -> Result<(u16, Vec<u8>)> {
+    http_call_bytes(addr, "GET", path, None)
+}
+
+/// String shim over [`http_call_bytes`] for JSON/text callers.
+fn http_call(addr: &str, method: &str, path: &str, body: Option<&[u8]>)
              -> Result<(u16, String)> {
+    let (status, bytes) = http_call_bytes(addr, method, path, body)?;
+    let text = String::from_utf8(bytes)
+        .map_err(|_| anyhow!("non-utf8 response body (use http_post_bytes)"))?;
+    Ok((status, text))
+}
+
+/// Byte-clean HTTP call: only the header section is parsed as text; the
+/// body is returned verbatim.
+fn http_call_bytes(addr: &str, method: &str, path: &str, body: Option<&[u8]>)
+                   -> Result<(u16, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)?;
-    let body = body.unwrap_or("");
-    let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let body = body.unwrap_or(&[]);
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
-    stream.write_all(req.as_bytes())?;
-    let mut raw = String::new();
-    stream.read_to_string(&mut raw)?;
-    let status: u16 = raw
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| anyhow!("bad response: no header terminator"))?;
+    let head = std::str::from_utf8(&raw[..split])
+        .map_err(|_| anyhow!("non-utf8 response headers"))?;
+    let status: u16 = head
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow!("bad response: {raw}"))?;
-    let payload = raw
-        .split_once("\r\n\r\n")
-        .map(|(_, b)| b.to_string())
-        .unwrap_or_default();
-    Ok((status, payload))
+        .ok_or_else(|| anyhow!("bad response status line: {head}"))?;
+    Ok((status, raw[split + 4..].to_vec()))
 }
 
 #[cfg(test)]
@@ -169,6 +263,104 @@ mod tests {
         let (status, body) = http_get(&addr, "/missing").unwrap();
         assert_eq!(status, 404);
         assert_eq!(body, "nope");
+        handle.join().unwrap();
+    }
+
+    /// Regression (ISSUE 10): unmapped status codes used to collapse to
+    /// "200 OK" on the wire — the numeric code must round-trip.
+    #[test]
+    fn unmapped_status_codes_round_trip_numerically() {
+        for status in [201u16, 409, 418, 502, 599] {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let handle = std::thread::spawn(move || {
+                let (mut stream, _) = listener.accept().unwrap();
+                let _ = read_request(&mut stream).unwrap();
+                write_response(&mut stream, &Response::text(status, "x")).unwrap();
+            });
+            let (got, _) = http_get(&addr, "/").unwrap();
+            assert_eq!(got, status, "status {status} did not round-trip");
+            handle.join().unwrap();
+        }
+    }
+
+    /// Regression (ISSUE 10): a client that connects and stalls must be
+    /// rejected by the read timeout, not hang the worker forever.
+    #[test]
+    fn stalled_connection_times_out_as_408() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap(); // connect, send nothing
+        let (mut stream, _) = listener.accept().unwrap();
+        let t0 = std::time::Instant::now();
+        let err = read_request_timeout(&mut stream, Duration::from_millis(100))
+            .expect_err("stalled connection must not parse");
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout did not fire");
+        assert_eq!(read_error_status(&err), 408);
+        drop(client);
+    }
+
+    /// Regression (ISSUE 10): a client streaming headers forever is cut
+    /// off at the header-count cap instead of growing memory unboundedly.
+    #[test]
+    fn header_flood_is_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let flood = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let _ = c.write_all(b"GET / HTTP/1.1\r\n");
+            for i in 0..10_000 {
+                if c.write_all(format!("X-Flood-{i}: y\r\n").as_bytes()).is_err() {
+                    break; // server hung up at the cap
+                }
+            }
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let err = read_request(&mut stream).expect_err("header flood must not parse");
+        assert_eq!(read_error_status(&err), 400);
+        assert!(err.to_string().contains("too many headers"), "got: {err:#}");
+        drop(stream); // hang up so the flooder's writes fail fast
+        flood.join().unwrap();
+    }
+
+    /// One unterminated multi-KB header line is capped too.
+    #[test]
+    fn oversized_header_line_is_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let big = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let _ = c.write_all(b"GET / HTTP/1.1\r\n");
+            let _ = c.write_all(&vec![b'a'; 64 * 1024]); // one endless line
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let err = read_request(&mut stream).expect_err("oversized line must not parse");
+        assert!(err.to_string().contains("too long"), "got: {err:#}");
+        drop(stream);
+        big.join().unwrap();
+    }
+
+    /// Regression (ISSUE 10): non-UTF-8 bodies used to fail in
+    /// `read_to_string` — they must round-trip byte-exactly now.
+    #[test]
+    fn binary_body_round_trips_byte_exactly() {
+        // exercise every byte value plus f32 special bit patterns
+        let mut payload: Vec<u8> = (0u8..=255).collect();
+        payload.extend_from_slice(&f32::NAN.to_bits().to_le_bytes());
+        payload.extend_from_slice(&(-0.0f32).to_bits().to_le_bytes());
+        let echo = payload.clone();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&mut stream).unwrap();
+            assert_eq!(req.body, echo, "request body mangled");
+            write_response(&mut stream, &Response::bytes(200, req.body)).unwrap();
+        });
+        let (status, body) = http_post_bytes(&addr, "/wire", &payload).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, payload, "response body mangled");
         handle.join().unwrap();
     }
 }

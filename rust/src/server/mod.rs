@@ -72,7 +72,11 @@ pub fn serve(state: Arc<AppState>, cfg: ServerConfig) -> Result<Server> {
                 let mut stream = job.payload;
                 let resp = match read_request(&mut stream) {
                     Ok(req) => route(&st, &req),
-                    Err(e) => Response::json(400, format!("{{\"error\":\"{e}\"}}")),
+                    // 408 for stalled sockets, 400 for malformed requests
+                    Err(e) => Response::json(
+                        http::read_error_status(&e),
+                        format!("{{\"error\":\"{e}\"}}"),
+                    ),
                 };
                 let _ = write_response(&mut stream, &resp);
             }

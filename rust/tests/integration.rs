@@ -301,6 +301,7 @@ fn server_end_to_end() {
     let state = std::sync::Arc::new(AppState {
         exec,
         pool: None,
+        remote: None,
         scheduler,
         tokenizer: Tokenizer::from_vocab(vocab),
         metrics,

@@ -1,0 +1,281 @@
+//! Wire-protocol property tests (ISSUE 10): coordinator↔engine-host
+//! dispatch over real loopback HTTP, all over `MockExec` — no artifacts.
+//!
+//! Three pillars:
+//! 1. **Loopback parity** — every strategy spec completes byte-identical
+//!    through a remote engine host to its local run, both solo and
+//!    coalesced (multi-lane request frames), proving the wire codec and
+//!    the detached host-side KV store are observationally invisible.
+//! 2. **Host health** — a chaos-broken host is quarantined after its
+//!    first all-lanes-dead batch while the survivor serves every session
+//!    to the fault-free answer; after healing, a probation probe
+//!    reinstates it.
+//! 3. **Typed mismatch** — version- or fingerprint-skewed hosts are
+//!    rejected at attach with a typed [`WireMismatch`], and a
+//!    wrong-fingerprint frame bounces off a healthy host with a 409.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use window_diffusion::coordinator::{GenRequest, MockExec, StepExec};
+use window_diffusion::metrics::Metrics;
+use window_diffusion::remote::{
+    serve_engine, wire, wire_mismatch, EngineHost, EngineHostConfig, RemoteExec,
+    WireMismatch, WirePlan,
+};
+use window_diffusion::runtime::{ChaosConfig, ChaosPlan};
+use window_diffusion::scheduler::{Scheduler, SchedulerConfig, SubmitSpec};
+use window_diffusion::server::http::{
+    http_post_bytes, read_request, write_response, Response,
+};
+use window_diffusion::strategies;
+
+const SPECS: &[&str] = &[
+    "full",
+    "window",
+    "window-nocache",
+    "block:size=16",
+    "dkv:interval=4",
+    "fastdllm-prefix",
+    "fastdllm-dual",
+];
+
+fn req(gen_len: usize) -> GenRequest {
+    let mut r = GenRequest::new(vec![10, 11, 12, 13], gen_len, 256);
+    r.tokens_per_step = 2;
+    r
+}
+
+fn submit(strategy: &str, r: &GenRequest) -> SubmitSpec {
+    SubmitSpec { strategy: strategy.into(), req: r.clone(), deadline: None }
+}
+
+/// Local reference for a spec: the run-to-completion `generate()` path on
+/// a fresh mock (the same deterministic executor the hosts run).
+fn baseline(spec: &str, r: &GenRequest) -> Vec<i32> {
+    strategies::from_name(spec)
+        .unwrap()
+        .generate(&MockExec::new(256), r)
+        .unwrap()
+        .generated()
+}
+
+/// Loopback engine host over an executor (port picked by the OS).
+fn host_over(exec: Arc<dyn StepExec + Send + Sync>) -> EngineHost {
+    serve_engine(
+        exec,
+        None,
+        EngineHostConfig { addr: "127.0.0.1:0".into(), workers: 4, queue_capacity: 32 },
+    )
+    .expect("engine host failed to bind loopback")
+}
+
+// ---------------------------------------------------------------------------
+// 1. loopback parity: every spec, solo and coalesced, byte-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_specs_byte_identical_through_loopback_host() {
+    let mock = Arc::new(MockExec::new(256));
+    let host = host_over(Arc::clone(&mock) as Arc<dyn StepExec + Send + Sync>);
+    let remote = RemoteExec::attach(&[host.addr.clone()]).expect("attach loopback host");
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&remote) as _;
+
+    // solo dispatch: one lane per request frame, concurrent drivers
+    let sched = Scheduler::new(
+        Arc::clone(&exec),
+        SchedulerConfig { retry_backoff: Duration::ZERO, ..Default::default() },
+        Arc::new(Metrics::default()),
+    );
+    sched.spawn_workers(2);
+    let r = req(24);
+    let tickets: Vec<_> = SPECS
+        .iter()
+        .map(|spec| (spec, sched.submit(submit(spec, &r)).expect("admit")))
+        .collect();
+    for (spec, t) in tickets {
+        let got = t.wait().unwrap_or_else(|e| panic!("{spec} failed over the wire: {e:#}"));
+        assert_eq!(
+            got.generated(),
+            baseline(spec, &r),
+            "{spec}: remote solo output diverged from local"
+        );
+    }
+    sched.shutdown();
+    assert_eq!(remote.quarantines(), 0, "healthy loopback host was benched");
+    assert!(remote.host_stats()[0].steps > 0, "no batches reached the host");
+
+    // coalesced dispatch: 4 identical sessions share multi-lane frames;
+    // manual drain keeps lane composition deterministic
+    let rc = req(16);
+    for spec in SPECS {
+        let sched = Scheduler::new(
+            Arc::clone(&exec),
+            SchedulerConfig {
+                max_batch: 4,
+                retry_backoff: Duration::ZERO,
+                ..Default::default()
+            },
+            Arc::new(Metrics::default()),
+        );
+        let tickets: Vec<_> =
+            (0..4).map(|_| sched.submit(submit(spec, &rc)).unwrap()).collect();
+        while sched.tick().is_some() {}
+        let want = baseline(spec, &rc);
+        for t in tickets {
+            let got =
+                t.wait().unwrap_or_else(|e| panic!("{spec} failed coalesced: {e:#}"));
+            assert_eq!(
+                got.generated(),
+                want,
+                "{spec}: remote coalesced output diverged from local"
+            );
+        }
+        sched.shutdown();
+    }
+    // non-vacuousness: the host-side executor saw real multi-lane batches,
+    // so coalesced parity actually exercised multi-lane frames
+    assert!(
+        mock.counts().batched_forwards >= 1,
+        "no multi-lane frame ever reached the host — coalesced parity is vacuous"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. host health: quarantine the broken host, probe it back after healing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn broken_host_quarantined_and_probed_back_while_survivor_serves() {
+    let chaos = ChaosPlan::new(ChaosConfig::default());
+    let a_inner: Arc<dyn StepExec + Send + Sync> = Arc::new(MockExec::new(256));
+    let host_a = host_over(Arc::new(chaos.wrap(0, a_inner)));
+    let host_b = host_over(Arc::new(MockExec::new(256)));
+    let remote = RemoteExec::attach(&[host_a.addr.clone(), host_b.addr.clone()])
+        .expect("attach two-host fleet");
+    // bench on the first all-lanes-dead batch; short probation so the
+    // post-heal phase can observe a successful probe
+    remote.configure_health(1, 200);
+    let exec: Arc<dyn StepExec + Send + Sync> = Arc::clone(&remote) as _;
+    let sched = Scheduler::new(
+        Arc::clone(&exec),
+        SchedulerConfig {
+            max_step_retries: 8,
+            retry_backoff: Duration::ZERO,
+            ..Default::default()
+        },
+        Arc::new(Metrics::default()),
+    );
+    sched.spawn_workers(2);
+
+    chaos.break_replica(0);
+    let r = req(24);
+    let tickets: Vec<_> = SPECS
+        .iter()
+        .map(|spec| (spec, sched.submit(submit(spec, &r)).expect("admit")))
+        .collect();
+    for (spec, t) in tickets {
+        let got = t
+            .wait()
+            .unwrap_or_else(|e| panic!("{spec} failed on a degraded fleet: {e:#}"));
+        assert_eq!(
+            got.generated(),
+            baseline(spec, &r),
+            "{spec}: degraded-fleet output diverged"
+        );
+    }
+    assert!(remote.quarantines() >= 1, "broken host was never benched");
+    let stats = remote.host_stats();
+    assert!(stats[1].steps > 0, "surviving host never served");
+
+    // heal, wait out probation, serve again: the first pick probes the
+    // benched host (probes outrank the healthy rotation) and reinstates it
+    chaos.heal(0);
+    std::thread::sleep(Duration::from_millis(250));
+    let r2 = req(16);
+    let tickets: Vec<_> = SPECS
+        .iter()
+        .take(4)
+        .map(|spec| (spec, sched.submit(submit(spec, &r2)).expect("admit")))
+        .collect();
+    for (spec, t) in tickets {
+        let got = t.wait().unwrap_or_else(|e| panic!("{spec} failed post-heal: {e:#}"));
+        assert_eq!(got.generated(), baseline(spec, &r2), "{spec}: post-heal diverged");
+    }
+    sched.shutdown();
+    assert!(remote.probation_probes() >= 1, "no probe ever fired");
+    assert!(remote.reinstates() >= 1, "healed host was never reinstated");
+    assert_eq!(
+        remote.quarantined_count(),
+        0,
+        "fleet did not fully recover after healing"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. typed mismatch: attach rejection + frame-level 409
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mismatched_hosts_are_rejected_with_typed_errors() {
+    // fingerprint skew: hosts over different sequence sets run different
+    // executables — attach must refuse the fleet
+    let host_a = host_over(Arc::new(MockExec::new(256)));
+    let host_b = host_over(Arc::new(MockExec::new(128)));
+    let err = RemoteExec::attach(&[host_a.addr.clone(), host_b.addr.clone()])
+        .expect_err("fingerprint skew must fail attach");
+    match wire_mismatch(&err) {
+        Some(WireMismatch::Fingerprint { want, got }) => {
+            assert_ne!(want, got, "typed mismatch with equal fingerprints")
+        }
+        other => panic!("expected typed Fingerprint mismatch, got {other:?} ({err:#})"),
+    }
+
+    // a single-host attach of either contract is fine — the rejection
+    // above is disagreement, not either host being broken
+    RemoteExec::attach(&[host_b.addr.clone()]).expect("homogeneous attach must work");
+
+    // version skew: a host speaking a future wire version is rejected
+    // before any frame is built
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let fake_addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let _ = read_request(&mut stream).unwrap();
+        let info = concat!(
+            r#"{"wire_version":99,"fingerprint":"00000000deadbeef","#,
+            r#""arch":{"d":8,"n_layers":1,"n_heads":1,"dh":8,"ffn":16,"#,
+            r#""vocab":16,"max_seq":256},"#,
+            r#""special":{"pad":0,"mask":1,"eos":2},"#,
+            r#""seqs":[256],"c_ladder":[64,128,192,256],"#,
+            r#""r_ladder":[16,32,48,64,128,256],"b_ladder":[1]}"#
+        );
+        write_response(&mut stream, &Response::json(200, info.into())).unwrap();
+    });
+    let err = RemoteExec::attach(&[fake_addr]).expect_err("version skew must fail attach");
+    match wire_mismatch(&err) {
+        Some(WireMismatch::Version { want, got }) => {
+            assert_eq!(want, wire::VERSION);
+            assert_eq!(got, 99);
+        }
+        other => panic!("expected typed Version mismatch, got {other:?} ({err:#})"),
+    }
+    fake.join().unwrap();
+
+    // frame-level defense: even past attach, a frame whose fingerprint
+    // disagrees with the host's manifest bounces with a 409 — never
+    // silently executes on the wrong executables
+    let fp = wire::fingerprint(&MockExec::new(256));
+    let frame = wire::encode_request(
+        fp ^ 1,
+        &[WirePlan::Full { s: 256, ids: vec![0; 256], valid: vec![0.0; 256] }],
+    );
+    let (status, body) = http_post_bytes(&host_a.addr, "/wire/execute", &frame)
+        .expect("transport to healthy host");
+    assert_eq!(
+        status,
+        409,
+        "wrong-fingerprint frame must be refused: {}",
+        String::from_utf8_lossy(&body)
+    );
+}
